@@ -1,0 +1,55 @@
+//! Worker-count scaling: the interactive analogue of paper Fig. 6/7.
+//!
+//! Sweeps P = 1..8 workers on products-sim with both RapidGNN and DGL-METIS,
+//! printing per-epoch time, speedup over P=2 (the paper's reference point),
+//! and memory — near-linear scaling with flat CPU memory and bounded,
+//! cache-dominated GPU memory.
+//!
+//! ```bash
+//! cargo run --release --example scalability
+//! ```
+
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+use rapidgnn::coordinator;
+use rapidgnn::util::bench::{fmt_secs, Table};
+
+fn main() -> rapidgnn::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = DatasetConfig::preset(DatasetPreset::ProductsSim, 0.3);
+    cfg.batch_size = 512;
+    cfg.epochs = 3;
+    cfg.n_hot = 2_000;
+
+    println!(
+        "scalability on {} ({} nodes), batch {}",
+        cfg.dataset.name, cfg.dataset.num_nodes, cfg.batch_size
+    );
+
+    for engine in [Engine::Rapid, Engine::DglMetis] {
+        let mut t = Table::new(
+            &format!("{} — scaling with workers", engine.name()),
+            &["P", "epoch time", "speedup vs P=2", "device MB", "host MB"],
+        );
+        let mut p2_time = None;
+        for p in [1u32, 2, 3, 4, 6, 8] {
+            let mut c = cfg.clone();
+            c.engine = engine;
+            c.num_workers = p;
+            let r = coordinator::run(&c)?;
+            let epoch_time = r.total_time / c.epochs as f64;
+            if p == 2 {
+                p2_time = Some(epoch_time);
+            }
+            t.row(&[
+                p.to_string(),
+                fmt_secs(epoch_time),
+                p2_time.map_or("-".into(), |t2| format!("{:.2}x", t2 / epoch_time)),
+                format!("{:.1}", r.peak_device_bytes() as f64 / 1e6),
+                format!("{:.1}", r.peak_host_bytes() as f64 / 1e6),
+            ]);
+        }
+        t.print();
+    }
+    println!("(paper Fig. 6: 1.5-1.6x at P=3, 1.7-2.1x at P=4 over the P=2 baseline)");
+    Ok(())
+}

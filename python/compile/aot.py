@@ -1,0 +1,114 @@
+"""AOT lowering: JAX train step (with Pallas kernels) → HLO text + manifest.
+
+HLO *text* is the interchange format with the rust runtime: the image's
+xla_extension 0.5.1 rejects jax≥0.5's serialized protos (64-bit instruction
+ids), while the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts          # all presets
+    python -m compile.aot --preset tiny --out-dir ../artifacts
+
+Each artifact is ``sage_<preset>.hlo.txt`` plus ``sage_<preset>.meta.json``
+describing the fixed shapes (the rust side matches on d/h/c/fanout/caps).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, train_step
+
+TILE = 8  # Pallas row-tile height; all caps padded to multiples of it.
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+def make_caps(batch, f1, f2):
+    """Padded capacities for a 2-layer sampled batch (DGL fanout [f1, f2])."""
+    b_cap = _round_up(batch, TILE)
+    n1_cap = _round_up(b_cap * (1 + f2), TILE)
+    n0_cap = _round_up(n1_cap * (1 + f1), TILE)
+    return b_cap, n1_cap, n0_cap
+
+
+# Preset name -> (d, h, c, f1, f2, batch). Matches the rust DatasetConfig
+# presets (dims) and the example/test run configs (fanout, batch).
+PRESETS = {
+    # rust RunConfig::default() on the tiny dataset: fanout [10,25], batch 128
+    "tiny": (16, 64, 4, 10, 25, 128),
+    # e2e example: products-sim, fanout [5,10], batch 256
+    "products": (100, 64, 47, 5, 10, 256),
+    # reddit-sim with a reduced batch (d=602 rows are heavy)
+    "reddit": (602, 64, 50, 5, 10, 128),
+    # papers-sim
+    "papers": (128, 64, 172, 5, 10, 256),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Cap overrides: the generic formula assumes the k-hop expansion never
+# saturates the graph; for small graphs the node count itself is the cap
+# (perf: the tiny artifact's padded rows drop 36608 -> 2000, an ~18x cut in
+# wasted gather/matmul work — see EXPERIMENTS.md §Perf).
+CAP_OVERRIDES = {
+    "tiny": (128, 2000, 2000),  # tiny graph has 2000 nodes total
+}
+
+
+def build(preset: str, out_dir: str) -> dict:
+    d, h, c, f1, f2, batch = PRESETS[preset]
+    b_cap, n1_cap, n0_cap = CAP_OVERRIDES.get(preset) or make_caps(batch, f1, f2)
+    args = example_args(d, h, c, f1, f2, b_cap, n1_cap, n0_cap)
+    lowered = jax.jit(train_step).lower(*args)
+    hlo = to_hlo_text(lowered)
+
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_name = f"sage_{preset}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_name), "w") as f:
+        f.write(hlo)
+    meta = {
+        "hlo": hlo_name,
+        "d": d,
+        "h": h,
+        "c": c,
+        "f1": f1,
+        "f2": f2,
+        "b_cap": b_cap,
+        "n1_cap": n1_cap,
+        "n0_cap": n0_cap,
+    }
+    with open(os.path.join(out_dir, f"sage_{preset}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default=None,
+                    help="single preset (default: all)")
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    presets = [args.preset] if args.preset else sorted(PRESETS)
+    for p in presets:
+        meta = build(p, args.out_dir)
+        print(f"built sage_{p}: caps=({meta['b_cap']},{meta['n1_cap']},{meta['n0_cap']})"
+              f" d={meta['d']} h={meta['h']} c={meta['c']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: tiled matmul for the SAGE linear transforms.
+
+Tiles the row axis into ``(TM, K)`` VMEM blocks with the full weight matrix
+``(K, N)`` resident (K ≤ 602, N ≤ 172 across every artifact config → worst
+case 602×172×4 ≈ 405 KiB, comfortably inside a TPU core's ~16 MiB VMEM; see
+``vmem_bytes``). The inner ``jnp.dot`` maps onto the MXU with
+``preferred_element_type=f32`` accumulation.
+
+Backward matmuls (``dx = dz @ W^T``, ``dW = x^T @ dz``) are delegated to XLA
+via ``jnp.dot`` inside the custom VJP: their shapes transpose the row tiling
+(K is not a multiple of the tile height for d=602), and XLA's native emitter
+already saturates the MXU for plain GEMMs — the Pallas win is on the forward
+path fused with the aggregation schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 8
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def matmul(x, w):
+    """``x [M,K] @ w [K,N]`` with M a multiple of TILE_M."""
+    return _matmul_impl(x, w)
+
+
+def _matmul_impl(x, w):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % TILE_M == 0, f"M={m} must be a multiple of {TILE_M} (pad caps)"
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // TILE_M,),
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),  # weights replicated
+        ],
+        out_specs=pl.BlockSpec((TILE_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, dz):
+    x, w = res
+    dx = jnp.dot(dz, w.T)
+    dw = jnp.dot(x.T, dz)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(k: int, n: int) -> int:
+    """Estimated VMEM footprint of one block (DESIGN.md §Perf)."""
+    return TILE_M * k * 4 + k * n * 4 + TILE_M * n * 4

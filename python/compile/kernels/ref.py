@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must agree with its reference here to float32
+tolerance, across the full shape/dtype sweep in ``python/tests``.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_mean_ref(x_nbrs, mask):
+    """Reference masked mean: x_nbrs [M,F,D], mask [M,F] -> [M,D]."""
+    s = jnp.sum(x_nbrs * mask[:, :, None], axis=1)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    return s / cnt
+
+
+def matmul_ref(x, w):
+    """Reference matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

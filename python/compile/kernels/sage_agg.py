@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernels: masked-mean neighbor aggregation.
+
+This is the GNN hot spot the whole paper is about feeding efficiently: given
+the gathered neighbor features ``x_nbrs [M, F, D]`` and a validity mask
+``[M, F]`` (sampled neighborhoods are ragged; RapidGNN pads to fan-out F),
+compute the mean over valid neighbors per destination node.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's cluster
+does this with CUDA gathers into GPU global memory; on TPU we tile the
+destination axis into VMEM-resident blocks via ``BlockSpec`` — block shape
+``(TM, F, D)`` with the full feature row in the lane dimension — and reduce
+over the neighbor axis in-register. ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so the kernel lowers to plain
+HLO that the rust runtime can run; real-TPU numbers are estimated from the
+VMEM footprint in DESIGN.md §Perf.
+
+The backward pass is its own Pallas kernel, wired up with ``jax.custom_vjp``
+(Pallas calls are not auto-differentiable).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Destination-node tile: 8 sublanes is the native f32 tile height on TPU.
+TILE_M = 8
+
+
+def _fwd_kernel(x_ref, m_ref, o_ref):
+    """One (TM, F, D) block: masked sum over F, divided by the valid count."""
+    x = x_ref[...]  # [TM, F, D]
+    m = m_ref[...]  # [TM, F]
+    s = jnp.sum(x * m[:, :, None], axis=1)  # [TM, D]
+    cnt = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)  # [TM, 1]
+    o_ref[...] = s / cnt
+
+
+def _bwd_kernel(dout_ref, m_ref, dx_ref):
+    """dx[m, f, :] = dout[m, :] * mask[m, f] / count(m)."""
+    g = dout_ref[...]  # [TM, D]
+    m = m_ref[...]  # [TM, F]
+    cnt = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+    dx_ref[...] = (g / cnt)[:, None, :] * m[:, :, None]
+
+
+def _grid(m):
+    assert m % TILE_M == 0, f"M={m} must be a multiple of {TILE_M} (pad caps)"
+    return (m // TILE_M,)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def masked_mean(x_nbrs, mask):
+    """Mean over valid neighbor slots. x_nbrs [M,F,D] f32, mask [M,F] f32."""
+    return _masked_mean_fwd_impl(x_nbrs, mask)
+
+
+def _masked_mean_fwd_impl(x_nbrs, mask):
+    m, f, d = x_nbrs.shape
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=_grid(m),
+        in_specs=[
+            pl.BlockSpec((TILE_M, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TILE_M, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x_nbrs.dtype),
+        interpret=True,
+    )(x_nbrs, mask)
+
+
+def _masked_mean_fwd(x_nbrs, mask):
+    return _masked_mean_fwd_impl(x_nbrs, mask), (mask, x_nbrs.shape)
+
+
+def _masked_mean_bwd(res, dout):
+    mask, (m, f, d) = res
+    dx = pl.pallas_call(
+        _bwd_kernel,
+        grid=_grid(m),
+        in_specs=[
+            pl.BlockSpec((TILE_M, d), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_M, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, f, d), dout.dtype),
+        interpret=True,
+    )(dout, mask)
+    # mask is structural (0/1 padding), not a trainable input: zero grad.
+    return dx, jnp.zeros_like(mask)
+
+
+masked_mean.defvjp(_masked_mean_fwd, _masked_mean_bwd)
+
+
+def vmem_bytes(f: int, d: int) -> int:
+    """Estimated VMEM footprint of one forward block (DESIGN.md §Perf)."""
+    x_block = TILE_M * f * d * 4
+    m_block = TILE_M * f * 4
+    o_block = TILE_M * d * 4
+    return x_block + m_block + o_block

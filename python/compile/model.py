@@ -1,0 +1,103 @@
+"""Layer-2 JAX model: 2-layer GraphSAGE forward/backward/SGD train step.
+
+Mirrors the rust host reference (`rust/src/trainer/sage.rs`) exactly:
+``h_dst = relu(x_self @ W_self + masked_mean(x_nbrs) @ W_nbr + b)`` per layer,
+softmax cross-entropy averaged over valid (mask=1) seeds, plain SGD. The
+aggregation and the forward linear transforms run through the Pallas kernels
+in :mod:`compile.kernels`.
+
+The function signature is the operand-order contract with the rust runtime
+(`rust/src/runtime/pjrt.rs`):
+
+  inputs:  w_self1, w_nbr1, b1, w_self2, w_nbr2, b2, lr,
+           x0, self1, nbr1, m1, self2, nbr2, m2, labels, label_mask
+  outputs: (w_self1', w_nbr1', b1', w_self2', w_nbr2', b2', loss, correct)
+
+All shapes are static (padded to the artifact caps); index padding rows are
+masked out of the loss and receive no gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.sage_agg import masked_mean
+
+
+def _sage_layer(src, w_self, w_nbr, b, self_idx, nbr_idx, mask, relu):
+    """One SAGE layer over a sampled block."""
+    x_self = jnp.take(src, self_idx, axis=0)  # [M, D]
+    x_nbrs = jnp.take(src, nbr_idx, axis=0)  # [M, F, D]
+    agg = masked_mean(x_nbrs, mask)  # [M, D]  (Pallas)
+    z = matmul(x_self, w_self) + matmul(agg, w_nbr) + b  # (Pallas fwd)
+    return jax.nn.relu(z) if relu else z
+
+
+def _loss_and_correct(logits, labels, label_mask):
+    """Masked mean softmax cross-entropy + correct count."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = logz - picked
+    valid = jnp.maximum(jnp.sum(label_mask), 1.0)
+    loss = jnp.sum(ce * label_mask) / valid
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == labels).astype(jnp.float32) * label_mask)
+    return loss, correct
+
+
+def train_step(
+    w_self1,
+    w_nbr1,
+    b1,
+    w_self2,
+    w_nbr2,
+    b2,
+    lr,
+    x0,
+    self1,
+    nbr1,
+    m1,
+    self2,
+    nbr2,
+    m2,
+    labels,
+    label_mask,
+):
+    """One SGD step. Returns (updated params..., loss, correct)."""
+    params = (w_self1, w_nbr1, b1, w_self2, w_nbr2, b2)
+
+    def loss_fn(params):
+        ws1, wn1, bb1, ws2, wn2, bb2 = params
+        h1 = _sage_layer(x0, ws1, wn1, bb1, self1, nbr1, m1, relu=True)
+        logits = _sage_layer(h1, ws2, wn2, bb2, self2, nbr2, m2, relu=False)
+        loss, correct = _loss_and_correct(logits, labels, label_mask)
+        return loss, correct
+
+    (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss, correct)
+
+
+def example_args(d, h, c, f1, f2, b_cap, n1_cap, n0_cap):
+    """ShapeDtypeStructs matching the operand contract (for AOT lowering)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    S = jax.ShapeDtypeStruct
+    return (
+        S((d, h), f32),  # w_self1
+        S((d, h), f32),  # w_nbr1
+        S((h,), f32),  # b1
+        S((h, c), f32),  # w_self2
+        S((h, c), f32),  # w_nbr2
+        S((c,), f32),  # b2
+        S((), f32),  # lr
+        S((n0_cap, d), f32),  # x0
+        S((n1_cap,), i32),  # self1
+        S((n1_cap, f1), i32),  # nbr1
+        S((n1_cap, f1), f32),  # m1
+        S((b_cap,), i32),  # self2
+        S((b_cap, f2), i32),  # nbr2
+        S((b_cap, f2), f32),  # m2
+        S((b_cap,), i32),  # labels
+        S((b_cap,), f32),  # label_mask
+    )

@@ -1,0 +1,154 @@
+"""Kernel vs reference oracle — the core L1 correctness signal.
+
+Includes randomized shape sweeps (hypothesis-style: many generated cases,
+deterministic seeds) and gradient checks through the custom VJPs.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.matmul import matmul, vmem_bytes as mm_vmem
+from compile.kernels.ref import masked_mean_ref, matmul_ref
+from compile.kernels.sage_agg import masked_mean, vmem_bytes as agg_vmem, TILE_M
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def rand_mask(rng, m, f):
+    # ragged neighborhoods: some rows full, some partial, some empty
+    mask = (rng.random((m, f)) < rng.random((m, 1)) * 1.2).astype(np.float32)
+    return jnp.asarray(mask)
+
+
+# ---------------------------------------------------------------- masked_mean
+
+@pytest.mark.parametrize("m,f,d", [(8, 4, 16), (16, 10, 32), (8, 25, 602), (64, 1, 7)])
+def test_masked_mean_matches_ref(m, f, d):
+    rng = np.random.default_rng(m * 1000 + f * 10 + d)
+    x = rand(rng, m, f, d)
+    mask = rand_mask(rng, m, f)
+    got = masked_mean(x, mask)
+    want = masked_mean_ref(x, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_mean_shape_sweep():
+    """Randomized sweep over (M, F, D) — hypothesis-style generation."""
+    rng = np.random.default_rng(7)
+    for case in range(25):
+        m = TILE_M * int(rng.integers(1, 12))
+        f = int(rng.integers(1, 30))
+        d = int(rng.integers(1, 130))
+        x = rand(rng, m, f, d)
+        mask = rand_mask(rng, m, f)
+        np.testing.assert_allclose(
+            masked_mean(x, mask), masked_mean_ref(x, mask),
+            rtol=1e-5, atol=1e-5, err_msg=f"case {case}: m={m} f={f} d={d}",
+        )
+
+
+def test_masked_mean_empty_rows_are_zero():
+    x = jnp.ones((8, 4, 5), jnp.float32)
+    mask = jnp.zeros((8, 4), jnp.float32)
+    out = masked_mean(x, mask)
+    np.testing.assert_array_equal(out, np.zeros((8, 5), np.float32))
+
+
+def test_masked_mean_full_mask_is_plain_mean():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 16, 6, 12)
+    mask = jnp.ones((16, 6), jnp.float32)
+    np.testing.assert_allclose(masked_mean(x, mask), jnp.mean(x, axis=1), rtol=1e-5, atol=1e-6)
+
+
+def test_masked_mean_rejects_unpadded_m():
+    x = jnp.ones((9, 4, 5), jnp.float32)  # 9 not multiple of 8
+    mask = jnp.ones((9, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        masked_mean(x, mask)
+
+
+def test_masked_mean_gradient_matches_ref_gradient():
+    rng = np.random.default_rng(11)
+    x = rand(rng, 16, 5, 20)
+    mask = rand_mask(rng, 16, 5)
+
+    def f_kernel(x):
+        return jnp.sum(jnp.sin(masked_mean(x, mask)))
+
+    def f_ref(x):
+        return jnp.sum(jnp.sin(masked_mean_ref(x, mask)))
+
+    gk = jax.grad(f_kernel)(x)
+    gr = jax.grad(f_ref)(x)
+    np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_mean_vmem_under_budget():
+    # Worst artifact config: F=25, D=602 → block must fit VMEM (~16 MiB)
+    assert agg_vmem(25, 602) < 16 * 2**20
+
+
+# -------------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 4), (32, 602, 64), (64, 64, 172), (8, 1, 1)])
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = rand(rng, m, k)
+    w = rand(rng, k, n)
+    np.testing.assert_allclose(matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_shape_sweep():
+    rng = np.random.default_rng(13)
+    for case in range(25):
+        m = TILE_M * int(rng.integers(1, 16))
+        k = int(rng.integers(1, 300))
+        n = int(rng.integers(1, 100))
+        x = rand(rng, m, k)
+        w = rand(rng, k, n)
+        np.testing.assert_allclose(
+            matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4,
+            err_msg=f"case {case}: m={m} k={k} n={n}",
+        )
+
+
+def test_matmul_gradients():
+    rng = np.random.default_rng(17)
+    x = rand(rng, 16, 12)
+    w = rand(rng, 12, 5)
+
+    def f(x, w):
+        return jnp.sum(matmul(x, w) ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum(matmul_ref(x, w) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_vmem_under_budget():
+    assert mm_vmem(602, 172) < 16 * 2**20
+
+
+def test_kernels_compose_under_jit():
+    """The composition the model uses, under jit (the lowering path)."""
+    rng = np.random.default_rng(19)
+    x = rand(rng, 16, 6, 10)
+    mask = rand_mask(rng, 16, 6)
+    w = rand(rng, 10, 4)
+
+    @jax.jit
+    def f(x, mask, w):
+        return matmul(masked_mean(x, mask), w)
+
+    got = f(x, mask, w)
+    want = matmul_ref(masked_mean_ref(x, mask), w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

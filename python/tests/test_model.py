@@ -1,0 +1,139 @@
+"""L2 model tests: gradient correctness, padding invariance, training signal."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.model import train_step, _sage_layer, _loss_and_correct
+from compile.aot import make_caps
+
+
+def make_inputs(rng, d=12, h=8, c=4, f1=3, f2=2, b=8, n1=16, n0=40, valid_b=None):
+    """Random but self-consistent padded batch."""
+    f32, i32 = np.float32, np.int32
+    valid_b = b if valid_b is None else valid_b
+    params = [
+        rng.standard_normal((d, h)).astype(f32) * 0.2,
+        rng.standard_normal((d, h)).astype(f32) * 0.2,
+        np.zeros(h, f32),
+        rng.standard_normal((h, c)).astype(f32) * 0.2,
+        rng.standard_normal((h, c)).astype(f32) * 0.2,
+        np.zeros(c, f32),
+    ]
+    x0 = rng.standard_normal((n0, d)).astype(f32)
+    self1 = rng.integers(0, n0, n1).astype(i32)
+    nbr1 = rng.integers(0, n0, (n1, f1)).astype(i32)
+    m1 = (rng.random((n1, f1)) < 0.8).astype(f32)
+    self2 = rng.integers(0, n1, b).astype(i32)
+    nbr2 = rng.integers(0, n1, (b, f2)).astype(i32)
+    m2 = (rng.random((b, f2)) < 0.8).astype(f32)
+    labels = rng.integers(0, c, b).astype(i32)
+    lmask = np.zeros(b, f32)
+    lmask[:valid_b] = 1.0
+    return params, (x0, self1, nbr1, m1, self2, nbr2, m2, labels, lmask)
+
+
+def run_step(params, batch, lr=0.1):
+    return train_step(*params, jnp.float32(lr), *batch)
+
+
+def test_step_output_shapes():
+    rng = np.random.default_rng(1)
+    params, batch = make_inputs(rng)
+    out = run_step(params, batch)
+    assert len(out) == 8
+    for new, old in zip(out[:6], params):
+        assert new.shape == old.shape
+    loss, correct = out[6], out[7]
+    assert loss.shape == () and correct.shape == ()
+    assert np.isfinite(float(loss))
+
+
+def test_loss_decreases_on_repeated_steps():
+    rng = np.random.default_rng(2)
+    params, batch = make_inputs(rng)
+    step = jax.jit(train_step)
+    losses = []
+    p = [jnp.asarray(x) for x in params]
+    for _ in range(30):
+        out = step(*p, jnp.float32(0.2), *batch)
+        p = list(out[:6])
+        losses.append(float(out[6]))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_zero_lr_leaves_params_unchanged():
+    rng = np.random.default_rng(3)
+    params, batch = make_inputs(rng)
+    out = run_step(params, batch, lr=0.0)
+    for new, old in zip(out[:6], params):
+        np.testing.assert_array_equal(np.asarray(new), old)
+
+
+def test_masked_seeds_get_no_gradient():
+    """Padding seeds (label_mask 0) must not change the loss or grads."""
+    rng = np.random.default_rng(4)
+    params, batch = make_inputs(rng, valid_b=4)
+    x0, self1, nbr1, m1, self2, nbr2, m2, labels, lmask = batch
+    out1 = run_step(params, batch)
+    # change the labels of MASKED rows — nothing should move
+    labels2 = labels.copy()
+    labels2[4:] = (labels2[4:] + 1) % 4
+    batch2 = (x0, self1, nbr1, m1, self2, nbr2, m2, labels2, lmask)
+    out2 = run_step(params, batch2)
+    np.testing.assert_allclose(float(out1[6]), float(out2[6]), rtol=1e-6)
+    for a, b in zip(out1[:6], out2[:6]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_gradients_match_numerical():
+    rng = np.random.default_rng(5)
+    params, batch = make_inputs(rng)
+
+    def loss_of(params_flat):
+        out = run_step(params_flat, batch, lr=0.0)
+        return float(out[6])
+
+    # analytic grad from the SGD update at lr=1: g = p - p'
+    out = run_step(params, batch, lr=1.0)
+    g_w1 = params[0] - np.asarray(out[0])
+    eps = 1e-3
+    for idx in [(0, 0), (3, 2), (11, 7)]:
+        p2 = [p.copy() for p in params]
+        p2[0][idx] += eps
+        lp = loss_of(p2)
+        p2[0][idx] -= 2 * eps
+        lm = loss_of(p2)
+        numeric = (lp - lm) / (2 * eps)
+        assert abs(numeric - g_w1[idx]) < 5e-3, (idx, numeric, g_w1[idx])
+
+
+def test_correct_count_bounded_by_valid():
+    rng = np.random.default_rng(6)
+    params, batch = make_inputs(rng, valid_b=5)
+    out = run_step(params, batch)
+    assert 0 <= float(out[7]) <= 5
+
+
+def test_make_caps_are_tile_aligned():
+    for batch, f1, f2 in [(128, 10, 25), (256, 5, 10), (1, 1, 1), (1000, 10, 25)]:
+        b, n1, n0 = make_caps(batch, f1, f2)
+        assert b % 8 == 0 and n1 % 8 == 0 and n0 % 8 == 0
+        assert b >= batch
+        assert n1 >= b * (1 + f2) - 8
+        assert n0 >= n1 * (1 + f1) - 8
+
+
+def test_layer_and_loss_helpers():
+    rng = np.random.default_rng(7)
+    params, batch = make_inputs(rng)
+    x0, self1, nbr1, m1, *_ = batch
+    h1 = _sage_layer(jnp.asarray(x0), *[jnp.asarray(p) for p in params[:3]],
+                     self1, nbr1, m1, relu=True)
+    assert h1.shape == (16, 8)
+    assert float(jnp.min(h1)) >= 0.0, "relu output"
+    logits = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    labels = jnp.asarray([0, 1, 2, 3, 0, 1, 2, 3], jnp.int32)
+    lmask = jnp.ones(8, jnp.float32)
+    loss, correct = _loss_and_correct(logits, labels, lmask)
+    assert np.isfinite(float(loss)) and 0 <= float(correct) <= 8

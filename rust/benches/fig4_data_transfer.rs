@@ -1,0 +1,56 @@
+//! Figure 4 — mean data transferred per training step, RapidGNN vs
+//! DGL-METIS, across the three datasets and batch sizes 1000/2000/3000.
+//!
+//! Paper: OGBN-Papers 1.5/3.1/4.6 MB vs METIS 4.3/8.3/12.0 (≈2.6–2.8×);
+//! Reddit 0.3/0.6/0.9 MB vs 6.8/10.0/14.0 (15–23×); Products 2.0/3.8/5.4 vs
+//! 4.8/8.8/12.1 (2.2–2.5×). Expected shape: RapidGNN always lower, Reddit's
+//! reduction largest (heaviest tail × widest rows).
+
+use rapidgnn::config::{DatasetPreset, Engine};
+use rapidgnn::coordinator;
+use rapidgnn::util::bench::{fmt_bytes, Table};
+use rapidgnn::util::bench_support::{paper_run, PAPER_BATCHES};
+use rapidgnn::util::value::Value;
+
+fn main() -> rapidgnn::Result<()> {
+    let mut t = Table::new(
+        "Fig 4 — mean data transfer per step: RapidGNN vs DGL-METIS",
+        &["dataset", "batch", "Rapid/step", "Rapid+cache/step", "METIS/step", "reduction"],
+    );
+    let mut json = Vec::new();
+    for preset in DatasetPreset::PAPER {
+        for batch in PAPER_BATCHES {
+            let rapid = coordinator::run(&paper_run(preset, Engine::Rapid, batch))?;
+            let metis = coordinator::run(&paper_run(preset, Engine::DglMetis, batch))?;
+            let steps: u64 = rapid.epochs.iter().map(|e| e.steps as u64).sum();
+            let row_bytes = paper_run(preset, Engine::Rapid, batch)
+                .dataset
+                .feature_row_bytes();
+            // Training-path bytes (SyncPull misses) — the paper's Fig-4
+            // metric; cache-build VectorPulls amortize off the step path.
+            let r_sync = rapid.sync_remote_rows() as f64 * row_bytes as f64 / steps as f64;
+            let r_total = rapid.mean_bytes_per_step();
+            let m = metis.mean_bytes_per_step();
+            t.row(&[
+                preset.name().into(),
+                batch.to_string(),
+                fmt_bytes(r_sync),
+                fmt_bytes(r_total),
+                fmt_bytes(m),
+                format!("{:.1}x", m / r_sync.max(1.0)),
+            ]);
+            let mut cell = Value::table();
+            cell.set("dataset", preset.name())
+                .set("batch", batch)
+                .set("rapid_sync_bytes_per_step", r_sync)
+                .set("rapid_total_bytes_per_step", r_total)
+                .set("metis_bytes_per_step", m);
+            json.push(cell);
+        }
+    }
+    t.print();
+    println!("paper reductions: Papers ~2.6-2.8x, Products ~2.2-2.5x, Reddit ~15-23x");
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig4.json", Value::Arr(json).to_json_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Figure 6 — throughput scaling with worker count.
+//!
+//! Paper: RapidGNN scales near-linearly; at P=3 speedup 1.5× (products) to
+//! 1.6× (reddit) over P=2; at P=4, 1.7–2.1×. We sweep P ∈ {2,3,4,6,8}
+//! (extending past the paper's 4-machine testbed) on all three datasets.
+
+use rapidgnn::config::{DatasetPreset, Engine};
+use rapidgnn::coordinator;
+use rapidgnn::util::bench::{fmt_secs, Table};
+use rapidgnn::util::bench_support::paper_run;
+use rapidgnn::util::value::Value;
+
+const WORKERS: [u32; 5] = [2, 3, 4, 6, 8];
+
+fn main() -> rapidgnn::Result<()> {
+    let mut json = Vec::new();
+    for preset in DatasetPreset::PAPER {
+        let mut t = Table::new(
+            &format!("Fig 6 — RapidGNN scaling on {}", preset.name()),
+            &["P", "epoch time", "speedup vs P=2", "DGL-METIS epoch", "Rapid vs METIS"],
+        );
+        let mut p2 = 0.0;
+        for &p in &WORKERS {
+            let mut cfg = paper_run(preset, Engine::Rapid, 1000);
+            cfg.num_workers = p;
+            let rapid = coordinator::run(&cfg)?;
+            let mut bcfg = paper_run(preset, Engine::DglMetis, 1000);
+            bcfg.num_workers = p;
+            let metis = coordinator::run(&bcfg)?;
+            let epoch = rapid.total_time / cfg.epochs as f64;
+            let metis_epoch = metis.total_time / bcfg.epochs as f64;
+            if p == 2 {
+                p2 = epoch;
+            }
+            t.row(&[
+                p.to_string(),
+                fmt_secs(epoch),
+                format!("{:.2}x", p2 / epoch),
+                fmt_secs(metis_epoch),
+                format!("{:.2}x", metis_epoch / epoch),
+            ]);
+            let mut cell = Value::table();
+            cell.set("dataset", preset.name())
+                .set("workers", p)
+                .set("rapid_epoch_time", epoch)
+                .set("metis_epoch_time", metis_epoch);
+            json.push(cell);
+        }
+        t.print();
+    }
+    println!("paper: P=3 → 1.5-1.6x over P=2; P=4 → 1.7-2.1x (reddit)");
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig6.json", Value::Arr(json).to_json_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Figure 9 — convergence parity: training accuracy across batch sizes on
+//! products-sim and reddit-sim, RapidGNN vs DGL-METIS.
+//!
+//! This is the empirical validation of Proposition 3.1: deterministic seeded
+//! sampling + hot-set caching + prefetching must not bias the gradient
+//! estimator — accuracy curves rise and plateau at the same level as the
+//! on-demand baseline in all six configurations.
+//!
+//! Runs in full-exec mode with the host trainer on scaled-down datasets
+//! (real forward/backward/SGD, identical model init per pair).
+
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, ExecMode, RunConfig};
+use rapidgnn::coordinator;
+use rapidgnn::util::bench::Table;
+use rapidgnn::util::value::Value;
+
+fn cfg(preset: DatasetPreset, engine: Engine, batch: u32) -> RunConfig {
+    let mut ds = DatasetConfig::preset(preset, 0.12);
+    ds.train_fraction = 0.5; // enough seeds for several batches per epoch
+    RunConfig {
+        dataset: ds,
+        engine,
+        exec_mode: ExecMode::Full,
+        num_workers: 2,
+        batch_size: batch,
+        fanout: vec![5, 10],
+        epochs: 6,
+        n_hot: 2_000,
+        learning_rate: 0.08,
+        ..Default::default()
+    }
+}
+
+fn main() -> rapidgnn::Result<()> {
+    // batch sizes scaled to the shrunken datasets (stand-ins for the paper's
+    // 1000/2000/3000 on the full graphs)
+    let batches = [128u32, 256, 512];
+    let mut json = Vec::new();
+    for preset in [DatasetPreset::ProductsSim, DatasetPreset::RedditSim] {
+        for batch in batches {
+            let rapid = coordinator::run(&cfg(preset, Engine::Rapid, batch))?;
+            // The baseline's sampler draws from a DIFFERENT seed stream —
+            // simulating DGL's online RNG — so overlap demonstrates the
+            // distributional equivalence of Proposition 3.1, not bit-equality.
+            let mut mcfg = cfg(preset, Engine::DglMetis, batch);
+            mcfg.base_seed = mcfg.base_seed.wrapping_add(0xD61);
+            let metis = coordinator::run(&mcfg)?;
+            let ra = rapid.accuracy_curve();
+            let ma = metis.accuracy_curve();
+            let mut t = Table::new(
+                &format!("Fig 9 — {} batch {}", preset.name(), batch),
+                &["epoch", "RapidGNN acc", "DGL-METIS acc", "gap"],
+            );
+            for ((e, a), (_, b)) in ra.iter().zip(&ma) {
+                t.row(&[
+                    e.to_string(),
+                    format!("{:.1}%", a * 100.0),
+                    format!("{:.1}%", b * 100.0),
+                    format!("{:+.1}pp", (a - b) * 100.0),
+                ]);
+            }
+            t.print();
+            let final_gap = ra.last().unwrap().1 - ma.last().unwrap().1;
+            println!(
+                "final-accuracy gap: {:+.1}pp (paper: curves overlap; both rise and plateau)",
+                final_gap * 100.0
+            );
+            let mut cell = Value::table();
+            cell.set("dataset", preset.name())
+                .set("batch", batch)
+                .set("rapid_final_acc", ra.last().unwrap().1)
+                .set("metis_final_acc", ma.last().unwrap().1)
+                .set(
+                    "rapid_curve",
+                    Value::Arr(ra.iter().map(|&(_, a)| Value::Float(a)).collect()),
+                )
+                .set(
+                    "metis_curve",
+                    Value::Arr(ma.iter().map(|&(_, a)| Value::Float(a)).collect()),
+                );
+            json.push(cell);
+        }
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig9.json", Value::Arr(json).to_json_pretty())?;
+    Ok(())
+}

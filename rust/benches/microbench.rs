@@ -1,0 +1,165 @@
+//! Hot-path microbenchmarks (the §Perf instrument panel).
+//!
+//! Measures the components on RapidGNN's critical and background paths:
+//! k-hop sampling, schedule streaming, cache lookup, feature gather, MPMC
+//! queue throughput, the pipeline-schedule recurrence, the host matmul, and
+//! (when artifacts exist) PJRT step latency.
+
+use rapidgnn::cache::{top_hot, CacheBuffer, DoubleBufferCache};
+use rapidgnn::config::{DatasetConfig, DatasetPreset, RunConfig};
+use rapidgnn::coordinator::RunContext;
+use rapidgnn::graph::build_dataset;
+use rapidgnn::sampler::{enumerate_epoch, sample_input_nodes, Fanout};
+use rapidgnn::sim::{pipeline_schedule, PipelineStep};
+use rapidgnn::trainer::Mat;
+use rapidgnn::util::bench::{fmt_secs, time_until, Table};
+
+fn main() -> rapidgnn::Result<()> {
+    let mut t = Table::new("Microbenchmarks", &["path", "per-op", "throughput"]);
+
+    // --- k-hop sampling (products-sim shape) ---
+    let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::ProductsSim, 0.3), false);
+    let seeds: Vec<u32> = ds.train_nodes.iter().take(1000).copied().collect();
+    let fanouts = [Fanout::Sample(10), Fanout::Sample(25)];
+    let mut n_sampled = 0usize;
+    let (iters, _, per) = time_until(1.0, || {
+        let ids = sample_input_nodes(&ds.graph, &seeds, &fanouts, 42);
+        n_sampled = ids.len();
+        std::hint::black_box(&ids);
+    });
+    t.row(&[
+        format!("k-hop sample (batch 1000, [10,25], {n_sampled} ids)"),
+        fmt_secs(per),
+        format!("{:.1}M ids/s", n_sampled as f64 * iters as f64 / 1e6 / (per * iters as f64)),
+    ]);
+
+    // --- schedule enumeration + streaming round trip ---
+    let part = rapidgnn::partition::metis_like(&ds.graph, 4, 0);
+    let shard: Vec<u32> = ds.train_nodes.iter().copied().filter(|&v| part.is_local(0, v)).collect();
+    let (_, _, per) = time_until(1.0, || {
+        let s = enumerate_epoch(&ds.graph, &part, &shard, &fanouts, 1000, 42, 0, 0);
+        std::hint::black_box(s.batches.len());
+    });
+    t.row(&["enumerate_epoch (per epoch/worker)".into(), fmt_secs(per), "-".into()]);
+
+    // --- cache lookup ---
+    let sched = enumerate_epoch(&ds.graph, &part, &shard, &fanouts, 1000, 42, 0, 0);
+    let hot = top_hot(&sched.batches, 10_000);
+    let mut cache = DoubleBufferCache::default();
+    cache.install_steady(CacheBuffer::new(&hot, Vec::new(), 100));
+    let remote: Vec<u32> = sched.batches[0].remote_nodes().collect();
+    let (mut h, mut m) = (Vec::new(), Vec::new());
+    let (_, _, per) = time_until(0.5, || {
+        cache.split_hits(&remote, &mut h, &mut m);
+    });
+    t.row(&[
+        format!("cache split_hits ({} ids)", remote.len()),
+        fmt_secs(per),
+        format!("{:.1}M lookups/s", remote.len() as f64 / per / 1e6),
+    ]);
+
+    // --- feature gather (kvstore full mode) ---
+    let ds_f = build_dataset(&DatasetConfig::preset(DatasetPreset::ProductsSim, 0.05), true);
+    let part_f = std::sync::Arc::new(rapidgnn::partition::metis_like(&ds_f.graph, 2, 0));
+    let kv = rapidgnn::kvstore::KvStore::new(
+        &ds_f,
+        part_f,
+        rapidgnn::net::NetFabric::new(Default::default()),
+    );
+    let ids: Vec<u32> = (0..5_000).map(|i| (i * 7) % ds_f.graph.num_nodes()).collect();
+    let mut out = Vec::new();
+    let mut stats = Default::default();
+    let (_, _, per) = time_until(0.5, || {
+        kv.sync_pull(0, &ids, Some(&mut out), &mut stats);
+    });
+    let gb = (ids.len() * kv.feature_dim() * 4) as f64 / per / 1e9;
+    t.row(&[
+        format!("feature gather ({} rows × d=100)", ids.len()),
+        fmt_secs(per),
+        format!("{gb:.2} GB/s"),
+    ]);
+
+    // --- MPMC ring ---
+    let (_, _, per) = time_until(0.5, || {
+        let (tx, rx) = rapidgnn::util::mpmc::bounded::<u64>(16);
+        let h = std::thread::spawn(move || {
+            for i in 0..10_000u64 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut n = 0;
+        while rx.recv().is_ok() {
+            n += 1;
+        }
+        h.join().unwrap();
+        std::hint::black_box(n);
+    });
+    t.row(&[
+        "MPMC ring (10k msgs, 1P/1C)".into(),
+        fmt_secs(per),
+        format!("{:.2}M msg/s", 10_000.0 / per / 1e6),
+    ]);
+
+    // --- pipeline schedule recurrence ---
+    let steps: Vec<PipelineStep> = (0..10_000)
+        .map(|i| PipelineStep { stage: (i % 7) as f64 * 1e-4, consume: 1e-3 })
+        .collect();
+    let (_, _, per) = time_until(0.5, || {
+        std::hint::black_box(pipeline_schedule(&steps, 4).total);
+    });
+    t.row(&[
+        "pipeline_schedule (10k steps)".into(),
+        fmt_secs(per),
+        format!("{:.1}M steps/s", 10_000.0 / per / 1e6),
+    ]);
+
+    // --- host matmul (trainer hot loop) ---
+    let a = Mat::init(2048, 100, 1);
+    let b = Mat::init(100, 64, 2);
+    let (_, _, per) = time_until(1.0, || {
+        std::hint::black_box(a.matmul(&b).data[0]);
+    });
+    let gflops = 2.0 * 2048.0 * 100.0 * 64.0 / per / 1e9;
+    t.row(&[
+        "host matmul 2048x100x64".into(),
+        fmt_secs(per),
+        format!("{gflops:.2} GFLOP/s"),
+    ]);
+
+    // --- PJRT step latency (needs artifacts) ---
+    let mut cfg = RunConfig::default();
+    cfg.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+    let ctx = RunContext::build(&cfg)?;
+    match rapidgnn::runtime::find_artifact(&rapidgnn::runtime::artifacts_dir(), &ctx) {
+        Ok(meta) => {
+            use rapidgnn::sampler::sample_blocks;
+            use rapidgnn::trainer::{batch_labels, TrainStep};
+            let caps = (meta.b_cap, meta.n1_cap, meta.n0_cap);
+            let mut trainer = rapidgnn::runtime::PjrtTrainer::load(meta, 42)?;
+            let ds = build_dataset(&cfg.dataset, true);
+            let seeds: Vec<u32> = ds.train_nodes.iter().take(64).copied().collect();
+            let fo: Vec<Fanout> = cfg.fanout.iter().map(|&f| Fanout::Sample(f)).collect();
+            let batch = sample_blocks(&ds.graph, &seeds, &fo, 1);
+            let d = ds.config.feature_dim as usize;
+            let mut x0 = Mat::zeros(batch.node_layers[0].len(), d);
+            for (i, &v) in batch.node_layers[0].iter().enumerate() {
+                x0.row_mut(i).copy_from_slice(ds.feature_row(v));
+            }
+            let labels = batch_labels(&ds, &batch);
+            let (_, _, per) = time_until(2.0, || {
+                std::hint::black_box(trainer.step(&x0, &batch, &labels, 0.05).loss);
+            });
+            t.row(&[
+                format!("PJRT train step (tiny artifact, caps {caps:?})"),
+                fmt_secs(per),
+                "-".into(),
+            ]);
+        }
+        Err(_) => {
+            t.row(&["PJRT train step".into(), "skipped (no artifacts)".into(), "-".into()]);
+        }
+    }
+
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table 2 — step & network speedup of RapidGNN over DGL-METIS, DGL-Random,
+//! and Dist-GCN: 3 datasets × batch {1000, 2000, 3000}.
+//!
+//! Paper result (means over all cells): step speedup 2.46× / 2.26× / 3.00×,
+//! network speedup 12.70× / 9.70× / 15.39×. We reproduce the *shape*: who
+//! wins, roughly by how much, and where (Reddit's heavier tail → biggest
+//! wins).
+
+use rapidgnn::config::{DatasetPreset, Engine};
+use rapidgnn::coordinator;
+use rapidgnn::metrics::RunReport;
+use rapidgnn::util::bench::Table;
+use rapidgnn::util::bench_support::{paper_run, PAPER_BATCHES};
+use rapidgnn::util::value::Value;
+
+fn main() -> rapidgnn::Result<()> {
+    let mut t = Table::new(
+        "Table 2 — Speedup of RapidGNN over DGL-METIS, DGL-Random, GCN",
+        &["dataset", "batch", "step vMETIS", "step vRandom", "step vGCN",
+          "net vMETIS", "net vRandom", "net vGCN"],
+    );
+    let mut json = Vec::new();
+    let (mut step_sums, mut net_sums) = ([0.0f64; 3], [0.0f64; 3]);
+    let mut cells = 0u32;
+
+    for preset in DatasetPreset::PAPER {
+        for batch in PAPER_BATCHES {
+            let mut reports: Vec<RunReport> = Vec::new();
+            for engine in Engine::ALL {
+                let cfg = paper_run(preset, engine, batch);
+                reports.push(coordinator::run(&cfg)?);
+            }
+            let rapid = &reports[0];
+            let step = |r: &RunReport| r.mean_step_time();
+            let net = |r: &RunReport| r.mean_net_time_per_step();
+            let mut row = vec![preset.name().to_string(), batch.to_string()];
+            let mut cell = Value::table();
+            cell.set("dataset", preset.name()).set("batch", batch);
+            let mut steps_x = Vec::new();
+            let mut nets_x = Vec::new();
+            for (i, baseline) in reports[1..].iter().enumerate() {
+                let s = step(baseline) / step(rapid);
+                step_sums[i] += s;
+                steps_x.push(s);
+                cell.set(&format!("step_x_{}", Engine::ALL[i + 1].id()), s);
+            }
+            for (i, baseline) in reports[1..].iter().enumerate() {
+                let x = net(baseline) / net(rapid).max(1e-12);
+                net_sums[i] += x;
+                nets_x.push(x);
+                cell.set(&format!("net_x_{}", Engine::ALL[i + 1].id()), x);
+            }
+            for s in steps_x {
+                row.push(format!("{s:.2}"));
+            }
+            for x in nets_x {
+                row.push(format!("{x:.2}"));
+            }
+            cells += 1;
+            t.row(&row);
+            json.push(cell);
+        }
+    }
+    let n = cells as f64;
+    t.row(&[
+        "Average".into(),
+        "-".into(),
+        format!("{:.2}", step_sums[0] / n),
+        format!("{:.2}", step_sums[1] / n),
+        format!("{:.2}", step_sums[2] / n),
+        format!("{:.2}", net_sums[0] / n),
+        format!("{:.2}", net_sums[1] / n),
+        format!("{:.2}", net_sums[2] / n),
+    ]);
+    t.print();
+    println!("paper averages: step 2.46/2.26/3.00 vs METIS/Random/GCN; net 12.70/9.70/15.39");
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/table2.json", Value::Arr(json).to_json_pretty())?;
+    Ok(())
+}

@@ -1,0 +1,295 @@
+//! Hot-set feature cache with double buffering (paper §3/§4, Fig. 2).
+//!
+//! A [`CacheBuffer`] holds the features of the `n_hot` most frequently
+//! accessed remote nodes for one epoch, materialized with a single
+//! `VectorPull`. Two buffers alternate: the steady cache `C_s` (Buffer 0)
+//! serves the current epoch while the secondary `C_sec` (Buffer 1) is built
+//! for the next epoch in the background; an atomic swap at the epoch
+//! boundary promotes it (Algorithm 1, line 18).
+
+use crate::metrics::CacheStats;
+use crate::sampler::schedule::remote_frequency;
+use crate::sampler::BatchMeta;
+use crate::util::fasthash::IdHashMap;
+use crate::NodeId;
+
+/// Select the top-`n_hot` remote nodes by access frequency — the paper's
+/// `TopHot(N_remote, n_hot, freq)` (Algorithm 1, line 3). Ties break by node
+/// id so the selection is deterministic.
+pub fn top_hot(batches: &[BatchMeta], n_hot: u32) -> Vec<NodeId> {
+    let ranked = remote_frequency(batches);
+    ranked
+        .into_iter()
+        .take(n_hot as usize)
+        .map(|(v, _)| v)
+        .collect()
+}
+
+/// One cache buffer: an id→row index plus (optionally) the feature rows.
+#[derive(Debug, Default)]
+pub struct CacheBuffer {
+    index: IdHashMap<NodeId, u32>,
+    /// Row-major feature rows; empty in trace mode.
+    rows: Vec<f32>,
+    feature_dim: usize,
+}
+
+impl CacheBuffer {
+    /// Build from a hot-node list. `rows`, when provided, must be the
+    /// features of `nodes` in order (as returned by a `VectorPull`).
+    pub fn new(nodes: &[NodeId], rows: Vec<f32>, feature_dim: usize) -> Self {
+        if !rows.is_empty() {
+            assert_eq!(rows.len(), nodes.len() * feature_dim, "row block shape");
+        }
+        let index = nodes.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+        CacheBuffer { index, rows, feature_dim }
+    }
+
+    /// Number of cached nodes.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Whether node `v` is cached.
+    #[inline]
+    pub fn contains(&self, v: NodeId) -> bool {
+        self.index.contains_key(&v)
+    }
+
+    /// Cached feature row of `v`, if present and materialized.
+    #[inline]
+    pub fn row(&self, v: NodeId) -> Option<&[f32]> {
+        let &i = self.index.get(&v)?;
+        if self.rows.is_empty() {
+            return None;
+        }
+        let d = self.feature_dim;
+        Some(&self.rows[i as usize * d..(i as usize + 1) * d])
+    }
+
+    /// Device bytes held by this buffer (index ≈ 16 B/entry + rows).
+    pub fn device_bytes(&self) -> u64 {
+        (self.rows.len() * 4 + self.index.len() * 16) as u64
+    }
+}
+
+/// The double-buffered cache: steady `C_s` + secondary `C_sec`.
+#[derive(Debug, Default)]
+pub struct DoubleBufferCache {
+    steady: CacheBuffer,
+    secondary: Option<CacheBuffer>,
+    stats: CacheStats,
+    /// Number of epoch-boundary swaps performed.
+    swaps: u32,
+}
+
+impl DoubleBufferCache {
+    /// Install the initial steady cache (before epoch 1).
+    pub fn install_steady(&mut self, buf: CacheBuffer) {
+        self.steady = buf;
+    }
+
+    /// Stage the next epoch's cache (built in the background during training).
+    pub fn stage_secondary(&mut self, buf: CacheBuffer) {
+        self.secondary = Some(buf);
+    }
+
+    /// Epoch-boundary swap: promote `C_sec` to `C_s` if it's ready
+    /// (Algorithm 1, line 18: "if C_sec ready then C_s ← C_sec").
+    /// Returns true if a swap happened.
+    pub fn swap_at_epoch_boundary(&mut self) -> bool {
+        if let Some(next) = self.secondary.take() {
+            self.steady = next;
+            self.swaps += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current steady buffer.
+    pub fn steady(&self) -> &CacheBuffer {
+        &self.steady
+    }
+
+    /// Partition `ids` into cache hits and misses, updating hit statistics.
+    /// `hits`/`misses` are cleared and refilled (allocation-free hot path).
+    pub fn split_hits(&mut self, ids: &[NodeId], hits: &mut Vec<NodeId>, misses: &mut Vec<NodeId>) {
+        hits.clear();
+        misses.clear();
+        for &v in ids {
+            if self.steady.contains(v) {
+                hits.push(v);
+            } else {
+                misses.push(v);
+            }
+        }
+        self.stats.lookups += ids.len() as u64;
+        self.stats.hits += hits.len() as u64;
+    }
+
+    /// Hit/miss statistics so far.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Reset statistics (per-epoch reporting).
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Swap count.
+    pub fn swaps(&self) -> u32 {
+        self.swaps
+    }
+
+    /// Total device bytes (both buffers — the paper's `2·n_hot·d` term).
+    pub fn device_bytes(&self) -> u64 {
+        self.steady.device_bytes()
+            + self.secondary.as_ref().map_or(0, |b| b.device_bytes())
+    }
+}
+
+/// Recommend a hot-set size from the frequency distribution: the smallest
+/// `k` whose top-`k` nodes cover `coverage` (e.g. 0.8) of all remote
+/// accesses. This automates the paper's Fig-5 "practical cache-size
+/// selection without excessive memory overhead" (an extension beyond the
+/// paper's manual sweep; exercised by `examples/cache_tuning` and the
+/// ablation bench).
+pub fn recommend_n_hot(batches: &[BatchMeta], coverage: f64) -> u32 {
+    assert!((0.0..=1.0).contains(&coverage));
+    let ranked = remote_frequency(batches);
+    let total: u64 = ranked.iter().map(|&(_, c)| c as u64).sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * coverage).ceil() as u64;
+    let mut acc = 0u64;
+    for (k, &(_, c)) in ranked.iter().enumerate() {
+        acc += c as u64;
+        if acc >= target {
+            return k as u32 + 1;
+        }
+    }
+    ranked.len() as u32
+}
+
+/// The paper's per-worker device memory bound:
+/// `Mem_device ≤ 2·n_hot·d + Q·m_max·d` (in f32 elements → bytes).
+pub fn device_memory_bound(n_hot: u32, q: u32, m_max: u32, feature_dim: u32) -> u64 {
+    (2 * n_hot as u64 + q as u64 * m_max as u64) * feature_dim as u64 * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::BatchMeta;
+
+    /// Batch with the given remote nodes (all marked remote).
+    fn batch(remote: &[NodeId]) -> BatchMeta {
+        let input_nodes = remote.to_vec();
+        let mut mask = vec![0u64; input_nodes.len().div_ceil(64)];
+        for j in 0..input_nodes.len() {
+            mask[j / 64] |= 1 << (j % 64);
+        }
+        BatchMeta {
+            batch: 0,
+            seeds: vec![],
+            num_remote: input_nodes.len() as u32,
+            input_nodes,
+            remote_mask: mask,
+        }
+    }
+
+    #[test]
+    fn top_hot_ranks_by_frequency() {
+        // node 5 appears 3×, node 7 2×, node 9 1×
+        let batches = vec![batch(&[5, 7]), batch(&[5, 7, 9]), batch(&[5])];
+        assert_eq!(top_hot(&batches, 2), vec![5, 7]);
+        assert_eq!(top_hot(&batches, 10), vec![5, 7, 9]);
+        assert_eq!(top_hot(&batches, 0), Vec::<NodeId>::new());
+    }
+
+    #[test]
+    fn buffer_lookup_and_rows() {
+        let nodes = [10u32, 20, 30];
+        let rows: Vec<f32> = (0..9).map(|x| x as f32).collect();
+        let buf = CacheBuffer::new(&nodes, rows, 3);
+        assert_eq!(buf.len(), 3);
+        assert!(buf.contains(20));
+        assert!(!buf.contains(21));
+        assert_eq!(buf.row(20).unwrap(), &[3.0, 4.0, 5.0]);
+        assert!(buf.row(99).is_none());
+    }
+
+    #[test]
+    fn trace_buffer_has_index_but_no_rows() {
+        let buf = CacheBuffer::new(&[1, 2], Vec::new(), 128);
+        assert!(buf.contains(1));
+        assert!(buf.row(1).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn buffer_rejects_wrong_row_shape() {
+        CacheBuffer::new(&[1, 2], vec![0.0; 5], 3);
+    }
+
+    #[test]
+    fn split_hits_partitions_and_counts() {
+        let mut cache = DoubleBufferCache::default();
+        cache.install_steady(CacheBuffer::new(&[1, 2, 3], Vec::new(), 4));
+        let (mut h, mut m) = (Vec::new(), Vec::new());
+        cache.split_hits(&[1, 5, 2, 9], &mut h, &mut m);
+        assert_eq!(h, vec![1, 2]);
+        assert_eq!(m, vec![5, 9]);
+        let s = cache.stats();
+        assert_eq!(s.lookups, 4);
+        assert_eq!(s.hits, 2);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swap_promotes_secondary() {
+        let mut cache = DoubleBufferCache::default();
+        cache.install_steady(CacheBuffer::new(&[1], Vec::new(), 4));
+        assert!(!cache.swap_at_epoch_boundary(), "nothing staged yet");
+        cache.stage_secondary(CacheBuffer::new(&[2], Vec::new(), 4));
+        assert!(cache.swap_at_epoch_boundary());
+        assert!(cache.steady().contains(2));
+        assert!(!cache.steady().contains(1));
+        assert_eq!(cache.swaps(), 1);
+        // second swap without restaging is a no-op
+        assert!(!cache.swap_at_epoch_boundary());
+    }
+
+    #[test]
+    fn recommend_n_hot_covers_requested_mass() {
+        // node 5: 3 accesses, node 7: 2, node 9: 1 → total 6
+        let batches = vec![batch(&[5, 7]), batch(&[5, 7, 9]), batch(&[5])];
+        assert_eq!(recommend_n_hot(&batches, 0.5), 1); // 3/6 ≥ 0.5
+        assert_eq!(recommend_n_hot(&batches, 0.8), 2); // 5/6 ≥ 0.8
+        assert_eq!(recommend_n_hot(&batches, 1.0), 3);
+        assert_eq!(recommend_n_hot(&[], 0.8), 0);
+    }
+
+    #[test]
+    fn memory_bound_formula() {
+        // 2·n_hot·d + Q·m_max·d, d=100, f32
+        assert_eq!(device_memory_bound(1000, 4, 25_000, 100), (2_000 + 100_000) * 100 * 4);
+    }
+
+    #[test]
+    fn double_buffer_bytes_counts_both() {
+        let mut cache = DoubleBufferCache::default();
+        cache.install_steady(CacheBuffer::new(&[1, 2], vec![0.0; 8], 4));
+        let one = cache.device_bytes();
+        cache.stage_secondary(CacheBuffer::new(&[3, 4], vec![0.0; 8], 4));
+        assert_eq!(cache.device_bytes(), 2 * one);
+    }
+}

@@ -1,0 +1,248 @@
+//! Dataset descriptions and the three paper-benchmark presets.
+//!
+//! The paper evaluates on Reddit (233k nodes, d=602), OGBN-Products (2.45M,
+//! d=100) and OGBN-Papers100M (111M, d=128). We cannot ship those datasets, so
+//! each preset describes a *synthetic power-law graph with matched shape*:
+//! matched feature dimensionality, class count, and average-degree ratio, with
+//! node counts scaled down so the full matrix of experiments runs on one
+//! machine (DESIGN.md §3). The long-tail degree distribution — the property
+//! RapidGNN's hot-set cache exploits (paper Fig. 3) — is preserved by the
+//! Chung–Lu generator in [`crate::graph`].
+
+use crate::util::value::Value;
+use crate::Result;
+use anyhow::bail;
+
+/// Named presets mirroring the paper's three benchmark datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetPreset {
+    /// Reddit-like: high feature dim (602), very dense, strongest skew.
+    RedditSim,
+    /// OGBN-Products-like: d=100, 47 classes, moderate density.
+    ProductsSim,
+    /// OGBN-Papers100M-like: d=128, 172 classes, largest node count.
+    PapersSim,
+    /// Tiny graph for unit tests and the quickstart example.
+    Tiny,
+}
+
+impl DatasetPreset {
+    /// All presets used in the paper's evaluation (excludes `Tiny`).
+    pub const PAPER: [DatasetPreset; 3] = [
+        DatasetPreset::RedditSim,
+        DatasetPreset::ProductsSim,
+        DatasetPreset::PapersSim,
+    ];
+
+    /// Short display name used in bench tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetPreset::RedditSim => "reddit-sim",
+            DatasetPreset::ProductsSim => "products-sim",
+            DatasetPreset::PapersSim => "papers-sim",
+            DatasetPreset::Tiny => "tiny",
+        }
+    }
+}
+
+impl std::str::FromStr for DatasetPreset {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "reddit-sim" | "reddit" => DatasetPreset::RedditSim,
+            "products-sim" | "products" => DatasetPreset::ProductsSim,
+            "papers-sim" | "papers" => DatasetPreset::PapersSim,
+            "tiny" => DatasetPreset::Tiny,
+            _ => bail!("unknown dataset preset '{s}' (reddit-sim|products-sim|papers-sim|tiny)"),
+        })
+    }
+}
+
+/// Full description of a synthetic dataset: graph shape + feature/label model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetConfig {
+    /// Human-readable dataset name.
+    pub name: String,
+    /// Number of nodes in the graph.
+    pub num_nodes: u32,
+    /// Target average degree (undirected edges are stored in both directions).
+    pub avg_degree: f64,
+    /// Power-law exponent for the Chung–Lu expected-degree sequence.
+    /// Real social/product graphs sit around 2.0–2.5; lower = heavier tail.
+    pub power_law_exponent: f64,
+    /// Feature dimensionality `d` (matches the paper's datasets).
+    pub feature_dim: u32,
+    /// Number of node classes.
+    pub num_classes: u32,
+    /// Fraction of nodes in the training set (seeds are drawn from these).
+    pub train_fraction: f64,
+    /// Intra-class edge preference in [0,1]; >0 plants community structure so
+    /// a GNN can actually learn (needed for the Fig-9 convergence experiment).
+    pub homophily: f64,
+    /// Feature noise scale: features are class centroid + noise*N(0,1).
+    pub feature_noise: f64,
+    /// Base RNG seed for graph/feature generation (fully deterministic).
+    pub gen_seed: u64,
+}
+
+impl DatasetConfig {
+    /// Construct the scaled preset for one of the paper's benchmarks.
+    ///
+    /// `scale` multiplies the node count (1.0 = the default scaled-down size;
+    /// benches use smaller scales for sweeps, the e2e example uses 1.0).
+    pub fn preset(p: DatasetPreset, scale: f64) -> Self {
+        let base = match p {
+            // Paper: 232,965 nodes, 114.8M edges (avg deg ~493 — we cap at a
+            // still-dense 50 to keep CSR memory sane), d=602, 50 classes.
+            DatasetPreset::RedditSim => DatasetConfig {
+                name: "reddit-sim".into(),
+                num_nodes: 60_000,
+                avg_degree: 50.0,
+                power_law_exponent: 1.9, // heaviest tail of the three
+                feature_dim: 602,
+                num_classes: 50,
+                train_fraction: 0.66,
+                homophily: 0.6,
+                feature_noise: 1.0,
+                gen_seed: 0x5EDD17,
+            },
+            // Paper: 2.45M nodes, 123.7M edges (avg deg ~50), d=100, 47 classes.
+            DatasetPreset::ProductsSim => DatasetConfig {
+                name: "products-sim".into(),
+                num_nodes: 120_000,
+                avg_degree: 25.0,
+                power_law_exponent: 2.1,
+                feature_dim: 100,
+                num_classes: 47,
+                train_fraction: 0.08, // OGBN-Products has a small train split
+                homophily: 0.6,
+                feature_noise: 1.0,
+                gen_seed: 0x9A0D,
+            },
+            // Paper: 111M nodes, 1.62B edges (avg deg ~29), d=128, 172 classes.
+            DatasetPreset::PapersSim => DatasetConfig {
+                name: "papers-sim".into(),
+                num_nodes: 250_000,
+                avg_degree: 15.0,
+                power_law_exponent: 2.3, // citation graphs: lighter tail
+                feature_dim: 128,
+                num_classes: 172,
+                train_fraction: 0.01,
+                homophily: 0.5,
+                feature_noise: 1.0,
+                gen_seed: 0x9A9E,
+            },
+            DatasetPreset::Tiny => DatasetConfig {
+                name: "tiny".into(),
+                num_nodes: 2_000,
+                avg_degree: 8.0,
+                power_law_exponent: 2.2,
+                feature_dim: 16,
+                num_classes: 4,
+                train_fraction: 0.5,
+                homophily: 0.7,
+                feature_noise: 0.5,
+                gen_seed: 7,
+            },
+        };
+        base.scaled(scale)
+    }
+
+    /// Return a copy with the node count scaled by `scale` (min 1k nodes).
+    pub fn scaled(mut self, scale: f64) -> Self {
+        if (scale - 1.0).abs() > f64::EPSILON {
+            self.num_nodes = ((self.num_nodes as f64 * scale) as u32).max(1_000);
+        }
+        self
+    }
+
+    /// Bytes per node feature row (f32 features).
+    pub fn feature_row_bytes(&self) -> u64 {
+        self.feature_dim as u64 * 4
+    }
+
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("name", self.name.as_str())
+            .set("num_nodes", self.num_nodes)
+            .set("avg_degree", self.avg_degree)
+            .set("power_law_exponent", self.power_law_exponent)
+            .set("feature_dim", self.feature_dim)
+            .set("num_classes", self.num_classes)
+            .set("train_fraction", self.train_fraction)
+            .set("homophily", self.homophily)
+            .set("feature_noise", self.feature_noise)
+            .set("gen_seed", self.gen_seed);
+        v
+    }
+
+    /// Deserialize from a [`Value`] table.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(DatasetConfig {
+            name: v.req_str("name")?.to_string(),
+            num_nodes: v.req_u32("num_nodes")?,
+            avg_degree: v.req_f64("avg_degree")?,
+            power_law_exponent: v.req_f64("power_law_exponent")?,
+            feature_dim: v.req_u32("feature_dim")?,
+            num_classes: v.req_u32("num_classes")?,
+            train_fraction: v.req_f64("train_fraction")?,
+            homophily: v.req_f64("homophily")?,
+            feature_noise: v.req_f64("feature_noise")?,
+            gen_seed: v.req_u64("gen_seed")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_dims() {
+        let r = DatasetConfig::preset(DatasetPreset::RedditSim, 1.0);
+        assert_eq!(r.feature_dim, 602);
+        assert_eq!(r.num_classes, 50);
+        let p = DatasetConfig::preset(DatasetPreset::ProductsSim, 1.0);
+        assert_eq!(p.feature_dim, 100);
+        assert_eq!(p.num_classes, 47);
+        let q = DatasetConfig::preset(DatasetPreset::PapersSim, 1.0);
+        assert_eq!(q.feature_dim, 128);
+        assert_eq!(q.num_classes, 172);
+    }
+
+    #[test]
+    fn scaling_shrinks_nodes_only() {
+        let full = DatasetConfig::preset(DatasetPreset::ProductsSim, 1.0);
+        let half = DatasetConfig::preset(DatasetPreset::ProductsSim, 0.5);
+        assert_eq!(half.num_nodes, full.num_nodes / 2);
+        assert_eq!(half.feature_dim, full.feature_dim);
+    }
+
+    #[test]
+    fn scaling_floors_at_1k() {
+        let tiny = DatasetConfig::preset(DatasetPreset::ProductsSim, 1e-9);
+        assert_eq!(tiny.num_nodes, 1_000);
+    }
+
+    #[test]
+    fn feature_row_bytes_reddit() {
+        let r = DatasetConfig::preset(DatasetPreset::RedditSim, 1.0);
+        assert_eq!(r.feature_row_bytes(), 602 * 4);
+    }
+
+    #[test]
+    fn value_round_trip() {
+        let c = DatasetConfig::preset(DatasetPreset::RedditSim, 1.0);
+        let back = DatasetConfig::from_value(&c.to_value()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn preset_from_str() {
+        use std::str::FromStr;
+        assert_eq!(DatasetPreset::from_str("reddit-sim").unwrap(), DatasetPreset::RedditSim);
+        assert_eq!(DatasetPreset::from_str("papers").unwrap(), DatasetPreset::PapersSim);
+        assert!(DatasetPreset::from_str("nope").is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Typed configuration for datasets, training runs, and the simulated testbed.
+//!
+//! Everything a run needs is described by a [`RunConfig`]; dataset presets
+//! mirroring the paper's three benchmarks (scaled down per DESIGN.md §3) are
+//! provided by [`DatasetConfig::preset`]. Configs serialize to/from a TOML
+//! subset (see [`crate::util::value`]) so runs are reproducible from a single
+//! file (`rapidgnn train --config run.toml`).
+
+mod dataset;
+mod run;
+
+pub use dataset::{DatasetConfig, DatasetPreset};
+pub use run::{Engine, ExecMode, FabricConfig, PowerConfig, RunConfig, TrainerBackend};
+
+use crate::util::value::Value;
+use crate::Result;
+use std::path::Path;
+
+/// Load a [`RunConfig`] from a TOML file.
+pub fn load_run_config(path: &Path) -> Result<RunConfig> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Value::from_toml(&text)?;
+    RunConfig::from_value(&v)
+}
+
+/// Save a [`RunConfig`] to a TOML file.
+pub fn save_run_config(cfg: &RunConfig, path: &Path) -> Result<()> {
+    let text = cfg.to_value().to_toml()?;
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_round_trip() {
+        let cfg = RunConfig::default();
+        let text = cfg.to_value().to_toml().unwrap();
+        let back = RunConfig::from_value(&Value::from_toml(&text).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = crate::util::tempdir::TempDir::new("cfg").unwrap();
+        let path = dir.path().join("run.toml");
+        let cfg = RunConfig::default();
+        save_run_config(&cfg, &path).unwrap();
+        let back = load_run_config(&path).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load_run_config(Path::new("/nonexistent/run.toml")).is_err());
+    }
+}

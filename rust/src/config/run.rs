@@ -1,0 +1,465 @@
+//! Run configuration: which engine, dataset, testbed and trainer to use.
+
+use super::dataset::DatasetConfig;
+use crate::util::value::Value;
+use crate::Result;
+use anyhow::{bail, ensure};
+use std::str::FromStr;
+
+/// Training engine selection — RapidGNN plus the paper's three baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// The paper's system: deterministic schedule + hot-set cache + prefetcher.
+    Rapid,
+    /// DistDGL-style GraphSAGE with METIS-like partitions, on-demand fetch.
+    DglMetis,
+    /// DistDGL-style GraphSAGE with random partitions, on-demand fetch.
+    DglRandom,
+    /// Dist-GCN baseline: full-neighborhood k-hop expansion, on-demand fetch.
+    DistGcn,
+}
+
+impl Engine {
+    /// All engines compared in the paper's Table 2.
+    pub const ALL: [Engine; 4] = [
+        Engine::Rapid,
+        Engine::DglMetis,
+        Engine::DglRandom,
+        Engine::DistGcn,
+    ];
+
+    /// Display name used in bench tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Rapid => "RapidGNN",
+            Engine::DglMetis => "DGL-METIS",
+            Engine::DglRandom => "DGL-Random",
+            Engine::DistGcn => "Dist-GCN",
+        }
+    }
+
+    /// Config-file identifier.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Engine::Rapid => "rapid",
+            Engine::DglMetis => "dgl-metis",
+            Engine::DglRandom => "dgl-random",
+            Engine::DistGcn => "dist-gcn",
+        }
+    }
+
+    /// Whether this engine uses the METIS-like (vs random) partitioner.
+    pub fn uses_metis(&self) -> bool {
+        !matches!(self, Engine::DglRandom)
+    }
+}
+
+impl FromStr for Engine {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "rapid" | "rapidgnn" => Engine::Rapid,
+            "dgl-metis" => Engine::DglMetis,
+            "dgl-random" => Engine::DglRandom,
+            "dist-gcn" | "gcn" => Engine::DistGcn,
+            _ => bail!("unknown engine '{s}' (rapid|dgl-metis|dgl-random|dist-gcn)"),
+        })
+    }
+}
+
+/// How batch features are materialized and the model step executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Metadata-only: hit/miss sets and byte counts are computed exactly, the
+    /// model step is charged from the analytic compute model. Used by the
+    /// parameter-sweep benches (fast, deterministic).
+    #[default]
+    Trace,
+    /// Full execution: feature rows are actually staged/copied and the model
+    /// step really runs (host-rust or PJRT backend).
+    Full,
+}
+
+impl ExecMode {
+    /// Config-file identifier.
+    pub fn id(&self) -> &'static str {
+        match self {
+            ExecMode::Trace => "trace",
+            ExecMode::Full => "full",
+        }
+    }
+}
+
+impl FromStr for ExecMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "trace" => ExecMode::Trace,
+            "full" => ExecMode::Full,
+            _ => bail!("unknown exec mode '{s}' (trace|full)"),
+        })
+    }
+}
+
+/// Which implementation executes the GraphSAGE train step in `Full` mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrainerBackend {
+    /// Pure-rust reference implementation (no artifacts needed).
+    #[default]
+    Host,
+    /// AOT-compiled JAX/Pallas artifact executed through PJRT.
+    Pjrt,
+}
+
+impl TrainerBackend {
+    /// Config-file identifier.
+    pub fn id(&self) -> &'static str {
+        match self {
+            TrainerBackend::Host => "host",
+            TrainerBackend::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl FromStr for TrainerBackend {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "host" => TrainerBackend::Host,
+            "pjrt" => TrainerBackend::Pjrt,
+            _ => bail!("unknown backend '{s}' (host|pjrt)"),
+        })
+    }
+}
+
+/// Simulated network fabric parameters (paper testbed: 10 Gbps Ethernet).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricConfig {
+    /// Link bandwidth in bytes/second (default 10 Gbps).
+    pub bandwidth_bytes_per_sec: f64,
+    /// Per-RPC latency in seconds (TCP/RPC software stack + switch).
+    pub rpc_latency_sec: f64,
+    /// Per-node serialization overhead (id lookup, tensor slicing) in seconds.
+    pub per_node_overhead_sec: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            bandwidth_bytes_per_sec: 10.0e9 / 8.0, // 10 Gbps
+            rpc_latency_sec: 150e-6,               // ~150 µs RPC round trip
+            per_node_overhead_sec: 0.3e-6,         // serialization cost per row
+        }
+    }
+}
+
+impl FabricConfig {
+    /// Time to transfer one RPC carrying `bytes` for `nodes` feature rows.
+    pub fn rpc_time(&self, bytes: u64, nodes: u64) -> f64 {
+        self.rpc_latency_sec
+            + bytes as f64 / self.bandwidth_bytes_per_sec
+            + nodes as f64 * self.per_node_overhead_sec
+    }
+
+    fn to_value(self) -> Value {
+        let mut v = Value::table();
+        v.set("bandwidth_bytes_per_sec", self.bandwidth_bytes_per_sec)
+            .set("rpc_latency_sec", self.rpc_latency_sec)
+            .set("per_node_overhead_sec", self.per_node_overhead_sec);
+        v
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        Ok(FabricConfig {
+            bandwidth_bytes_per_sec: v.req_f64("bandwidth_bytes_per_sec")?,
+            rpc_latency_sec: v.req_f64("rpc_latency_sec")?,
+            per_node_overhead_sec: v.req_f64("per_node_overhead_sec")?,
+        })
+    }
+}
+
+/// Device power model used by [`crate::energy`] (paper Table 3 calibration).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerConfig {
+    /// CPU package power when busy with compute/marshalling (W).
+    pub cpu_busy_w: f64,
+    /// CPU package power while stalled on network I/O (W). Polling RPC loops
+    /// keep the CPU partially busy — this is why DGL's mean CPU power is
+    /// *higher* than RapidGNN's in the paper (42.7 vs 36.7 W).
+    pub cpu_net_wait_w: f64,
+    /// CPU idle floor (W).
+    pub cpu_idle_w: f64,
+    /// GPU power when running the training step (W).
+    pub gpu_busy_w: f64,
+    /// GPU power while holding the feature cache but not computing (W).
+    pub gpu_idle_w: f64,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        // Calibrated to paper Table 3: DGL-METIS mean CPU 42.7 W / GPU 29.5 W,
+        // RapidGNN mean CPU 36.7 W / GPU 30.8 W (cache residency adds ~5%).
+        PowerConfig {
+            cpu_busy_w: 38.0,
+            cpu_net_wait_w: 46.0,
+            cpu_idle_w: 12.0,
+            gpu_busy_w: 42.0,
+            gpu_idle_w: 18.0,
+        }
+    }
+}
+
+impl PowerConfig {
+    fn to_value(self) -> Value {
+        let mut v = Value::table();
+        v.set("cpu_busy_w", self.cpu_busy_w)
+            .set("cpu_net_wait_w", self.cpu_net_wait_w)
+            .set("cpu_idle_w", self.cpu_idle_w)
+            .set("gpu_busy_w", self.gpu_busy_w)
+            .set("gpu_idle_w", self.gpu_idle_w);
+        v
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        Ok(PowerConfig {
+            cpu_busy_w: v.req_f64("cpu_busy_w")?,
+            cpu_net_wait_w: v.req_f64("cpu_net_wait_w")?,
+            cpu_idle_w: v.req_f64("cpu_idle_w")?,
+            gpu_busy_w: v.req_f64("gpu_busy_w")?,
+            gpu_idle_w: v.req_f64("gpu_idle_w")?,
+        })
+    }
+}
+
+/// Everything needed to reproduce a training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Dataset description (generated synthetically; see [`DatasetConfig`]).
+    pub dataset: DatasetConfig,
+    /// Engine under test.
+    pub engine: Engine,
+    /// Number of workers P (= number of partitions).
+    pub num_workers: u32,
+    /// Mini-batch size (seed nodes per batch).
+    pub batch_size: u32,
+    /// Neighbor-sampling fan-out per layer, innermost first (DGL convention:
+    /// `[f1, f2]` samples `f2` 1-hop neighbors of each seed, then `f1`
+    /// neighbors of each of those).
+    pub fanout: Vec<u32>,
+    /// Number of training epochs ε.
+    pub epochs: u32,
+    /// Hot-set cache size `n_hot` (remote nodes cached per worker).
+    pub n_hot: u32,
+    /// Prefetch window Q (batches staged ahead).
+    pub prefetch_q: u32,
+    /// Global base seed s0 for the deterministic sampler.
+    pub base_seed: u64,
+    /// GNN hidden width (GraphSAGE layer-1 output dim).
+    pub hidden_dim: u32,
+    /// SGD learning rate.
+    pub learning_rate: f32,
+    /// Execution mode (trace vs full).
+    pub exec_mode: ExecMode,
+    /// Train-step backend in full mode.
+    pub backend: TrainerBackend,
+    /// Simulated fabric parameters.
+    pub fabric: FabricConfig,
+    /// Power model for energy accounting.
+    pub power: PowerConfig,
+    /// Cap on neighbors expanded per node for the Dist-GCN full-neighborhood
+    /// baseline (prevents pathological hub blowup; paper's GCN uses the full
+    /// neighborhood, which our generator's hubs would make degenerate).
+    pub gcn_neighbor_cap: u32,
+    /// Directory for precomputed metadata blocks (SSD streaming). Empty =
+    /// a per-run temp dir.
+    pub metadata_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: DatasetConfig::preset(super::DatasetPreset::Tiny, 1.0),
+            engine: Engine::Rapid,
+            num_workers: 2,
+            batch_size: 128,
+            fanout: vec![10, 25],
+            epochs: 2,
+            n_hot: 1_000,
+            prefetch_q: 4,
+            base_seed: 42,
+            hidden_dim: 64,
+            learning_rate: 0.05,
+            exec_mode: ExecMode::Trace,
+            backend: TrainerBackend::Host,
+            fabric: FabricConfig::default(),
+            power: PowerConfig::default(),
+            gcn_neighbor_cap: 64,
+            metadata_dir: String::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Paper-style config for a given preset/engine/batch size.
+    pub fn paper(preset: super::DatasetPreset, engine: Engine, batch_size: u32) -> Self {
+        RunConfig {
+            dataset: DatasetConfig::preset(preset, 1.0),
+            engine,
+            num_workers: 4,
+            batch_size,
+            epochs: 10,
+            ..Default::default()
+        }
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.num_workers >= 1, "need at least one worker");
+        ensure!(self.batch_size >= 1, "batch size must be positive");
+        ensure!(!self.fanout.is_empty(), "fanout must have >=1 layer");
+        ensure!(self.fanout.iter().all(|&f| f >= 1), "fanout entries must be >=1");
+        ensure!(self.epochs >= 1, "need at least one epoch");
+        ensure!(self.prefetch_q >= 1, "prefetch window Q must be >=1");
+        ensure!(self.dataset.num_nodes >= self.num_workers, "more workers than nodes");
+        ensure!(
+            self.dataset.train_fraction > 0.0 && self.dataset.train_fraction <= 1.0,
+            "train_fraction must be in (0,1]"
+        );
+        Ok(())
+    }
+
+    /// Number of GNN layers implied by the fanout.
+    pub fn num_layers(&self) -> usize {
+        self.fanout.len()
+    }
+
+    /// Serialize to a [`Value`] table (TOML/JSON emission).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("engine", self.engine.id())
+            .set("num_workers", self.num_workers)
+            .set("batch_size", self.batch_size)
+            .set("fanout", &self.fanout[..])
+            .set("epochs", self.epochs)
+            .set("n_hot", self.n_hot)
+            .set("prefetch_q", self.prefetch_q)
+            .set("base_seed", self.base_seed)
+            .set("hidden_dim", self.hidden_dim)
+            .set("learning_rate", self.learning_rate)
+            .set("exec_mode", self.exec_mode.id())
+            .set("backend", self.backend.id())
+            .set("gcn_neighbor_cap", self.gcn_neighbor_cap)
+            .set("metadata_dir", self.metadata_dir.as_str())
+            .set("dataset", self.dataset.to_value())
+            .set("fabric", self.fabric.to_value())
+            .set("power", self.power.to_value());
+        v
+    }
+
+    /// Deserialize from a [`Value`] table.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let cfg = RunConfig {
+            dataset: DatasetConfig::from_value(v.req_table("dataset")?)?,
+            engine: v.req_str("engine")?.parse()?,
+            num_workers: v.req_u32("num_workers")?,
+            batch_size: v.req_u32("batch_size")?,
+            fanout: v.req_u32_array("fanout")?,
+            epochs: v.req_u32("epochs")?,
+            n_hot: v.req_u32("n_hot")?,
+            prefetch_q: v.req_u32("prefetch_q")?,
+            base_seed: v.req_u64("base_seed")?,
+            hidden_dim: v.req_u32("hidden_dim")?,
+            learning_rate: v.req_f64("learning_rate")? as f32,
+            exec_mode: v.req_str("exec_mode")?.parse()?,
+            backend: v.req_str("backend")?.parse()?,
+            fabric: FabricConfig::from_value(v.req_table("fabric")?)?,
+            power: PowerConfig::from_value(v.req_table("power")?)?,
+            gcn_neighbor_cap: v.req_u32("gcn_neighbor_cap")?,
+            metadata_dir: v.req_str("metadata_dir")?.to_string(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetPreset;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_workers() {
+        let mut c = RunConfig::default();
+        c.num_workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_empty_fanout() {
+        let mut c = RunConfig::default();
+        c.fanout.clear();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_q() {
+        let mut c = RunConfig::default();
+        c.prefetch_q = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fabric_rpc_time_monotone_in_bytes() {
+        let f = FabricConfig::default();
+        assert!(f.rpc_time(2_000_000, 100) > f.rpc_time(1_000_000, 100));
+        // latency floor: even a zero-byte RPC costs the round trip
+        assert!(f.rpc_time(0, 0) >= f.rpc_latency_sec);
+    }
+
+    #[test]
+    fn paper_config_shape() {
+        let c = RunConfig::paper(DatasetPreset::RedditSim, Engine::Rapid, 1000);
+        assert_eq!(c.num_workers, 4);
+        assert_eq!(c.epochs, 10);
+        assert_eq!(c.batch_size, 1000);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn engine_names_and_partitioners() {
+        assert_eq!(Engine::Rapid.name(), "RapidGNN");
+        assert!(Engine::DglMetis.uses_metis());
+        assert!(!Engine::DglRandom.uses_metis());
+        assert!(Engine::Rapid.uses_metis());
+    }
+
+    #[test]
+    fn engine_parse_round_trip() {
+        for e in Engine::ALL {
+            assert_eq!(e.id().parse::<Engine>().unwrap(), e);
+        }
+        assert!("bogus".parse::<Engine>().is_err());
+    }
+
+    #[test]
+    fn value_round_trip() {
+        let mut c = RunConfig::default();
+        c.engine = Engine::DistGcn;
+        c.exec_mode = ExecMode::Full;
+        c.backend = TrainerBackend::Pjrt;
+        let back = RunConfig::from_value(&c.to_value()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn from_value_rejects_invalid() {
+        let mut c = RunConfig::default();
+        c.num_workers = 0; // invalid
+        assert!(RunConfig::from_value(&c.to_value()).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Shared engine plumbing: run context, host-side cost models, fan-out
+//! policies, and report assembly.
+
+use crate::config::{Engine, ExecMode, RunConfig};
+use crate::graph::{build_dataset, Dataset};
+use crate::kvstore::KvStore;
+use crate::net::NetFabric;
+use crate::partition::{partition, Partition, Partitioner};
+use crate::sampler::khop::Fanout;
+use crate::sim::ComputeModel;
+use crate::util::tempdir::TempDir;
+use crate::{NodeId, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Host-side cost model for phases the fabric doesn't cover (trace mode).
+/// Calibrated to the paper testbed's Xeon E5-2670v3 + SATA/NVMe SSD.
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    /// Online sampling cost per enumerated input node (hash + CSR walk).
+    pub sample_per_node_sec: f64,
+    /// Fixed per-batch sampling overhead (python/dataloader dispatch in DGL).
+    pub sample_per_batch_sec: f64,
+    /// SSD streaming bandwidth for metadata blocks (bytes/sec).
+    pub ssd_bytes_per_sec: f64,
+    /// Fixed per-batch metadata streaming overhead.
+    pub stream_per_batch_sec: f64,
+    /// Host memory bandwidth for feature assembly + H2D copy (bytes/sec).
+    pub host_bytes_per_sec: f64,
+    /// Fixed per-batch assembly/launch overhead.
+    pub assemble_per_batch_sec: f64,
+    /// Frequency-ranking cost per counted remote access (cache builds).
+    pub rank_per_access_sec: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            sample_per_node_sec: 60e-9,
+            sample_per_batch_sec: 400e-6,
+            ssd_bytes_per_sec: 2.0e9,
+            stream_per_batch_sec: 20e-6,
+            host_bytes_per_sec: 8.0e9,
+            assemble_per_batch_sec: 50e-6,
+            rank_per_access_sec: 15e-9,
+        }
+    }
+}
+
+impl CostParams {
+    /// Online k-hop sampling cost for a batch with `n_input` enumerated nodes.
+    pub fn sample_time(&self, n_input: usize) -> f64 {
+        self.sample_per_batch_sec + n_input as f64 * self.sample_per_node_sec
+    }
+
+    /// Metadata-block streaming cost (RapidGNN's runtime sampling substitute).
+    pub fn stream_time(&self, block_bytes: u64) -> f64 {
+        self.stream_per_batch_sec + block_bytes as f64 / self.ssd_bytes_per_sec
+    }
+
+    /// Feature assembly + device copy cost for an `[n, d]` f32 block.
+    pub fn assemble_time(&self, n_input: usize, feature_dim: u32) -> f64 {
+        self.assemble_per_batch_sec
+            + (n_input as u64 * feature_dim as u64 * 4) as f64 / self.host_bytes_per_sec
+    }
+}
+
+/// Everything the engines share for one run.
+pub struct RunContext {
+    pub cfg: RunConfig,
+    pub ds: Arc<Dataset>,
+    pub part: Arc<Partition>,
+    pub kv: Arc<KvStore>,
+    pub fabric: NetFabric,
+    /// Train-seed shard per worker (seeds owned by that partition).
+    pub shards: Vec<Vec<NodeId>>,
+    pub compute: ComputeModel,
+    pub costs: CostParams,
+    /// Directory for streamed metadata blocks (the paper's SSD).
+    pub metadata_path: PathBuf,
+    /// Owns the temp dir when the config didn't name one.
+    _tmp: Option<Arc<TempDir>>,
+}
+
+impl RunContext {
+    /// Build dataset, partition, and KV store for a config.
+    pub fn build(cfg: &RunConfig) -> Result<RunContext> {
+        cfg.validate()?;
+        let with_features = cfg.exec_mode == ExecMode::Full;
+        let ds = Arc::new(build_dataset(&cfg.dataset, with_features));
+        let which = if cfg.engine.uses_metis() {
+            Partitioner::MetisLike
+        } else {
+            Partitioner::Random
+        };
+        let part = Arc::new(partition(&ds.graph, cfg.num_workers, which, cfg.base_seed));
+        let fabric = NetFabric::new(cfg.fabric);
+        let kv = Arc::new(KvStore::new(&ds, part.clone(), fabric.clone()));
+        let shards: Vec<Vec<NodeId>> = (0..cfg.num_workers)
+            .map(|w| {
+                ds.train_nodes
+                    .iter()
+                    .copied()
+                    .filter(|&v| part.is_local(w, v))
+                    .collect()
+            })
+            .collect();
+        let (metadata_path, tmp) = if cfg.metadata_dir.is_empty() {
+            let t = Arc::new(TempDir::new("meta")?);
+            (t.path().to_path_buf(), Some(t))
+        } else {
+            std::fs::create_dir_all(&cfg.metadata_dir)?;
+            (PathBuf::from(&cfg.metadata_dir), None)
+        };
+        Ok(RunContext {
+            cfg: cfg.clone(),
+            ds,
+            part,
+            kv,
+            fabric,
+            shards,
+            compute: ComputeModel::default(),
+            costs: CostParams::default(),
+            metadata_path,
+            _tmp: tmp,
+        })
+    }
+
+    /// Per-layer fan-out policy for this engine.
+    pub fn fanouts(&self) -> Vec<Fanout> {
+        match self.cfg.engine {
+            Engine::DistGcn => self
+                .cfg
+                .fanout
+                .iter()
+                .map(|_| Fanout::FullCapped(self.cfg.gcn_neighbor_cap))
+                .collect(),
+            _ => self.cfg.fanout.iter().map(|&f| Fanout::Sample(f)).collect(),
+        }
+    }
+
+    /// Simulated compute time for a batch (trace mode).
+    pub fn compute_time(&self, n_input: usize, n_seeds: usize) -> f64 {
+        self.compute.step_time(&self.cfg, n_input as u64, n_seeds as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetPreset, Engine};
+    use crate::WorkerId;
+
+    fn cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.dataset = crate::config::DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c
+    }
+
+    #[test]
+    fn context_builds_and_shards_partition_train_nodes() {
+        let ctx = RunContext::build(&cfg()).unwrap();
+        let total: usize = ctx.shards.iter().map(Vec::len).sum();
+        assert_eq!(total, ctx.ds.train_nodes.len());
+        for (w, shard) in ctx.shards.iter().enumerate() {
+            for &v in shard {
+                assert!(ctx.part.is_local(w as WorkerId, v));
+            }
+        }
+    }
+
+    #[test]
+    fn trace_mode_skips_features() {
+        let ctx = RunContext::build(&cfg()).unwrap();
+        assert!(!ctx.ds.has_features());
+        assert!(!ctx.kv.has_values());
+    }
+
+    #[test]
+    fn gcn_engine_gets_full_fanouts() {
+        let mut c = cfg();
+        c.engine = Engine::DistGcn;
+        let ctx = RunContext::build(&c).unwrap();
+        assert!(matches!(ctx.fanouts()[0], Fanout::FullCapped(_)));
+        let c2 = cfg();
+        let ctx2 = RunContext::build(&c2).unwrap();
+        assert!(matches!(ctx2.fanouts()[0], Fanout::Sample(10)));
+    }
+
+    #[test]
+    fn cost_model_monotone() {
+        let c = CostParams::default();
+        assert!(c.sample_time(10_000) > c.sample_time(100));
+        assert!(c.assemble_time(10_000, 602) > c.assemble_time(10_000, 100));
+        assert!(c.stream_time(1 << 20) > c.stream_time(1 << 10));
+    }
+}

@@ -1,0 +1,200 @@
+//! The Layer-3 coordinator: engine dispatch, worker orchestration, and run
+//! reporting — the paper's system contribution wired together.
+//!
+//! [`run`] executes a full distributed-training simulation for any
+//! [`Engine`]: it builds the dataset/partition/KV substrate, runs every
+//! worker (parallel threads in trace mode; sequential with a shared model in
+//! full mode — sequential SGD over the shard union, DESIGN.md §4), and
+//! aggregates per-epoch reports plus energy into a [`RunReport`].
+
+mod baseline;
+mod common;
+mod rapid;
+
+pub use common::{CostParams, RunContext};
+pub use rapid::{epoch_remote_frequency, precompute, RapidSetup};
+
+use crate::config::{Engine, ExecMode, RunConfig, TrainerBackend};
+use crate::energy::run_energy;
+use crate::metrics::{EpochReport, RunReport};
+use crate::trainer::{SageModel, TrainStep};
+use crate::Result;
+
+/// Execute a full run for `cfg` and aggregate the report.
+pub fn run(cfg: &RunConfig) -> Result<RunReport> {
+    let ctx = RunContext::build(cfg)?;
+    run_with_context(&ctx)
+}
+
+/// Execute with a pre-built context (benches reuse datasets across configs).
+pub fn run_with_context(ctx: &RunContext) -> Result<RunReport> {
+    let cfg = &ctx.cfg;
+    let mut setup_time = 0.0f64;
+    let mut epochs: Vec<EpochReport> = Vec::new();
+
+    match cfg.exec_mode {
+        ExecMode::Trace => {
+            // Workers are independent in trace mode — run them in parallel.
+            let results: Vec<Result<(f64, Vec<EpochReport>)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..cfg.num_workers)
+                    .map(|w| s.spawn(move || run_one_worker(ctx, w, None)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+            });
+            for r in results {
+                let (st, reps) = r?;
+                setup_time = setup_time.max(st);
+                epochs.extend(reps);
+            }
+        }
+        ExecMode::Full => {
+            // Shared model across workers: sequential SGD over the shard
+            // union (workers run in turn; see DESIGN.md §4).
+            let mut model = build_trainer(ctx)?;
+            for w in 0..cfg.num_workers {
+                let (st, reps) = run_one_worker(ctx, w, Some(model.as_mut()))?;
+                setup_time = setup_time.max(st);
+                epochs.extend(reps);
+            }
+        }
+    }
+
+    // End-to-end time: workers run concurrently, so the run takes the max
+    // over workers of their summed epoch time.
+    let mut per_worker_total = vec![0.0f64; cfg.num_workers as usize];
+    for e in &epochs {
+        per_worker_total[e.worker as usize] += e.epoch_time;
+    }
+    let total_time = per_worker_total.iter().cloned().fold(0.0, f64::max);
+
+    let mut report = RunReport {
+        engine: cfg.engine.name().to_string(),
+        dataset: cfg.dataset.name.clone(),
+        num_workers: cfg.num_workers,
+        batch_size: cfg.batch_size,
+        epochs,
+        total_time,
+        setup_time,
+        cpu_energy_j: 0.0,
+        gpu_energy_j: 0.0,
+    };
+    let energy = run_energy(&report, &cfg.power);
+    report.cpu_energy_j = energy.cpu.total_j;
+    report.gpu_energy_j = energy.gpu.total_j;
+    Ok(report)
+}
+
+fn run_one_worker(
+    ctx: &RunContext,
+    worker: u32,
+    trainer: Option<&mut (dyn TrainStep + 'static)>,
+) -> Result<(f64, Vec<EpochReport>)> {
+    match ctx.cfg.engine {
+        Engine::Rapid => rapid::run_worker(ctx, worker, trainer),
+        Engine::DglMetis | Engine::DglRandom | Engine::DistGcn => {
+            Ok((0.0, baseline::run_worker(ctx, worker, trainer)))
+        }
+    }
+}
+
+/// Instantiate the configured train-step backend.
+pub fn build_trainer(ctx: &RunContext) -> Result<Box<dyn TrainStep>> {
+    let cfg = &ctx.cfg;
+    match cfg.backend {
+        TrainerBackend::Host => Ok(Box::new(SageModel::new(
+            cfg.dataset.feature_dim as usize,
+            cfg.hidden_dim as usize,
+            cfg.dataset.num_classes as usize,
+            cfg.num_layers(),
+            cfg.base_seed,
+        ))),
+        TrainerBackend::Pjrt => crate::runtime::build_pjrt_trainer(ctx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset};
+
+    fn cfg(engine: Engine) -> RunConfig {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = engine;
+        c.epochs = 2;
+        c.n_hot = 300;
+        c
+    }
+
+    #[test]
+    fn trace_run_all_engines() {
+        for engine in Engine::ALL {
+            let report = run(&cfg(engine)).unwrap();
+            assert_eq!(report.engine, engine.name());
+            assert_eq!(report.epochs.len(), 2 * 2, "2 workers × 2 epochs");
+            assert!(report.total_time > 0.0);
+            assert!(report.cpu_energy_j > 0.0);
+            assert!(report.gpu_energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn rapid_beats_baselines_end_to_end() {
+        let rapid = run(&cfg(Engine::Rapid)).unwrap();
+        for baseline in [Engine::DglMetis, Engine::DglRandom, Engine::DistGcn] {
+            let base = run(&cfg(baseline)).unwrap();
+            assert!(
+                rapid.mean_step_time() < base.mean_step_time(),
+                "{}: rapid {} !< {}",
+                baseline.name(),
+                rapid.mean_step_time(),
+                base.mean_step_time()
+            );
+            assert!(rapid.total_remote_rows() < base.total_remote_rows());
+        }
+    }
+
+    #[test]
+    fn rapid_uses_less_energy() {
+        let rapid = run(&cfg(Engine::Rapid)).unwrap();
+        let base = run(&cfg(Engine::DglMetis)).unwrap();
+        assert!(rapid.cpu_energy_j < base.cpu_energy_j);
+        assert!(rapid.gpu_energy_j < base.gpu_energy_j);
+    }
+
+    #[test]
+    fn full_mode_trains_host_model() {
+        let mut c = cfg(Engine::Rapid);
+        c.exec_mode = ExecMode::Full;
+        c.batch_size = 64;
+        c.epochs = 3;
+        let report = run(&c).unwrap();
+        let curve = report.accuracy_curve();
+        assert_eq!(curve.len(), 3);
+        // accuracy improves from epoch 0 to the last epoch
+        assert!(
+            curve.last().unwrap().1 > curve[0].1,
+            "accuracy {:?}",
+            curve
+        );
+        assert!(report.loss_curve().last().unwrap().1 < report.loss_curve()[0].1);
+    }
+
+    #[test]
+    fn full_mode_baseline_also_trains() {
+        let mut c = cfg(Engine::DglMetis);
+        c.exec_mode = ExecMode::Full;
+        c.batch_size = 64;
+        c.epochs = 2;
+        let report = run(&c).unwrap();
+        assert!(report.loss_curve().iter().all(|&(_, l)| l.is_finite()));
+    }
+
+    #[test]
+    fn total_time_is_max_worker_not_sum() {
+        let report = run(&cfg(Engine::DglMetis)).unwrap();
+        let sum: f64 = report.epochs.iter().map(|e| e.epoch_time).sum();
+        assert!(report.total_time < sum, "workers run concurrently");
+        assert!(report.total_time > 0.0);
+    }
+}

@@ -1,0 +1,451 @@
+//! The RapidGNN engine: Algorithm 1 end to end.
+//!
+//! Per worker:
+//! 1. **Precompute** (offline, once): enumerate every epoch's schedule with
+//!    derived seeds and stream the metadata blocks to SSD (setup time, not
+//!    training time — reported separately like the paper).
+//! 2. **Initial cache build**: stream epoch 0's blocks back, rank remote
+//!    accesses (`TopHot`), and materialize the steady cache `C_s` with one
+//!    `VectorPull`.
+//! 3. **Per epoch**: a prefetcher walks the streamed schedule, staging each
+//!    batch cache-first with residual `SyncPull` misses into the bounded
+//!    queue; the trainer consumes. In parallel (accounted as background
+//!    time), `C_sec` for epoch e+1 is ranked, pulled, and swapped in at the
+//!    boundary. Per-step times go through the bounded-queue pipeline model,
+//!    which is what produces the paper's communication-hiding behaviour.
+
+use super::common::RunContext;
+use crate::cache::{top_hot, CacheBuffer, DoubleBufferCache};
+use crate::config::ExecMode;
+use crate::metrics::{CommStats, EpochReport, PhaseTimes};
+use crate::prefetch::{stage_batch, Prefetcher, StagedBatch};
+use crate::sampler::{enumerate_epoch, remote_frequency, BatchMeta};
+use crate::sim::{pipeline_schedule, PipelineStep};
+use crate::storage::{write_epoch, EpochReader};
+use crate::trainer::TrainStep;
+use crate::{NodeId, Result, WorkerId};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Setup products of the precompute pass.
+pub struct RapidSetup {
+    /// Simulated setup seconds (offline sampling + SSD writes + initial
+    /// ranking + initial VectorPull).
+    pub setup_time: f64,
+    /// Comm stats of the initial cache build (merged into epoch 0's report).
+    pub setup_comm: CommStats,
+    /// The double-buffered cache with `C_s` installed for epoch 0.
+    pub cache: Arc<Mutex<DoubleBufferCache>>,
+}
+
+/// Precompute all epochs to disk and build the initial steady cache.
+pub fn precompute(ctx: &RunContext, worker: WorkerId) -> Result<RapidSetup> {
+    let cfg = &ctx.cfg;
+    let fanouts = ctx.fanouts();
+    let mut setup_time = 0.0;
+
+    // Offline enumeration, streamed epoch by epoch (bounded CPU memory).
+    for epoch in 0..cfg.epochs {
+        let sched = enumerate_epoch(
+            &ctx.ds.graph,
+            &ctx.part,
+            &ctx.shards[worker as usize],
+            &fanouts,
+            cfg.batch_size,
+            cfg.base_seed,
+            worker,
+            epoch,
+        );
+        for b in &sched.batches {
+            setup_time += ctx.costs.sample_time(b.input_nodes.len());
+            setup_time += b.byte_size() as f64 / ctx.costs.ssd_bytes_per_sec;
+        }
+        write_epoch(&ctx.metadata_path, &sched)?;
+    }
+
+    // Initial cache: rank epoch 0's remote accesses, pull top-n_hot.
+    let (hot, rank_time) = stream_top_hot(ctx, worker, 0)?;
+    setup_time += rank_time;
+    let mut setup_comm = CommStats::default();
+    let mut rows: Vec<f32> = Vec::new();
+    let materialize = cfg.exec_mode == ExecMode::Full;
+    let pull = ctx.kv.vector_pull(
+        worker,
+        &hot,
+        if materialize { Some(&mut rows) } else { None },
+        &mut setup_comm,
+    );
+    setup_time += pull.time;
+    let mut cache = DoubleBufferCache::default();
+    cache.install_steady(CacheBuffer::new(&hot, rows, ctx.kv.feature_dim()));
+
+    Ok(RapidSetup {
+        setup_time,
+        setup_comm,
+        cache: Arc::new(Mutex::new(cache)),
+    })
+}
+
+/// Stream one epoch's blocks from SSD and rank its remote accesses.
+/// Returns the top-`n_hot` node list and the simulated background time
+/// (stream read + frequency tally).
+fn stream_top_hot(ctx: &RunContext, worker: WorkerId, epoch: u32) -> Result<(Vec<NodeId>, f64)> {
+    let mut reader = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
+    let mut batches: Vec<BatchMeta> = Vec::with_capacity(reader.num_batches as usize);
+    let mut time = 0.0;
+    let mut accesses = 0u64;
+    while let Some(b) = reader.next_batch()? {
+        time += ctx.costs.stream_time(b.byte_size());
+        accesses += b.num_remote as u64;
+        batches.push(b);
+    }
+    time += accesses as f64 * ctx.costs.rank_per_access_sec;
+    let hot = top_hot(&batches, ctx.cfg.n_hot);
+    Ok((hot, time))
+}
+
+/// Run one worker's full RapidGNN training. `trainer` present in full mode.
+pub fn run_worker(
+    ctx: &RunContext,
+    worker: WorkerId,
+    mut trainer: Option<&mut (dyn TrainStep + 'static)>,
+) -> Result<(f64, Vec<EpochReport>)> {
+    let setup = precompute(ctx, worker)?;
+    let cfg = &ctx.cfg;
+    let full = cfg.exec_mode == ExecMode::Full;
+    let d = cfg.dataset.feature_dim;
+    let cache = setup.cache;
+    let mut reports = Vec::with_capacity(cfg.epochs as usize);
+
+    for epoch in 0..cfg.epochs {
+        cache.lock().unwrap().reset_stats();
+        let mut comm = CommStats::default();
+        if epoch == 0 {
+            comm.merge(&setup.setup_comm); // initial VectorPull bytes
+        }
+        let mut steps: Vec<PipelineStep> = Vec::new();
+        let mut phases = PhaseTimes::default();
+        let mut m_max = 0u64;
+        let (mut loss_sum, mut correct, mut total) = (0.0f64, 0u64, 0u64);
+
+        // --- consume staged batches (threaded prefetcher in full mode for
+        // real overlap; inline staging in trace mode for sweep speed — both
+        // produce identical staged content, see prefetch tests).
+        let mut acc = EpochAcc::default();
+        if full {
+            let reader = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
+            let source = Box::new(ReaderIter { reader });
+            let pf = Prefetcher::spawn(
+                ctx.kv.clone(),
+                cache.clone(),
+                source,
+                cfg.prefetch_q,
+                worker,
+                true,
+            );
+            let mut consumed = 0u32;
+            while let Some(staged) = pf.recv() {
+                consumed += 1;
+                consume_staged(
+                    ctx,
+                    worker,
+                    epoch,
+                    staged,
+                    &mut phases,
+                    &mut steps,
+                    &mut acc,
+                    trainer.as_deref_mut(),
+                );
+            }
+            comm.merge(&pf.join());
+            // Trainer-side race fallback (Algorithm 1 / §3: "if a complete
+            // batch is not found in the Prefetcher, the features of that
+            // batch are fetched through the default path"). If the
+            // prefetcher died or fell behind and never delivered the tail of
+            // the schedule, re-open the stream and serve the remaining
+            // batches on-demand so no training step is lost.
+            let mut check = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
+            if consumed < check.num_batches {
+                let mut skipped = consumed;
+                while let Some(meta) = check.next_batch()? {
+                    if skipped > 0 {
+                        skipped -= 1;
+                        continue;
+                    }
+                    let staged = stage_batch(&ctx.kv, &cache, meta, worker, true, &mut comm);
+                    consume_staged(
+                        ctx,
+                        worker,
+                        epoch,
+                        staged,
+                        &mut phases,
+                        &mut steps,
+                        &mut acc,
+                        trainer.as_deref_mut(),
+                    );
+                }
+            }
+        } else {
+            let mut reader = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
+            while let Some(meta) = reader.next_batch()? {
+                let staged = stage_batch(&ctx.kv, &cache, meta, worker, false, &mut comm);
+                consume_staged(ctx, worker, epoch, staged, &mut phases, &mut steps, &mut acc, None);
+            }
+        }
+        m_max = m_max.max(acc.m_max);
+        loss_sum += acc.loss_sum;
+        correct += acc.correct;
+        total += acc.total;
+
+        // --- background C_sec build for the next epoch (accounted as
+        // parallel work; only its *overrun* past the epoch stalls the swap).
+        let mut bg_time = 0.0;
+        if epoch + 1 < cfg.epochs {
+            let (hot, rank_time) = stream_top_hot(ctx, worker, epoch + 1)?;
+            bg_time += rank_time;
+            let mut rows: Vec<f32> = Vec::new();
+            let pull = ctx.kv.vector_pull(
+                worker,
+                &hot,
+                if full { Some(&mut rows) } else { None },
+                &mut comm,
+            );
+            bg_time += pull.time;
+            cache
+                .lock()
+                .unwrap()
+                .stage_secondary(CacheBuffer::new(&hot, rows, ctx.kv.feature_dim()));
+        }
+
+        // --- pipeline schedule → epoch time
+        let times = pipeline_schedule(&steps, cfg.prefetch_q);
+        let overrun = (bg_time - times.total).max(0.0);
+        phases.fetch = times.total_wait; // residual stalls visible to trainer
+        phases.idle = overrun;
+        let epoch_time = times.total + overrun;
+
+        let (cache_stats, device_cache_bytes) = {
+            let mut c = cache.lock().unwrap();
+            let s = c.stats();
+            let bytes = c.device_bytes();
+            c.swap_at_epoch_boundary();
+            (s, bytes)
+        };
+
+        let steps_n = steps.len() as u32;
+        reports.push(EpochReport {
+            epoch,
+            worker,
+            steps: steps_n,
+            epoch_time,
+            phases,
+            comm,
+            cache: cache_stats,
+            mean_loss: if full { loss_sum / steps_n.max(1) as f64 } else { f64::NAN },
+            train_acc: if full && total > 0 {
+                correct as f64 / total as f64
+            } else {
+                f64::NAN
+            },
+            // Paper bound: 2·n_hot·d + Q·m_max·d (both cache buffers + the
+            // staged queue). Trace mode reports the bound-equivalent since
+            // rows aren't materialized.
+            device_bytes: device_cache_bytes.max(2 * cfg.n_hot as u64 * d as u64 * 4)
+                + cfg.prefetch_q as u64 * m_max * d as u64 * 4,
+            // Streaming keeps host memory at one batch + the ranking tally.
+            host_bytes: m_max * 8 + cfg.n_hot as u64 * 12,
+        });
+    }
+    Ok((setup.setup_time, reports))
+}
+
+/// Per-epoch accumulators for the consume loop.
+#[derive(Default)]
+struct EpochAcc {
+    m_max: u64,
+    loss_sum: f64,
+    correct: u64,
+    total: u64,
+}
+
+/// Consume one staged batch: charge assemble+compute (measured in full mode),
+/// record the pipeline step, and run the real train step when present.
+#[allow(clippy::too_many_arguments)]
+fn consume_staged(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epoch: u32,
+    staged: StagedBatch,
+    phases: &mut PhaseTimes,
+    steps: &mut Vec<PipelineStep>,
+    acc: &mut EpochAcc,
+    trainer: Option<&mut (dyn TrainStep + 'static)>,
+) {
+    let full = ctx.cfg.exec_mode == ExecMode::Full;
+    let d = ctx.cfg.dataset.feature_dim;
+    let n_input = staged.meta.input_nodes.len();
+    acc.m_max = acc.m_max.max(n_input as u64);
+    let stage_time = staged.stage_time + ctx.costs.stream_time(staged.meta.byte_size());
+    let assemble = ctx.costs.assemble_time(n_input, d);
+    let compute = if full {
+        let t0 = Instant::now();
+        let out = super::baseline::full_train_step(
+            ctx,
+            worker,
+            epoch,
+            &staged.meta,
+            staged.features.unwrap_or_default(),
+            trainer,
+        );
+        acc.loss_sum += out.0;
+        acc.correct += out.1 as u64;
+        acc.total += out.2 as u64;
+        t0.elapsed().as_secs_f64()
+    } else {
+        ctx.compute_time(n_input, staged.meta.seeds.len())
+    };
+    phases.assemble += assemble;
+    phases.compute += compute;
+    steps.push(PipelineStep { stage: stage_time, consume: assemble + compute });
+}
+
+/// Adapter: streaming [`EpochReader`] as an iterator for the prefetcher.
+struct ReaderIter {
+    reader: EpochReader,
+}
+
+impl Iterator for ReaderIter {
+    type Item = BatchMeta;
+    fn next(&mut self) -> Option<BatchMeta> {
+        self.reader.next_batch().ok().flatten()
+    }
+}
+
+/// Streamed frequency ranking is also exposed for the Fig-3 bench.
+pub fn epoch_remote_frequency(ctx: &RunContext, worker: WorkerId, epoch: u32) -> Result<Vec<(NodeId, u32)>> {
+    let mut reader = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
+    let mut batches = Vec::new();
+    while let Some(b) = reader.next_batch()? {
+        batches.push(b);
+    }
+    Ok(remote_frequency(&batches))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+
+    fn ctx() -> RunContext {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = Engine::Rapid;
+        c.epochs = 3;
+        c.n_hot = 300;
+        RunContext::build(&c).unwrap()
+    }
+
+    #[test]
+    fn precompute_writes_all_epochs() {
+        let ctx = ctx();
+        let setup = precompute(&ctx, 0).unwrap();
+        assert!(setup.setup_time > 0.0);
+        assert!(setup.setup_comm.vector_pulls > 0, "initial VectorPull issued");
+        for e in 0..3 {
+            assert!(EpochReader::open(&ctx.metadata_path, 0, e).is_ok(), "epoch {e} on disk");
+        }
+        assert!(!setup.cache.lock().unwrap().steady().is_empty());
+    }
+
+    #[test]
+    fn rapid_runs_and_hits_cache() {
+        let ctx = ctx();
+        let (setup_time, reports) = run_worker(&ctx, 0, None).unwrap();
+        assert!(setup_time > 0.0);
+        assert_eq!(reports.len(), 3);
+        for r in &reports {
+            assert!(r.steps >= 1);
+            assert!(r.cache.lookups > 0);
+            assert!(r.cache.hit_rate() > 0.2, "hit rate {}", r.cache.hit_rate());
+        }
+    }
+
+    #[test]
+    fn rapid_moves_fewer_remote_rows_than_baseline() {
+        // The paper's headline mechanism, on the tiny graph.
+        let rctx = ctx();
+        let (_, rapid) = run_worker(&rctx, 0, None).unwrap();
+        let mut bcfg = rctx.cfg.clone();
+        bcfg.engine = Engine::DglMetis;
+        let bctx = RunContext::build(&bcfg).unwrap();
+        let base = super::super::baseline::run_worker(&bctx, 0, None);
+        let rows = |rs: &[EpochReport]| -> u64 { rs.iter().map(|r| r.comm.remote_rows).sum() };
+        // exclude epoch 0's vector pull? keep it — still far fewer
+        assert!(
+            rows(&rapid) < rows(&base),
+            "rapid {} !< baseline {}",
+            rows(&rapid),
+            rows(&base)
+        );
+    }
+
+    #[test]
+    fn rapid_is_faster_per_epoch_than_baseline() {
+        let rctx = ctx();
+        let (_, rapid) = run_worker(&rctx, 0, None).unwrap();
+        let mut bcfg = rctx.cfg.clone();
+        bcfg.engine = Engine::DglMetis;
+        let bctx = RunContext::build(&bcfg).unwrap();
+        let base = super::super::baseline::run_worker(&bctx, 0, None);
+        let t = |rs: &[EpochReport]| -> f64 { rs.iter().map(|r| r.epoch_time).sum() };
+        assert!(t(&rapid) < t(&base), "rapid {} !< baseline {}", t(&rapid), t(&base));
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let c1 = ctx();
+        let (s1, a) = run_worker(&c1, 0, None).unwrap();
+        let c2 = ctx();
+        let (s2, b) = run_worker(&c2, 0, None).unwrap();
+        assert_eq!(s1, s2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.comm.remote_rows, y.comm.remote_rows);
+            assert_eq!(x.cache.hits, y.cache.hits);
+            assert!((x.epoch_time - y.epoch_time).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn memory_respects_paper_bound() {
+        let ctx = ctx();
+        let (_, reports) = run_worker(&ctx, 0, None).unwrap();
+        let d = ctx.cfg.dataset.feature_dim;
+        for r in &reports {
+            // bound with index overhead allowance (+16B/entry)
+            let m_max = 2_000u64; // tiny graph: generous m_max envelope
+            let bound = crate::cache::device_memory_bound(ctx.cfg.n_hot, ctx.cfg.prefetch_q, m_max as u32, d);
+            let slack = 2 * ctx.cfg.n_hot as u64 * 16;
+            assert!(
+                r.device_bytes <= bound + slack,
+                "device {} > bound {}",
+                r.device_bytes,
+                bound + slack
+            );
+        }
+    }
+
+    #[test]
+    fn later_epochs_swap_cache() {
+        let ctx = ctx();
+        let setup = precompute(&ctx, 0).unwrap();
+        let cache = setup.cache;
+        // stage + swap manually to verify the boundary logic end to end
+        let (hot, _) = super::stream_top_hot(&ctx, 0, 1).unwrap();
+        cache
+            .lock()
+            .unwrap()
+            .stage_secondary(CacheBuffer::new(&hot, Vec::new(), ctx.kv.feature_dim()));
+        assert!(cache.lock().unwrap().swap_at_epoch_boundary());
+        assert_eq!(cache.lock().unwrap().swaps(), 1);
+    }
+}

@@ -1,0 +1,138 @@
+//! Energy accounting (paper §5.4, Table 3, Fig. 8).
+//!
+//! The paper measures CPU/GPU energy with psutil/NVML and attributes
+//! RapidGNN's ~44%/32% savings almost entirely to shorter run time, with a
+//! small CPU *power* reduction (no busy-wait RPC polling) and a small GPU
+//! power increase (device-resident cache). We reproduce that causal chain
+//! with a phase-based power model: energy = Σ phase_duration × phase_power,
+//! where durations come from the (simulated or measured) run and powers from
+//! [`crate::config::PowerConfig`].
+
+use crate::config::PowerConfig;
+use crate::metrics::{PhaseTimes, RunReport};
+
+/// Energy report for one device class.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceEnergy {
+    /// Total joules.
+    pub total_j: f64,
+    /// Duration attributed (seconds).
+    pub duration_s: f64,
+}
+
+impl DeviceEnergy {
+    /// Mean power over the duration (W).
+    pub fn mean_power_w(&self) -> f64 {
+        if self.duration_s > 0.0 {
+            self.total_j / self.duration_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// CPU + GPU energy for a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyReport {
+    pub cpu: DeviceEnergy,
+    pub gpu: DeviceEnergy,
+}
+
+/// Integrate the power model over one epoch's phase times.
+///
+/// Phase → power mapping:
+/// - `sample`/`assemble`: CPU busy, GPU idle (host-side work).
+/// - `fetch`: CPU at *net-wait* power (RPC polling keeps cores spinning —
+///   the reason DGL's mean CPU power exceeds RapidGNN's in Table 3),
+///   GPU idle (stalled).
+/// - `compute`: GPU busy; CPU near-idle feeding the device.
+/// - `idle`: both at idle floor.
+/// - `gpu_cache_bytes > 0` adds a small residency overhead to GPU idle power
+///   (the paper's +4.7% GPU power for RapidGNN).
+pub fn epoch_energy(p: &PhaseTimes, power: &PowerConfig, gpu_cache_bytes: u64) -> EnergyReport {
+    // Cache residency: +1 W per GiB held, capped at +3 W — matches the
+    // paper's observed ~5% GPU power delta at its cache sizes.
+    let residency_w = ((gpu_cache_bytes as f64 / (1u64 << 30) as f64) * 1.0).min(3.0);
+    let gpu_idle = power.gpu_idle_w + residency_w;
+    let cpu_j = (p.sample + p.assemble) * power.cpu_busy_w
+        + p.fetch * power.cpu_net_wait_w
+        + p.compute * power.cpu_idle_w
+        + p.idle * power.cpu_idle_w;
+    let gpu_j = p.compute * (power.gpu_busy_w + residency_w)
+        + (p.sample + p.assemble + p.fetch + p.idle) * gpu_idle;
+    let dur = p.total();
+    EnergyReport {
+        cpu: DeviceEnergy { total_j: cpu_j, duration_s: dur },
+        gpu: DeviceEnergy { total_j: gpu_j, duration_s: dur },
+    }
+}
+
+/// Aggregate run energy from per-epoch reports (fills
+/// `RunReport::{cpu,gpu}_energy_j`).
+pub fn run_energy(report: &RunReport, power: &PowerConfig) -> EnergyReport {
+    let mut total = EnergyReport::default();
+    for e in &report.epochs {
+        let er = epoch_energy(&e.phases, power, e.device_bytes);
+        total.cpu.total_j += er.cpu.total_j;
+        total.cpu.duration_s += er.cpu.duration_s;
+        total.gpu.total_j += er.gpu.total_j;
+        total.gpu.duration_s += er.gpu.duration_s;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phases(sample: f64, fetch: f64, compute: f64) -> PhaseTimes {
+        PhaseTimes { sample, fetch, assemble: 0.0, compute, idle: 0.0 }
+    }
+
+    #[test]
+    fn energy_scales_with_duration() {
+        let pw = PowerConfig::default();
+        let e1 = epoch_energy(&phases(1.0, 1.0, 1.0), &pw, 0);
+        let e2 = epoch_energy(&phases(2.0, 2.0, 2.0), &pw, 0);
+        assert!((e2.cpu.total_j - 2.0 * e1.cpu.total_j).abs() < 1e-9);
+        assert!((e2.gpu.total_j - 2.0 * e1.gpu.total_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fetch_heavy_run_draws_more_cpu_power() {
+        // The Table-3 mechanism: network-stalled runs have HIGHER mean CPU
+        // power than compute-balanced ones.
+        let pw = PowerConfig::default();
+        let stalled = epoch_energy(&phases(0.5, 3.0, 0.5), &pw, 0);
+        let balanced = epoch_energy(&phases(0.5, 0.2, 3.3), &pw, 0);
+        assert!(stalled.cpu.mean_power_w() > balanced.cpu.mean_power_w());
+    }
+
+    #[test]
+    fn gpu_cache_residency_increases_gpu_power() {
+        let pw = PowerConfig::default();
+        let p = phases(1.0, 1.0, 1.0);
+        let nocache = epoch_energy(&p, &pw, 0);
+        let cache = epoch_energy(&p, &pw, 2 << 30);
+        assert!(cache.gpu.mean_power_w() > nocache.gpu.mean_power_w());
+        // but the delta is small (paper: +4.7%)
+        let ratio = cache.gpu.mean_power_w() / nocache.gpu.mean_power_w();
+        assert!(ratio < 1.15, "ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_duration_zero_power() {
+        let e = DeviceEnergy::default();
+        assert_eq!(e.mean_power_w(), 0.0);
+    }
+
+    #[test]
+    fn shorter_run_saves_energy_even_at_equal_power() {
+        // Energy ∝ duration: the paper's primary savings channel.
+        let pw = PowerConfig::default();
+        let slow = epoch_energy(&phases(1.0, 4.0, 2.0), &pw, 0);
+        let fast = epoch_energy(&phases(1.0, 0.4, 2.0), &pw, 0);
+        assert!(fast.cpu.total_j < slow.cpu.total_j);
+        assert!(fast.gpu.total_j < slow.gpu.total_j);
+    }
+}

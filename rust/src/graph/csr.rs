@@ -1,0 +1,138 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! Undirected graphs are stored with both edge directions so `neighbors(v)`
+//! is a single contiguous slice — the access pattern the k-hop sampler hits
+//! millions of times per epoch.
+
+use crate::NodeId;
+
+/// A graph in CSR form. Node ids are dense `0..num_nodes`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// `indptr[v]..indptr[v+1]` indexes `indices` for node v's neighbors.
+    indptr: Vec<u64>,
+    /// Flattened adjacency lists.
+    indices: Vec<NodeId>,
+}
+
+impl CsrGraph {
+    /// Build a CSR graph from an (unsorted) edge list. Each `(u, v)` pair is
+    /// inserted in both directions; self-loops are kept once per direction
+    /// given; duplicate edges are preserved (multigraph semantics — the
+    /// uniform sampler treats parallel edges as higher transition weight,
+    /// matching DGL's behaviour on raw edge lists).
+    pub fn from_edges(num_nodes: u32, edges: &[(NodeId, NodeId)]) -> Self {
+        let n = num_nodes as usize;
+        let mut degree = vec![0u64; n];
+        for &(u, v) in edges {
+            debug_assert!(u < num_nodes && v < num_nodes);
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+        let mut indptr = vec![0u64; n + 1];
+        for v in 0..n {
+            indptr[v + 1] = indptr[v] + degree[v];
+        }
+        let mut cursor: Vec<u64> = indptr[..n].to_vec();
+        let mut indices = vec![0 as NodeId; indptr[n] as usize];
+        for &(u, v) in edges {
+            indices[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            indices[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        CsrGraph { indptr, indices }
+    }
+
+    /// Build directly from CSR arrays (used by the storage layer).
+    pub fn from_raw(indptr: Vec<u64>, indices: Vec<NodeId>) -> Self {
+        assert!(!indptr.is_empty(), "indptr must have n+1 entries");
+        assert_eq!(*indptr.last().unwrap() as usize, indices.len());
+        CsrGraph { indptr, indices }
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> u32 {
+        (self.indptr.len() - 1) as u32
+    }
+
+    /// Number of directed edges (2× undirected edge count).
+    pub fn num_directed_edges(&self) -> u64 {
+        self.indices.len() as u64
+    }
+
+    /// Degree of node `v`.
+    pub fn degree(&self, v: NodeId) -> u32 {
+        (self.indptr[v as usize + 1] - self.indptr[v as usize]) as u32
+    }
+
+    /// Neighbor slice of node `v`.
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        let s = self.indptr[v as usize] as usize;
+        let e = self.indptr[v as usize + 1] as usize;
+        &self.indices[s..e]
+    }
+
+    /// Raw CSR arrays `(indptr, indices)`.
+    pub fn raw(&self) -> (&[u64], &[NodeId]) {
+        (&self.indptr, &self.indices)
+    }
+
+    /// Approximate heap size in bytes (for Fig-7 memory accounting).
+    pub fn heap_bytes(&self) -> u64 {
+        (self.indptr.len() * 8 + self.indices.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> CsrGraph {
+        // 0 - 1 - 2
+        CsrGraph::from_edges(3, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = path3();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_directed_edges(), 4);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(2), 1);
+        assert_eq!(g.neighbors(0), &[1]);
+        let mut n1 = g.neighbors(1).to_vec();
+        n1.sort();
+        assert_eq!(n1, vec![0, 2]);
+    }
+
+    #[test]
+    fn isolated_nodes_allowed() {
+        let g = CsrGraph::from_edges(4, &[(0, 1)]);
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.degree(3), 0);
+        assert!(g.neighbors(3).is_empty());
+    }
+
+    #[test]
+    fn duplicate_edges_preserved() {
+        let g = CsrGraph::from_edges(2, &[(0, 1), (0, 1)]);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(0), &[1, 1]);
+    }
+
+    #[test]
+    fn raw_round_trip() {
+        let g = path3();
+        let (p, i) = g.raw();
+        let g2 = CsrGraph::from_raw(p.to_vec(), i.to_vec());
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_raw_rejects_inconsistent() {
+        CsrGraph::from_raw(vec![0, 5], vec![0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Graph substrate: CSR storage, synthetic generators, and labeled datasets.
+//!
+//! The paper's datasets (Reddit, OGBN-Products, OGBN-Papers100M) are
+//! substituted with Chung–Lu power-law graphs of matched shape — the long-tail
+//! degree distribution that drives RapidGNN's hot-set cache (paper Fig. 3) is
+//! a direct consequence of the power-law expected-degree sequence used here.
+
+mod csr;
+mod dataset;
+mod generate;
+
+pub use csr::CsrGraph;
+pub use dataset::{Dataset, build_dataset};
+pub use generate::{chung_lu, degree_stats, rmat, DegreeStats};

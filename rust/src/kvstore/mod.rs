@@ -1,0 +1,280 @@
+//! Distributed KV store for node features (DistDGL-style), sharded by the
+//! graph partition, with RPC costs charged to the simulated [`crate::net`]
+//! fabric.
+//!
+//! Two pull primitives mirror the paper:
+//! - [`KvStore::vector_pull`] — one bulk, vectorized pull (cache builds;
+//!   Algorithm 1 line 4). Fans out to owner shards in parallel.
+//! - [`KvStore::sync_pull`] — the miss-set pull on (or near) the critical
+//!   path (Algorithm 1 line 14). Same transport, tracked separately.
+//!
+//! Feature values may or may not be materialized: the trace-mode benches run
+//! metadata-only (counts and charges are exact, no row copies), while full
+//! runs gather real rows.
+
+use crate::graph::Dataset;
+use crate::metrics::CommStats;
+use crate::net::NetFabric;
+use crate::partition::Partition;
+use crate::{NodeId, WorkerId};
+use std::sync::Arc;
+
+/// Result of a pull operation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Pull {
+    /// Simulated seconds on the requester's critical path.
+    pub time: f64,
+    /// Bytes moved over the fabric.
+    pub bytes: u64,
+    /// Remote feature rows fetched.
+    pub remote_rows: u64,
+    /// RPCs issued (one per touched remote shard).
+    pub rpcs: u64,
+}
+
+/// Sharded feature store.
+pub struct KvStore {
+    part: Arc<Partition>,
+    fabric: NetFabric,
+    feature_dim: usize,
+    /// `rank[v]` = row index of v within its owner's shard.
+    rank: Vec<u32>,
+    /// Per-partition feature rows (row-major); empty vecs in trace mode.
+    shards: Vec<Vec<f32>>,
+}
+
+impl KvStore {
+    /// Build from a dataset + partition. Copies feature rows into per-shard
+    /// storage when the dataset has materialized features.
+    pub fn new(ds: &Dataset, part: Arc<Partition>, fabric: NetFabric) -> Self {
+        let n = ds.graph.num_nodes() as usize;
+        let d = ds.config.feature_dim as usize;
+        let mut rank = vec![0u32; n];
+        for locals in &part.local_nodes {
+            for (i, &v) in locals.iter().enumerate() {
+                rank[v as usize] = i as u32;
+            }
+        }
+        let shards: Vec<Vec<f32>> = if ds.has_features() {
+            part.local_nodes
+                .iter()
+                .map(|locals| {
+                    let mut rows = Vec::with_capacity(locals.len() * d);
+                    for &v in locals {
+                        rows.extend_from_slice(ds.feature_row(v));
+                    }
+                    rows
+                })
+                .collect()
+        } else {
+            vec![Vec::new(); part.num_parts as usize]
+        };
+        KvStore { part, fabric, feature_dim: d, rank, shards }
+    }
+
+    /// Feature dimensionality.
+    pub fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    /// Whether feature values are materialized.
+    pub fn has_values(&self) -> bool {
+        self.shards.iter().any(|s| !s.is_empty())
+    }
+
+    /// Copy node `v`'s feature row into `out` (must be materialized).
+    #[inline]
+    pub fn copy_row(&self, v: NodeId, out: &mut [f32]) {
+        let p = self.part.owner_of(v) as usize;
+        let r = self.rank[v as usize] as usize;
+        let d = self.feature_dim;
+        out.copy_from_slice(&self.shards[p][r * d..(r + 1) * d]);
+    }
+
+    /// Read-only view of node `v`'s feature row.
+    #[inline]
+    pub fn row(&self, v: NodeId) -> &[f32] {
+        let p = self.part.owner_of(v) as usize;
+        let r = self.rank[v as usize] as usize;
+        let d = self.feature_dim;
+        &self.shards[p][r * d..(r + 1) * d]
+    }
+
+    /// Bytes held by shard `p` (Fig-7 host-memory accounting).
+    pub fn shard_bytes(&self, p: WorkerId) -> u64 {
+        (self.shards[p as usize].len() * 4) as u64
+    }
+
+    /// Internal: group `ids` by owner, charge the fabric for the remote
+    /// portion, and optionally gather rows (in `ids` order) into `out`.
+    fn pull_impl(
+        &self,
+        requester: WorkerId,
+        ids: &[NodeId],
+        mut out: Option<&mut Vec<f32>>,
+    ) -> Pull {
+        let row_bytes = (self.feature_dim * 4) as u64;
+        // rows per remote owner shard
+        let mut per_dst = vec![0u64; self.part.num_parts as usize];
+        let mut remote_rows = 0u64;
+        for &v in ids {
+            let o = self.part.owner_of(v);
+            if o != requester {
+                per_dst[o as usize] += 1;
+                remote_rows += 1;
+            }
+        }
+        if let Some(buf) = out.as_deref_mut() {
+            buf.clear();
+            buf.reserve(ids.len() * self.feature_dim);
+            for &v in ids {
+                let p = self.part.owner_of(v) as usize;
+                let r = self.rank[v as usize] as usize;
+                let d = self.feature_dim;
+                buf.extend_from_slice(&self.shards[p][r * d..(r + 1) * d]);
+            }
+        }
+        let dsts: Vec<(WorkerId, u64)> = per_dst
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| r > 0)
+            .map(|(p, &r)| (p as WorkerId, r))
+            .collect();
+        let charge = self.fabric.charge_fanout(requester, &dsts, row_bytes);
+        Pull {
+            time: charge.time,
+            bytes: charge.bytes,
+            remote_rows,
+            rpcs: dsts.len() as u64,
+        }
+    }
+
+    /// Bulk vectorized pull (cache construction). `ids` should be remote
+    /// nodes; local ids cost nothing on the fabric and are gathered free.
+    pub fn vector_pull(
+        &self,
+        requester: WorkerId,
+        ids: &[NodeId],
+        out: Option<&mut Vec<f32>>,
+        stats: &mut CommStats,
+    ) -> Pull {
+        let p = self.pull_impl(requester, ids, out);
+        stats.vector_pulls += p.rpcs;
+        stats.remote_rows += p.remote_rows;
+        stats.vector_rows += p.remote_rows;
+        stats.bytes += p.bytes;
+        stats.net_time += p.time;
+        p
+    }
+
+    /// Miss-set pull (critical-path or prefetcher residual misses).
+    pub fn sync_pull(
+        &self,
+        requester: WorkerId,
+        ids: &[NodeId],
+        out: Option<&mut Vec<f32>>,
+        stats: &mut CommStats,
+    ) -> Pull {
+        let p = self.pull_impl(requester, ids, out);
+        stats.sync_pulls += p.rpcs;
+        stats.remote_rows += p.remote_rows;
+        stats.bytes += p.bytes;
+        stats.net_time += p.time;
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset, FabricConfig};
+    use crate::graph::build_dataset;
+    use crate::partition::metis_like;
+
+    fn setup(with_features: bool) -> (Dataset, Arc<Partition>, KvStore) {
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), with_features);
+        let part = Arc::new(metis_like(&ds.graph, 2, 0));
+        let kv = KvStore::new(&ds, part.clone(), NetFabric::new(FabricConfig::default()));
+        (ds, part, kv)
+    }
+
+    #[test]
+    fn rows_match_dataset() {
+        let (ds, _, kv) = setup(true);
+        for v in [0u32, 5, 100, 1999] {
+            assert_eq!(kv.row(v), ds.feature_row(v));
+        }
+    }
+
+    #[test]
+    fn pull_gathers_in_request_order() {
+        let (ds, _, kv) = setup(true);
+        let ids = [9u32, 3, 500, 3];
+        let mut out = Vec::new();
+        let mut stats = CommStats::default();
+        kv.vector_pull(0, &ids, Some(&mut out), &mut stats);
+        let d = kv.feature_dim();
+        for (i, &v) in ids.iter().enumerate() {
+            assert_eq!(&out[i * d..(i + 1) * d], ds.feature_row(v));
+        }
+    }
+
+    #[test]
+    fn local_ids_cost_nothing() {
+        let (_, part, kv) = setup(false);
+        let locals: Vec<u32> = part.local_nodes[0].iter().take(10).copied().collect();
+        let mut stats = CommStats::default();
+        let p = kv.sync_pull(0, &locals, None, &mut stats);
+        assert_eq!(p.remote_rows, 0);
+        assert_eq!(p.rpcs, 0);
+        assert_eq!(p.time, 0.0);
+        assert_eq!(stats.bytes, 0);
+    }
+
+    #[test]
+    fn remote_ids_are_charged() {
+        let (_, part, kv) = setup(false);
+        let remotes: Vec<u32> = part.local_nodes[1].iter().take(10).copied().collect();
+        let mut stats = CommStats::default();
+        let p = kv.sync_pull(0, &remotes, None, &mut stats);
+        assert_eq!(p.remote_rows, 10);
+        assert_eq!(p.rpcs, 1, "all on one shard → one RPC");
+        assert!(p.time > 0.0);
+        assert_eq!(stats.sync_pulls, 1);
+        assert_eq!(stats.remote_rows, 10);
+    }
+
+    #[test]
+    fn vector_vs_sync_tracked_separately() {
+        let (_, part, kv) = setup(false);
+        let remotes: Vec<u32> = part.local_nodes[1].iter().take(5).copied().collect();
+        let mut stats = CommStats::default();
+        kv.vector_pull(0, &remotes, None, &mut stats);
+        kv.sync_pull(0, &remotes, None, &mut stats);
+        assert_eq!(stats.vector_pulls, 1);
+        assert_eq!(stats.sync_pulls, 1);
+        assert_eq!(stats.remote_rows, 10);
+    }
+
+    #[test]
+    fn one_bulk_pull_beats_per_node_pulls() {
+        // The VectorPull advantage the paper leans on: one vectorized RPC
+        // amortizes latency over rows.
+        let (_, part, kv) = setup(false);
+        let remotes: Vec<u32> = part.local_nodes[1].iter().take(100).copied().collect();
+        let mut s1 = CommStats::default();
+        let bulk = kv.vector_pull(0, &remotes, None, &mut s1);
+        let mut s2 = CommStats::default();
+        let mut per_node_time = 0.0;
+        for &v in &remotes {
+            per_node_time += kv.sync_pull(0, &[v], None, &mut s2).time;
+        }
+        assert!(per_node_time > 10.0 * bulk.time);
+    }
+
+    #[test]
+    fn trace_mode_has_no_values() {
+        let (_, _, kv) = setup(false);
+        assert!(!kv.has_values());
+    }
+}

@@ -1,0 +1,56 @@
+//! # RapidGNN
+//!
+//! A reproduction of *RapidGNN: Energy and Communication-Efficient Distributed
+//! Training on Large-Scale Graph Neural Networks* (Niam, Kosar, Nine — SC2025
+//! Sustainable Supercomputing Workshop).
+//!
+//! RapidGNN attacks the feature-communication bottleneck of sampling-based
+//! distributed GNN training with three coordinated mechanisms:
+//!
+//! 1. **Deterministic precomputed sampling** — a seeded hash
+//!    `s_{e,i}^{(w)} = H(s0, w, e, i)` drives the k-hop neighbor sampler so the
+//!    full batch schedule (and therefore every remote feature access) is known
+//!    before training starts ([`sampler`]).
+//! 2. **Hot-set feature cache** — remote nodes are ranked by access frequency
+//!    over the precomputed schedule; the top-`n_hot` are pulled in one
+//!    vectorized RPC into a double-buffered steady cache ([`cache`]).
+//! 3. **Rolling asynchronous prefetcher** — a background worker stages the next
+//!    `Q` batches into a bounded queue, hiding residual misses off the critical
+//!    path ([`prefetch`]).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//! rust coordination (this crate) → JAX GraphSAGE train step (AOT-lowered at
+//! build time, `python/compile/`) → Pallas aggregation kernel. The compiled
+//! HLO artifacts are executed from rust through PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-reproduction results.
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod graph;
+pub mod kvstore;
+pub mod metrics;
+pub mod net;
+pub mod partition;
+pub mod prefetch;
+pub mod runtime;
+pub mod sampler;
+pub mod sim;
+pub mod storage;
+pub mod trainer;
+pub mod util;
+
+/// Node identifier within a graph (global id space).
+pub type NodeId = u32;
+/// Worker / partition identifier.
+pub type WorkerId = u32;
+/// Epoch index (0-based internally; the paper's `e` is 1-based).
+pub type EpochId = u32;
+/// Batch index within an epoch.
+pub type BatchId = u32;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

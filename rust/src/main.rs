@@ -1,0 +1,437 @@
+//! RapidGNN CLI — the launcher for training runs, engine comparisons, and
+//! diagnostics.
+//!
+//! ```text
+//! rapidgnn train   [--config run.toml] [--dataset tiny] [--engine rapid] ...
+//! rapidgnn compare [--dataset products-sim] [--batch-size 1000] ...
+//! rapidgnn partition-stats [--dataset tiny] [--workers 4]
+//! rapidgnn info
+//! ```
+//!
+//! Flag parsing is hand-rolled (this build environment has no clap); every
+//! flag has the form `--name value`.
+
+use anyhow::{bail, Context};
+use rapidgnn::config::{
+    load_run_config, save_run_config, DatasetConfig, DatasetPreset, Engine, RunConfig,
+};
+use rapidgnn::coordinator;
+use rapidgnn::graph::{build_dataset, degree_stats};
+use rapidgnn::partition::{partition_quality, Partitioner};
+use rapidgnn::util::bench::{fmt_bytes, fmt_secs, Table};
+use rapidgnn::Result;
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "compare" => cmd_compare(&flags),
+        "partition-stats" => cmd_partition_stats(&flags),
+        "tune" => cmd_tune(&flags),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (train|compare|partition-stats|info)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "RapidGNN — communication-efficient distributed GNN training (paper reproduction)
+
+USAGE: rapidgnn <command> [--flag value]...
+
+COMMANDS
+  train             run one engine and print the run report
+  compare           run all four engines, print Table-2-style speedups
+  partition-stats   partition quality for a dataset (METIS-like vs random)
+  tune              recommend n_hot from the access-frequency distribution
+  info              artifact + platform diagnostics
+
+COMMON FLAGS
+  --config PATH     load a TOML run config (other flags override it)
+  --save-config P   write the effective config to a TOML file and exit
+  --dataset NAME    tiny | reddit-sim | products-sim | papers-sim
+  --scale F         dataset node-count scale factor (default 1.0)
+  --engine NAME     rapid | dgl-metis | dgl-random | dist-gcn
+  --workers P       number of workers / partitions
+  --batch-size N    seeds per mini-batch
+  --epochs E        training epochs
+  --n-hot H         hot-set cache size
+  --q Q             prefetch window depth
+  --fanout A,B      per-layer fan-outs (innermost first)
+  --exec MODE       trace | full
+  --backend B       host | pjrt (full mode)
+  --seed S          base seed s0
+  --json PATH       write the run report as JSON"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Result<Flags> {
+    let mut flags = Flags::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let Some(name) = a.strip_prefix("--") else {
+            bail!("expected --flag, got '{a}'");
+        };
+        let v = it
+            .next()
+            .with_context(|| format!("flag --{name} needs a value"))?;
+        flags.insert(name.to_string(), v.clone());
+    }
+    Ok(flags)
+}
+
+/// Build a RunConfig from `--config` + flag overrides.
+fn config_from_flags(flags: &Flags) -> Result<RunConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(p) => load_run_config(std::path::Path::new(p))?,
+        None => RunConfig::default(),
+    };
+    if let Some(d) = flags.get("dataset") {
+        let preset: DatasetPreset = d.parse()?;
+        let scale: f64 = flags.get("scale").map_or(Ok(1.0), |s| s.parse())?;
+        cfg.dataset = DatasetConfig::preset(preset, scale);
+    } else if let Some(s) = flags.get("scale") {
+        cfg.dataset = cfg.dataset.scaled(s.parse()?);
+    }
+    if let Some(v) = flags.get("engine") {
+        cfg.engine = v.parse()?;
+    }
+    if let Some(v) = flags.get("workers") {
+        cfg.num_workers = v.parse()?;
+    }
+    if let Some(v) = flags.get("batch-size") {
+        cfg.batch_size = v.parse()?;
+    }
+    if let Some(v) = flags.get("epochs") {
+        cfg.epochs = v.parse()?;
+    }
+    if let Some(v) = flags.get("n-hot") {
+        cfg.n_hot = v.parse()?;
+    }
+    if let Some(v) = flags.get("q") {
+        cfg.prefetch_q = v.parse()?;
+    }
+    if let Some(v) = flags.get("fanout") {
+        cfg.fanout = v
+            .split(',')
+            .map(|x| x.trim().parse().context("fanout entry"))
+            .collect::<Result<Vec<u32>>>()?;
+    }
+    if let Some(v) = flags.get("exec") {
+        cfg.exec_mode = v.parse()?;
+    }
+    if let Some(v) = flags.get("backend") {
+        cfg.backend = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.base_seed = v.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    if let Some(p) = flags.get("save-config") {
+        save_run_config(&cfg, std::path::Path::new(p))?;
+        println!("wrote {p}");
+        return Ok(());
+    }
+    println!(
+        "train: {} on {} | P={} batch={} epochs={} n_hot={} Q={} mode={:?}",
+        cfg.engine.name(),
+        cfg.dataset.name,
+        cfg.num_workers,
+        cfg.batch_size,
+        cfg.epochs,
+        cfg.n_hot,
+        cfg.prefetch_q,
+        cfg.exec_mode,
+    );
+    let report = coordinator::run(&cfg)?;
+    let mut t = Table::new(
+        &format!("{} / {}", report.engine, report.dataset),
+        &["epoch", "time", "fetch", "compute", "MB moved", "hit rate", "loss", "acc"],
+    );
+    let mut by_epoch: HashMap<u32, Vec<&rapidgnn::metrics::EpochReport>> = HashMap::new();
+    for e in &report.epochs {
+        by_epoch.entry(e.epoch).or_default().push(e);
+    }
+    let mut epochs: Vec<u32> = by_epoch.keys().copied().collect();
+    epochs.sort_unstable();
+    for ep in epochs {
+        let group = &by_epoch[&ep];
+        let n = group.len() as f64;
+        let avg = |f: &dyn Fn(&rapidgnn::metrics::EpochReport) -> f64| -> f64 {
+            group.iter().map(|e| f(e)).sum::<f64>() / n
+        };
+        let hits: u64 = group.iter().map(|e| e.cache.hits).sum();
+        let lookups: u64 = group.iter().map(|e| e.cache.lookups).sum();
+        t.row(&[
+            ep.to_string(),
+            fmt_secs(avg(&|e| e.epoch_time)),
+            fmt_secs(avg(&|e| e.phases.fetch)),
+            fmt_secs(avg(&|e| e.phases.compute)),
+            fmt_bytes(avg(&|e| e.comm.bytes as f64)),
+            if lookups > 0 {
+                format!("{:.1}%", 100.0 * hits as f64 / lookups as f64)
+            } else {
+                "-".into()
+            },
+            format!("{:.3}", avg(&|e| e.mean_loss)),
+            format!("{:.3}", avg(&|e| e.train_acc)),
+        ]);
+    }
+    t.print();
+    println!(
+        "total {} (+{} setup) | {:.0} J CPU, {:.0} J GPU | {} remote rows",
+        fmt_secs(report.total_time),
+        fmt_secs(report.setup_time),
+        report.cpu_energy_j,
+        report.gpu_energy_j,
+        report.total_remote_rows(),
+    );
+    if let Some(p) = flags.get("json") {
+        std::fs::write(p, report.to_json())?;
+        println!("report written to {p}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(flags: &Flags) -> Result<()> {
+    let base = config_from_flags(flags)?;
+    let mut t = Table::new(
+        &format!(
+            "Engine comparison — {} (P={}, batch={})",
+            base.dataset.name, base.num_workers, base.batch_size
+        ),
+        &["engine", "step time", "net/step", "MB/step", "step x", "net x", "CPU J"],
+    );
+    let mut rapid_step = 0.0;
+    let mut rapid_net = 0.0;
+    let mut rows = Vec::new();
+    for engine in Engine::ALL {
+        let mut cfg = base.clone();
+        cfg.engine = engine;
+        let report = coordinator::run(&cfg)?;
+        if engine == Engine::Rapid {
+            rapid_step = report.mean_step_time();
+            rapid_net = report.mean_net_time_per_step();
+        }
+        rows.push((engine, report));
+    }
+    for (engine, report) in rows {
+        let step = report.mean_step_time();
+        let net = report.mean_net_time_per_step();
+        t.row(&[
+            engine.name().into(),
+            fmt_secs(step),
+            fmt_secs(net),
+            fmt_bytes(report.mean_bytes_per_step()),
+            format!("{:.2}", step / rapid_step),
+            if rapid_net > 0.0 {
+                format!("{:.2}", net / rapid_net)
+            } else {
+                "-".into()
+            },
+            format!("{:.0}", report.cpu_energy_j),
+        ]);
+    }
+    t.print();
+    println!("(x columns: this engine's cost relative to RapidGNN — the paper's speedup)");
+    Ok(())
+}
+
+fn cmd_partition_stats(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let ds = build_dataset(&cfg.dataset, false);
+    let stats = degree_stats(&ds.graph);
+    println!(
+        "{}: {} nodes, {} directed edges | degree mean {:.1} p50 {} p99 {} max {} | top-1% mass {:.1}%",
+        cfg.dataset.name,
+        ds.graph.num_nodes(),
+        ds.graph.num_directed_edges(),
+        stats.mean,
+        stats.p50,
+        stats.p99,
+        stats.max,
+        stats.top1pct_mass * 100.0
+    );
+    let mut t = Table::new(
+        &format!("Partition quality (P={})", cfg.num_workers),
+        &["algorithm", "edge cut", "balance", "remote nbr frac", "mean halo"],
+    );
+    for (name, which) in [("metis-like", Partitioner::MetisLike), ("random", Partitioner::Random)] {
+        let p = rapidgnn::partition::partition(&ds.graph, cfg.num_workers, which, cfg.base_seed);
+        let q = partition_quality(&ds.graph, &p);
+        t.row(&[
+            name.into(),
+            format!("{:.1}%", q.edge_cut_fraction * 100.0),
+            format!("{:.3}", q.balance),
+            format!("{:.3}", q.remote_neighbor_fraction),
+            format!("{:.0}", q.mean_halo),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Recommend cache sizes from one precomputed epoch's frequency profile —
+/// automates the paper's Fig-5 "practical cache-size selection".
+fn cmd_tune(flags: &Flags) -> Result<()> {
+    let mut cfg = config_from_flags(flags)?;
+    cfg.engine = Engine::Rapid;
+    let ctx = rapidgnn::coordinator::RunContext::build(&cfg)?;
+    rapidgnn::coordinator::precompute(&ctx, 0)?;
+    let freq = rapidgnn::coordinator::epoch_remote_frequency(&ctx, 0, 0)?;
+    let total: u64 = freq.iter().map(|&(_, c)| c as u64).sum();
+    println!(
+        "{}: {} distinct remote nodes, {} accesses in epoch 0 (worker 0)",
+        cfg.dataset.name,
+        freq.len(),
+        total
+    );
+    let mut t = Table::new(
+        "Recommended n_hot by access-coverage target",
+        &["coverage", "n_hot", "device MB (2 buffers)"],
+    );
+    let sched = rapidgnn::storage::read_epoch(&ctx.metadata_path, 0, 0)?;
+    for coverage in [0.5f64, 0.7, 0.8, 0.9, 0.95] {
+        let k = rapidgnn::cache::recommend_n_hot(&sched.batches, coverage);
+        let mb = 2.0 * k as f64 * cfg.dataset.feature_dim as f64 * 4.0 / 1e6;
+        t.row(&[
+            format!("{:.0}%", coverage * 100.0),
+            k.to_string(),
+            format!("{mb:.1}"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("RapidGNN {} — three-layer rust+JAX+Pallas reproduction", env!("CARGO_PKG_VERSION"));
+    let dir = rapidgnn::runtime::artifacts_dir();
+    println!("artifacts dir: {dir:?}");
+    let mut found = 0;
+    if dir.is_dir() {
+        for entry in std::fs::read_dir(&dir)? {
+            let p = entry?.path();
+            if p.to_string_lossy().ends_with(".meta.json") {
+                let m = rapidgnn::runtime::ArtifactMeta::load(&p)?;
+                println!(
+                    "  {} — d={} h={} c={} fanout=[{},{}] caps=({},{},{})",
+                    p.file_name().unwrap().to_string_lossy(),
+                    m.d,
+                    m.h,
+                    m.c,
+                    m.f1,
+                    m.f2,
+                    m.b_cap,
+                    m.n1_cap,
+                    m.n0_cap
+                );
+                found += 1;
+            }
+        }
+    }
+    if found == 0 {
+        println!("  (none — run `make artifacts`)");
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("PJRT: {} ({} devices)", c.platform_name(), c.device_count()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> Flags {
+        pairs.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn parse_flags_pairs() {
+        let args: Vec<String> = ["--a", "1", "--b", "two"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args).unwrap();
+        assert_eq!(f["a"], "1");
+        assert_eq!(f["b"], "two");
+    }
+
+    #[test]
+    fn parse_flags_rejects_bare_and_dangling() {
+        assert!(parse_flags(&["bare".to_string()]).is_err());
+        assert!(parse_flags(&["--x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn config_from_flags_overrides() {
+        let f = flags(&[
+            ("dataset", "products-sim"),
+            ("scale", "0.1"),
+            ("engine", "dist-gcn"),
+            ("workers", "3"),
+            ("batch-size", "64"),
+            ("epochs", "5"),
+            ("n-hot", "123"),
+            ("q", "7"),
+            ("fanout", "4,9"),
+            ("exec", "full"),
+            ("backend", "host"),
+            ("seed", "99"),
+        ]);
+        let cfg = config_from_flags(&f).unwrap();
+        assert_eq!(cfg.dataset.name, "products-sim");
+        assert_eq!(cfg.dataset.num_nodes, 12_000);
+        assert_eq!(cfg.engine, Engine::DistGcn);
+        assert_eq!(cfg.num_workers, 3);
+        assert_eq!(cfg.batch_size, 64);
+        assert_eq!(cfg.epochs, 5);
+        assert_eq!(cfg.n_hot, 123);
+        assert_eq!(cfg.prefetch_q, 7);
+        assert_eq!(cfg.fanout, vec![4, 9]);
+        assert_eq!(cfg.base_seed, 99);
+    }
+
+    #[test]
+    fn config_from_flags_rejects_bad_values() {
+        assert!(config_from_flags(&flags(&[("engine", "nope")])).is_err());
+        assert!(config_from_flags(&flags(&[("workers", "0")])).is_err());
+        assert!(config_from_flags(&flags(&[("fanout", "a,b")])).is_err());
+    }
+
+    #[test]
+    fn config_file_plus_override_round_trip() {
+        let dir = rapidgnn::util::tempdir::TempDir::new("cli").unwrap();
+        let path = dir.path().join("run.toml");
+        let mut base = RunConfig::default();
+        base.batch_size = 77;
+        save_run_config(&base, &path).unwrap();
+        let f = flags(&[("config", path.to_str().unwrap()), ("epochs", "9")]);
+        let cfg = config_from_flags(&f).unwrap();
+        assert_eq!(cfg.batch_size, 77, "from file");
+        assert_eq!(cfg.epochs, 9, "flag override");
+    }
+}

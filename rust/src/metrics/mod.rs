@@ -1,0 +1,355 @@
+//! Instrumentation: counters, phase timers, and per-epoch reports.
+//!
+//! Every bench and example consumes these structures; they mirror the
+//! quantities the paper reports — step time, network fetch time, RPC counts,
+//! bytes moved, cache hit rates, memory, and energy.
+
+use crate::util::value::Value;
+use std::collections::BTreeMap;
+
+/// Communication counters (monotonic over a run).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// Vectorized bulk-pull RPCs (cache builds).
+    pub vector_pulls: u64,
+    /// Synchronous miss-set pulls.
+    pub sync_pulls: u64,
+    /// Remote feature rows fetched (the paper's `rpc_e` counts rows).
+    pub remote_rows: u64,
+    /// Subset of `remote_rows` moved by bulk VectorPulls (cache builds);
+    /// `remote_rows - vector_rows` = critical-path SyncPull misses (Fig 5).
+    pub vector_rows: u64,
+    /// Bytes moved over the fabric.
+    pub bytes: u64,
+    /// Simulated network time charged (seconds).
+    pub net_time: f64,
+}
+
+impl CommStats {
+    /// Accumulate another counter set.
+    pub fn merge(&mut self, o: &CommStats) {
+        self.vector_pulls += o.vector_pulls;
+        self.sync_pulls += o.sync_pulls;
+        self.remote_rows += o.remote_rows;
+        self.vector_rows += o.vector_rows;
+        self.bytes += o.bytes;
+        self.net_time += o.net_time;
+    }
+}
+
+/// Cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+}
+
+impl CacheStats {
+    /// Hit rate in [0,1]; 0 when no lookups.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.lookups += o.lookups;
+        self.hits += o.hits;
+    }
+}
+
+/// Wall/simulated time spent per pipeline phase (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    /// Mini-batch sampling / schedule streaming.
+    pub sample: f64,
+    /// Feature fetch waiting on the critical path.
+    pub fetch: f64,
+    /// Host-side feature assembly / device copy.
+    pub assemble: f64,
+    /// Model forward/backward/update.
+    pub compute: f64,
+    /// Trainer idle (waiting on prefetcher that is itself waiting).
+    pub idle: f64,
+}
+
+impl PhaseTimes {
+    /// Total step-attributable time.
+    pub fn total(&self) -> f64 {
+        self.sample + self.fetch + self.assemble + self.compute + self.idle
+    }
+
+    pub fn merge(&mut self, o: &PhaseTimes) {
+        self.sample += o.sample;
+        self.fetch += o.fetch;
+        self.assemble += o.assemble;
+        self.compute += o.compute;
+        self.idle += o.idle;
+    }
+}
+
+/// Per-epoch report, one per (worker, epoch).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EpochReport {
+    pub epoch: u32,
+    pub worker: u32,
+    /// Batches executed.
+    pub steps: u32,
+    /// Simulated epoch wall time `t_e` (seconds).
+    pub epoch_time: f64,
+    pub phases: PhaseTimes,
+    pub comm: CommStats,
+    pub cache: CacheStats,
+    /// Mean training loss over the epoch (NaN in trace mode).
+    pub mean_loss: f64,
+    /// Training accuracy over the epoch's seeds (NaN in trace mode).
+    pub train_acc: f64,
+    /// Peak device-cache bytes (cache + staged prefetch buffers).
+    pub device_bytes: u64,
+    /// Peak host bytes attributable to the run (schedule buffers etc.).
+    pub host_bytes: u64,
+}
+
+impl EpochReport {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("epoch", self.epoch)
+            .set("worker", self.worker)
+            .set("steps", self.steps)
+            .set("epoch_time", self.epoch_time)
+            .set("mean_loss", self.mean_loss)
+            .set("train_acc", self.train_acc)
+            .set("device_bytes", self.device_bytes)
+            .set("host_bytes", self.host_bytes)
+            .set("sample_s", self.phases.sample)
+            .set("fetch_s", self.phases.fetch)
+            .set("assemble_s", self.phases.assemble)
+            .set("compute_s", self.phases.compute)
+            .set("idle_s", self.phases.idle)
+            .set("vector_pulls", self.comm.vector_pulls)
+            .set("sync_pulls", self.comm.sync_pulls)
+            .set("remote_rows", self.comm.remote_rows)
+            .set("vector_rows", self.comm.vector_rows)
+            .set("bytes", self.comm.bytes)
+            .set("net_time", self.comm.net_time)
+            .set("cache_lookups", self.cache.lookups)
+            .set("cache_hits", self.cache.hits);
+        v
+    }
+}
+
+/// Whole-run summary aggregated across workers and epochs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunReport {
+    /// Engine display name.
+    pub engine: String,
+    pub dataset: String,
+    pub num_workers: u32,
+    pub batch_size: u32,
+    pub epochs: Vec<EpochReport>,
+    /// End-to-end simulated time (max over workers of their total time).
+    pub total_time: f64,
+    /// One-time setup cost (RapidGNN precompute + initial cache build),
+    /// reported separately from per-epoch training time like the paper.
+    pub setup_time: f64,
+    /// CPU / GPU energy in joules (from [`crate::energy`]).
+    pub cpu_energy_j: f64,
+    pub gpu_energy_j: f64,
+}
+
+impl RunReport {
+    /// Mean simulated time per step (over all epochs/workers).
+    pub fn mean_step_time(&self) -> f64 {
+        let steps: u64 = self.epochs.iter().map(|e| e.steps as u64).sum();
+        let time: f64 = self.epochs.iter().map(|e| e.epoch_time).sum();
+        if steps == 0 {
+            0.0
+        } else {
+            time / steps as f64
+        }
+    }
+
+    /// Mean network (fetch) time per step on the critical path.
+    pub fn mean_net_time_per_step(&self) -> f64 {
+        let steps: u64 = self.epochs.iter().map(|e| e.steps as u64).sum();
+        let t: f64 = self.epochs.iter().map(|e| e.phases.fetch).sum();
+        if steps == 0 {
+            0.0
+        } else {
+            t / steps as f64
+        }
+    }
+
+    /// Mean bytes transferred per step.
+    pub fn mean_bytes_per_step(&self) -> f64 {
+        let steps: u64 = self.epochs.iter().map(|e| e.steps as u64).sum();
+        let b: u64 = self.epochs.iter().map(|e| e.comm.bytes).sum();
+        if steps == 0 {
+            0.0
+        } else {
+            b as f64 / steps as f64
+        }
+    }
+
+    /// Total remote feature rows fetched.
+    pub fn total_remote_rows(&self) -> u64 {
+        self.epochs.iter().map(|e| e.comm.remote_rows).sum()
+    }
+
+    /// Remote rows fetched on the critical path (SyncPull misses only —
+    /// excludes bulk cache builds). The paper's Fig-5 quantity.
+    pub fn sync_remote_rows(&self) -> u64 {
+        self.epochs
+            .iter()
+            .map(|e| e.comm.remote_rows - e.comm.vector_rows)
+            .sum()
+    }
+
+    /// Aggregate cache hit rate.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let mut c = CacheStats::default();
+        for e in &self.epochs {
+            c.merge(&e.cache);
+        }
+        c.hit_rate()
+    }
+
+    /// Peak device bytes over the run.
+    pub fn peak_device_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.device_bytes).max().unwrap_or(0)
+    }
+
+    /// Peak host bytes over the run.
+    pub fn peak_host_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.host_bytes).max().unwrap_or(0)
+    }
+
+    /// Per-epoch mean loss series (averaged across workers), for Fig 9.
+    pub fn loss_curve(&self) -> Vec<(u32, f64)> {
+        let mut by_epoch: BTreeMap<u32, (f64, u32)> = BTreeMap::new();
+        for e in &self.epochs {
+            if e.mean_loss.is_finite() {
+                let slot = by_epoch.entry(e.epoch).or_insert((0.0, 0));
+                slot.0 += e.mean_loss;
+                slot.1 += 1;
+            }
+        }
+        by_epoch
+            .into_iter()
+            .map(|(e, (s, n))| (e, s / n as f64))
+            .collect()
+    }
+
+    /// Per-epoch train-accuracy series (averaged across workers), for Fig 9.
+    pub fn accuracy_curve(&self) -> Vec<(u32, f64)> {
+        let mut by_epoch: BTreeMap<u32, (f64, u32)> = BTreeMap::new();
+        for e in &self.epochs {
+            if e.train_acc.is_finite() {
+                let slot = by_epoch.entry(e.epoch).or_insert((0.0, 0));
+                slot.0 += e.train_acc;
+                slot.1 += 1;
+            }
+        }
+        by_epoch
+            .into_iter()
+            .map(|(e, (s, n))| (e, s / n as f64))
+            .collect()
+    }
+
+    /// Serialize to a [`Value`] tree (for JSON bench artifacts).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("engine", self.engine.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("num_workers", self.num_workers)
+            .set("batch_size", self.batch_size)
+            .set("total_time", self.total_time)
+            .set("setup_time", self.setup_time)
+            .set("cpu_energy_j", self.cpu_energy_j)
+            .set("gpu_energy_j", self.gpu_energy_j);
+        let epochs: Vec<Value> = self.epochs.iter().map(EpochReport::to_value).collect();
+        v.set("epochs", epochs);
+        v
+    }
+
+    /// Serialize to pretty JSON (bench output artifact).
+    pub fn to_json(&self) -> String {
+        self.to_value().to_json_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(epochs: Vec<EpochReport>) -> RunReport {
+        RunReport { epochs, ..Default::default() }
+    }
+
+    #[test]
+    fn hit_rate_edge_cases() {
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        let c = CacheStats { lookups: 10, hits: 7 };
+        assert!((c.hit_rate() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_step_time_weighs_by_steps() {
+        let r = report_with(vec![
+            EpochReport { steps: 10, epoch_time: 1.0, ..Default::default() },
+            EpochReport { steps: 30, epoch_time: 1.0, ..Default::default() },
+        ]);
+        assert!((r.mean_step_time() - 2.0 / 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_zero_not_nan() {
+        let r = report_with(vec![]);
+        assert_eq!(r.mean_step_time(), 0.0);
+        assert_eq!(r.mean_bytes_per_step(), 0.0);
+        assert_eq!(r.mean_net_time_per_step(), 0.0);
+    }
+
+    #[test]
+    fn loss_curve_averages_workers() {
+        let mk = |epoch, worker, loss| EpochReport {
+            epoch,
+            worker,
+            mean_loss: loss,
+            ..Default::default()
+        };
+        let r = report_with(vec![mk(0, 0, 2.0), mk(0, 1, 4.0), mk(1, 0, 1.0), mk(1, 1, 1.0)]);
+        assert_eq!(r.loss_curve(), vec![(0, 3.0), (1, 1.0)]);
+    }
+
+    #[test]
+    fn loss_curve_skips_nan_trace_entries() {
+        let r = report_with(vec![EpochReport { epoch: 0, mean_loss: f64::NAN, ..Default::default() }]);
+        assert!(r.loss_curve().is_empty());
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = CommStats { vector_pulls: 1, sync_pulls: 2, remote_rows: 3, vector_rows: 1, bytes: 4, net_time: 0.5 };
+        a.merge(&a.clone());
+        assert_eq!(a.vector_pulls, 2);
+        assert_eq!(a.bytes, 8);
+        assert!((a.net_time - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_emission_parses_back() {
+        let r = report_with(vec![EpochReport { steps: 5, ..Default::default() }]);
+        let s = r.to_json();
+        let v = Value::from_json(&s).unwrap();
+        assert_eq!(v, r.to_value());
+        let epochs = v.get("epochs").unwrap();
+        match epochs {
+            Value::Arr(items) => assert_eq!(items.len(), 1),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Simulated network fabric: the paper testbed's 10 GbE, as a cost model.
+//!
+//! Every KV-store RPC is *charged* against a [`NetFabric`] which converts
+//! (bytes, rows, rpc count) into simulated seconds using the linear model
+//! `latency + bytes/bandwidth + rows·overhead`. The paper's results are
+//! functions of exactly these quantities (remote rows fetched, bytes moved,
+//! stall time on the critical path), so a charged model reproduces the
+//! evaluation without a physical cluster (DESIGN.md §3). Per-link counters
+//! feed Fig-4-style data-transfer reports.
+
+use crate::config::FabricConfig;
+use crate::WorkerId;
+use std::sync::Mutex;
+use std::sync::Arc;
+
+/// One charged transfer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Charge {
+    /// Simulated seconds this transfer takes.
+    pub time: f64,
+    /// Bytes on the wire.
+    pub bytes: u64,
+}
+
+/// Per-link accounting entry.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LinkStats {
+    pub rpcs: u64,
+    pub bytes: u64,
+    pub time: f64,
+}
+
+/// Shared simulated fabric. Cloneable handle; counters are global.
+#[derive(Debug, Clone)]
+pub struct NetFabric {
+    cfg: FabricConfig,
+    links: Arc<Mutex<std::collections::HashMap<(WorkerId, WorkerId), LinkStats>>>,
+    /// Optional failure injection: every Nth RPC on any link "times out" and
+    /// is retried once at double latency (tests the miss-handling paths).
+    fail_every: Option<u64>,
+    rpc_counter: Arc<Mutex<u64>>,
+}
+
+impl NetFabric {
+    /// New fabric with the given parameters.
+    pub fn new(cfg: FabricConfig) -> Self {
+        NetFabric {
+            cfg,
+            links: Arc::new(Mutex::new(std::collections::HashMap::new())),
+            fail_every: None,
+            rpc_counter: Arc::new(Mutex::new(0)),
+        }
+    }
+
+    /// Enable failure injection: every `n`-th RPC is retried at 2× latency.
+    pub fn with_failures(mut self, n: u64) -> Self {
+        assert!(n > 0);
+        self.fail_every = Some(n);
+        self
+    }
+
+    /// Fabric parameters.
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    /// Charge one RPC from `src` to `dst` carrying `rows` feature rows of
+    /// `row_bytes` each. Returns the simulated cost.
+    pub fn charge_rpc(&self, src: WorkerId, dst: WorkerId, rows: u64, row_bytes: u64) -> Charge {
+        let bytes = rows * row_bytes + 64; // 64B header
+        let mut time = self.cfg.rpc_time(bytes, rows);
+        if let Some(n) = self.fail_every {
+            let mut c = self.rpc_counter.lock().unwrap();
+            *c += 1;
+            if *c % n == 0 {
+                // timeout + one retry: pay the latency again
+                time += self.cfg.rpc_latency_sec;
+            }
+        }
+        let mut links = self.links.lock().unwrap();
+        let e = links.entry((src, dst)).or_default();
+        e.rpcs += 1;
+        e.bytes += bytes;
+        e.time += time;
+        Charge { time, bytes }
+    }
+
+    /// Charge a vectorized pull that fans out to several owner shards at
+    /// once: per-destination RPCs run in parallel, so the *critical-path*
+    /// cost is the max over destinations while counters record every link.
+    pub fn charge_fanout(
+        &self,
+        src: WorkerId,
+        per_dst_rows: &[(WorkerId, u64)],
+        row_bytes: u64,
+    ) -> Charge {
+        let mut max_time = 0f64;
+        let mut total_bytes = 0u64;
+        for &(dst, rows) in per_dst_rows {
+            if rows == 0 {
+                continue;
+            }
+            let c = self.charge_rpc(src, dst, rows, row_bytes);
+            max_time = max_time.max(c.time);
+            total_bytes += c.bytes;
+        }
+        Charge { time: max_time, bytes: total_bytes }
+    }
+
+    /// Snapshot of per-link stats.
+    pub fn link_stats(&self) -> Vec<((WorkerId, WorkerId), LinkStats)> {
+        let mut v: Vec<_> = self.links.lock().unwrap().iter().map(|(&k, &s)| (k, s)).collect();
+        v.sort_by_key(|&(k, _)| k);
+        v
+    }
+
+    /// Total bytes across all links.
+    pub fn total_bytes(&self) -> u64 {
+        self.links.lock().unwrap().values().map(|s| s.bytes).sum()
+    }
+
+    /// Reset all counters (between bench configurations).
+    pub fn reset(&self) {
+        self.links.lock().unwrap().clear();
+        *self.rpc_counter.lock().unwrap() = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> NetFabric {
+        NetFabric::new(FabricConfig::default())
+    }
+
+    #[test]
+    fn charge_scales_with_rows() {
+        let f = fabric();
+        let a = f.charge_rpc(0, 1, 100, 400);
+        let b = f.charge_rpc(0, 1, 1000, 400);
+        assert!(b.time > a.time);
+        assert_eq!(b.bytes, 1000 * 400 + 64);
+    }
+
+    #[test]
+    fn latency_floor_applies() {
+        let f = fabric();
+        let c = f.charge_rpc(0, 1, 0, 400);
+        assert!(c.time >= f.config().rpc_latency_sec);
+    }
+
+    #[test]
+    fn fanout_critical_path_is_max_not_sum() {
+        let f = fabric();
+        let big = f.charge_rpc(0, 1, 10_000, 400).time;
+        f.reset();
+        let c = f.charge_fanout(0, &[(1, 10_000), (2, 10_000), (3, 10_000)], 400);
+        assert!((c.time - big).abs() < 1e-12, "parallel fanout = max single");
+        assert_eq!(c.bytes, 3 * (10_000 * 400 + 64));
+        // but all three links were accounted
+        assert_eq!(f.link_stats().len(), 3);
+    }
+
+    #[test]
+    fn fanout_skips_empty_destinations() {
+        let f = fabric();
+        let c = f.charge_fanout(0, &[(1, 0), (2, 5)], 400);
+        assert_eq!(f.link_stats().len(), 1);
+        assert!(c.time > 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate_per_link() {
+        let f = fabric();
+        f.charge_rpc(0, 1, 10, 4);
+        f.charge_rpc(0, 1, 10, 4);
+        f.charge_rpc(1, 0, 10, 4);
+        let stats = f.link_stats();
+        assert_eq!(stats.len(), 2);
+        let l01 = stats.iter().find(|&&(k, _)| k == (0, 1)).unwrap().1;
+        assert_eq!(l01.rpcs, 2);
+    }
+
+    #[test]
+    fn failure_injection_adds_latency() {
+        let clean = fabric();
+        let faulty = NetFabric::new(FabricConfig::default()).with_failures(1);
+        let a = clean.charge_rpc(0, 1, 10, 4);
+        let b = faulty.charge_rpc(0, 1, 10, 4);
+        assert!((b.time - a.time - FabricConfig::default().rpc_latency_sec).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let f = fabric();
+        f.charge_rpc(0, 1, 10, 4);
+        assert!(f.total_bytes() > 0);
+        f.reset();
+        assert_eq!(f.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Partition quality metrics: edge cut, balance, remote-neighbor fraction.
+
+use super::Partition;
+use crate::graph::CsrGraph;
+
+/// Quality summary for a partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionQuality {
+    /// Fraction of directed edges crossing partitions (the METIS objective).
+    pub edge_cut_fraction: f64,
+    /// `max part size / mean part size` (1.0 = perfectly balanced).
+    pub balance: f64,
+    /// Mean over nodes of the fraction of their neighbors that are remote —
+    /// the paper's `c` (remote-node fraction) governing per-worker
+    /// communication `∝ c · |batch|` (§3 Scalability).
+    pub remote_neighbor_fraction: f64,
+    /// Mean halo size per partition.
+    pub mean_halo: f64,
+}
+
+/// Compute [`PartitionQuality`] for `part` over `g`.
+pub fn partition_quality(g: &CsrGraph, part: &Partition) -> PartitionQuality {
+    let mut cut = 0u64;
+    let mut remote_frac_sum = 0f64;
+    let mut nodes_with_edges = 0u64;
+    for v in 0..g.num_nodes() {
+        let nbrs = g.neighbors(v);
+        if nbrs.is_empty() {
+            continue;
+        }
+        let remote = nbrs
+            .iter()
+            .filter(|&&u| part.owner_of(u) != part.owner_of(v))
+            .count();
+        cut += remote as u64;
+        remote_frac_sum += remote as f64 / nbrs.len() as f64;
+        nodes_with_edges += 1;
+    }
+    let sizes: Vec<usize> = part.local_nodes.iter().map(Vec::len).collect();
+    let mean_size = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+    let max_size = *sizes.iter().max().unwrap() as f64;
+    let mean_halo =
+        part.halo_nodes.iter().map(Vec::len).sum::<usize>() as f64 / part.num_parts as f64;
+    PartitionQuality {
+        edge_cut_fraction: cut as f64 / g.num_directed_edges().max(1) as f64,
+        balance: if mean_size > 0.0 { max_size / mean_size } else { 1.0 },
+        remote_neighbor_fraction: remote_frac_sum / nodes_with_edges.max(1) as f64,
+        mean_halo,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{metis_like, random};
+    use crate::graph::CsrGraph;
+
+    /// Two triangles joined by one edge: an obvious 2-way min cut.
+    fn barbell() -> CsrGraph {
+        CsrGraph::from_edges(
+            6,
+            &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3), (2, 3)],
+        )
+    }
+
+    #[test]
+    fn perfect_cut_on_barbell() {
+        let g = barbell();
+        let p = metis_like(&g, 2, 0);
+        let q = partition_quality(&g, &p);
+        // 2 of 14 directed edges cross in the ideal split
+        assert!(q.edge_cut_fraction <= 2.0 / 14.0 + 1e-9, "cut {}", q.edge_cut_fraction);
+        assert!((q.balance - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_cut_near_expected() {
+        // Random P-way: expected cut fraction ≈ 1 - 1/P.
+        let cfg = crate::config::DatasetConfig::preset(crate::config::DatasetPreset::Tiny, 1.0);
+        let g = crate::graph::build_dataset(&cfg, false).graph;
+        let p = random(&g, 4, 3);
+        let q = partition_quality(&g, &p);
+        assert!((q.edge_cut_fraction - 0.75).abs() < 0.05, "cut {}", q.edge_cut_fraction);
+    }
+
+    #[test]
+    fn remote_fraction_zero_for_single_part() {
+        let g = barbell();
+        let p = metis_like(&g, 1, 0);
+        let q = partition_quality(&g, &p);
+        assert_eq!(q.edge_cut_fraction, 0.0);
+        assert_eq!(q.remote_neighbor_fraction, 0.0);
+        assert_eq!(q.mean_halo, 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Artifact discovery: match `.meta.json` manifests against a run's shape.
+
+use crate::coordinator::RunContext;
+use crate::util::value::Value;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// Manifest of one AOT-compiled train-step artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Path of the HLO text file.
+    pub hlo_path: PathBuf,
+    /// Feature dim `d`, hidden width `h`, class count `c`.
+    pub d: u32,
+    pub h: u32,
+    pub c: u32,
+    /// Per-layer fan-outs (innermost first, length 2).
+    pub f1: u32,
+    pub f2: u32,
+    /// Padded capacities: seeds, layer-1 nodes, input nodes.
+    pub b_cap: u32,
+    pub n1_cap: u32,
+    pub n0_cap: u32,
+}
+
+impl ArtifactMeta {
+    /// Parse a `.meta.json` file (paths resolved relative to its directory).
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let v = Value::from_json(&text)?;
+        let dir = path.parent().unwrap_or(Path::new("."));
+        Ok(ArtifactMeta {
+            hlo_path: dir.join(v.req_str("hlo")?),
+            d: v.req_u32("d")?,
+            h: v.req_u32("h")?,
+            c: v.req_u32("c")?,
+            f1: v.req_u32("f1")?,
+            f2: v.req_u32("f2")?,
+            b_cap: v.req_u32("b_cap")?,
+            n1_cap: v.req_u32("n1_cap")?,
+            n0_cap: v.req_u32("n0_cap")?,
+        })
+    }
+
+    /// Whether this artifact fits a run's model shape and batch capacities.
+    pub fn matches(&self, ctx: &RunContext) -> bool {
+        let cfg = &ctx.cfg;
+        cfg.num_layers() == 2
+            && self.d == cfg.dataset.feature_dim
+            && self.h == cfg.hidden_dim
+            && self.c == cfg.dataset.num_classes
+            && self.f1 == cfg.fanout[0]
+            && self.f2 == cfg.fanout[1]
+            && self.b_cap >= cfg.batch_size
+    }
+}
+
+/// Find the best artifact under `dir` matching the run context — among
+/// matches, the one with the smallest `n0_cap` (least padding waste; §Perf).
+pub fn find_artifact(dir: &Path, ctx: &RunContext) -> Result<ArtifactMeta> {
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if dir.is_dir() {
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            if p.extension().is_some_and(|e| e == "json")
+                && p.to_string_lossy().ends_with(".meta.json")
+            {
+                candidates.push(p);
+            }
+        }
+    }
+    candidates.sort();
+    let mut best: Option<ArtifactMeta> = None;
+    for p in &candidates {
+        let meta = ArtifactMeta::load(p)?;
+        if meta.matches(ctx) {
+            if !meta.hlo_path.is_file() {
+                bail!("manifest {p:?} points at missing HLO {:?}", meta.hlo_path);
+            }
+            if best.as_ref().is_none_or(|b| meta.n0_cap < b.n0_cap) {
+                best = Some(meta);
+            }
+        }
+    }
+    if let Some(meta) = best {
+        return Ok(meta);
+    }
+    bail!(
+        "no artifact under {dir:?} matches d={} h={} c={} fanout={:?} batch={} — run `make artifacts`",
+        ctx.cfg.dataset.feature_dim,
+        ctx.cfg.hidden_dim,
+        ctx.cfg.dataset.num_classes,
+        ctx.cfg.fanout,
+        ctx.cfg.batch_size
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset, RunConfig};
+    use crate::util::tempdir::TempDir;
+
+    fn write_meta(dir: &Path, name: &str, d: u32, h: u32, c: u32, b_cap: u32) -> PathBuf {
+        let mut v = Value::table();
+        v.set("hlo", format!("{name}.hlo.txt"))
+            .set("d", d)
+            .set("h", h)
+            .set("c", c)
+            .set("f1", 10u32)
+            .set("f2", 25u32)
+            .set("b_cap", b_cap)
+            .set("n1_cap", b_cap * 26)
+            .set("n0_cap", b_cap * 26 * 11);
+        let p = dir.join(format!("{name}.meta.json"));
+        std::fs::write(&p, v.to_json_pretty()).unwrap();
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule stub").unwrap();
+        p
+    }
+
+    fn ctx() -> RunContext {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        RunContext::build(&c).unwrap()
+    }
+
+    #[test]
+    fn meta_round_trip() {
+        let dir = TempDir::new("art").unwrap();
+        let p = write_meta(dir.path(), "sage_test", 16, 64, 4, 128);
+        let m = ArtifactMeta::load(&p).unwrap();
+        assert_eq!(m.d, 16);
+        assert_eq!(m.b_cap, 128);
+        assert!(m.hlo_path.ends_with("sage_test.hlo.txt"));
+    }
+
+    #[test]
+    fn find_matching_artifact() {
+        let dir = TempDir::new("art").unwrap();
+        write_meta(dir.path(), "sage_wrong", 999, 64, 4, 128);
+        write_meta(dir.path(), "sage_right", 16, 64, 4, 128);
+        let ctx = ctx();
+        let m = find_artifact(dir.path(), &ctx).unwrap();
+        assert_eq!(m.d, 16);
+    }
+
+    #[test]
+    fn no_match_reports_shapes() {
+        let dir = TempDir::new("art").unwrap();
+        let err = find_artifact(dir.path(), &ctx()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn too_small_batch_cap_rejected() {
+        let dir = TempDir::new("art").unwrap();
+        write_meta(dir.path(), "sage_small", 16, 64, 4, 8); // cap 8 < batch 128
+        assert!(find_artifact(dir.path(), &ctx()).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas train step.
+//!
+//! The build-time Python pass (`python/compile/aot.py`) lowers the 2-layer
+//! GraphSAGE train step — whose neighbor aggregation is a Pallas kernel — to
+//! **HLO text** (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos, so
+//! text is the interchange format; see /opt/xla-example/README.md) plus a
+//! `.meta.json` manifest describing the fixed shapes. This module discovers
+//! a matching artifact, compiles it once on the PJRT CPU client, and exposes
+//! it as a [`crate::trainer::TrainStep`] backend. Python never runs here.
+
+mod artifact;
+mod pjrt;
+
+pub use artifact::{find_artifact, ArtifactMeta};
+pub use pjrt::PjrtTrainer;
+
+use crate::coordinator::RunContext;
+use crate::trainer::TrainStep;
+use crate::Result;
+
+/// Default artifacts directory (overridable with `RAPIDGNN_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("RAPIDGNN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Build the PJRT-backed trainer for a run context, discovering the artifact
+/// that matches the run's model shape.
+pub fn build_pjrt_trainer(ctx: &RunContext) -> Result<Box<dyn TrainStep>> {
+    let meta = find_artifact(&artifacts_dir(), ctx)?;
+    let trainer = PjrtTrainer::load(meta, ctx.cfg.base_seed)?;
+    Ok(Box::new(trainer))
+}

@@ -1,0 +1,214 @@
+//! The PJRT-backed train-step executor.
+//!
+//! Loads HLO text → `XlaComputation` → compiled executable, holds the model
+//! parameters host-side as literals, and marshals each sampled batch into
+//! the artifact's fixed shapes (index padding + masks). Operand order is the
+//! contract with `python/compile/aot.py`:
+//!
+//! ```text
+//! inputs:  w_self1 [d,h], w_nbr1 [d,h], b1 [h],
+//!          w_self2 [h,c], w_nbr2 [h,c], b2 [c],
+//!          lr [],
+//!          x0 [n0_cap,d],
+//!          self1 [n1_cap] i32, nbr1 [n1_cap,f1] i32, m1 [n1_cap,f1] f32,
+//!          self2 [b_cap]  i32, nbr2 [b_cap,f2]  i32, m2 [b_cap,f2]  f32,
+//!          labels [b_cap] i32, label_mask [b_cap] f32
+//! outputs: (w_self1', w_nbr1', b1', w_self2', w_nbr2', b2', loss, correct)
+//! ```
+
+use super::artifact::ArtifactMeta;
+use crate::sampler::khop::{LayerBlock, SampledBatch, NO_NEIGHBOR};
+use crate::trainer::{sage::StepOutput, Mat, TrainStep};
+use crate::Result;
+use anyhow::{ensure, Context};
+
+/// PJRT executor implementing [`TrainStep`].
+pub struct PjrtTrainer {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Parameters, kept as literals between steps:
+    /// `[w_self1, w_nbr1, b1, w_self2, w_nbr2, b2]`.
+    params: Vec<xla::Literal>,
+    /// Number of train steps executed (diagnostics).
+    pub steps_run: u64,
+}
+
+impl PjrtTrainer {
+    /// Compile the artifact and initialize parameters (same init as the host
+    /// model so both backends are comparable).
+    pub fn load(meta: ArtifactMeta, seed: u64) -> Result<PjrtTrainer> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.hlo_path.to_str().context("hlo path utf8")?,
+        )
+        .with_context(|| format!("parse HLO text {:?}", meta.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile HLO")?;
+        let params = init_params(&meta, seed)?;
+        Ok(PjrtTrainer { exe, meta, params, steps_run: 0 })
+    }
+
+    /// Artifact manifest.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Current parameters as host matrices (for cross-checking vs the host
+    /// backend): `[w_self1, w_nbr1, b1, w_self2, w_nbr2, b2]` flattened.
+    pub fn params_flat(&self) -> Result<Vec<Vec<f32>>> {
+        self.params.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    /// Execute the artifact once. `lr = 0` makes the step a pure evaluation
+    /// (SGD update with zero step size), `apply` controls whether the
+    /// returned parameters replace the held ones.
+    fn execute(
+        &mut self,
+        x0: &Mat,
+        batch: &SampledBatch,
+        labels: &[u16],
+        lr: f32,
+        apply: bool,
+    ) -> Result<StepOutput> {
+        let m = &self.meta;
+        ensure!(batch.blocks.len() == 2, "artifact is a 2-layer model");
+        let n0 = batch.node_layers[0].len();
+        let n1 = batch.node_layers[1].len();
+        let b = batch.node_layers[2].len();
+        ensure!(
+            n0 <= m.n0_cap as usize && n1 <= m.n1_cap as usize && b <= m.b_cap as usize,
+            "batch ({n0},{n1},{b}) exceeds artifact caps ({},{},{})",
+            m.n0_cap,
+            m.n1_cap,
+            m.b_cap
+        );
+        ensure!(x0.cols == m.d as usize, "feature dim");
+
+        // ---- pad inputs ----
+        let mut x0_pad = vec![0f32; m.n0_cap as usize * m.d as usize];
+        x0_pad[..x0.data.len()].copy_from_slice(&x0.data);
+
+        let (self1, nbr1, mask1) = pad_block(&batch.blocks[0], m.n1_cap as usize, m.f1 as usize);
+        let (self2, nbr2, mask2) = pad_block(&batch.blocks[1], m.b_cap as usize, m.f2 as usize);
+
+        let mut labels_pad = vec![0i32; m.b_cap as usize];
+        let mut lmask = vec![0f32; m.b_cap as usize];
+        for (i, &y) in labels.iter().enumerate() {
+            if y != u16::MAX {
+                labels_pad[i] = y as i32;
+                lmask[i] = 1.0;
+            }
+        }
+
+        let lit = |v: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(dims)?)
+        };
+        let ilit = |v: &[i32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(dims)?)
+        };
+
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(16);
+        for p in &self.params {
+            inputs.push(p.clone());
+        }
+        inputs.push(xla::Literal::scalar(lr));
+        inputs.push(lit(&x0_pad, &[m.n0_cap as i64, m.d as i64])?);
+        inputs.push(ilit(&self1, &[m.n1_cap as i64])?);
+        inputs.push(ilit(&nbr1, &[m.n1_cap as i64, m.f1 as i64])?);
+        inputs.push(lit(&mask1, &[m.n1_cap as i64, m.f1 as i64])?);
+        inputs.push(ilit(&self2, &[m.b_cap as i64])?);
+        inputs.push(ilit(&nbr2, &[m.b_cap as i64, m.f2 as i64])?);
+        inputs.push(lit(&mask2, &[m.b_cap as i64, m.f2 as i64])?);
+        inputs.push(ilit(&labels_pad, &[m.b_cap as i64])?);
+        inputs.push(lit(&lmask, &[m.b_cap as i64])?);
+
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        ensure!(outs.len() == 8, "expected 8 outputs, got {}", outs.len());
+        let correct = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        if apply {
+            self.params = outs;
+            self.steps_run += 1;
+        }
+        let total = labels.iter().filter(|&&y| y != u16::MAX).count() as u32;
+        Ok(StepOutput { loss: loss as f64, correct: correct as u32, total })
+    }
+}
+
+fn init_params(meta: &ArtifactMeta, seed: u64) -> Result<Vec<xla::Literal>> {
+    // Mirror the host model's init exactly (same seeds → same matrices).
+    let host = crate::trainer::SageModel::new(
+        meta.d as usize,
+        meta.h as usize,
+        meta.c as usize,
+        2,
+        seed,
+    );
+    let mut out = Vec::with_capacity(6);
+    for layer in &host.layers {
+        out.push(xla::Literal::vec1(&layer.w_self.data).reshape(&[
+            layer.w_self.rows as i64,
+            layer.w_self.cols as i64,
+        ])?);
+        out.push(xla::Literal::vec1(&layer.w_nbr.data).reshape(&[
+            layer.w_nbr.rows as i64,
+            layer.w_nbr.cols as i64,
+        ])?);
+        out.push(xla::Literal::vec1(&layer.bias));
+    }
+    // order fix: host pushes [w_self1, w_nbr1, b1, w_self2, w_nbr2, b2] ✓
+    Ok(out)
+}
+
+/// Pad a layer block's index arrays to `cap` destinations with `fanout`
+/// slots: `NO_NEIGHBOR` → index 0 with mask 0; padded dst rows self-index 0.
+fn pad_block(block: &LayerBlock, cap: usize, fanout: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    assert_eq!(block.fanout as usize, fanout, "artifact fanout vs batch fanout");
+    let mut self_idx = vec![0i32; cap];
+    let mut nbr = vec![0i32; cap * fanout];
+    let mut mask = vec![0f32; cap * fanout];
+    for d in 0..block.num_dst as usize {
+        self_idx[d] = block.self_idx[d] as i32;
+        for j in 0..fanout {
+            let ni = block.nbr_idx[d * fanout + j];
+            if ni != NO_NEIGHBOR {
+                nbr[d * fanout + j] = ni as i32;
+                mask[d * fanout + j] = 1.0;
+            }
+        }
+    }
+    (self_idx, nbr, mask)
+}
+
+impl TrainStep for PjrtTrainer {
+    fn step(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16], lr: f32) -> StepOutput {
+        self.execute(x0, batch, labels, lr, true)
+            .expect("PJRT step failed")
+    }
+
+    fn eval(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16]) -> StepOutput {
+        self.execute(x0, batch, labels, 0.0, false)
+            .expect("PJRT eval failed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::khop::LayerBlock;
+
+    #[test]
+    fn pad_block_maps_sentinels_to_masked_zero() {
+        let block = LayerBlock {
+            fanout: 2,
+            num_dst: 2,
+            self_idx: vec![3, 1],
+            nbr_idx: vec![5, NO_NEIGHBOR, 2, 4],
+        };
+        let (s, n, m) = pad_block(&block, 4, 2);
+        assert_eq!(s, vec![3, 1, 0, 0]);
+        assert_eq!(n, vec![5, 0, 2, 4, 0, 0, 0, 0]);
+        assert_eq!(m, vec![1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,416 @@
+//! K-hop uniform neighbor sampling (GraphSAGE-style mini-batch blocks).
+//!
+//! Given seed nodes and per-layer fan-outs, expands outward layer by layer
+//! exactly like DGL's `MultiLayerNeighborSampler`: layer `K` holds the seeds,
+//! each outer layer holds the union of the previous layer's nodes and their
+//! sampled neighbors, and layer `0` is the batch's input-node set `N_i^e`
+//! whose features must be materialized.
+
+use super::seed::Rng;
+use crate::graph::CsrGraph;
+use crate::util::fasthash::IdHashMap;
+use crate::NodeId;
+
+/// Sentinel marking an absent neighbor slot (node had fewer neighbors than
+/// the fan-out, or no neighbors at all). The trainer masks these out.
+pub const NO_NEIGHBOR: u32 = u32::MAX;
+
+/// Per-layer fan-out policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fanout {
+    /// Sample up to `k` distinct neighbors uniformly (GraphSAGE).
+    Sample(u32),
+    /// Take the full neighborhood, capped at `cap` (Dist-GCN baseline).
+    FullCapped(u32),
+}
+
+impl Fanout {
+    /// Maximum neighbor slots this policy can produce.
+    pub fn width(&self) -> u32 {
+        match *self {
+            Fanout::Sample(k) => k,
+            Fanout::FullCapped(c) => c,
+        }
+    }
+}
+
+/// One message-passing layer of a sampled batch: maps a `src` node list
+/// (outer layer) to a `dst` node list (inner layer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerBlock {
+    /// Neighbor slots per dst node.
+    pub fanout: u32,
+    /// Number of dst nodes.
+    pub num_dst: u32,
+    /// `self_idx[d]` = position of dst node `d` in the src node list.
+    pub self_idx: Vec<u32>,
+    /// `nbr_idx[d*fanout + j]` = position of the j-th sampled neighbor of dst
+    /// node `d` in the src list, or [`NO_NEIGHBOR`].
+    pub nbr_idx: Vec<u32>,
+}
+
+/// A fully sampled mini-batch: node lists per layer plus the blocks that
+/// connect them. `node_layers[0]` is the input-node set; the last entry
+/// holds the seeds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SampledBatch {
+    /// Node ids per layer, outermost (input) first.
+    pub node_layers: Vec<Vec<NodeId>>,
+    /// Blocks: `blocks[l]` maps `node_layers[l]` → `node_layers[l+1]`.
+    pub blocks: Vec<LayerBlock>,
+}
+
+impl SampledBatch {
+    /// The batch's input nodes `N_i^e` (features required).
+    pub fn input_nodes(&self) -> &[NodeId] {
+        &self.node_layers[0]
+    }
+
+    /// The seed nodes.
+    pub fn seeds(&self) -> &[NodeId] {
+        self.node_layers.last().unwrap()
+    }
+}
+
+/// Sample up to `k` distinct neighbors of `v` uniformly into `out`.
+#[inline]
+fn sample_neighbors(g: &CsrGraph, v: NodeId, policy: Fanout, rng: &mut Rng, out: &mut Vec<NodeId>) {
+    out.clear();
+    let nbrs = g.neighbors(v);
+    match policy {
+        Fanout::FullCapped(cap) => {
+            if nbrs.len() <= cap as usize {
+                out.extend_from_slice(nbrs);
+            } else {
+                // Uniform without replacement via rejection on positions —
+                // cap << deg in the regime this branch runs.
+                sample_distinct_positions(nbrs, cap, rng, out);
+            }
+        }
+        Fanout::Sample(k) => {
+            if nbrs.len() <= k as usize {
+                out.extend_from_slice(nbrs);
+            } else {
+                sample_distinct_positions(nbrs, k, rng, out);
+            }
+        }
+    }
+}
+
+/// Draw `k` distinct positions from `nbrs` by rejection (k << |nbrs| here).
+fn sample_distinct_positions(nbrs: &[NodeId], k: u32, rng: &mut Rng, out: &mut Vec<NodeId>) {
+    debug_assert!((k as usize) < nbrs.len());
+    let n = nbrs.len() as u32;
+    if n <= 128 {
+        // §Perf fast path: membership test as a u128 bitmask — covers the
+        // vast majority of nodes in power-law graphs (only hubs exceed it).
+        let mut mask: u128 = 0;
+        let mut taken = 0;
+        while taken < k {
+            let pos = rng.below(n);
+            let bit = 1u128 << pos;
+            if mask & bit == 0 {
+                mask |= bit;
+                taken += 1;
+                out.push(nbrs[pos as usize]);
+            }
+        }
+        return;
+    }
+    // Hub path: k ≤ 64 ≪ n, collisions rare; linear scan of picks.
+    let mut picked: Vec<u32> = Vec::with_capacity(k as usize);
+    while picked.len() < k as usize {
+        let pos = rng.below(n);
+        if !picked.contains(&pos) {
+            picked.push(pos);
+            out.push(nbrs[pos as usize]);
+        }
+    }
+}
+
+/// Dense visited-set over node ids (perf: dedup-before-sort in the sampler
+/// hot path — see EXPERIMENTS.md §Perf).
+struct Seen {
+    bits: Vec<u64>,
+}
+
+impl Seen {
+    fn new(n: u32) -> Seen {
+        Seen { bits: vec![0u64; (n as usize).div_ceil(64)] }
+    }
+
+    /// Returns true if `v` was already present; marks it either way.
+    #[inline]
+    fn test_and_set(&mut self, v: NodeId) -> bool {
+        let (w, b) = ((v / 64) as usize, v % 64);
+        let hit = (self.bits[w] >> b) & 1 == 1;
+        self.bits[w] |= 1 << b;
+        hit
+    }
+}
+
+/// Fast path: enumerate only the batch's unique input-node set `N_i^e`.
+///
+/// This is what the precompute pass runs for every (epoch, batch) — it avoids
+/// building index mappings. MUST visit the PRNG in exactly the same order as
+/// [`sample_blocks`] so both produce identical node sets for the same seed
+/// (verified by `blocks_and_ids_agree`).
+pub fn sample_input_nodes(
+    g: &CsrGraph,
+    seeds: &[NodeId],
+    fanouts: &[Fanout],
+    rng_seed: u64,
+) -> Vec<NodeId> {
+    let mut rng = Rng::new(rng_seed);
+    let mut current: Vec<NodeId> = seeds.to_vec();
+    let mut scratch: Vec<NodeId> = Vec::new();
+    // Unique-id accumulator: bitmap dedup keeps the per-layer sort over the
+    // (much smaller) unique set instead of the sampled multiset.
+    let mut seen = Seen::new(g.num_nodes());
+    let mut uniq: Vec<NodeId> = Vec::with_capacity(current.len() * 4);
+    for &v in &current {
+        if !seen.test_and_set(v) {
+            uniq.push(v);
+        }
+    }
+    // Expand innermost (seed-adjacent, last fanout) first, like DGL.
+    for (li, &policy) in fanouts.iter().rev().enumerate() {
+        for &v in &current {
+            sample_neighbors(g, v, policy, &mut rng, &mut scratch);
+            for &u in &scratch {
+                if !seen.test_and_set(u) {
+                    uniq.push(u);
+                }
+            }
+        }
+        if li + 1 == fanouts.len() {
+            // final layer: sort in place, no clone (§Perf)
+            uniq.sort_unstable();
+            return uniq;
+        }
+        let mut next = uniq.clone();
+        next.sort_unstable();
+        current = next;
+    }
+    current
+}
+
+/// Full path: sample blocks with index mappings for the trainer.
+pub fn sample_blocks(
+    g: &CsrGraph,
+    seeds: &[NodeId],
+    fanouts: &[Fanout],
+    rng_seed: u64,
+) -> SampledBatch {
+    let mut rng = Rng::new(rng_seed);
+    let mut node_layers: Vec<Vec<NodeId>> = vec![seeds.to_vec()];
+    // Raw sampled neighbors per layer (dst-order), innermost first.
+    let mut raw_nbrs: Vec<Vec<NodeId>> = Vec::new();
+    let mut scratch: Vec<NodeId> = Vec::new();
+    // Same bitmap-dedup scheme as `sample_input_nodes` (identical PRNG walk).
+    let mut seen = Seen::new(g.num_nodes());
+    let mut uniq: Vec<NodeId> = Vec::with_capacity(seeds.len() * 4);
+    for &v in seeds {
+        if !seen.test_and_set(v) {
+            uniq.push(v);
+        }
+    }
+
+    for &policy in fanouts.iter().rev() {
+        let current = node_layers.last().unwrap();
+        let mut flat: Vec<NodeId> = Vec::with_capacity(current.len() * policy.width() as usize);
+        let mut counts: Vec<u32> = Vec::with_capacity(current.len());
+        for &v in current {
+            sample_neighbors(g, v, policy, &mut rng, &mut scratch);
+            counts.push(scratch.len() as u32);
+            flat.extend_from_slice(&scratch);
+            for &u in &scratch {
+                if !seen.test_and_set(u) {
+                    uniq.push(u);
+                }
+            }
+        }
+        let mut next = uniq.clone();
+        next.sort_unstable();
+        node_layers.push(next);
+        // Stash (flat neighbor list + per-dst counts) for block assembly.
+        raw_nbrs.push(flat);
+        raw_nbrs.push(counts.into_iter().map(|c| c as NodeId).collect());
+    }
+
+    // node_layers currently: [seeds, layer K-1, ..., layer 0]; reverse so
+    // index 0 = input nodes.
+    node_layers.reverse();
+
+    // Build blocks: blocks[l] maps node_layers[l] (src) → node_layers[l+1] (dst).
+    let num_layers = fanouts.len();
+    let mut blocks: Vec<LayerBlock> = Vec::with_capacity(num_layers);
+    for l in 0..num_layers {
+        let src = &node_layers[l];
+        let dst = &node_layers[l + 1];
+        let pos: IdHashMap<NodeId, u32> =
+            src.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+        // raw_nbrs entries were pushed innermost-first: fanouts.rev() order.
+        // Layer l (outermost = 0) corresponds to rev index (num_layers-1-l).
+        let ri = (num_layers - 1 - l) * 2;
+        let flat = &raw_nbrs[ri];
+        let counts = &raw_nbrs[ri + 1];
+        let fanout = fanouts[l].width();
+        let mut self_idx = Vec::with_capacity(dst.len());
+        let mut nbr_idx = vec![NO_NEIGHBOR; dst.len() * fanout as usize];
+        let mut offset = 0usize;
+        for (d, &v) in dst.iter().enumerate() {
+            self_idx.push(pos[&v]);
+            let cnt = counts[d] as usize;
+            for j in 0..cnt {
+                nbr_idx[d * fanout as usize + j] = pos[&flat[offset + j]];
+            }
+            offset += cnt;
+        }
+        blocks.push(LayerBlock {
+            fanout,
+            num_dst: dst.len() as u32,
+            self_idx,
+            nbr_idx,
+        });
+    }
+
+    SampledBatch { node_layers, blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset};
+    use crate::graph::build_dataset;
+    use std::sync::Arc;
+
+    fn graph() -> Arc<CsrGraph> {
+        build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), false).graph
+    }
+
+    const F: [Fanout; 2] = [Fanout::Sample(5), Fanout::Sample(3)];
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = graph();
+        let seeds = [1, 2, 3, 4, 5];
+        assert_eq!(
+            sample_input_nodes(&g, &seeds, &F, 42),
+            sample_input_nodes(&g, &seeds, &F, 42)
+        );
+        assert_ne!(
+            sample_input_nodes(&g, &seeds, &F, 42),
+            sample_input_nodes(&g, &seeds, &F, 43)
+        );
+    }
+
+    #[test]
+    fn blocks_and_ids_agree() {
+        // The trace path and the full path must sample identically.
+        let g = graph();
+        let seeds: Vec<NodeId> = (0..64).collect();
+        for s in 0..5u64 {
+            let ids = sample_input_nodes(&g, &seeds, &F, s);
+            let batch = sample_blocks(&g, &seeds, &F, s);
+            assert_eq!(ids, batch.node_layers[0], "seed {s}");
+        }
+    }
+
+    #[test]
+    fn input_nodes_contain_seeds() {
+        let g = graph();
+        let seeds = [7, 8, 9];
+        let ids = sample_input_nodes(&g, &seeds, &F, 0);
+        for s in seeds {
+            assert!(ids.binary_search(&s).is_ok());
+        }
+    }
+
+    #[test]
+    fn input_nodes_sorted_unique() {
+        let g = graph();
+        let ids = sample_input_nodes(&g, &(0..100).collect::<Vec<_>>(), &F, 1);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn block_indices_are_valid() {
+        let g = graph();
+        let seeds: Vec<NodeId> = (10..40).collect();
+        let b = sample_blocks(&g, &seeds, &F, 3);
+        assert_eq!(b.blocks.len(), 2);
+        assert_eq!(b.seeds(), &seeds[..]);
+        for l in 0..2 {
+            let blk = &b.blocks[l];
+            let src_len = b.node_layers[l].len() as u32;
+            let dst = &b.node_layers[l + 1];
+            assert_eq!(blk.num_dst as usize, dst.len());
+            assert_eq!(blk.self_idx.len(), dst.len());
+            for (d, &si) in blk.self_idx.iter().enumerate() {
+                assert!(si < src_len);
+                // self index really points at the same node id
+                assert_eq!(b.node_layers[l][si as usize], dst[d]);
+            }
+            for &ni in &blk.nbr_idx {
+                assert!(ni == NO_NEIGHBOR || ni < src_len);
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_neighbors_are_real_neighbors() {
+        let g = graph();
+        let seeds: Vec<NodeId> = (0..20).collect();
+        let b = sample_blocks(&g, &seeds, &F, 9);
+        for l in 0..b.blocks.len() {
+            let blk = &b.blocks[l];
+            for d in 0..blk.num_dst as usize {
+                let v = b.node_layers[l + 1][d];
+                for j in 0..blk.fanout as usize {
+                    let ni = blk.nbr_idx[d * blk.fanout as usize + j];
+                    if ni != NO_NEIGHBOR {
+                        let u = b.node_layers[l][ni as usize];
+                        assert!(g.neighbors(v).contains(&u), "{u} not a neighbor of {v}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_respected() {
+        let g = graph();
+        let b = sample_blocks(&g, &[0, 1], &[Fanout::Sample(2)], 5);
+        let blk = &b.blocks[0];
+        for d in 0..blk.num_dst as usize {
+            let v = b.node_layers[1][d];
+            let valid = (0..2)
+                .filter(|&j| blk.nbr_idx[d * 2 + j] != NO_NEIGHBOR)
+                .count();
+            assert!(valid as u32 <= 2.min(g.degree(v)));
+            // distinct neighbors when sampling without replacement
+            if valid == 2 {
+                assert_ne!(blk.nbr_idx[d * 2], blk.nbr_idx[d * 2 + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn full_capped_takes_all_small_neighborhoods() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        let b = sample_blocks(&g, &[0], &[Fanout::FullCapped(8)], 1);
+        let blk = &b.blocks[0];
+        let valid = blk.nbr_idx.iter().filter(|&&x| x != NO_NEIGHBOR).count();
+        assert_eq!(valid, 3); // all of node 0's neighbors
+        assert_eq!(b.node_layers[0].len(), 4);
+    }
+
+    #[test]
+    fn zero_degree_seed_survives() {
+        let g = CsrGraph::from_edges(3, &[(0, 1)]);
+        let b = sample_blocks(&g, &[2], &[Fanout::Sample(4)], 1);
+        assert_eq!(b.input_nodes(), &[2]);
+        assert!(b.blocks[0].nbr_idx.iter().all(|&x| x == NO_NEIGHBOR));
+    }
+}

@@ -1,0 +1,17 @@
+//! Deterministic k-hop neighbor sampling and schedule precomputation.
+//!
+//! The paper's core trick: because every batch's PRNG seed is derived as
+//! `H(s0, w, e, i)` ([`seed::derive_seed`]), the *entire* training schedule —
+//! which seeds form batch `b_i` of epoch `e` on worker `w`, and which input
+//! nodes the k-hop expansion touches — can be enumerated before training
+//! starts ([`schedule`]). Every downstream mechanism (hot-set cache ranking,
+//! prefetch staging) consumes that enumeration.
+
+pub mod khop;
+pub mod schedule;
+pub mod seed;
+
+pub use khop::{sample_blocks, sample_input_nodes, Fanout, LayerBlock, SampledBatch};
+pub use schedule::{
+    enumerate_epoch, epoch_seed_order, remote_frequency, BatchMeta, EpochSchedule,
+};

@@ -1,0 +1,256 @@
+//! Schedule precomputation: the paper's offline enumeration pass (§3).
+//!
+//! For worker `w`, epoch `e`: shuffle the worker's training-seed shard with a
+//! derived seed, chunk into batches, and run the k-hop expansion for each
+//! batch with its own derived seed `H(s0, w, e, i)`. The result — per-batch
+//! input-node sets with locality flags — is everything the cache builder and
+//! prefetcher need, computed before the first training step.
+
+use super::khop::{sample_input_nodes, Fanout};
+use super::seed::{derive_seed, Rng};
+use crate::graph::CsrGraph;
+use crate::partition::Partition;
+use crate::{NodeId, WorkerId};
+
+/// Precomputed metadata for one batch (paper §4 "metadata block"): node ids,
+/// seed range, and a locality bitmask. No feature values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchMeta {
+    /// Batch index `i` within the epoch.
+    pub batch: u32,
+    /// Seed nodes of this batch (owned by this worker's partition).
+    pub seeds: Vec<NodeId>,
+    /// Input-node set `N_i^e`, sorted ascending.
+    pub input_nodes: Vec<NodeId>,
+    /// Bitmask over `input_nodes`: bit j set ⇒ `input_nodes[j]` is remote.
+    pub remote_mask: Vec<u64>,
+    /// Number of remote nodes (popcount of `remote_mask`).
+    pub num_remote: u32,
+}
+
+impl BatchMeta {
+    /// Whether input node at position `j` is remote.
+    #[inline]
+    pub fn is_remote(&self, j: usize) -> bool {
+        (self.remote_mask[j / 64] >> (j % 64)) & 1 == 1
+    }
+
+    /// Iterate the remote node ids.
+    pub fn remote_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.input_nodes
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| self.is_remote(*j))
+            .map(|(_, &v)| v)
+    }
+
+    /// Approximate serialized size in bytes (for SSD-streaming accounting).
+    pub fn byte_size(&self) -> u64 {
+        16 + (self.seeds.len() * 4 + self.input_nodes.len() * 4 + self.remote_mask.len() * 8)
+            as u64
+    }
+}
+
+/// The full precomputed schedule of one (worker, epoch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EpochSchedule {
+    pub worker: WorkerId,
+    pub epoch: u32,
+    pub batches: Vec<BatchMeta>,
+}
+
+impl EpochSchedule {
+    /// Max input-node count over batches (the paper's `m_max`).
+    pub fn m_max(&self) -> u32 {
+        self.batches
+            .iter()
+            .map(|b| b.input_nodes.len() as u32)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total remote accesses over the epoch.
+    pub fn total_remote(&self) -> u64 {
+        self.batches.iter().map(|b| b.num_remote as u64).sum()
+    }
+}
+
+/// Deterministic per-epoch seed-node order for worker `w`: Fisher–Yates
+/// shuffle of the worker's train shard, seeded by `H(s0, w, e, SHUFFLE)`.
+pub fn epoch_seed_order(shard: &[NodeId], s0: u64, worker: WorkerId, epoch: u32) -> Vec<NodeId> {
+    const SHUFFLE_TAG: u32 = u32::MAX;
+    let mut order = shard.to_vec();
+    let mut rng = Rng::new(derive_seed(s0, worker, epoch, SHUFFLE_TAG));
+    for i in (1..order.len()).rev() {
+        let j = rng.below(i as u32 + 1) as usize;
+        order.swap(i, j);
+    }
+    order
+}
+
+/// Enumerate the full schedule for (worker, epoch): the paper's line 1–2 of
+/// Algorithm 1, restricted to one epoch (epochs are enumerated independently
+/// so the precompute pass can stream results to disk epoch by epoch).
+#[allow(clippy::too_many_arguments)]
+pub fn enumerate_epoch(
+    g: &CsrGraph,
+    part: &Partition,
+    shard: &[NodeId],
+    fanouts: &[Fanout],
+    batch_size: u32,
+    s0: u64,
+    worker: WorkerId,
+    epoch: u32,
+) -> EpochSchedule {
+    let order = epoch_seed_order(shard, s0, worker, epoch);
+    let batches: Vec<BatchMeta> = order
+        .chunks(batch_size as usize)
+        .enumerate()
+        .map(|(i, seeds)| {
+            let rng_seed = derive_seed(s0, worker, epoch, i as u32);
+            let input_nodes = sample_input_nodes(g, seeds, fanouts, rng_seed);
+            let mut remote_mask = vec![0u64; input_nodes.len().div_ceil(64)];
+            let mut num_remote = 0u32;
+            for (j, &v) in input_nodes.iter().enumerate() {
+                if !part.is_local(worker, v) {
+                    remote_mask[j / 64] |= 1 << (j % 64);
+                    num_remote += 1;
+                }
+            }
+            BatchMeta {
+                batch: i as u32,
+                seeds: seeds.to_vec(),
+                input_nodes,
+                remote_mask,
+                num_remote,
+            }
+        })
+        .collect();
+    EpochSchedule { worker, epoch, batches }
+}
+
+/// Tally remote-node access frequency over a set of batches — the paper's
+/// `freq(·)` ranking input for `TopHot` (Algorithm 1, line 3).
+///
+/// Returns `(node, count)` pairs sorted by descending count (ties by id for
+/// determinism).
+pub fn remote_frequency(batches: &[BatchMeta]) -> Vec<(NodeId, u32)> {
+    let mut counts: crate::util::fasthash::IdHashMap<NodeId, u32> = Default::default();
+    for b in batches {
+        for v in b.remote_nodes() {
+            *counts.entry(v).or_insert(0) += 1;
+        }
+    }
+    let mut out: Vec<(NodeId, u32)> = counts.into_iter().collect();
+    out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset};
+    use crate::graph::{build_dataset, Dataset};
+    use crate::partition::{metis_like, Partition};
+
+    fn setup() -> (Dataset, Partition) {
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), false);
+        let part = metis_like(&ds.graph, 2, 0);
+        (ds, part)
+    }
+
+    fn shard(ds: &Dataset, part: &Partition, w: WorkerId) -> Vec<NodeId> {
+        ds.train_nodes
+            .iter()
+            .copied()
+            .filter(|&v| part.is_local(w, v))
+            .collect()
+    }
+
+    const F: [Fanout; 2] = [Fanout::Sample(5), Fanout::Sample(3)];
+
+    #[test]
+    fn shuffle_is_permutation_and_epoch_dependent() {
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 0);
+        let o1 = epoch_seed_order(&sh, 42, 0, 0);
+        let o2 = epoch_seed_order(&sh, 42, 0, 1);
+        assert_ne!(o1, o2, "different epochs must shuffle differently");
+        let mut s1 = o1.clone();
+        s1.sort_unstable();
+        let mut s0 = sh.clone();
+        s0.sort_unstable();
+        assert_eq!(s0, s1, "shuffle must be a permutation");
+        assert_eq!(o1, epoch_seed_order(&sh, 42, 0, 0), "deterministic");
+    }
+
+    #[test]
+    fn enumerate_epoch_covers_all_shard_seeds() {
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 0);
+        let sched = enumerate_epoch(&ds.graph, &part, &sh, &F, 64, 42, 0, 0);
+        let total_seeds: usize = sched.batches.iter().map(|b| b.seeds.len()).sum();
+        assert_eq!(total_seeds, sh.len());
+        assert_eq!(sched.batches.len(), sh.len().div_ceil(64));
+        // every batch except possibly the last is full
+        for b in &sched.batches[..sched.batches.len() - 1] {
+            assert_eq!(b.seeds.len(), 64);
+        }
+    }
+
+    #[test]
+    fn remote_mask_matches_partition() {
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 1);
+        let sched = enumerate_epoch(&ds.graph, &part, &sh, &F, 32, 7, 1, 0);
+        for b in &sched.batches {
+            let mut n = 0;
+            for (j, &v) in b.input_nodes.iter().enumerate() {
+                assert_eq!(b.is_remote(j), !part.is_local(1, v));
+                if b.is_remote(j) {
+                    n += 1;
+                }
+            }
+            assert_eq!(n, b.num_remote);
+            // seeds are always local (they come from the worker's shard)
+            for &s in &b.seeds {
+                assert!(part.is_local(1, s));
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_fully_deterministic() {
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 0);
+        let a = enumerate_epoch(&ds.graph, &part, &sh, &F, 32, 5, 0, 3);
+        let b = enumerate_epoch(&ds.graph, &part, &sh, &F, 32, 5, 0, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn frequency_ranking_sorted_and_complete() {
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 0);
+        let sched = enumerate_epoch(&ds.graph, &part, &sh, &F, 32, 5, 0, 0);
+        let freq = remote_frequency(&sched.batches);
+        // descending counts
+        assert!(freq.windows(2).all(|w| w[0].1 >= w[1].1));
+        // total count equals total remote accesses
+        let total: u64 = freq.iter().map(|&(_, c)| c as u64).sum();
+        assert_eq!(total, sched.total_remote());
+        // all ranked nodes are genuinely remote
+        for &(v, _) in &freq {
+            assert!(!part.is_local(0, v));
+        }
+    }
+
+    #[test]
+    fn m_max_is_max_batch_size() {
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 0);
+        let sched = enumerate_epoch(&ds.graph, &part, &sh, &F, 32, 5, 0, 0);
+        let m = sched.batches.iter().map(|b| b.input_nodes.len()).max().unwrap();
+        assert_eq!(sched.m_max() as usize, m);
+    }
+}

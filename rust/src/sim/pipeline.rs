@@ -1,0 +1,173 @@
+//! Bounded-queue two-stage pipeline schedule.
+//!
+//! Models the Prefetcher → Trainer pipeline (paper §4): the prefetcher stages
+//! batch `i` (cost `stage[i]` = cache lookup + residual SyncPull), the trainer
+//! consumes it (cost `consume[i]` = assemble + compute). The queue holds at
+//! most `Q` staged-but-unconsumed batches, so the prefetcher stalls when it
+//! runs too far ahead ("stalls only when the Trainer lags" — §4). The
+//! recurrence:
+//!
+//! ```text
+//! stage_done[i]   = max(stage_done[i-1], consume_done[i-Q]) + stage[i]
+//! consume_done[i] = max(consume_done[i-1], stage_done[i]) + consume[i]
+//! ```
+//!
+//! For the on-demand baselines there is no overlap: pass `Q = 0` and the
+//! schedule degenerates to `consume_done[i] = consume_done[i-1] + stage[i] +
+//! consume[i]` (fetch fully on the critical path).
+
+/// Per-step costs fed to the schedule.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PipelineStep {
+    /// Prefetch/staging cost (network + cache lookup), seconds.
+    pub stage: f64,
+    /// Consumption cost (assemble + compute), seconds.
+    pub consume: f64,
+}
+
+/// Output of the schedule: per-step completion and derived stall times.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PipelineTimes {
+    /// Epoch makespan (seconds).
+    pub total: f64,
+    /// Per-step trainer wait time (time the trainer sat idle because the
+    /// batch wasn't staged yet) — the paper's residual fetch stall.
+    pub trainer_wait: Vec<f64>,
+    /// Sum of trainer wait.
+    pub total_wait: f64,
+}
+
+/// Compute the pipeline schedule. `q = 0` disables overlap (baseline mode).
+pub fn pipeline_schedule(steps: &[PipelineStep], q: u32) -> PipelineTimes {
+    let n = steps.len();
+    let mut times = PipelineTimes {
+        trainer_wait: Vec::with_capacity(n),
+        ..Default::default()
+    };
+    if n == 0 {
+        return times;
+    }
+    if q == 0 {
+        // Fully serial: stage + consume on the critical path each step.
+        let mut t = 0.0;
+        for s in steps {
+            times.trainer_wait.push(s.stage);
+            t += s.stage + s.consume;
+        }
+        times.total_wait = times.trainer_wait.iter().sum();
+        times.total = t;
+        return times;
+    }
+    let q = q as usize;
+    let mut stage_done = vec![0f64; n];
+    let mut consume_done = vec![0f64; n];
+    for i in 0..n {
+        let prev_stage = if i > 0 { stage_done[i - 1] } else { 0.0 };
+        let queue_free = if i >= q { consume_done[i - q] } else { 0.0 };
+        stage_done[i] = prev_stage.max(queue_free) + steps[i].stage;
+        let prev_consume = if i > 0 { consume_done[i - 1] } else { 0.0 };
+        let wait = (stage_done[i] - prev_consume).max(0.0);
+        times.trainer_wait.push(wait);
+        consume_done[i] = prev_consume.max(stage_done[i]) + steps[i].consume;
+    }
+    times.total_wait = times.trainer_wait.iter().sum();
+    times.total = consume_done[n - 1];
+    times
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize, stage: f64, consume: f64) -> Vec<PipelineStep> {
+        vec![PipelineStep { stage, consume }; n]
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let t = pipeline_schedule(&[], 4);
+        assert_eq!(t.total, 0.0);
+    }
+
+    #[test]
+    fn q0_is_fully_serial() {
+        let steps = uniform(10, 2.0, 3.0);
+        let t = pipeline_schedule(&steps, 0);
+        assert!((t.total - 50.0).abs() < 1e-9);
+        assert!((t.total_wait - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deep_queue_hides_cheap_staging() {
+        // stage ≪ consume: total → stage[0] + Σ consume
+        let steps = uniform(100, 0.1, 1.0);
+        let t = pipeline_schedule(&steps, 4);
+        assert!((t.total - (0.1 + 100.0)).abs() < 1e-6, "total {}", t.total);
+        // only the first step waits
+        assert!(t.trainer_wait[0] > 0.0);
+        assert!(t.trainer_wait[1..].iter().all(|&w| w < 1e-9));
+    }
+
+    #[test]
+    fn staging_bound_when_fetch_dominates() {
+        // stage ≫ consume: total → Σ stage + consume[last]
+        let steps = uniform(50, 1.0, 0.1);
+        let t = pipeline_schedule(&steps, 4);
+        assert!((t.total - (50.0 + 0.1)).abs() < 1e-6, "total {}", t.total);
+    }
+
+    #[test]
+    fn monotone_improving_in_q() {
+        let steps: Vec<PipelineStep> = (0..60)
+            .map(|i| PipelineStep {
+                stage: if i % 7 == 0 { 3.0 } else { 0.2 },
+                consume: 1.0,
+            })
+            .collect();
+        let mut prev = f64::INFINITY;
+        for q in [0u32, 1, 2, 4, 8, 16] {
+            let t = pipeline_schedule(&steps, q).total;
+            assert!(t <= prev + 1e-9, "q={q}: {t} > {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn never_faster_than_either_stage_sum() {
+        let steps: Vec<PipelineStep> = (0..40)
+            .map(|i| PipelineStep {
+                stage: (i % 5) as f64 * 0.3,
+                consume: ((i + 2) % 3) as f64 * 0.5 + 0.1,
+            })
+            .collect();
+        let sum_consume: f64 = steps.iter().map(|s| s.consume).sum();
+        let sum_stage: f64 = steps.iter().map(|s| s.stage).sum();
+        for q in [1u32, 2, 8] {
+            let t = pipeline_schedule(&steps, q).total;
+            assert!(t >= sum_consume - 1e-9);
+            assert!(t >= sum_stage.max(sum_consume) - 1e-9 || sum_stage < sum_consume);
+        }
+    }
+
+    #[test]
+    fn bounded_queue_limits_runahead() {
+        // With Q=1 the prefetcher can't amortize a late spike; with Q=8 it can.
+        let mut steps = uniform(20, 0.0, 1.0);
+        steps[10].stage = 5.0; // one slow fetch
+        let t1 = pipeline_schedule(&steps, 1);
+        let t8 = pipeline_schedule(&steps, 8);
+        assert!(t8.total < t1.total, "deeper queue absorbs the spike");
+    }
+
+    #[test]
+    fn q1_matches_hand_computed() {
+        // two steps, Q=1:
+        // stage_done = [2, max(2, consume_done[0]=5)+2 = 7]
+        // consume_done = [max(0,2)+3 = 5, max(5,7)+3 = 10]
+        let steps = uniform(2, 2.0, 3.0);
+        let t = pipeline_schedule(&steps, 1);
+        assert!((t.total - 10.0).abs() < 1e-9);
+        assert!((t.trainer_wait[0] - 2.0).abs() < 1e-9);
+        assert!((t.trainer_wait[1] - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,233 @@
+//! SSD streaming of precomputed metadata blocks (paper §4, component 3).
+//!
+//! The precompute pass can enumerate many epochs of schedules; holding them
+//! all in CPU memory would defeat the paper's "no CPU-memory growth" claim
+//! (Fig. 7b). Schedules are therefore written to disk as compact sequential
+//! blocks during precomputation and streamed back one batch at a time during
+//! training — a bounded-memory iterator is all the runtime holds.
+//!
+//! Format (little-endian, per epoch file):
+//! ```text
+//! magic "RGNB" | version u32 | worker u32 | epoch u32 | num_batches u32
+//! per batch:
+//!   batch u32 | num_seeds u32 | num_inputs u32 | num_remote u32
+//!   seeds [u32; num_seeds] | input_nodes [u32; num_inputs]
+//!   remote_mask [u64; ceil(num_inputs/64)]
+//! ```
+
+use crate::sampler::{BatchMeta, EpochSchedule};
+use crate::{Result, WorkerId};
+use anyhow::{bail, Context};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"RGNB";
+const VERSION: u32 = 1;
+
+/// Path of the metadata file for (worker, epoch) under `dir`.
+pub fn block_path(dir: &Path, worker: WorkerId, epoch: u32) -> PathBuf {
+    dir.join(format!("sched_w{worker}_e{epoch}.rgnb"))
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_u32_slice(w: &mut impl Write, v: &[u32]) -> Result<()> {
+    // bulk byte copy — this is the hot path of the precompute writer
+    let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_u32_vec(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Stream one epoch's schedule to disk.
+pub fn write_epoch(dir: &Path, sched: &EpochSchedule) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = block_path(dir, sched.worker, sched.epoch);
+    let mut w = BufWriter::new(File::create(&path).context("create metadata block")?);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u32(&mut w, sched.worker)?;
+    write_u32(&mut w, sched.epoch)?;
+    write_u32(&mut w, sched.batches.len() as u32)?;
+    for b in &sched.batches {
+        write_u32(&mut w, b.batch)?;
+        write_u32(&mut w, b.seeds.len() as u32)?;
+        write_u32(&mut w, b.input_nodes.len() as u32)?;
+        write_u32(&mut w, b.num_remote)?;
+        write_u32_slice(&mut w, &b.seeds)?;
+        write_u32_slice(&mut w, &b.input_nodes)?;
+        let mask_bytes: Vec<u8> = b.remote_mask.iter().flat_map(|x| x.to_le_bytes()).collect();
+        w.write_all(&mask_bytes)?;
+    }
+    w.flush()?;
+    Ok(path)
+}
+
+/// Streaming reader over one epoch's batches — holds one batch in memory.
+pub struct EpochReader {
+    r: BufReader<File>,
+    /// Worker id recorded in the file header.
+    pub worker: WorkerId,
+    /// Epoch recorded in the file header.
+    pub epoch: u32,
+    /// Total batch count.
+    pub num_batches: u32,
+    next: u32,
+}
+
+impl EpochReader {
+    /// Open the metadata file for (worker, epoch).
+    pub fn open(dir: &Path, worker: WorkerId, epoch: u32) -> Result<Self> {
+        let path = block_path(dir, worker, epoch);
+        let mut r = BufReader::new(File::open(&path).with_context(|| format!("open {path:?}"))?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic in {path:?}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported block version {version}");
+        }
+        let fworker = read_u32(&mut r)?;
+        let fepoch = read_u32(&mut r)?;
+        if fworker != worker || fepoch != epoch {
+            bail!("header mismatch: file says w{fworker}/e{fepoch}");
+        }
+        let num_batches = read_u32(&mut r)?;
+        Ok(EpochReader { r, worker, epoch, num_batches, next: 0 })
+    }
+
+    /// Read the next batch; `None` once exhausted.
+    pub fn next_batch(&mut self) -> Result<Option<BatchMeta>> {
+        if self.next >= self.num_batches {
+            return Ok(None);
+        }
+        self.next += 1;
+        let batch = read_u32(&mut self.r)?;
+        let num_seeds = read_u32(&mut self.r)? as usize;
+        let num_inputs = read_u32(&mut self.r)? as usize;
+        let num_remote = read_u32(&mut self.r)?;
+        let seeds = read_u32_vec(&mut self.r, num_seeds)?;
+        let input_nodes = read_u32_vec(&mut self.r, num_inputs)?;
+        let mask_len = num_inputs.div_ceil(64);
+        let mut mask_bytes = vec![0u8; mask_len * 8];
+        self.r.read_exact(&mut mask_bytes)?;
+        let remote_mask: Vec<u64> = mask_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Some(BatchMeta { batch, seeds, input_nodes, remote_mask, num_remote }))
+    }
+}
+
+/// Read an entire epoch back into memory (tests / cache builder over small
+/// epochs; training streams with [`EpochReader`] instead).
+pub fn read_epoch(dir: &Path, worker: WorkerId, epoch: u32) -> Result<EpochSchedule> {
+    let mut r = EpochReader::open(dir, worker, epoch)?;
+    let mut batches = Vec::with_capacity(r.num_batches as usize);
+    while let Some(b) = r.next_batch()? {
+        batches.push(b);
+    }
+    Ok(EpochSchedule { worker, epoch, batches })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset};
+    use crate::graph::build_dataset;
+    use crate::partition::metis_like;
+    use crate::sampler::{enumerate_epoch, Fanout};
+
+    fn make_sched() -> EpochSchedule {
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), false);
+        let part = metis_like(&ds.graph, 2, 0);
+        let shard: Vec<u32> = ds
+            .train_nodes
+            .iter()
+            .copied()
+            .filter(|&v| part.is_local(0, v))
+            .collect();
+        enumerate_epoch(
+            &ds.graph,
+            &part,
+            &shard,
+            &[Fanout::Sample(4), Fanout::Sample(3)],
+            32,
+            11,
+            0,
+            2,
+        )
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let dir = crate::util::tempdir::TempDir::new("storage").unwrap();
+        let sched = make_sched();
+        write_epoch(dir.path(), &sched).unwrap();
+        let back = read_epoch(dir.path(), 0, 2).unwrap();
+        assert_eq!(sched, back);
+    }
+
+    #[test]
+    fn streaming_reader_matches_bulk() {
+        let dir = crate::util::tempdir::TempDir::new("storage").unwrap();
+        let sched = make_sched();
+        write_epoch(dir.path(), &sched).unwrap();
+        let mut r = EpochReader::open(dir.path(), 0, 2).unwrap();
+        assert_eq!(r.num_batches as usize, sched.batches.len());
+        let mut i = 0;
+        while let Some(b) = r.next_batch().unwrap() {
+            assert_eq!(b, sched.batches[i]);
+            i += 1;
+        }
+        assert_eq!(i, sched.batches.len());
+    }
+
+    #[test]
+    fn open_missing_fails() {
+        let dir = crate::util::tempdir::TempDir::new("storage").unwrap();
+        assert!(EpochReader::open(dir.path(), 9, 9).is_err());
+    }
+
+    #[test]
+    fn header_mismatch_detected() {
+        let dir = crate::util::tempdir::TempDir::new("storage").unwrap();
+        let sched = make_sched();
+        let path = write_epoch(dir.path(), &sched).unwrap();
+        // rename to a wrong (worker, epoch) slot
+        let wrong = block_path(dir.path(), 3, 4);
+        std::fs::rename(path, wrong).unwrap();
+        assert!(EpochReader::open(dir.path(), 3, 4).is_err());
+    }
+
+    #[test]
+    fn corrupt_magic_detected() {
+        let dir = crate::util::tempdir::TempDir::new("storage").unwrap();
+        let sched = make_sched();
+        let path = write_epoch(dir.path(), &sched).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, bytes).unwrap();
+        assert!(EpochReader::open(dir.path(), 0, 2).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Trainer: batch tensor assembly and the train-step backends.
+//!
+//! Two backends execute the same 2-layer GraphSAGE step:
+//! - [`sage::SageModel`] — pure-rust host reference (always available);
+//! - [`crate::runtime::PjrtTrainer`] — the AOT-compiled JAX/Pallas artifact
+//!   executed via PJRT (the production path; Python never runs at training
+//!   time).
+//!
+//! Both implement [`TrainStep`] so engines are backend-agnostic, and the
+//! integration tests assert they produce matching losses on the same batches.
+
+pub mod sage;
+pub mod tensor;
+
+pub use sage::{SageModel, StepOutput};
+pub use tensor::Mat;
+
+use crate::graph::Dataset;
+use crate::sampler::SampledBatch;
+
+/// A train-step backend.
+pub trait TrainStep {
+    /// Run one SGD step; `x0` is the `[n_input, d]` feature block in
+    /// input-node order, `labels` per-seed (u16::MAX = ignore).
+    fn step(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16], lr: f32) -> StepOutput;
+
+    /// Evaluate without updating.
+    fn eval(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16]) -> StepOutput;
+}
+
+impl TrainStep for SageModel {
+    fn step(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16], lr: f32) -> StepOutput {
+        self.train_step(x0, batch, labels, lr)
+    }
+
+    fn eval(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16]) -> StepOutput {
+        self.evaluate(x0, batch, labels)
+    }
+}
+
+/// Wrap a staged feature block (from the prefetcher) as a matrix.
+pub fn feature_mat(features: Vec<f32>, num_nodes: usize, feature_dim: usize) -> Mat {
+    Mat::from_vec(num_nodes, feature_dim, features)
+}
+
+/// Extract per-seed labels for a batch.
+pub fn batch_labels(ds: &Dataset, batch: &SampledBatch) -> Vec<u16> {
+    batch.seeds().iter().map(|&s| ds.labels[s as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset};
+    use crate::graph::build_dataset;
+    use crate::sampler::{sample_blocks, Fanout};
+
+    #[test]
+    fn feature_mat_shape_checked() {
+        let m = feature_mat(vec![0.0; 12], 3, 4);
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.cols, 4);
+    }
+
+    #[test]
+    fn batch_labels_match_dataset() {
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), false);
+        let seeds: Vec<u32> = ds.train_nodes.iter().take(8).copied().collect();
+        let b = sample_blocks(&ds.graph, &seeds, &[Fanout::Sample(3)], 1);
+        let labels = batch_labels(&ds, &b);
+        for (i, &s) in seeds.iter().enumerate() {
+            assert_eq!(labels[i], ds.labels[s as usize]);
+        }
+    }
+}

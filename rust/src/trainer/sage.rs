@@ -1,0 +1,407 @@
+//! Host-path GraphSAGE: forward, backward, SGD — the reference model the
+//! AOT-compiled JAX/Pallas artifact must agree with.
+//!
+//! Architecture (paper §2.3 baseline): L layers of
+//! `h_dst = σ(W_self · h_self + W_nbr · mean(h_nbrs) + b)` with ReLU between
+//! layers and softmax cross-entropy on the seed logits — GraphSAGE with mean
+//! aggregation, matching DGL's `SAGEConv(aggregator_type='mean')` up to the
+//! self/neighbor weight split.
+
+use super::tensor::{softmax_xent, Mat};
+use crate::sampler::khop::{LayerBlock, SampledBatch, NO_NEIGHBOR};
+
+/// One SAGE layer's parameters.
+#[derive(Debug, Clone)]
+pub struct SageLayer {
+    pub w_self: Mat,
+    pub w_nbr: Mat,
+    pub bias: Vec<f32>,
+}
+
+impl SageLayer {
+    fn new(d_in: usize, d_out: usize, seed: u64) -> SageLayer {
+        SageLayer {
+            w_self: Mat::init(d_in, d_out, seed ^ 0x5e1f),
+            w_nbr: Mat::init(d_in, d_out, seed ^ 0xa66e),
+            bias: vec![0.0; d_out],
+        }
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.w_self.data.len() + self.w_nbr.data.len() + self.bias.len()
+    }
+}
+
+/// Gradients mirroring [`SageLayer`].
+pub struct SageLayerGrad {
+    pub w_self: Mat,
+    pub w_nbr: Mat,
+    pub bias: Vec<f32>,
+}
+
+/// The GraphSAGE model.
+#[derive(Debug, Clone)]
+pub struct SageModel {
+    pub layers: Vec<SageLayer>,
+    /// Layer output dims: `[hidden, ..., num_classes]`.
+    pub dims: Vec<usize>,
+}
+
+/// Output of one training/eval step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f64,
+    /// Correctly classified seeds.
+    pub correct: u32,
+    /// Seeds with labels (denominator for accuracy).
+    pub total: u32,
+}
+
+impl SageModel {
+    /// Build an L-layer model: `feature_dim → hidden (×L-1) → num_classes`.
+    pub fn new(feature_dim: usize, hidden: usize, num_classes: usize, layers: usize, seed: u64) -> SageModel {
+        assert!(layers >= 1);
+        let mut dims = vec![feature_dim];
+        for _ in 0..layers - 1 {
+            dims.push(hidden);
+        }
+        dims.push(num_classes);
+        let layers = (0..layers)
+            .map(|l| SageLayer::new(dims[l], dims[l + 1], seed.wrapping_add(l as u64 * 7919)))
+            .collect();
+        SageModel { layers, dims: dims[1..].to_vec() }
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(SageLayer::num_params).sum()
+    }
+
+    /// Forward pass only; returns seed logits.
+    pub fn forward(&self, x0: &Mat, batch: &SampledBatch) -> Mat {
+        let mut h = x0.clone();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let block = &batch.blocks[l];
+            let z = layer_forward(layer, &h, block);
+            h = if l + 1 < self.layers.len() { z.relu() } else { z };
+        }
+        h
+    }
+
+    /// Evaluate loss/accuracy without updating parameters.
+    pub fn evaluate(&self, x0: &Mat, batch: &SampledBatch, labels: &[u16]) -> StepOutput {
+        let logits = self.forward(x0, batch);
+        let (loss, correct, _) = softmax_xent(&logits, labels);
+        StepOutput { loss, correct, total: count_valid(labels) }
+    }
+
+    /// One SGD training step on a sampled batch.
+    ///
+    /// `x0` is the `[n_input, d]` feature block (input-node order), `labels`
+    /// the per-seed labels (u16::MAX = padding).
+    pub fn train_step(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16], lr: f32) -> StepOutput {
+        let (out, grads) = self.forward_backward(x0, batch, labels);
+        for (layer, g) in self.layers.iter_mut().zip(&grads) {
+            layer.w_self.sgd(&g.w_self, lr);
+            layer.w_nbr.sgd(&g.w_nbr, lr);
+            for (b, &gb) in layer.bias.iter_mut().zip(&g.bias) {
+                *b -= lr * gb;
+            }
+        }
+        out
+    }
+
+    /// Forward + backward; returns step output and per-layer gradients.
+    pub fn forward_backward(
+        &self,
+        x0: &Mat,
+        batch: &SampledBatch,
+        labels: &[u16],
+    ) -> (StepOutput, Vec<SageLayerGrad>) {
+        let num_layers = self.layers.len();
+        assert_eq!(batch.blocks.len(), num_layers, "batch depth vs model depth");
+        assert_eq!(x0.rows, batch.node_layers[0].len(), "feature block rows");
+        assert_eq!(labels.len(), batch.seeds().len(), "labels per seed");
+
+        // ---- forward, caching activations ----
+        // inputs[l] = activation entering layer l; pre[l] = pre-activation out.
+        let mut inputs: Vec<Mat> = Vec::with_capacity(num_layers);
+        let mut pres: Vec<Mat> = Vec::with_capacity(num_layers);
+        let mut aggs: Vec<Mat> = Vec::with_capacity(num_layers);
+        let mut h = x0.clone();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let block = &batch.blocks[l];
+            let agg = aggregate_mean(&h, block);
+            let z = layer_forward_with_agg(layer, &h, &agg, block);
+            inputs.push(h);
+            aggs.push(agg);
+            let next = if l + 1 < num_layers { z.relu() } else { z.clone() };
+            pres.push(z);
+            h = next;
+        }
+        let logits = &pres[num_layers - 1];
+        let (loss, correct, dlogits) = softmax_xent(logits, labels);
+
+        // ---- backward ----
+        let mut grads: Vec<Option<SageLayerGrad>> = (0..num_layers).map(|_| None).collect();
+        let mut dz = dlogits; // grad wrt pre-activation of current layer
+        for l in (0..num_layers).rev() {
+            let block = &batch.blocks[l];
+            let layer = &self.layers[l];
+            let x_in = &inputs[l];
+            let agg = &aggs[l];
+            // weight grads
+            let x_self = x_in.gather(&block.self_idx);
+            let g = SageLayerGrad {
+                w_self: x_self.t_matmul(&dz),
+                w_nbr: agg.t_matmul(&dz),
+                bias: dz.col_sum(),
+            };
+            grads[l] = Some(g);
+            if l == 0 {
+                break;
+            }
+            // grad wrt layer input (= previous layer's post-ReLU output)
+            let mut dx = Mat::zeros(x_in.rows, x_in.cols);
+            // self path: dx[self_idx[d]] += dz[d] @ w_self^T
+            let dself = dz.matmul_t(&layer.w_self);
+            for (d, &si) in block.self_idx.iter().enumerate() {
+                let dst = dx.row_mut(si as usize);
+                for (o, &v) in dst.iter_mut().zip(dself.row(d)) {
+                    *o += v;
+                }
+            }
+            // neighbor path: dagg = dz @ w_nbr^T, scattered as mean
+            let dagg = dz.matmul_t(&layer.w_nbr);
+            scatter_mean_grad(&dagg, block, &mut dx);
+            // through ReLU of the previous layer
+            Mat::relu_backward(&mut dx, &pres[l - 1]);
+            dz = dx;
+        }
+
+        let grads: Vec<SageLayerGrad> = grads.into_iter().map(|g| g.unwrap()).collect();
+        (
+            StepOutput { loss, correct, total: count_valid(labels) },
+            grads,
+        )
+    }
+}
+
+fn count_valid(labels: &[u16]) -> u32 {
+    labels.iter().filter(|&&y| y != u16::MAX).count() as u32
+}
+
+/// Masked mean aggregation: `agg[d] = mean over valid nbr slots of src rows`.
+/// This is the computation the L1 Pallas kernel implements on device.
+pub fn aggregate_mean(src: &Mat, block: &LayerBlock) -> Mat {
+    let f = block.fanout as usize;
+    let mut out = Mat::zeros(block.num_dst as usize, src.cols);
+    for d in 0..block.num_dst as usize {
+        let slots = &block.nbr_idx[d * f..(d + 1) * f];
+        let mut count = 0f32;
+        {
+            let orow = out.row_mut(d);
+            for &ni in slots {
+                if ni != NO_NEIGHBOR {
+                    count += 1.0;
+                    for (o, &x) in orow.iter_mut().zip(src.row(ni as usize)) {
+                        *o += x;
+                    }
+                }
+            }
+        }
+        if count > 0.0 {
+            let inv = 1.0 / count;
+            for o in out.row_mut(d) {
+                *o *= inv;
+            }
+        }
+    }
+    out
+}
+
+/// Backward of [`aggregate_mean`]: `dx[nbr] += dagg[d] / count(d)`.
+fn scatter_mean_grad(dagg: &Mat, block: &LayerBlock, dx: &mut Mat) {
+    let f = block.fanout as usize;
+    for d in 0..block.num_dst as usize {
+        let slots = &block.nbr_idx[d * f..(d + 1) * f];
+        let count = slots.iter().filter(|&&ni| ni != NO_NEIGHBOR).count();
+        if count == 0 {
+            continue;
+        }
+        let inv = 1.0 / count as f32;
+        for &ni in slots {
+            if ni != NO_NEIGHBOR {
+                let row = dx.row_mut(ni as usize);
+                for (o, &g) in row.iter_mut().zip(dagg.row(d)) {
+                    *o += g * inv;
+                }
+            }
+        }
+    }
+}
+
+fn layer_forward(layer: &SageLayer, src: &Mat, block: &LayerBlock) -> Mat {
+    let agg = aggregate_mean(src, block);
+    layer_forward_with_agg(layer, src, &agg, block)
+}
+
+fn layer_forward_with_agg(layer: &SageLayer, src: &Mat, agg: &Mat, block: &LayerBlock) -> Mat {
+    let x_self = src.gather(&block.self_idx);
+    let mut z = x_self.matmul(&layer.w_self);
+    let zn = agg.matmul(&layer.w_nbr);
+    for (a, &b) in z.data.iter_mut().zip(&zn.data) {
+        *a += b;
+    }
+    for r in 0..z.rows {
+        for (x, &b) in z.row_mut(r).iter_mut().zip(&layer.bias) {
+            *x += b;
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset};
+    use crate::graph::build_dataset;
+    use crate::sampler::{sample_blocks, Fanout};
+
+    fn tiny_batch() -> (crate::graph::Dataset, SampledBatch, Mat, Vec<u16>) {
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), true);
+        let seeds: Vec<u32> = ds.train_nodes.iter().take(16).copied().collect();
+        let batch = sample_blocks(
+            &ds.graph,
+            &seeds,
+            &[Fanout::Sample(4), Fanout::Sample(3)],
+            9,
+        );
+        let d = ds.config.feature_dim as usize;
+        let mut x0 = Mat::zeros(batch.node_layers[0].len(), d);
+        for (i, &v) in batch.node_layers[0].iter().enumerate() {
+            x0.row_mut(i).copy_from_slice(ds.feature_row(v));
+        }
+        let labels: Vec<u16> = batch.seeds().iter().map(|&s| ds.labels[s as usize]).collect();
+        (ds, batch, x0, labels)
+    }
+
+    #[test]
+    fn aggregate_mean_hand_case() {
+        // 3 src rows, 2 dst; dst0 ← rows {0,2}, dst1 ← none
+        let src = Mat::from_vec(3, 2, vec![1., 2., 10., 20., 3., 4.]);
+        let block = LayerBlock {
+            fanout: 2,
+            num_dst: 2,
+            self_idx: vec![0, 1],
+            nbr_idx: vec![0, 2, NO_NEIGHBOR, NO_NEIGHBOR],
+        };
+        let agg = aggregate_mean(&src, &block);
+        assert_eq!(agg.row(0), &[2.0, 3.0]);
+        assert_eq!(agg.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (ds, batch, x0, _labels) = tiny_batch();
+        let model = SageModel::new(ds.config.feature_dim as usize, 8, ds.config.num_classes as usize, 2, 1);
+        let logits = model.forward(&x0, &batch);
+        assert_eq!(logits.rows, batch.seeds().len());
+        assert_eq!(logits.cols, ds.config.num_classes as usize);
+    }
+
+    #[test]
+    fn loss_decreases_over_steps() {
+        let (ds, batch, x0, labels) = tiny_batch();
+        let mut model =
+            SageModel::new(ds.config.feature_dim as usize, 8, ds.config.num_classes as usize, 2, 1);
+        let first = model.train_step(&x0, &batch, &labels, 0.1).loss;
+        let mut last = first;
+        for _ in 0..30 {
+            last = model.train_step(&x0, &batch, &labels, 0.1).loss;
+        }
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn gradients_numerically_correct() {
+        // Numerical gradient check across every parameter group of both layers.
+        let (ds, batch, x0, labels) = tiny_batch();
+        let model =
+            SageModel::new(ds.config.feature_dim as usize, 6, ds.config.num_classes as usize, 2, 5);
+        let (_, grads) = model.forward_backward(&x0, &batch, &labels);
+        let eps = 3e-3f32;
+        let check = |get: &dyn Fn(&mut SageModel) -> &mut f32, analytic: f32| {
+            let mut m = model.clone();
+            *get(&mut m) += eps;
+            let lp = m.evaluate(&x0, &batch, &labels).loss;
+            let mut m = model.clone();
+            *get(&mut m) -= eps;
+            let lm = m.evaluate(&x0, &batch, &labels).loss;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - analytic).abs() < 2e-2_f32.max(0.05 * analytic.abs()),
+                "numeric {numeric} vs analytic {analytic}"
+            );
+        };
+        // spot-check a few coordinates in each group
+        for l in 0..2 {
+            for idx in [0usize, 3, 11] {
+                let a = grads[l].w_self.data[idx];
+                check(&|m: &mut SageModel| &mut m.layers[l].w_self.data[idx], a);
+                let a = grads[l].w_nbr.data[idx];
+                check(&|m: &mut SageModel| &mut m.layers[l].w_nbr.data[idx], a);
+            }
+            let a = grads[l].bias[1];
+            check(&|m: &mut SageModel| &mut m.layers[l].bias[1], a);
+        }
+    }
+
+    #[test]
+    fn padded_labels_do_not_affect_grads() {
+        let (ds, batch, x0, mut labels) = tiny_batch();
+        let model =
+            SageModel::new(ds.config.feature_dim as usize, 6, ds.config.num_classes as usize, 2, 2);
+        let (_, g_full) = model.forward_backward(&x0, &batch, &labels);
+        // mask half the labels — loss changes but gradient wrt masked rows is 0;
+        // quick sanity: gradients differ (denominator change) but stay finite
+        for y in labels.iter_mut().skip(8) {
+            *y = u16::MAX;
+        }
+        let (out, g_half) = model.forward_backward(&x0, &batch, &labels);
+        assert_eq!(out.total, 8);
+        assert!(g_half[0].w_self.norm().is_finite());
+        assert!(g_full[0].w_self.norm() != g_half[0].w_self.norm());
+    }
+
+    #[test]
+    fn three_layer_model_trains() {
+        // depth generality: the host path supports arbitrary fanout depth
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), true);
+        let seeds: Vec<u32> = ds.train_nodes.iter().take(16).copied().collect();
+        let fo = [Fanout::Sample(3), Fanout::Sample(3), Fanout::Sample(3)];
+        let batch = sample_blocks(&ds.graph, &seeds, &fo, 4);
+        let d = ds.config.feature_dim as usize;
+        let mut x0 = Mat::zeros(batch.node_layers[0].len(), d);
+        for (i, &v) in batch.node_layers[0].iter().enumerate() {
+            x0.row_mut(i).copy_from_slice(ds.feature_row(v));
+        }
+        let labels: Vec<u16> = batch.seeds().iter().map(|&s| ds.labels[s as usize]).collect();
+        let mut model = SageModel::new(d, 8, ds.config.num_classes as usize, 3, 2);
+        assert_eq!(model.layers.len(), 3);
+        let first = model.train_step(&x0, &batch, &labels, 0.1).loss;
+        let mut last = first;
+        for _ in 0..25 {
+            last = model.train_step(&x0, &batch, &labels, 0.1).loss;
+        }
+        assert!(last < first, "3-layer loss {first} -> {last}");
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let m = SageModel::new(100, 64, 47, 2, 0);
+        let expect = (100 * 64 * 2 + 64) + (64 * 47 * 2 + 47);
+        assert_eq!(m.num_params(), expect);
+    }
+}

@@ -1,0 +1,335 @@
+//! Minimal f32 matrix kernels for the host-path GraphSAGE trainer.
+//!
+//! The host path exists to (a) run convergence experiments without the PJRT
+//! artifact and (b) cross-check the AOT-compiled JAX model. Kernels are
+//! simple blocked loops — fast enough for the ~1 GFLOP/step workloads here;
+//! the optimized device path is the Pallas/XLA artifact.
+
+/// Row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From existing data (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Kaiming-ish random init in [-lim, lim], deterministic in `seed`.
+    pub fn init(rows: usize, cols: usize, seed: u64) -> Mat {
+        let lim = (6.0 / (rows + cols) as f32).sqrt();
+        let mut rng = crate::sampler::seed::Rng::new(seed);
+        let data = (0..rows * cols).map(|_| (rng.f32() * 2.0 - 1.0) * lim).collect();
+        Mat { rows, cols, data }
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self @ other` — blocked ikj matmul.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        matmul_into(self, other, &mut out, false);
+        out
+    }
+
+    /// `self^T @ other` (used for weight gradients).
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        // out[i,j] = Σ_r self[r,i] * other[r,j]
+        for r in 0..self.rows {
+            let a = self.row(r);
+            let b = other.row(r);
+            for (i, &ai) in a.iter().enumerate() {
+                if ai == 0.0 {
+                    continue;
+                }
+                let o = out.row_mut(i);
+                for (j, &bj) in b.iter().enumerate() {
+                    o[j] += ai * bj;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` (used for input gradients).
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for r in 0..self.rows {
+            let a = self.row(r);
+            let o = out.row_mut(r);
+            for j in 0..other.rows {
+                let b = other.row(j);
+                let mut acc = 0.0;
+                for k in 0..self.cols {
+                    acc += a[k] * b[k];
+                }
+                o[j] = acc;
+            }
+        }
+        out
+    }
+
+    /// In-place `self -= lr * g` (SGD step).
+    pub fn sgd(&mut self, g: &Mat, lr: f32) {
+        assert_eq!(self.data.len(), g.data.len());
+        for (w, &d) in self.data.iter_mut().zip(&g.data) {
+            *w -= lr * d;
+        }
+    }
+
+    /// Element-wise ReLU (new matrix).
+    pub fn relu(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x.max(0.0)).collect(),
+        }
+    }
+
+    /// Backprop through ReLU: `grad * (pre > 0)` in place on `grad`.
+    pub fn relu_backward(grad: &mut Mat, pre: &Mat) {
+        for (g, &z) in grad.data.iter_mut().zip(&pre.data) {
+            if z <= 0.0 {
+                *g = 0.0;
+            }
+        }
+    }
+
+    /// Column sums (bias gradients).
+    pub fn col_sum(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm (diagnostics / tests).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|&x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Gather rows by index: `out[i] = self[idx[i]]`.
+    pub fn gather(&self, idx: &[u32]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r as usize));
+        }
+        out
+    }
+}
+
+/// `out (+)= a @ b`; zeroes `out` first unless `accumulate`.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.cols);
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    // ikj order: streams through b and out rows — cache-friendly for row-major
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+            for (o, &bkj) in orow.iter_mut().zip(brow) {
+                *o += aik * bkj;
+            }
+        }
+    }
+}
+
+/// Softmax cross-entropy over logits rows with integer labels.
+///
+/// Returns `(mean_loss, correct_count, dlogits)` where `dlogits` is already
+/// divided by the number of valid rows (mean reduction). Rows with label
+/// `u16::MAX` are padding and contribute nothing.
+pub fn softmax_xent(logits: &Mat, labels: &[u16]) -> (f64, u32, Mat) {
+    assert_eq!(logits.rows, labels.len());
+    let valid = labels.iter().filter(|&&y| y != u16::MAX).count().max(1);
+    let mut grad = Mat::zeros(logits.rows, logits.cols);
+    let mut loss = 0.0f64;
+    let mut correct = 0u32;
+    for r in 0..logits.rows {
+        let y = labels[r];
+        if y == u16::MAX {
+            continue;
+        }
+        let row = logits.row(r);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &x in row {
+            sum += (x - maxv).exp();
+        }
+        let log_z = maxv + sum.ln();
+        loss += (log_z - row[y as usize]) as f64;
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if argmax == y as usize {
+            correct += 1;
+        }
+        let g = grad.row_mut(r);
+        for (j, &x) in row.iter().enumerate() {
+            g[j] = ((x - log_z).exp() - if j == y as usize { 1.0 } else { 0.0 })
+                / valid as f32;
+        }
+    }
+    (loss / valid as f64, correct, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let a = Mat::init(5, 3, 1);
+        let b = Mat::init(5, 4, 2);
+        let direct = a.t_matmul(&b);
+        // explicit a^T
+        let mut at = Mat::zeros(3, 5);
+        for r in 0..5 {
+            for c in 0..3 {
+                at.row_mut(c)[r] = a.row(r)[c];
+            }
+        }
+        let expect = at.matmul(&b);
+        for (x, y) in direct.data.iter().zip(&expect.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let a = Mat::init(4, 3, 3);
+        let b = Mat::init(6, 3, 4);
+        let direct = a.matmul_t(&b);
+        let mut bt = Mat::zeros(3, 6);
+        for r in 0..6 {
+            for c in 0..3 {
+                bt.row_mut(c)[r] = b.row(r)[c];
+            }
+        }
+        let expect = a.matmul(&bt);
+        for (x, y) in direct.data.iter().zip(&expect.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relu_and_backward() {
+        let z = Mat::from_vec(1, 4, vec![-1.0, 0.0, 0.5, 2.0]);
+        let h = z.relu();
+        assert_eq!(h.data, vec![0.0, 0.0, 0.5, 2.0]);
+        let mut g = Mat::from_vec(1, 4, vec![1.0; 4]);
+        Mat::relu_backward(&mut g, &z);
+        assert_eq!(g.data, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits() {
+        let logits = Mat::zeros(2, 4);
+        let (loss, _correct, grad) = softmax_xent(&logits, &[0, 1]);
+        assert!((loss - (4f64).ln()).abs() < 1e-6);
+        // gradient rows sum to zero
+        for r in 0..2 {
+            let s: f32 = grad.row(r).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_ignores_padding() {
+        let logits = Mat::from_vec(2, 2, vec![5.0, 0.0, 0.0, 5.0]);
+        let (loss, correct, grad) = softmax_xent(&logits, &[0, u16::MAX]);
+        assert!(loss < 0.1);
+        assert_eq!(correct, 1);
+        assert!(grad.row(1).iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn softmax_gradient_numerically_correct() {
+        let mut logits = Mat::init(3, 5, 7);
+        let labels = [1u16, 4, 2];
+        let (_, _, grad) = softmax_xent(&logits, &labels);
+        let eps = 1e-3f32;
+        for idx in [0usize, 4, 7, 14] {
+            let orig = logits.data[idx];
+            logits.data[idx] = orig + eps;
+            let (lp, _, _) = softmax_xent(&logits, &labels);
+            logits.data[idx] = orig - eps;
+            let (lm, _, _) = softmax_xent(&logits, &labels);
+            logits.data[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - grad.data[idx]).abs() < 1e-3,
+                "idx {idx}: numeric {numeric} analytic {}",
+                grad.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn gather_rows() {
+        let m = Mat::from_vec(3, 2, vec![0., 1., 10., 11., 20., 21.]);
+        let g = m.gather(&[2, 0]);
+        assert_eq!(g.data, vec![20., 21., 0., 1.]);
+    }
+
+    #[test]
+    fn sgd_updates() {
+        let mut w = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let g = Mat::from_vec(1, 2, vec![0.5, -0.5]);
+        w.sgd(&g, 0.1);
+        assert_eq!(w.data, vec![0.95, 2.05]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Benchmark harness: timing, repetition, and paper-style table output
+//! (criterion stand-in, tuned for regenerating the paper's tables/figures).
+
+use std::time::Instant;
+
+/// Measure `f`'s wall time over `reps` repetitions; returns (mean, min) secs.
+pub fn time_reps<F: FnMut()>(reps: u32, mut f: F) -> (f64, f64) {
+    assert!(reps >= 1);
+    let mut total = 0.0;
+    let mut min = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        min = min.min(dt);
+    }
+    (total / reps as f64, min)
+}
+
+/// Throughput-style measurement: run `f` until `min_time` seconds elapse,
+/// return (iterations, elapsed, per-iter seconds).
+pub fn time_until<F: FnMut()>(min_time: f64, mut f: F) -> (u64, f64, f64) {
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    loop {
+        f();
+        iters += 1;
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_time {
+            return (iters, dt, dt / iters as f64);
+        }
+    }
+}
+
+/// A fixed-width text table, printed like the paper's result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, &w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Format bytes human-readably (KB/MB/GB, decimal as the paper uses).
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1e3 {
+        format!("{b:.0}B")
+    } else if b < 1e6 {
+        format!("{:.1}KB", b / 1e3)
+    } else if b < 1e9 {
+        format!("{:.1}MB", b / 1e6)
+    } else {
+        format!("{:.2}GB", b / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reps_positive() {
+        let (mean, min) = time_reps(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean >= min);
+        assert!(min >= 0.0);
+    }
+
+    #[test]
+    fn time_until_runs_long_enough() {
+        let (iters, elapsed, per) = time_until(0.01, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(elapsed >= 0.01);
+        assert!(iters >= 1);
+        assert!((per - elapsed / iters as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "x"]);
+        t.row(&["a".into(), "1.00".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("longer"));
+        let lines: Vec<&str> = r.lines().filter(|l| !l.is_empty()).collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_secs(0.5e-4), "50.0µs");
+        assert_eq!(fmt_secs(0.05), "50.00ms");
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_bytes(500.0), "500B");
+        assert_eq!(fmt_bytes(34.45e6), "34.5MB");
+        assert_eq!(fmt_bytes(5.18e9), "5.18GB");
+    }
+}

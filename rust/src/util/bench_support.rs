@@ -1,0 +1,97 @@
+//! Shared configuration for the paper-reproduction benches
+//! (`rust/benches/*` regenerate every table and figure in the evaluation).
+//!
+//! The paper runs Reddit/OGBN-Products/OGBN-Papers100M on a 4-machine
+//! cluster at batch sizes 1000–3000. Our synthetic datasets are scaled down
+//! (DESIGN.md §3), so two knobs keep the paper's batch sizes meaningful:
+//!
+//! - `RAPIDGNN_BENCH_SCALE` (default 1.0) scales dataset node counts;
+//! - the train fraction is raised on products/papers so each worker still
+//!   runs ≥ a handful of batches per epoch at batch 1000–3000 (the real
+//!   OGBN splits are tiny fractions of graphs 20–450× larger than ours).
+//!
+//! Both substitutions are recorded per-experiment in EXPERIMENTS.md.
+
+use crate::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+
+/// Paper batch sizes (Table 2 / Figs 4–5).
+pub const PAPER_BATCHES: [u32; 3] = [1000, 2000, 3000];
+
+/// Dataset scale factor from the environment (default 1.0).
+pub fn bench_scale() -> f64 {
+    std::env::var("RAPIDGNN_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Bench dataset config: preset scaled, with the train fraction raised so
+/// paper-scale batch sizes produce multi-batch epochs per worker.
+pub fn bench_dataset(preset: DatasetPreset) -> DatasetConfig {
+    let mut ds = DatasetConfig::preset(preset, bench_scale());
+    ds.train_fraction = match preset {
+        DatasetPreset::RedditSim => 0.66, // paper-like: Reddit's split is large
+        DatasetPreset::ProductsSim => 0.40,
+        DatasetPreset::PapersSim => 0.25,
+        DatasetPreset::Tiny => ds.train_fraction,
+    };
+    ds
+}
+
+/// The paper's Table-2 run configuration for (dataset, engine, batch).
+pub fn paper_run(preset: DatasetPreset, engine: Engine, batch_size: u32) -> RunConfig {
+    RunConfig {
+        dataset: bench_dataset(preset),
+        engine,
+        num_workers: 4,
+        batch_size,
+        fanout: vec![10, 25],
+        epochs: 4, // paper trains 10; 4 is past the cache-warm steady state
+        // Cache sized at each dataset's Fig-5 diminishing-returns knee,
+        // proportional to its per-epoch distinct remote set (the paper does
+        // not state n_hot; its Fig-5 sweep flattens at the equivalent
+        // point). Worst memory: 48k × d=128 × f32 × 2 buffers ≈ 49 MB.
+        n_hot: match preset {
+            DatasetPreset::RedditSim => 14_000,
+            DatasetPreset::ProductsSim => 32_000,
+            _ => 48_000,
+        },
+        prefetch_q: 4,
+        ..Default::default()
+    }
+}
+
+/// Hot-set sizes swept in Fig 5.
+pub const FIG5_CACHE_SIZES: [u32; 8] = [1, 1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_run_validates_for_all_cells() {
+        for preset in DatasetPreset::PAPER {
+            for engine in Engine::ALL {
+                for b in PAPER_BATCHES {
+                    paper_run(preset, engine, b).validate().unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bench_datasets_have_multiple_batches_per_worker() {
+        for preset in DatasetPreset::PAPER {
+            let cfg = paper_run(preset, Engine::Rapid, 3000);
+            let approx_train =
+                (cfg.dataset.num_nodes as f64 * cfg.dataset.train_fraction) as u32;
+            let per_worker = approx_train / cfg.num_workers;
+            assert!(
+                per_worker / 3000 >= 2,
+                "{}: only {} seeds/worker at batch 3000",
+                cfg.dataset.name,
+                per_worker
+            );
+        }
+    }
+}

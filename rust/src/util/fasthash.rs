@@ -1,0 +1,77 @@
+//! Fast hashing for u32-keyed maps (§Perf).
+//!
+//! The coordinator's hot maps (cache index, frequency tallies, block
+//! position maps) key on dense-ish `u32` node ids; std's SipHash costs more
+//! than the probe itself. This single-multiply finalizer (a 64-bit
+//! multiply-xor of the Fibonacci constant — the splitmix64 tail) keeps full
+//! avalanche on 32-bit keys at ~1 ns/hash.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Hasher specialized for one `write_u32`/`write_u64` call.
+#[derive(Default)]
+pub struct IdHasher {
+    state: u64,
+}
+
+impl Hasher for IdHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        // generic fallback (unused on the hot paths)
+        for &b in bytes {
+            self.state = (self.state ^ b as u64).wrapping_mul(0x100000001B3);
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.write_u64(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        let mut z = v.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        self.state = z ^ (z >> 31);
+    }
+}
+
+/// `HashMap` with the id hasher.
+pub type IdHashMap<K, V> = HashMap<K, V, BuildHasherDefault<IdHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_like_std() {
+        let mut m: IdHashMap<u32, u32> = IdHashMap::default();
+        for i in 0..10_000u32 {
+            m.insert(i * 3, i);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in 0..10_000u32 {
+            assert_eq!(m[&(i * 3)], i);
+            assert!(!m.contains_key(&(i * 3 + 1)));
+        }
+    }
+
+    #[test]
+    fn hash_differs_across_keys() {
+        use std::hash::Hash;
+        let h = |v: u32| {
+            let mut hh = IdHasher::default();
+            v.hash(&mut hh);
+            hh.finish()
+        };
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..100_000u32 {
+            assert!(seen.insert(h(i)), "collision at {i}");
+        }
+    }
+}

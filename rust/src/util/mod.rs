@@ -1,0 +1,26 @@
+//! Dependency-free infrastructure substrates.
+//!
+//! This build environment is fully offline, so the usual ecosystem crates
+//! (serde, toml, crossbeam, rayon, criterion, tempfile…) are unavailable.
+//! Everything the framework needs is implemented here, tested like any other
+//! module:
+//!
+//! - [`value`] — a dynamic value tree with JSON and TOML-subset
+//!   serialization/parsing (config files + bench artifacts).
+//! - [`mpmc`] — bounded multi-producer multi-consumer ring (the paper's
+//!   Sampler→Prefetcher→Trainer queues).
+//! - [`parallel`] — scoped data-parallel helpers over std threads.
+//! - [`tempdir`] — self-cleaning temporary directories for tests/benches.
+//! - [`bench`] — timing + table formatting harness used by every
+//!   `rust/benches/*` binary.
+//! - [`proptest_lite`] — randomized property-test driver with failure-case
+//!   reporting.
+
+pub mod bench;
+pub mod bench_support;
+pub mod fasthash;
+pub mod mpmc;
+pub mod parallel;
+pub mod proptest_lite;
+pub mod tempdir;
+pub mod value;

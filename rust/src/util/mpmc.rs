@@ -1,0 +1,270 @@
+//! Bounded multi-producer multi-consumer ring queue.
+//!
+//! The paper's Sampler→Prefetcher and Prefetcher→Trainer links are "lock-free
+//! multi-producer, multi-consumer (MPMC) rings" (§4). This implementation is
+//! a Mutex+Condvar ring — at the queue depths involved (Q ≤ 32, thousands of
+//! ops/second) lock contention is unmeasurable, and the *semantics* the paper
+//! relies on are fully reproduced: bounded capacity, producer blocking when
+//! full (backpressure: "stalls only when the Trainer lags"), consumer
+//! blocking when empty, and clean disconnect on either side.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Sending half. Cloneable (multi-producer).
+pub struct Sender<T>(Arc<Inner<T>>);
+
+/// Receiving half. Cloneable (multi-consumer).
+pub struct Receiver<T>(Arc<Inner<T>>);
+
+/// Error returned when the other side has disconnected.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Disconnected;
+
+/// Create a bounded MPMC channel of capacity `cap` (≥ 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap >= 1, "capacity must be >= 1");
+    let inner = Arc::new(Inner {
+        q: Mutex::new(State {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+            senders: 1,
+            receivers: 1,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; returns `Err` if all receivers are gone.
+    pub fn send(&self, v: T) -> Result<(), Disconnected> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(Disconnected);
+            }
+            if st.buf.len() < st.cap {
+                st.buf.push_back(v);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; `Err(Some(v))` when full, `Err(None)` when
+    /// disconnected.
+    pub fn try_send(&self, v: T) -> Result<(), Option<T>> {
+        let mut st = self.0.q.lock().unwrap();
+        if st.receivers == 0 {
+            return Err(None);
+        }
+        if st.buf.len() < st.cap {
+            st.buf.push_back(v);
+            self.0.not_empty.notify_one();
+            Ok(())
+        } else {
+            Err(Some(v))
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `Err` once the queue is empty *and* all senders are
+    /// gone.
+    pub fn recv(&self) -> Result<T, Disconnected> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(Disconnected);
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.q.lock().unwrap();
+        let v = st.buf.pop_front();
+        if v.is_some() {
+            self.0.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Current queue depth (diagnostics).
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().buf.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().receivers += 1;
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn capacity_enforced_try_send() {
+        let (tx, rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(Some(3)));
+        rx.try_recv().unwrap();
+        tx.try_send(3).unwrap();
+    }
+
+    #[test]
+    fn recv_errors_after_all_senders_drop() {
+        let (tx, rx) = bounded::<i32>(2);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Err(Disconnected));
+    }
+
+    #[test]
+    fn send_errors_after_all_receivers_drop() {
+        let (tx, rx) = bounded::<i32>(2);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(Disconnected));
+    }
+
+    #[test]
+    fn blocked_sender_unblocks_on_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(0).unwrap();
+        let h = thread::spawn(move || tx.send(1));
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.recv().unwrap(), 0);
+        assert_eq!(rx.recv().unwrap(), 1);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn blocked_sender_unblocks_on_receiver_drop() {
+        let (tx, rx) = bounded(1);
+        tx.send(0).unwrap();
+        let h = thread::spawn(move || tx.send(1));
+        thread::sleep(Duration::from_millis(30));
+        drop(rx);
+        assert_eq!(h.join().unwrap(), Err(Disconnected));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        const PRODUCERS: usize = 4;
+        const CONSUMERS: usize = 3;
+        const PER: usize = 500;
+        let (tx, rx) = bounded::<usize>(7);
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..PER {
+                    tx.send(p * PER + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..CONSUMERS {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..PRODUCERS * PER).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn len_reports_depth() {
+        let (tx, rx) = bounded(4);
+        assert!(rx.is_empty());
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.len(), 2);
+    }
+}

@@ -1,0 +1,108 @@
+//! Scoped data-parallel helpers over std threads (rayon stand-in).
+
+/// Process disjoint mutable chunks of `data` in parallel. `f(chunk_index,
+/// chunk)` runs on a worker thread; chunking is by `chunk_size` elements.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    assert!(chunk_size > 0);
+    let threads = available_threads();
+    if threads <= 1 || data.len() <= chunk_size {
+        for (i, chunk) in data.chunks_mut(chunk_size).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let f = &f;
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
+    let work = std::sync::Mutex::new(chunks.into_iter());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let next = work.lock().unwrap().next();
+                match next {
+                    Some((i, chunk)) => f(i, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, returning results in index order.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Send + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    par_chunks_mut(&mut out, n.div_ceil(available_threads().max(1)).max(1), |ci, chunk| {
+        let base = ci * n.div_ceil(available_threads().max(1)).max(1);
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = Some(f(base + j));
+        }
+    });
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+/// Worker thread count (cores, capped at 16 — the workloads here are
+/// memory-bound well before that).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut data = vec![0u32; 10_037];
+        par_chunks_mut(&mut data, 64, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_index_is_correct() {
+        let mut data = vec![0usize; 1000];
+        par_chunks_mut(&mut data, 100, |i, chunk| {
+            for x in chunk.iter_mut() {
+                *x = i;
+            }
+        });
+        for (j, &x) in data.iter().enumerate() {
+            assert_eq!(x, j / 100);
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(1000, |i| i * 3);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+        }
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<u8> = par_map(0, |_| 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_chunk_runs_inline() {
+        let mut data = vec![5u8; 3];
+        par_chunks_mut(&mut data, 100, |i, chunk| {
+            assert_eq!(i, 0);
+            chunk[0] = 9;
+        });
+        assert_eq!(data[0], 9);
+    }
+}

@@ -1,0 +1,86 @@
+//! Minimal property-test driver (proptest stand-in).
+//!
+//! Runs a property over `n` randomly generated cases from a deterministic
+//! seed; on failure, panics with the failing case's debug representation and
+//! the case index so the exact input can be reproduced.
+
+use crate::sampler::seed::Rng;
+
+/// Run `prop(case)` for `n` cases drawn by `gen(rng)`.
+///
+/// Deterministic: case `i` for a given `seed` is always the same, so failures
+/// are reproducible by seed alone.
+pub fn forall<T: std::fmt::Debug, G, P>(seed: u64, n: u32, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!("property failed at case {i} (seed {seed}): {msg}\ninput: {case:#?}");
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::sampler::seed::Rng;
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        lo + rng.f64() * (hi - lo)
+    }
+
+    /// Vector of length `len` with elements from `f`.
+    pub fn vec_of<T>(rng: &mut Rng, len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        (0..len).map(|_| f(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(1, 100, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 100"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_case_report() {
+        forall(2, 100, |r| r.below(10), |&x| {
+            if x != 7 {
+                Ok(())
+            } else {
+                Err("hit 7".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = crate::sampler::seed::Rng::new(3);
+        for _ in 0..1000 {
+            let u = gen::usize_in(&mut rng, 5, 9);
+            assert!((5..=9).contains(&u));
+            let f = gen::f64_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = gen::vec_of(&mut rng, 7, |r| r.below(3));
+        assert_eq!(v.len(), 7);
+    }
+}

@@ -1,0 +1,751 @@
+//! Dynamic value tree with JSON and TOML-subset round-tripping.
+//!
+//! Replaces serde/serde_json/toml in this offline environment. The TOML
+//! subset covers what [`crate::config`] needs: top-level and nested
+//! `[table.headers]`, `key = value` with strings, integers, floats, booleans,
+//! and homogeneous arrays. JSON support is complete (emit + parse) and is
+//! used for bench artifacts and report round-trips.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A dynamic value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Empty table.
+    pub fn table() -> Value {
+        Value::Table(BTreeMap::new())
+    }
+
+    /// Insert into a table value (panics on non-table — construction bug).
+    pub fn set(&mut self, key: &str, v: impl Into<Value>) -> &mut Self {
+        match self {
+            Value::Table(m) => {
+                m.insert(key.to_string(), v.into());
+            }
+            _ => panic!("set() on non-table"),
+        }
+        self
+    }
+
+    /// Get a table entry.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Table(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Required typed accessors for config parsing.
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Ok(s),
+            other => bail!("key '{key}': expected string, got {other:?}"),
+        }
+    }
+
+    pub fn req_i64(&self, key: &str) -> Result<i64> {
+        match self.get(key) {
+            Some(Value::Int(i)) => Ok(*i),
+            Some(Value::Float(f)) if f.fract() == 0.0 => Ok(*f as i64),
+            other => bail!("key '{key}': expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn req_u32(&self, key: &str) -> Result<u32> {
+        let v = self.req_i64(key)?;
+        u32::try_from(v).map_err(|_| anyhow!("key '{key}': {v} out of u32 range"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        let v = self.req_i64(key)?;
+        u64::try_from(v).map_err(|_| anyhow!("key '{key}': {v} out of u64 range"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        match self.get(key) {
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            other => bail!("key '{key}': expected float, got {other:?}"),
+        }
+    }
+
+    pub fn req_bool(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            Some(Value::Bool(b)) => Ok(*b),
+            other => bail!("key '{key}': expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn req_table(&self, key: &str) -> Result<&Value> {
+        match self.get(key) {
+            Some(t @ Value::Table(_)) => Ok(t),
+            other => bail!("key '{key}': expected table, got {other:?}"),
+        }
+    }
+
+    pub fn req_u32_array(&self, key: &str) -> Result<Vec<u32>> {
+        match self.get(key) {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => {
+                        u32::try_from(*i).map_err(|_| anyhow!("array item out of range"))
+                    }
+                    other => bail!("key '{key}': non-integer array item {other:?}"),
+                })
+                .collect(),
+            other => bail!("key '{key}': expected array, got {other:?}"),
+        }
+    }
+
+    // ---------------- JSON ----------------
+
+    /// Serialize to compact JSON.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        self.write_json(&mut s, None, 0);
+        s
+    }
+
+    /// Serialize to pretty JSON (2-space indent).
+    pub fn to_json_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_json(&mut s, Some(2), 0);
+        s
+    }
+
+    fn write_json(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let (nl, pad, pad_in) = match indent {
+            Some(w) => (
+                "\n",
+                " ".repeat(w * depth),
+                " ".repeat(w * (depth + 1)),
+            ),
+            None => ("", String::new(), String::new()),
+        };
+        match self {
+            Value::Str(s) => {
+                out.push('"');
+                escape_json(s, out);
+                out.push('"');
+            }
+            Value::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Value::Float(f) => {
+                if f.is_finite() {
+                    if f.fract() == 0.0 && f.abs() < 1e15 {
+                        let _ = write!(out, "{f:.1}");
+                    } else {
+                        let _ = write!(out, "{f}");
+                    }
+                } else {
+                    // JSON has no NaN/inf; emit null (reports use NaN for
+                    // "not measured")
+                    out.push_str("null");
+                }
+            }
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    v.write_json(out, indent, depth + 1);
+                }
+                if !items.is_empty() {
+                    out.push_str(nl);
+                    out.push_str(&pad);
+                }
+                out.push(']');
+            }
+            Value::Table(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    out.push('"');
+                    escape_json(k, out);
+                    out.push_str("\":");
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write_json(out, indent, depth + 1);
+                }
+                if !m.is_empty() {
+                    out.push_str(nl);
+                    out.push_str(&pad);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse JSON text.
+    pub fn from_json(text: &str) -> Result<Value> {
+        let mut p = JsonParser { b: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    // ---------------- TOML subset ----------------
+
+    /// Serialize a table to TOML (nested tables become `[dotted.headers]`).
+    pub fn to_toml(&self) -> Result<String> {
+        let Value::Table(_) = self else {
+            bail!("TOML root must be a table");
+        };
+        let mut out = String::new();
+        self.write_toml_table(&mut out, "")?;
+        Ok(out)
+    }
+
+    fn write_toml_table(&self, out: &mut String, prefix: &str) -> Result<()> {
+        let Value::Table(m) = self else { unreachable!() };
+        // scalars/arrays first, then sub-tables
+        for (k, v) in m {
+            match v {
+                Value::Table(_) => {}
+                _ => {
+                    let _ = writeln!(out, "{k} = {}", toml_scalar(v)?);
+                }
+            }
+        }
+        for (k, v) in m {
+            if let Value::Table(_) = v {
+                let full = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                let _ = writeln!(out, "\n[{full}]");
+                v.write_toml_table(out, &full)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the TOML subset.
+    pub fn from_toml(text: &str) -> Result<Value> {
+        let mut root = Value::table();
+        let mut path: Vec<String> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_toml_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                let inner = line
+                    .strip_prefix('[')
+                    .and_then(|s| s.strip_suffix(']'))
+                    .ok_or_else(|| anyhow!("line {}: bad table header", lineno + 1))?;
+                path = inner.split('.').map(|s| s.trim().to_string()).collect();
+                ensure_path(&mut root, &path);
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim().to_string();
+            let val = parse_toml_value(v.trim())
+                .with_context(|| format!("line {}: value for '{key}'", lineno + 1))?;
+            let tbl = navigate(&mut root, &path);
+            if let Value::Table(m) = tbl {
+                m.insert(key, val);
+            }
+        }
+        Ok(root)
+    }
+}
+
+fn ensure_path(root: &mut Value, path: &[String]) {
+    let mut cur = root;
+    for p in path {
+        let Value::Table(m) = cur else { return };
+        cur = m.entry(p.clone()).or_insert_with(Value::table);
+    }
+}
+
+fn navigate<'a>(root: &'a mut Value, path: &[String]) -> &'a mut Value {
+    let mut cur = root;
+    for p in path {
+        let Value::Table(m) = cur else { unreachable!() };
+        cur = m.entry(p.clone()).or_insert_with(Value::table);
+    }
+    cur
+}
+
+fn strip_toml_comment(line: &str) -> &str {
+    // no '#' inside strings in our configs; safe simple strip
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn toml_scalar(v: &Value) -> Result<String> {
+    Ok(match v {
+        Value::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 && f.is_finite() && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+        Value::Arr(items) => {
+            let inner: Result<Vec<String>> = items.iter().map(toml_scalar).collect();
+            format!("[{}]", inner?.join(", "))
+        }
+        Value::Table(_) => bail!("inline tables unsupported"),
+    })
+}
+
+fn parse_toml_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>> =
+            inner.split(',').map(|p| parse_toml_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at offset {}", c as char, self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => {
+                self.literal("true")?;
+                Ok(Value::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                Ok(Value::Bool(false))
+            }
+            Some(b'n') => {
+                self.literal("null")?;
+                Ok(Value::Float(f64::NAN))
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at offset {}", other.map(|c| c as char), self.i),
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<()> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            bail!("bad literal at offset {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Table(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Table(m));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| anyhow!("dangling escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => bail!("bad escape \\{}", e as char),
+                    }
+                }
+                c => {
+                    // reconstruct UTF-8 multibyte sequences
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c);
+                        let chunk = std::str::from_utf8(&self.b[start..start + len])?;
+                        s.push_str(chunk);
+                        self.i = start + len;
+                    }
+                }
+            }
+        }
+        bail!("unterminated string")
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.i += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        if is_float {
+            Ok(Value::Float(text.parse()?))
+        } else {
+            Ok(Value::Int(text.parse()?))
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::Int(v)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Value {
+        Value::Int(v as i64)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::Int(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Float(v)
+    }
+}
+impl From<f32> for Value {
+    fn from(v: f32) -> Value {
+        Value::Float(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::Bool(v)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Value {
+        Value::Arr(v)
+    }
+}
+impl From<&[u32]> for Value {
+    fn from(v: &[u32]) -> Value {
+        Value::Arr(v.iter().map(|&x| Value::Int(x as i64)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Value {
+        let mut inner = Value::table();
+        inner.set("bandwidth", 1.25e9).set("latency", 0.00015);
+        let mut v = Value::table();
+        v.set("name", "reddit-sim")
+            .set("workers", 4u32)
+            .set("lr", 0.05f64)
+            .set("trace", true)
+            .set("fanout", &[10u32, 25][..])
+            .set("fabric", inner);
+        v
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let v = sample();
+        for text in [v.to_json(), v.to_json_pretty()] {
+            let back = Value::from_json(&text).unwrap();
+            assert_eq!(v, back, "from: {text}");
+        }
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        let mut v = Value::table();
+        v.set("s", "a\"b\\c\nd\te");
+        let back = Value::from_json(&v.to_json()).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn json_unicode() {
+        let mut v = Value::table();
+        v.set("s", "héllo ☃");
+        let back = Value::from_json(&v.to_json()).unwrap();
+        assert_eq!(back.req_str("s").unwrap(), "héllo ☃");
+    }
+
+    #[test]
+    fn json_nan_becomes_null_and_back() {
+        let mut v = Value::table();
+        v.set("x", f64::NAN);
+        let text = v.to_json();
+        assert!(text.contains("null"));
+        let back = Value::from_json(&text).unwrap();
+        match back.get("x") {
+            Some(Value::Float(f)) => assert!(f.is_nan()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(Value::from_json("{\"a\":").is_err());
+        assert!(Value::from_json("[1,2,]").is_err());
+        assert!(Value::from_json("{\"a\":1} extra").is_err());
+        assert!(Value::from_json("nul").is_err());
+    }
+
+    #[test]
+    fn json_empty_containers() {
+        assert_eq!(Value::from_json("{}").unwrap(), Value::table());
+        assert_eq!(Value::from_json("[]").unwrap(), Value::Arr(vec![]));
+    }
+
+    #[test]
+    fn json_negative_and_exponent_numbers() {
+        let v = Value::from_json("[-3, -2.5, 1e3, 2E-2]").unwrap();
+        assert_eq!(
+            v,
+            Value::Arr(vec![
+                Value::Int(-3),
+                Value::Float(-2.5),
+                Value::Float(1000.0),
+                Value::Float(0.02)
+            ])
+        );
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let v = sample();
+        let text = v.to_toml().unwrap();
+        let back = Value::from_toml(&text).unwrap();
+        assert_eq!(v, back, "from:\n{text}");
+    }
+
+    #[test]
+    fn toml_nested_headers() {
+        let text = "a = 1\n[x]\nb = 2.5\n[x.y]\nc = \"z\"\n";
+        let v = Value::from_toml(text).unwrap();
+        assert_eq!(v.req_i64("a").unwrap(), 1);
+        let x = v.req_table("x").unwrap();
+        assert_eq!(x.req_f64("b").unwrap(), 2.5);
+        assert_eq!(x.req_table("y").unwrap().req_str("c").unwrap(), "z");
+    }
+
+    #[test]
+    fn toml_comments_and_blanks() {
+        let text = "# header\na = 1 # trailing\n\nb = \"has # inside\"\n";
+        let v = Value::from_toml(text).unwrap();
+        assert_eq!(v.req_i64("a").unwrap(), 1);
+        assert_eq!(v.req_str("b").unwrap(), "has # inside");
+    }
+
+    #[test]
+    fn toml_arrays() {
+        let v = Value::from_toml("f = [10, 25]\ng = []\n").unwrap();
+        assert_eq!(v.req_u32_array("f").unwrap(), vec![10, 25]);
+        assert_eq!(v.req_u32_array("g").unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn toml_rejects_bad_lines() {
+        assert!(Value::from_toml("just words\n").is_err());
+        assert!(Value::from_toml("a = \"unterminated\n").is_err());
+        assert!(Value::from_toml("[broken\na = 1\n").is_err());
+    }
+
+    #[test]
+    fn typed_accessors_error_cleanly() {
+        let v = sample();
+        assert!(v.req_str("workers").is_err());
+        assert!(v.req_i64("name").is_err());
+        assert!(v.req_f64("missing").is_err());
+        assert!(v.req_bool("lr").is_err());
+        assert_eq!(v.req_u32("workers").unwrap(), 4);
+        // float-typed whole numbers accepted as ints (TOML "1.0" case)
+        let mut w = Value::table();
+        w.set("n", 3.0f64);
+        assert_eq!(w.req_i64("n").unwrap(), 3);
+    }
+}

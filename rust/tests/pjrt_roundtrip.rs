@@ -1,0 +1,125 @@
+//! Integration: the AOT-compiled JAX/Pallas artifact, executed from rust via
+//! PJRT, must agree with the pure-rust host trainer — same init, same
+//! batches, matching losses/params over several SGD steps. This closes the
+//! three-layer loop: Pallas kernel → JAX model → HLO text → rust runtime.
+//!
+//! Requires `make artifacts` (skips with a message when absent so `cargo
+//! test` stays green on a fresh checkout).
+
+use rapidgnn::config::{DatasetConfig, DatasetPreset, RunConfig};
+use rapidgnn::coordinator::RunContext;
+use rapidgnn::graph::build_dataset;
+use rapidgnn::runtime::{artifacts_dir, find_artifact, PjrtTrainer};
+use rapidgnn::sampler::{sample_blocks, Fanout};
+use rapidgnn::trainer::{batch_labels, Mat, SageModel, TrainStep};
+
+fn tiny_ctx() -> RunContext {
+    let mut c = RunConfig::default();
+    c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+    RunContext::build(&c).unwrap()
+}
+
+fn load_trainer(ctx: &RunContext) -> Option<PjrtTrainer> {
+    let meta = match find_artifact(&artifacts_dir(), ctx) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP pjrt_roundtrip: {e}");
+            return None;
+        }
+    };
+    Some(PjrtTrainer::load(meta, ctx.cfg.base_seed).expect("compile artifact"))
+}
+
+fn make_batch(
+    ctx: &RunContext,
+    seed: u64,
+    n_seeds: usize,
+) -> (rapidgnn::sampler::SampledBatch, Mat, Vec<u16>) {
+    let ds = build_dataset(&ctx.cfg.dataset, true);
+    let seeds: Vec<u32> = ds.train_nodes.iter().take(n_seeds).copied().collect();
+    let fanouts: Vec<Fanout> = ctx.cfg.fanout.iter().map(|&f| Fanout::Sample(f)).collect();
+    let batch = sample_blocks(&ds.graph, &seeds, &fanouts, seed);
+    let d = ds.config.feature_dim as usize;
+    let mut x0 = Mat::zeros(batch.node_layers[0].len(), d);
+    for (i, &v) in batch.node_layers[0].iter().enumerate() {
+        x0.row_mut(i).copy_from_slice(ds.feature_row(v));
+    }
+    let labels = batch_labels(&ds, &batch);
+    (batch, x0, labels)
+}
+
+#[test]
+fn pjrt_matches_host_over_training() {
+    let ctx = tiny_ctx();
+    let Some(mut pjrt) = load_trainer(&ctx) else { return };
+    let mut host = SageModel::new(
+        ctx.cfg.dataset.feature_dim as usize,
+        ctx.cfg.hidden_dim as usize,
+        ctx.cfg.dataset.num_classes as usize,
+        2,
+        ctx.cfg.base_seed,
+    );
+
+    for step in 0..5u64 {
+        let (batch, x0, labels) = make_batch(&ctx, 100 + step, 64);
+        let h = host.step(&x0, &batch, &labels, 0.05);
+        let p = pjrt.step(&x0, &batch, &labels, 0.05);
+        assert!(
+            (h.loss - p.loss).abs() < 1e-3 * h.loss.abs().max(1.0),
+            "step {step}: host loss {} vs pjrt {}",
+            h.loss,
+            p.loss
+        );
+        assert_eq!(h.correct, p.correct, "step {step} correct count");
+        assert_eq!(h.total, p.total);
+    }
+
+    // Parameters stay in lockstep after several updates.
+    let pjrt_params = pjrt.params_flat().unwrap();
+    let host_flat: Vec<Vec<f32>> = host
+        .layers
+        .iter()
+        .flat_map(|l| {
+            vec![
+                l.w_self.data.clone(),
+                l.w_nbr.data.clone(),
+                l.bias.clone(),
+            ]
+        })
+        .collect();
+    assert_eq!(pjrt_params.len(), host_flat.len());
+    for (i, (p, h)) in pjrt_params.iter().zip(&host_flat).enumerate() {
+        assert_eq!(p.len(), h.len(), "param {i} shape");
+        let max_diff = p
+            .iter()
+            .zip(h)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 2e-4, "param {i} diverged by {max_diff}");
+    }
+}
+
+#[test]
+fn pjrt_eval_does_not_mutate_params() {
+    let ctx = tiny_ctx();
+    let Some(mut pjrt) = load_trainer(&ctx) else { return };
+    let before = pjrt.params_flat().unwrap();
+    let (batch, x0, labels) = make_batch(&ctx, 7, 32);
+    let out = pjrt.eval(&x0, &batch, &labels);
+    assert!(out.loss.is_finite());
+    let after = pjrt.params_flat().unwrap();
+    assert_eq!(before, after, "eval must not update parameters");
+}
+
+#[test]
+fn pjrt_loss_decreases_with_training() {
+    let ctx = tiny_ctx();
+    let Some(mut pjrt) = load_trainer(&ctx) else { return };
+    let (batch, x0, labels) = make_batch(&ctx, 42, 64);
+    let first = pjrt.step(&x0, &batch, &labels, 0.2).loss;
+    let mut last = first;
+    for _ in 0..20 {
+        last = pjrt.step(&x0, &batch, &labels, 0.2).loss;
+    }
+    assert!(last < first * 0.7, "loss {first} -> {last}");
+}

@@ -1,0 +1,321 @@
+//! Property-based tests over the coordinator's core invariants
+//! (via `util::proptest_lite` — deterministic randomized cases).
+
+use rapidgnn::cache::{device_memory_bound, top_hot, CacheBuffer, DoubleBufferCache};
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+use rapidgnn::coordinator;
+use rapidgnn::graph::{build_dataset, CsrGraph};
+use rapidgnn::partition::{metis_like, partition_quality, random};
+use rapidgnn::sampler::seed::Rng;
+use rapidgnn::sampler::{
+    enumerate_epoch, remote_frequency, sample_blocks, sample_input_nodes, Fanout,
+};
+use rapidgnn::sim::{pipeline_schedule, PipelineStep};
+use rapidgnn::util::proptest_lite::{forall, gen};
+
+/// Random small graph for structural properties.
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = gen::usize_in(rng, 10, 400) as u32;
+    let m = gen::usize_in(rng, n as usize, n as usize * 6);
+    let edges: Vec<(u32, u32)> = (0..m)
+        .filter_map(|_| {
+            let u = rng.below(n);
+            let v = rng.below(n);
+            (u != v).then_some((u, v))
+        })
+        .collect();
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[test]
+fn prop_pipeline_schedule_bounds() {
+    // For any costs and queue depth: makespan ≥ Σ consume (work conservation),
+    // ≤ the fully serial schedule, and deeper queues never hurt.
+    forall(
+        0xB01,
+        300,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 60);
+            let steps: Vec<PipelineStep> = (0..n)
+                .map(|_| PipelineStep {
+                    stage: gen::f64_in(rng, 0.0, 2.0),
+                    consume: gen::f64_in(rng, 0.01, 2.0),
+                })
+                .collect();
+            let q = gen::usize_in(rng, 1, 10) as u32;
+            (steps, q)
+        },
+        |(steps, q)| {
+            let t = pipeline_schedule(steps, *q);
+            let serial: f64 = steps.iter().map(|s| s.stage + s.consume).sum();
+            let sum_consume: f64 = steps.iter().map(|s| s.consume).sum();
+            if t.total > serial + 1e-9 {
+                return Err(format!("worse than serial: {} > {serial}", t.total));
+            }
+            if t.total + 1e-9 < sum_consume {
+                return Err(format!("faster than consume sum: {} < {sum_consume}", t.total));
+            }
+            if t.total_wait < -1e-12 {
+                return Err("negative wait".into());
+            }
+            let deeper = pipeline_schedule(steps, q + 4);
+            if deeper.total > t.total + 1e-9 {
+                return Err(format!("deeper queue slower: {} > {}", deeper.total, t.total));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_cover_all_nodes_exactly_once() {
+    forall(
+        11,
+        40,
+        |rng| (random_graph(rng), gen::usize_in(rng, 1, 8) as u32, rng.next_u64()),
+        |(g, p, seed)| {
+            for part in [metis_like(g, *p, *seed), random(g, *p, *seed)] {
+                let total: usize = part.local_nodes.iter().map(Vec::len).sum();
+                if total != g.num_nodes() as usize {
+                    return Err(format!("covered {total} of {}", g.num_nodes()));
+                }
+                for (pi, locals) in part.local_nodes.iter().enumerate() {
+                    for &v in locals {
+                        if part.owner_of(v) != pi as u32 {
+                            return Err(format!("node {v} owner mismatch"));
+                        }
+                    }
+                }
+                let q = partition_quality(g, &part);
+                if !(0.0..=1.0).contains(&q.edge_cut_fraction) {
+                    return Err(format!("cut fraction {}", q.edge_cut_fraction));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sampler_input_nodes_superset_of_seeds_sorted_unique() {
+    forall(
+        13,
+        60,
+        |rng| {
+            let g = random_graph(rng);
+            let n = g.num_nodes();
+            let k = gen::usize_in(rng, 1, 32.min(n as usize));
+            let seeds: Vec<u32> = (0..k).map(|_| rng.below(n)).collect();
+            let f1 = gen::usize_in(rng, 1, 8) as u32;
+            let f2 = gen::usize_in(rng, 1, 8) as u32;
+            (g, seeds, [Fanout::Sample(f1), Fanout::Sample(f2)], rng.next_u64())
+        },
+        |(g, seeds, fanouts, seed)| {
+            let ids = sample_input_nodes(g, seeds, fanouts, *seed);
+            if !ids.windows(2).all(|w| w[0] < w[1]) {
+                return Err("not sorted/unique".into());
+            }
+            for &s in seeds {
+                if ids.binary_search(&s).is_err() {
+                    return Err(format!("seed {s} missing from input nodes"));
+                }
+            }
+            // trace path and block path agree
+            let blocks = sample_blocks(g, seeds, fanouts, *seed);
+            if blocks.node_layers[0] != ids {
+                return Err("blocks/ids disagree".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_rpc_count_equals_miss_sets() {
+    // Paper invariant (§3): "the per-step communication in an epoch equals
+    // the miss set by the Prefetcher: the RPC count for b_i is |M_i^e|".
+    // Empty cache ⇒ misses = all remote nodes; cache covering the epoch's
+    // remote set ⇒ zero misses.
+    forall(
+        17,
+        15,
+        |rng| {
+            let mut cfg = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+            cfg.gen_seed = rng.next_u64();
+            (cfg, rng.next_u64())
+        },
+        |(dcfg, seed)| {
+            let ds = build_dataset(dcfg, false);
+            let part = std::sync::Arc::new(metis_like(&ds.graph, 2, 0));
+            let shard: Vec<u32> = ds
+                .train_nodes
+                .iter()
+                .copied()
+                .filter(|&v| part.is_local(0, v))
+                .collect();
+            let sched = enumerate_epoch(
+                &ds.graph,
+                &part,
+                &shard,
+                &[Fanout::Sample(4), Fanout::Sample(4)],
+                64,
+                *seed,
+                0,
+                0,
+            );
+            let kv = rapidgnn::kvstore::KvStore::new(
+                &ds,
+                part,
+                rapidgnn::net::NetFabric::new(Default::default()),
+            );
+            let empty = std::sync::Mutex::new(DoubleBufferCache::default());
+            let mut stats = Default::default();
+            for meta in sched.batches.iter().cloned() {
+                let expect = meta.num_remote;
+                let s = rapidgnn::prefetch::stage_batch(&kv, &empty, meta, 0, false, &mut stats);
+                if s.misses != expect {
+                    return Err(format!("empty cache: misses {} != remote {expect}", s.misses));
+                }
+            }
+            let all_remote = top_hot(&sched.batches, u32::MAX);
+            let full = std::sync::Mutex::new({
+                let mut c = DoubleBufferCache::default();
+                c.install_steady(CacheBuffer::new(&all_remote, Vec::new(), 16));
+                c
+            });
+            for meta in sched.batches.iter().cloned() {
+                let s = rapidgnn::prefetch::stage_batch(&kv, &full, meta, 0, false, &mut stats);
+                if s.misses != 0 {
+                    return Err(format!("full cache still missed {}", s.misses));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_top_hot_is_optimal_prefix() {
+    // top_hot(k) must contain k highest-frequency remote nodes: any node
+    // outside the selection has frequency ≤ the minimum inside it.
+    forall(
+        19,
+        15,
+        |rng| {
+            let mut cfg = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+            cfg.gen_seed = rng.next_u64();
+            (cfg, rng.below(500) + 1)
+        },
+        |(dcfg, k)| {
+            let ds = build_dataset(dcfg, false);
+            let part = std::sync::Arc::new(metis_like(&ds.graph, 2, 0));
+            let shard: Vec<u32> = ds
+                .train_nodes
+                .iter()
+                .copied()
+                .filter(|&v| part.is_local(0, v))
+                .collect();
+            let sched = enumerate_epoch(
+                &ds.graph,
+                &part,
+                &shard,
+                &[Fanout::Sample(5), Fanout::Sample(5)],
+                64,
+                3,
+                0,
+                0,
+            );
+            let freq = remote_frequency(&sched.batches);
+            let hot = top_hot(&sched.batches, *k);
+            if hot.len() > *k as usize {
+                return Err("over-selected".into());
+            }
+            let table: std::collections::HashMap<u32, u32> = freq.iter().copied().collect();
+            let min_in = hot.iter().map(|v| table[v]).min().unwrap_or(0);
+            let hotset: std::collections::HashSet<u32> = hot.iter().copied().collect();
+            for &(v, c) in &freq {
+                if !hotset.contains(&v) && c > min_in {
+                    return Err(format!("node {v} freq {c} beats selected min {min_in}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_memory_bound_monotone() {
+    forall(
+        23,
+        200,
+        |rng| {
+            (
+                rng.below(100_000),
+                rng.below(32) + 1,
+                rng.below(100_000) + 1,
+                rng.below(1_000) + 1,
+            )
+        },
+        |&(n_hot, q, m_max, d)| {
+            let base = device_memory_bound(n_hot, q, m_max, d);
+            if device_memory_bound(n_hot + 1, q, m_max, d) < base
+                || device_memory_bound(n_hot, q + 1, m_max, d) < base
+                || device_memory_bound(n_hot, q, m_max + 1, d) < base
+            {
+                return Err("bound not monotone".into());
+            }
+            let expect = (2 * n_hot as u64 + q as u64 * m_max as u64) * d as u64 * 4;
+            if base != expect {
+                return Err(format!("formula mismatch {base} vs {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_reports_are_internally_consistent() {
+    // Across random small run configs: steps > 0, times non-negative,
+    // cache hits ≤ lookups, remote rows ≥ vector rows, epochs complete.
+    forall(
+        29,
+        8,
+        |rng| {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+            cfg.dataset.gen_seed = rng.next_u64();
+            cfg.engine = Engine::ALL[gen::usize_in(rng, 0, 3)];
+            cfg.num_workers = rng.below(3) + 1;
+            cfg.batch_size = [32u32, 64, 128][gen::usize_in(rng, 0, 2)];
+            cfg.epochs = rng.below(3) + 1;
+            cfg.n_hot = rng.below(500) + 1;
+            cfg.prefetch_q = rng.below(8) + 1;
+            cfg
+        },
+        |cfg| {
+            let r = coordinator::run(cfg).map_err(|e| e.to_string())?;
+            if r.epochs.len() != (cfg.epochs * cfg.num_workers) as usize {
+                return Err(format!(
+                    "expected {} epoch reports, got {}",
+                    cfg.epochs * cfg.num_workers,
+                    r.epochs.len()
+                ));
+            }
+            for e in &r.epochs {
+                if e.steps == 0 {
+                    return Err("zero steps".into());
+                }
+                if e.epoch_time < 0.0 || e.phases.total() < 0.0 {
+                    return Err("negative time".into());
+                }
+                if e.cache.hits > e.cache.lookups {
+                    return Err("hits > lookups".into());
+                }
+                if e.comm.vector_rows > e.comm.remote_rows {
+                    return Err("vector rows > remote rows".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
