@@ -1,0 +1,120 @@
+//! Precompute throughput — serial vs parallel offline enumeration.
+//!
+//! The offline pass (Algorithm 1) is embarrassingly parallel by
+//! construction: every batch's k-hop expansion is seeded by `H(s0, w, e, i)`
+//! alone, so batches parallelize with byte-identical output (see
+//! `sampler::schedule`). This bench reports batches/sec for
+//! `enumerate_epoch_threads` at 1 thread vs all available threads, plus the
+//! sharded frequency ranking and the partial-selection `TopHot` cut, and
+//! emits `bench_results/precompute_throughput.json`.
+
+use rapidgnn::cache::top_hot;
+use rapidgnn::config::DatasetPreset;
+use rapidgnn::graph::build_dataset;
+use rapidgnn::sampler::{enumerate_epoch_threads, remote_frequency_threads, Fanout};
+use rapidgnn::util::bench::{fmt_secs, time_until, Table};
+use rapidgnn::util::bench_support::bench_dataset;
+use rapidgnn::util::parallel::available_threads;
+use rapidgnn::util::value::Value;
+
+fn main() -> rapidgnn::Result<()> {
+    let ds = build_dataset(&bench_dataset(DatasetPreset::ProductsSim), false);
+    let part = rapidgnn::partition::metis_like(&ds.graph, 4, 0);
+    let shard: Vec<u32> = ds
+        .train_nodes
+        .iter()
+        .copied()
+        .filter(|&v| part.is_local(0, v))
+        .collect();
+    let fanouts = [Fanout::Sample(10), Fanout::Sample(25)];
+    let threads = available_threads();
+    let n_batches = shard.len().div_ceil(1000);
+
+    let mut counts = vec![1usize];
+    if threads > 1 {
+        counts.push(threads);
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Precompute throughput (products-sim, {} seeds, batch 1000, {} batches)",
+            shard.len(),
+            n_batches
+        ),
+        &["path", "per-epoch", "batches/s", "speedup"],
+    );
+
+    // --- offline enumeration: serial reference vs all cores ---
+    let mut enum_secs: Vec<f64> = Vec::new();
+    for &th in &counts {
+        let (_, _, per) = time_until(2.0, || {
+            let s =
+                enumerate_epoch_threads(th, &ds.graph, &part, &shard, &fanouts, 1000, 42, 0, 0);
+            std::hint::black_box(s.batches.len());
+        });
+        enum_secs.push(per);
+        t.row(&[
+            format!("enumerate_epoch ({th} threads)"),
+            fmt_secs(per),
+            format!("{:.1}", n_batches as f64 / per),
+            format!("{:.2}x", enum_secs[0] / per),
+        ]);
+    }
+
+    // --- frequency ranking: serial tally vs sharded ---
+    let sched =
+        enumerate_epoch_threads(threads, &ds.graph, &part, &shard, &fanouts, 1000, 42, 0, 0);
+    let mut rank_secs: Vec<f64> = Vec::new();
+    for &th in &counts {
+        let (_, _, per) = time_until(1.0, || {
+            std::hint::black_box(remote_frequency_threads(th, &sched.batches).len());
+        });
+        rank_secs.push(per);
+        t.row(&[
+            format!("remote_frequency ({th} threads)"),
+            fmt_secs(per),
+            "-".into(),
+            format!("{:.2}x", rank_secs[0] / per),
+        ]);
+    }
+
+    // --- TopHot: partial selection over the sharded tally ---
+    let (_, _, top_per) = time_until(1.0, || {
+        std::hint::black_box(top_hot(&sched.batches, 32_000).len());
+    });
+    t.row(&[
+        "top_hot 32k (partial selection)".into(),
+        fmt_secs(top_per),
+        "-".into(),
+        format!("{:.2}x", rank_secs[0] / top_per),
+    ]);
+
+    t.print();
+
+    let serial = enum_secs[0];
+    let parallel = *enum_secs.last().unwrap();
+    println!(
+        "enumerate speedup at {threads} threads: {:.2}x ({:.1} -> {:.1} batches/s)",
+        serial / parallel,
+        n_batches as f64 / serial,
+        n_batches as f64 / parallel
+    );
+
+    let mut v = Value::table();
+    v.set("threads", threads as u64)
+        .set("n_batches", n_batches as u64)
+        .set("enumerate_serial_sec", serial)
+        .set("enumerate_parallel_sec", parallel)
+        .set("enumerate_speedup", serial / parallel)
+        .set("serial_batches_per_sec", n_batches as f64 / serial)
+        .set("parallel_batches_per_sec", n_batches as f64 / parallel)
+        .set("rank_serial_sec", rank_secs[0])
+        .set("rank_parallel_sec", *rank_secs.last().unwrap())
+        .set("top_hot_sec", top_per);
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write(
+        "bench_results/precompute_throughput.json",
+        v.to_json_pretty(),
+    )?;
+    Ok(())
+}

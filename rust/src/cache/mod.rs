@@ -6,23 +6,44 @@
 //! serves the current epoch while the secondary `C_sec` (Buffer 1) is built
 //! for the next epoch in the background; an atomic swap at the epoch
 //! boundary promotes it (Algorithm 1, line 18).
+//!
+//! # Parallel-determinism contract
+//!
+//! [`top_hot`] runs on the sharded parallel tally
+//! ([`crate::sampler::schedule::tally_remote_threads`]) and cuts the top
+//! `n_hot` with `select_nth_unstable` — O(R) instead of the full O(R log R)
+//! sort, which stays reserved for `remote_frequency`'s complete ranking.
+//! The ranking order (count desc, ties by ascending id) is a *total* order
+//! over the tallied pairs, so the selected set and its final order are
+//! unique: the output is byte-identical to
+//! `remote_frequency(batches).take(n_hot)` at any thread count (pinned by
+//! `top_hot_matches_full_sort_reference`).
 
 use crate::metrics::CacheStats;
-use crate::sampler::schedule::remote_frequency;
+use crate::sampler::schedule::{rank_order, remote_frequency, tally_remote_threads};
 use crate::sampler::BatchMeta;
 use crate::util::fasthash::IdHashMap;
+use crate::util::parallel::available_threads;
 use crate::NodeId;
 
 /// Select the top-`n_hot` remote nodes by access frequency — the paper's
 /// `TopHot(N_remote, n_hot, freq)` (Algorithm 1, line 3). Ties break by node
-/// id so the selection is deterministic.
+/// id so the selection is deterministic. Tally is sharded across cores and
+/// the cut uses partial selection rather than a full sort (module docs).
 pub fn top_hot(batches: &[BatchMeta], n_hot: u32) -> Vec<NodeId> {
-    let ranked = remote_frequency(batches);
-    ranked
-        .into_iter()
-        .take(n_hot as usize)
-        .map(|(v, _)| v)
-        .collect()
+    let n = n_hot as usize;
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut ranked = tally_remote_threads(available_threads(), batches);
+    if n < ranked.len() {
+        // O(R) partial selection: everything before position n ranks at or
+        // above everything after it; only the kept prefix gets sorted.
+        ranked.select_nth_unstable_by(n - 1, rank_order);
+        ranked.truncate(n);
+    }
+    ranked.sort_unstable_by(rank_order);
+    ranked.into_iter().map(|(v, _)| v).collect()
 }
 
 /// One cache buffer: an id→row index plus (optionally) the feature rows.
@@ -213,6 +234,24 @@ mod tests {
         assert_eq!(top_hot(&batches, 2), vec![5, 7]);
         assert_eq!(top_hot(&batches, 10), vec![5, 7, 9]);
         assert_eq!(top_hot(&batches, 0), Vec::<NodeId>::new());
+    }
+
+    #[test]
+    fn top_hot_matches_full_sort_reference() {
+        // Partial selection must equal the full-sort prefix for every cut
+        // size, including cuts landing inside a tie group (nodes 7/9/11 all
+        // have count 2; node 3 has count 1).
+        let batches = vec![
+            batch(&[5, 7, 9, 11]),
+            batch(&[5, 7, 9, 11]),
+            batch(&[5, 3]),
+        ];
+        let ranked = remote_frequency(&batches);
+        assert_eq!(ranked.len(), 5);
+        for k in 0..=ranked.len() + 2 {
+            let reference: Vec<NodeId> = ranked.iter().take(k).map(|&(v, _)| v).collect();
+            assert_eq!(top_hot(&batches, k as u32), reference, "k = {k}");
+        }
     }
 
     #[test]

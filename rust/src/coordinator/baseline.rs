@@ -7,6 +7,12 @@
 //! — exactly the reactive behaviour RapidGNN's scheduled data path replaces.
 //! Dist-GCN differs only in its fan-out policy (capped full neighborhoods →
 //! much larger input sets, the paper's worst communicator).
+//!
+//! Wall-clock note: `enumerate_epoch` runs on the multi-threaded sampler
+//! with per-thread scratch arenas (like DGL's parallel dataloader workers),
+//! which only accelerates *our* harness — the simulated per-batch
+//! `sample_time` charged on the critical path below is unchanged, since it
+//! models the baseline's online sampling cost, not ours.
 
 use super::common::RunContext;
 use crate::config::ExecMode;

@@ -357,10 +357,13 @@ fn cmd_info() -> Result<()> {
     if found == 0 {
         println!("  (none — run `make artifacts`)");
     }
+    #[cfg(feature = "xla")]
     match xla::PjRtClient::cpu() {
         Ok(c) => println!("PJRT: {} ({} devices)", c.platform_name(), c.device_count()),
         Err(e) => println!("PJRT unavailable: {e}"),
     }
+    #[cfg(not(feature = "xla"))]
+    println!("PJRT unavailable: built without the `xla` cargo feature");
     Ok(())
 }
 

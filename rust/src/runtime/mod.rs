@@ -9,6 +9,10 @@
 //! it as a [`crate::trainer::TrainStep`] backend. Python never runs here.
 
 mod artifact;
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 mod pjrt;
 
 pub use artifact::{find_artifact, ArtifactMeta};

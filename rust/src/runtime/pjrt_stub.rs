@@ -1,0 +1,45 @@
+//! Stub PJRT backend for builds without the `xla` bindings crate — the
+//! default in this offline tree (see Cargo.toml's `xla` feature). Mirrors
+//! the real `pjrt` module's public surface so callers compile unchanged;
+//! every entry point reports the runtime as unavailable, and the callers
+//! that probe for artifacts first (`find_artifact`) skip gracefully.
+
+use super::artifact::ArtifactMeta;
+use crate::sampler::khop::SampledBatch;
+use crate::trainer::{sage::StepOutput, Mat, TrainStep};
+use crate::Result;
+use anyhow::bail;
+
+/// Placeholder for the PJRT executor; constructing it always fails.
+pub struct PjrtTrainer {
+    meta: ArtifactMeta,
+    /// Number of train steps executed (always 0 in the stub).
+    pub steps_run: u64,
+}
+
+impl PjrtTrainer {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load(_meta: ArtifactMeta, _seed: u64) -> Result<PjrtTrainer> {
+        bail!("PJRT runtime unavailable: built without the `xla` cargo feature")
+    }
+
+    /// Artifact manifest.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Parameter snapshot (unreachable: `load` never succeeds).
+    pub fn params_flat(&self) -> Result<Vec<Vec<f32>>> {
+        Ok(Vec::new())
+    }
+}
+
+impl TrainStep for PjrtTrainer {
+    fn step(&mut self, _x0: &Mat, _batch: &SampledBatch, _labels: &[u16], _lr: f32) -> StepOutput {
+        unreachable!("stub PjrtTrainer cannot be constructed")
+    }
+
+    fn eval(&mut self, _x0: &Mat, _batch: &SampledBatch, _labels: &[u16]) -> StepOutput {
+        unreachable!("stub PjrtTrainer cannot be constructed")
+    }
+}

@@ -5,6 +5,13 @@
 //! each outer layer holds the union of the previous layer's nodes and their
 //! sampled neighbors, and layer `0` is the batch's input-node set `N_i^e`
 //! whose features must be materialized.
+//!
+//! Both entry points have `*_scratch` variants threaded through a
+//! [`SamplerScratch`] arena so the precompute pass ([`super::schedule`])
+//! reuses the visited bitmap and frontier buffers across batches instead of
+//! reallocating them per batch. The scratch variants walk the PRNG in
+//! exactly the same order and produce byte-identical output (pinned by
+//! `scratch_reuse_is_stateless`).
 
 use super::seed::Rng;
 use crate::graph::CsrGraph;
@@ -72,9 +79,70 @@ impl SampledBatch {
     }
 }
 
+/// Reusable sampler state (§Perf): the per-batch allocations of
+/// [`sample_input_nodes`] / [`sample_blocks`] — visited bitmap, frontier,
+/// neighbor scratch, hub-path position picks — pooled so the steady-state
+/// precompute path allocates nothing per batch beyond its output. One
+/// scratch per thread: the parallel enumeration keeps one in a thread-local
+/// pool (see `schedule::enumerate_epoch_threads`).
+#[derive(Default)]
+pub struct SamplerScratch {
+    /// Visited bitmap over node ids, grown lazily to the graph and reset
+    /// sparsely after each batch (only the words touched by the batch).
+    seen: Vec<u64>,
+    /// Frontier node list of the layer being expanded.
+    current: Vec<NodeId>,
+    /// Per-node sampled-neighbor scratch.
+    nbrs: Vec<NodeId>,
+    /// Position scratch for the hub sampling path.
+    picked: Vec<u32>,
+}
+
+impl SamplerScratch {
+    /// Fresh scratch; buffers grow on first use.
+    pub fn new() -> SamplerScratch {
+        SamplerScratch::default()
+    }
+
+    /// Grow the visited bitmap to cover node ids `0..n`.
+    fn ensure(&mut self, n: u32) {
+        let words = (n as usize).div_ceil(64);
+        if self.seen.len() < words {
+            self.seen.resize(words, 0);
+        }
+    }
+}
+
+/// Test-and-set of node `v` on a visited bitmap: returns true if `v` was
+/// already present; marks it either way. (Bitmap dedup keeps the per-layer
+/// sort over the much smaller unique set — see EXPERIMENTS.md §Perf.)
+#[inline]
+fn test_and_set(bits: &mut [u64], v: NodeId) -> bool {
+    let (w, b) = ((v / 64) as usize, v % 64);
+    let hit = (bits[w] >> b) & 1 == 1;
+    bits[w] |= 1 << b;
+    hit
+}
+
+/// Sparse bitmap reset: every node marked during a batch is in `uniq`
+/// exactly once, so zeroing those nodes' words restores an all-clear map.
+#[inline]
+fn clear_seen(bits: &mut [u64], uniq: &[NodeId]) {
+    for &v in uniq {
+        bits[(v / 64) as usize] = 0;
+    }
+}
+
 /// Sample up to `k` distinct neighbors of `v` uniformly into `out`.
 #[inline]
-fn sample_neighbors(g: &CsrGraph, v: NodeId, policy: Fanout, rng: &mut Rng, out: &mut Vec<NodeId>) {
+fn sample_neighbors(
+    g: &CsrGraph,
+    v: NodeId,
+    policy: Fanout,
+    rng: &mut Rng,
+    out: &mut Vec<NodeId>,
+    picked: &mut Vec<u32>,
+) {
     out.clear();
     let nbrs = g.neighbors(v);
     match policy {
@@ -84,21 +152,27 @@ fn sample_neighbors(g: &CsrGraph, v: NodeId, policy: Fanout, rng: &mut Rng, out:
             } else {
                 // Uniform without replacement via rejection on positions —
                 // cap << deg in the regime this branch runs.
-                sample_distinct_positions(nbrs, cap, rng, out);
+                sample_distinct_positions(nbrs, cap, rng, out, picked);
             }
         }
         Fanout::Sample(k) => {
             if nbrs.len() <= k as usize {
                 out.extend_from_slice(nbrs);
             } else {
-                sample_distinct_positions(nbrs, k, rng, out);
+                sample_distinct_positions(nbrs, k, rng, out, picked);
             }
         }
     }
 }
 
 /// Draw `k` distinct positions from `nbrs` by rejection (k << |nbrs| here).
-fn sample_distinct_positions(nbrs: &[NodeId], k: u32, rng: &mut Rng, out: &mut Vec<NodeId>) {
+fn sample_distinct_positions(
+    nbrs: &[NodeId],
+    k: u32,
+    rng: &mut Rng,
+    out: &mut Vec<NodeId>,
+    picked: &mut Vec<u32>,
+) {
     debug_assert!((k as usize) < nbrs.len());
     let n = nbrs.len() as u32;
     if n <= 128 {
@@ -118,34 +192,13 @@ fn sample_distinct_positions(nbrs: &[NodeId], k: u32, rng: &mut Rng, out: &mut V
         return;
     }
     // Hub path: k ≤ 64 ≪ n, collisions rare; linear scan of picks.
-    let mut picked: Vec<u32> = Vec::with_capacity(k as usize);
+    picked.clear();
     while picked.len() < k as usize {
         let pos = rng.below(n);
         if !picked.contains(&pos) {
             picked.push(pos);
             out.push(nbrs[pos as usize]);
         }
-    }
-}
-
-/// Dense visited-set over node ids (perf: dedup-before-sort in the sampler
-/// hot path — see EXPERIMENTS.md §Perf).
-struct Seen {
-    bits: Vec<u64>,
-}
-
-impl Seen {
-    fn new(n: u32) -> Seen {
-        Seen { bits: vec![0u64; (n as usize).div_ceil(64)] }
-    }
-
-    /// Returns true if `v` was already present; marks it either way.
-    #[inline]
-    fn test_and_set(&mut self, v: NodeId) -> bool {
-        let (w, b) = ((v / 64) as usize, v % 64);
-        let hit = (self.bits[w] >> b) & 1 == 1;
-        self.bits[w] |= 1 << b;
-        hit
     }
 }
 
@@ -161,38 +214,63 @@ pub fn sample_input_nodes(
     fanouts: &[Fanout],
     rng_seed: u64,
 ) -> Vec<NodeId> {
+    sample_input_nodes_scratch(g, seeds, fanouts, rng_seed, &mut SamplerScratch::new())
+}
+
+/// [`sample_input_nodes`] with caller-owned scratch: the only allocation in
+/// the steady state is the returned node set itself.
+pub fn sample_input_nodes_scratch(
+    g: &CsrGraph,
+    seeds: &[NodeId],
+    fanouts: &[Fanout],
+    rng_seed: u64,
+    s: &mut SamplerScratch,
+) -> Vec<NodeId> {
+    if fanouts.is_empty() {
+        // No expansion: historical contract returns the seeds as given.
+        return seeds.to_vec();
+    }
     let mut rng = Rng::new(rng_seed);
-    let mut current: Vec<NodeId> = seeds.to_vec();
-    let mut scratch: Vec<NodeId> = Vec::new();
-    // Unique-id accumulator: bitmap dedup keeps the per-layer sort over the
-    // (much smaller) unique set instead of the sampled multiset.
-    let mut seen = Seen::new(g.num_nodes());
+    s.ensure(g.num_nodes());
+    let mut current = std::mem::take(&mut s.current);
+    let mut scratch = std::mem::take(&mut s.nbrs);
+    let mut picked = std::mem::take(&mut s.picked);
+    current.clear();
+    current.extend_from_slice(seeds);
+    // Unique-id accumulator in first-seen order; sorted once at the end.
     let mut uniq: Vec<NodeId> = Vec::with_capacity(current.len() * 4);
     for &v in &current {
-        if !seen.test_and_set(v) {
+        if !test_and_set(&mut s.seen, v) {
             uniq.push(v);
         }
     }
     // Expand innermost (seed-adjacent, last fanout) first, like DGL.
     for (li, &policy) in fanouts.iter().rev().enumerate() {
         for &v in &current {
-            sample_neighbors(g, v, policy, &mut rng, &mut scratch);
+            sample_neighbors(g, v, policy, &mut rng, &mut scratch, &mut picked);
             for &u in &scratch {
-                if !seen.test_and_set(u) {
+                if !test_and_set(&mut s.seen, u) {
                     uniq.push(u);
                 }
             }
         }
         if li + 1 == fanouts.len() {
-            // final layer: sort in place, no clone (§Perf)
-            uniq.sort_unstable();
-            return uniq;
+            break;
         }
-        let mut next = uniq.clone();
-        next.sort_unstable();
-        current = next;
+        // Next frontier: the unique set so far, in sorted id order (same
+        // walk as the historical `uniq.clone()` + sort — `uniq` itself must
+        // keep first-seen order while it accumulates).
+        current.clear();
+        current.extend_from_slice(&uniq);
+        current.sort_unstable();
     }
-    current
+    // final layer: sort in place, no clone (§Perf)
+    uniq.sort_unstable();
+    clear_seen(&mut s.seen, &uniq);
+    s.current = current;
+    s.nbrs = scratch;
+    s.picked = picked;
+    uniq
 }
 
 /// Full path: sample blocks with index mappings for the trainer.
@@ -202,16 +280,29 @@ pub fn sample_blocks(
     fanouts: &[Fanout],
     rng_seed: u64,
 ) -> SampledBatch {
+    sample_blocks_scratch(g, seeds, fanouts, rng_seed, &mut SamplerScratch::new())
+}
+
+/// [`sample_blocks`] with caller-owned scratch (visited bitmap + neighbor
+/// buffers reused; the returned batch still owns all of its storage).
+pub fn sample_blocks_scratch(
+    g: &CsrGraph,
+    seeds: &[NodeId],
+    fanouts: &[Fanout],
+    rng_seed: u64,
+    s: &mut SamplerScratch,
+) -> SampledBatch {
     let mut rng = Rng::new(rng_seed);
+    s.ensure(g.num_nodes());
+    let mut scratch = std::mem::take(&mut s.nbrs);
+    let mut picked = std::mem::take(&mut s.picked);
     let mut node_layers: Vec<Vec<NodeId>> = vec![seeds.to_vec()];
     // Raw sampled neighbors per layer (dst-order), innermost first.
     let mut raw_nbrs: Vec<Vec<NodeId>> = Vec::new();
-    let mut scratch: Vec<NodeId> = Vec::new();
     // Same bitmap-dedup scheme as `sample_input_nodes` (identical PRNG walk).
-    let mut seen = Seen::new(g.num_nodes());
     let mut uniq: Vec<NodeId> = Vec::with_capacity(seeds.len() * 4);
     for &v in seeds {
-        if !seen.test_and_set(v) {
+        if !test_and_set(&mut s.seen, v) {
             uniq.push(v);
         }
     }
@@ -221,11 +312,11 @@ pub fn sample_blocks(
         let mut flat: Vec<NodeId> = Vec::with_capacity(current.len() * policy.width() as usize);
         let mut counts: Vec<u32> = Vec::with_capacity(current.len());
         for &v in current {
-            sample_neighbors(g, v, policy, &mut rng, &mut scratch);
+            sample_neighbors(g, v, policy, &mut rng, &mut scratch, &mut picked);
             counts.push(scratch.len() as u32);
             flat.extend_from_slice(&scratch);
             for &u in &scratch {
-                if !seen.test_and_set(u) {
+                if !test_and_set(&mut s.seen, u) {
                     uniq.push(u);
                 }
             }
@@ -237,6 +328,9 @@ pub fn sample_blocks(
         raw_nbrs.push(flat);
         raw_nbrs.push(counts.into_iter().map(|c| c as NodeId).collect());
     }
+    clear_seen(&mut s.seen, &uniq);
+    s.nbrs = scratch;
+    s.picked = picked;
 
     // node_layers currently: [seeds, layer K-1, ..., layer 0]; reverse so
     // index 0 = input nodes.
@@ -314,6 +408,27 @@ mod tests {
             let ids = sample_input_nodes(&g, &seeds, &F, s);
             let batch = sample_blocks(&g, &seeds, &F, s);
             assert_eq!(ids, batch.node_layers[0], "seed {s}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // One arena reused across many batches must behave exactly like a
+        // fresh arena per batch — no state leaks through the bitmap reset.
+        let g = graph();
+        let mut s = SamplerScratch::new();
+        for seed in 0..8u64 {
+            let seeds: Vec<NodeId> = (seed as u32 * 3..seed as u32 * 3 + 40).collect();
+            assert_eq!(
+                sample_input_nodes_scratch(&g, &seeds, &F, seed, &mut s),
+                sample_input_nodes(&g, &seeds, &F, seed),
+                "input nodes, seed {seed}"
+            );
+            assert_eq!(
+                sample_blocks_scratch(&g, &seeds, &F, seed, &mut s),
+                sample_blocks(&g, &seeds, &F, seed),
+                "blocks, seed {seed}"
+            );
         }
     }
 

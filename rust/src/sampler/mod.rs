@@ -11,7 +11,11 @@ pub mod khop;
 pub mod schedule;
 pub mod seed;
 
-pub use khop::{sample_blocks, sample_input_nodes, Fanout, LayerBlock, SampledBatch};
+pub use khop::{
+    sample_blocks, sample_blocks_scratch, sample_input_nodes, sample_input_nodes_scratch,
+    Fanout, LayerBlock, SampledBatch, SamplerScratch,
+};
 pub use schedule::{
-    enumerate_epoch, epoch_seed_order, remote_frequency, BatchMeta, EpochSchedule,
+    enumerate_epoch, enumerate_epoch_threads, epoch_seed_order, remote_frequency,
+    remote_frequency_threads, tally_remote_threads, BatchMeta, EpochSchedule,
 };

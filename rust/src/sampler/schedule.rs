@@ -5,12 +5,44 @@
 //! batch with its own derived seed `H(s0, w, e, i)`. The result — per-batch
 //! input-node sets with locality flags — is everything the cache builder and
 //! prefetcher need, computed before the first training step.
+//!
+//! # Parallel-determinism contract
+//!
+//! The enumeration is embarrassingly parallel *by construction*: batch `i`'s
+//! PRNG seed depends only on `(s0, w, e, i)`, never on any other batch, and
+//! the epoch shuffle is itself seeded. Batches can therefore be expanded in
+//! any order on any number of threads and reassembled by index, and the
+//! result is byte-identical to the serial walk — the serial path at
+//! `threads = 1` is the reference the identity tests pin against
+//! ([`enumerate_epoch_threads`], [`remote_frequency_threads`]). The same
+//! holds for the frequency tally: hash-sharding node ids across threads
+//! changes only *where* each id is counted; the final
+//! (count desc, id asc) sort is a total order over the tallied pairs, so
+//! shard and hashmap iteration order cannot leak into the output.
+//!
+//! Worker threads draw [`SamplerScratch`] arenas from a pool owned by the
+//! coordinating thread (lent out per call, persisted across epochs), so the
+//! steady-state enumeration allocates only each batch's output.
 
-use super::khop::{sample_input_nodes, Fanout};
+use super::khop::{sample_input_nodes_scratch, Fanout, SamplerScratch};
 use super::seed::{derive_seed, Rng};
 use crate::graph::CsrGraph;
 use crate::partition::Partition;
+use crate::util::fasthash::IdHashMap;
+use crate::util::parallel::{available_threads, par_map_threads};
 use crate::{NodeId, WorkerId};
+use std::cell::RefCell;
+use std::sync::Mutex;
+
+thread_local! {
+    /// Sampler-arena pool, owned by the *coordinating* thread (the one that
+    /// calls [`enumerate_epoch`]). Worker threads are scoped per call, so a
+    /// worker-side thread-local would die with them; instead each call lends
+    /// the pool to its workers through a mutex and takes it back, so arenas
+    /// persist across epochs and the steady-state enumeration allocates
+    /// only each batch's output.
+    static SCRATCH_POOL: RefCell<Vec<SamplerScratch>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Precomputed metadata for one batch (paper §4 "metadata block"): node ids,
 /// seed range, and a locality bitmask. No feature values.
@@ -91,6 +123,8 @@ pub fn epoch_seed_order(shard: &[NodeId], s0: u64, worker: WorkerId, epoch: u32)
 /// Enumerate the full schedule for (worker, epoch): the paper's line 1–2 of
 /// Algorithm 1, restricted to one epoch (epochs are enumerated independently
 /// so the precompute pass can stream results to disk epoch by epoch).
+/// Runs batches on all available cores — see the module docs for why the
+/// output is nevertheless deterministic.
 #[allow(clippy::too_many_arguments)]
 pub fn enumerate_epoch(
     g: &CsrGraph,
@@ -102,30 +136,63 @@ pub fn enumerate_epoch(
     worker: WorkerId,
     epoch: u32,
 ) -> EpochSchedule {
+    enumerate_epoch_threads(
+        available_threads(),
+        g,
+        part,
+        shard,
+        fanouts,
+        batch_size,
+        s0,
+        worker,
+        epoch,
+    )
+}
+
+/// [`enumerate_epoch`] with an explicit thread count (`1` = the serial
+/// reference). Output is byte-identical at any thread count: each batch's
+/// expansion is seeded by `H(s0, w, e, i)` alone, so batches are
+/// order-independent and reassembled in index order.
+#[allow(clippy::too_many_arguments)]
+pub fn enumerate_epoch_threads(
+    threads: usize,
+    g: &CsrGraph,
+    part: &Partition,
+    shard: &[NodeId],
+    fanouts: &[Fanout],
+    batch_size: u32,
+    s0: u64,
+    worker: WorkerId,
+    epoch: u32,
+) -> EpochSchedule {
     let order = epoch_seed_order(shard, s0, worker, epoch);
-    let batches: Vec<BatchMeta> = order
-        .chunks(batch_size as usize)
-        .enumerate()
-        .map(|(i, seeds)| {
-            let rng_seed = derive_seed(s0, worker, epoch, i as u32);
-            let input_nodes = sample_input_nodes(g, seeds, fanouts, rng_seed);
-            let mut remote_mask = vec![0u64; input_nodes.len().div_ceil(64)];
-            let mut num_remote = 0u32;
-            for (j, &v) in input_nodes.iter().enumerate() {
-                if !part.is_local(worker, v) {
-                    remote_mask[j / 64] |= 1 << (j % 64);
-                    num_remote += 1;
-                }
+    let chunks: Vec<&[NodeId]> = order.chunks(batch_size as usize).collect();
+    // Lend the caller's arena pool to the scoped workers for this call.
+    let pool: Mutex<Vec<SamplerScratch>> =
+        Mutex::new(SCRATCH_POOL.with(|p| std::mem::take(&mut *p.borrow_mut())));
+    let batches: Vec<BatchMeta> = par_map_threads(threads, chunks.len(), |i| {
+        let rng_seed = derive_seed(s0, worker, epoch, i as u32);
+        let mut scratch = pool.lock().unwrap().pop().unwrap_or_default();
+        let input_nodes =
+            sample_input_nodes_scratch(g, chunks[i], fanouts, rng_seed, &mut scratch);
+        pool.lock().unwrap().push(scratch);
+        let mut remote_mask = vec![0u64; input_nodes.len().div_ceil(64)];
+        let mut num_remote = 0u32;
+        for (j, &v) in input_nodes.iter().enumerate() {
+            if !part.is_local(worker, v) {
+                remote_mask[j / 64] |= 1 << (j % 64);
+                num_remote += 1;
             }
-            BatchMeta {
-                batch: i as u32,
-                seeds: seeds.to_vec(),
-                input_nodes,
-                remote_mask,
-                num_remote,
-            }
-        })
-        .collect();
+        }
+        BatchMeta {
+            batch: i as u32,
+            seeds: chunks[i].to_vec(),
+            input_nodes,
+            remote_mask,
+            num_remote,
+        }
+    });
+    SCRATCH_POOL.with(|p| *p.borrow_mut() = pool.into_inner().unwrap());
     EpochSchedule { worker, epoch, batches }
 }
 
@@ -133,17 +200,74 @@ pub fn enumerate_epoch(
 /// `freq(·)` ranking input for `TopHot` (Algorithm 1, line 3).
 ///
 /// Returns `(node, count)` pairs sorted by descending count (ties by id for
-/// determinism).
+/// determinism). The tally runs sharded across all available cores.
 pub fn remote_frequency(batches: &[BatchMeta]) -> Vec<(NodeId, u32)> {
-    let mut counts: crate::util::fasthash::IdHashMap<NodeId, u32> = Default::default();
-    for b in batches {
-        for v in b.remote_nodes() {
-            *counts.entry(v).or_insert(0) += 1;
-        }
-    }
-    let mut out: Vec<(NodeId, u32)> = counts.into_iter().collect();
-    out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    remote_frequency_threads(available_threads(), batches)
+}
+
+/// [`remote_frequency`] with an explicit thread count (`1` = the serial
+/// reference). The sorted output is byte-identical at any thread count.
+pub fn remote_frequency_threads(threads: usize, batches: &[BatchMeta]) -> Vec<(NodeId, u32)> {
+    let mut out = tally_remote_threads(threads, batches);
+    out.sort_unstable_by(rank_order);
     out
+}
+
+/// The ranking order shared by [`remote_frequency`] and `cache::top_hot`:
+/// frequency descending, ties broken by ascending node id — a total order
+/// over tallied pairs (ids are unique), which is what makes the parallel
+/// tally deterministic.
+#[inline]
+pub fn rank_order(a: &(NodeId, u32), b: &(NodeId, u32)) -> std::cmp::Ordering {
+    b.1.cmp(&a.1).then(a.0.cmp(&b.0))
+}
+
+/// Unsorted `(node, count)` tally of remote accesses — the shared input of
+/// [`remote_frequency`] and `cache::top_hot`'s partial selection.
+///
+/// The pair *set* is deterministic; pair *order* is not (it reflects shard
+/// and hashmap iteration order), so callers must impose [`rank_order`].
+/// Parallel scheme: threads tally disjoint batch ranges into hash-sharded
+/// partial maps (`shard = id % threads`), then the per-shard maps are merged
+/// in parallel — total work stays O(accesses + distinct ids).
+pub fn tally_remote_threads(threads: usize, batches: &[BatchMeta]) -> Vec<(NodeId, u32)> {
+    let shards = threads.clamp(1, 16);
+    if shards == 1 || batches.len() < 2 * shards {
+        let mut counts: IdHashMap<NodeId, u32> = Default::default();
+        for b in batches {
+            for v in b.remote_nodes() {
+                *counts.entry(v).or_insert(0) += 1;
+            }
+        }
+        return counts.into_iter().collect();
+    }
+    // Map phase: each thread tallies a contiguous slice of batches into
+    // `shards` id-sharded partial maps.
+    let chunk = batches.len().div_ceil(shards);
+    let partials: Vec<Vec<IdHashMap<NodeId, u32>>> = par_map_threads(shards, shards, |t| {
+        let lo = (t * chunk).min(batches.len());
+        let hi = ((t + 1) * chunk).min(batches.len());
+        let mut maps: Vec<IdHashMap<NodeId, u32>> =
+            (0..shards).map(|_| Default::default()).collect();
+        for b in &batches[lo..hi] {
+            for v in b.remote_nodes() {
+                *maps[v as usize % shards].entry(v).or_insert(0) += 1;
+            }
+        }
+        maps
+    });
+    // Reduce phase: merge shard `s` across all partial maps, in parallel —
+    // shards own disjoint id spaces, so no cross-thread contention.
+    let merged: Vec<Vec<(NodeId, u32)>> = par_map_threads(shards, shards, |sdx| {
+        let mut m: IdHashMap<NodeId, u32> = Default::default();
+        for p in &partials {
+            for (&v, &c) in &p[sdx] {
+                *m.entry(v).or_insert(0) += c;
+            }
+        }
+        m.into_iter().collect()
+    });
+    merged.into_iter().flatten().collect()
 }
 
 #[cfg(test)]
@@ -229,6 +353,20 @@ mod tests {
     }
 
     #[test]
+    fn parallel_enumeration_is_thread_count_invariant() {
+        // The tentpole identity: the parallel path at any thread count must
+        // reproduce the serial reference bit for bit.
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 0);
+        let serial = enumerate_epoch_threads(1, &ds.graph, &part, &sh, &F, 32, 5, 0, 2);
+        for threads in [2, 4, 8] {
+            let par = enumerate_epoch_threads(threads, &ds.graph, &part, &sh, &F, 32, 5, 0, 2);
+            assert_eq!(serial, par, "threads {threads}");
+        }
+        assert_eq!(serial, enumerate_epoch(&ds.graph, &part, &sh, &F, 32, 5, 0, 2));
+    }
+
+    #[test]
     fn frequency_ranking_sorted_and_complete() {
         let (ds, part) = setup();
         let sh = shard(&ds, &part, 0);
@@ -242,6 +380,63 @@ mod tests {
         // all ranked nodes are genuinely remote
         for &(v, _) in &freq {
             assert!(!part.is_local(0, v));
+        }
+    }
+
+    #[test]
+    fn sharded_frequency_matches_serial_reference() {
+        let (ds, part) = setup();
+        let sh = shard(&ds, &part, 0);
+        // small batches so the sharded path actually engages
+        let sched = enumerate_epoch(&ds.graph, &part, &sh, &F, 16, 5, 0, 0);
+        let mut counts: IdHashMap<NodeId, u32> = Default::default();
+        for b in &sched.batches {
+            for v in b.remote_nodes() {
+                *counts.entry(v).or_insert(0) += 1;
+            }
+        }
+        let mut reference: Vec<(NodeId, u32)> = counts.into_iter().collect();
+        reference.sort_unstable_by(rank_order);
+        for threads in [1, 2, 8] {
+            assert_eq!(
+                remote_frequency_threads(threads, &sched.batches),
+                reference,
+                "threads {threads}"
+            );
+        }
+        assert_eq!(remote_frequency(&sched.batches), reference);
+    }
+
+    #[test]
+    fn frequency_ties_break_by_ascending_id_at_any_thread_count() {
+        // Hand-built batches where every node has the same count: the output
+        // order must be ascending node id, regardless of sharding.
+        fn batch(remote: &[NodeId]) -> BatchMeta {
+            let input_nodes = remote.to_vec();
+            let mut mask = vec![0u64; input_nodes.len().div_ceil(64)];
+            for j in 0..input_nodes.len() {
+                mask[j / 64] |= 1 << (j % 64);
+            }
+            BatchMeta {
+                batch: 0,
+                seeds: vec![],
+                num_remote: input_nodes.len() as u32,
+                input_nodes,
+                remote_mask: mask,
+            }
+        }
+        let ids = [97u32, 5, 41, 13, 89, 2, 57, 33];
+        // 16 batches so even threads = 8 clears the `len >= 2 * shards`
+        // bar and genuinely exercises the sharded map/reduce path.
+        let batches: Vec<BatchMeta> = (0..16).map(|_| batch(&ids)).collect();
+        let mut expected: Vec<(NodeId, u32)> = ids.iter().map(|&v| (v, 16)).collect();
+        expected.sort_unstable();
+        for threads in [1, 2, 8] {
+            assert_eq!(
+                remote_frequency_threads(threads, &batches),
+                expected,
+                "threads {threads}"
+            );
         }
     }
 

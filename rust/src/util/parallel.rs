@@ -1,13 +1,20 @@
 //! Scoped data-parallel helpers over std threads (rayon stand-in).
+//!
+//! Every helper has a `*_threads` variant taking an explicit worker count —
+//! the override hook the determinism identity tests use to compare the
+//! serial reference (`threads = 1`, which runs inline on the caller) against
+//! parallel execution at arbitrary thread counts. The unsuffixed forms
+//! default to [`available_threads`].
 
-/// Process disjoint mutable chunks of `data` in parallel. `f(chunk_index,
-/// chunk)` runs on a worker thread; chunking is by `chunk_size` elements.
-pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_size: usize, f: F)
+/// Process disjoint mutable chunks of `data` on up to `threads` workers.
+/// `f(chunk_index, chunk)` runs on a worker thread; chunking is by
+/// `chunk_size` elements. `threads <= 1` (or a single chunk) runs inline on
+/// the caller — the deterministic serial reference.
+pub fn par_chunks_mut_threads<T: Send, F>(threads: usize, data: &mut [T], chunk_size: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Send + Sync,
 {
     assert!(chunk_size > 0);
-    let threads = available_threads();
     if threads <= 1 || data.len() <= chunk_size {
         for (i, chunk) in data.chunks_mut(chunk_size).enumerate() {
             f(i, chunk);
@@ -16,9 +23,10 @@ where
     }
     let f = &f;
     let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_size).enumerate().collect();
+    let workers = threads.min(chunks.len());
     let work = std::sync::Mutex::new(chunks.into_iter());
     std::thread::scope(|s| {
-        for _ in 0..threads {
+        for _ in 0..workers {
             s.spawn(|| loop {
                 let next = work.lock().unwrap().next();
                 match next {
@@ -30,14 +38,30 @@ where
     });
 }
 
-/// Map `f` over `0..n` in parallel, returning results in index order.
-pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+/// [`par_chunks_mut_threads`] at the machine's worker-thread count.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    par_chunks_mut_threads(available_threads(), data, chunk_size, f);
+}
+
+/// Map `f` over `0..n` on up to `threads` workers, returning results in
+/// index order. The chunk size is computed once here; an element's index is
+/// `chunk_index * chunk_size + offset`, with the chunk index taken from
+/// [`par_chunks_mut_threads`] — never re-derived from the thread count.
+/// Chunks are capped at 16 elements so the work queue can rebalance
+/// variable-cost items (e.g. hub-heavy batches) instead of handing each
+/// thread one monolithic chunk; the cap changes scheduling only, never
+/// output, since indices derive from the chunk size alone.
+pub fn par_map_threads<T: Send, F>(threads: usize, n: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Send + Sync,
 {
+    let chunk_size = n.div_ceil(threads.max(1)).clamp(1, 16);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    par_chunks_mut(&mut out, n.div_ceil(available_threads().max(1)).max(1), |ci, chunk| {
-        let base = ci * n.div_ceil(available_threads().max(1)).max(1);
+    par_chunks_mut_threads(threads, &mut out, chunk_size, |ci, chunk| {
+        let base = ci * chunk_size;
         for (j, slot) in chunk.iter_mut().enumerate() {
             *slot = Some(f(base + j));
         }
@@ -45,9 +69,24 @@ where
     out.into_iter().map(|o| o.expect("all slots filled")).collect()
 }
 
+/// [`par_map_threads`] at the machine's worker-thread count.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Send + Sync,
+{
+    par_map_threads(available_threads(), n, f)
+}
+
 /// Worker thread count (cores, capped at 16 — the workloads here are
-/// memory-bound well before that).
+/// memory-bound well before that). Overridable with `RAPIDGNN_THREADS`
+/// (clamped to `1..=64`) for experiments and CI determinism sweeps.
 pub fn available_threads() -> usize {
+    if let Some(n) = std::env::var("RAPIDGNN_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        return n.clamp(1, 64);
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
@@ -91,6 +130,21 @@ mod tests {
     }
 
     #[test]
+    fn par_map_identical_at_any_thread_count() {
+        let reference = par_map_threads(1, 1003, |i| i * 7 + 1);
+        for threads in [2, 3, 8, 16] {
+            let out = par_map_threads(threads, 1003, |i| i * 7 + 1);
+            assert_eq!(out, reference, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_more_threads_than_items() {
+        let out = par_map_threads(64, 5, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
     fn par_map_empty() {
         let out: Vec<u8> = par_map(0, |_| 0);
         assert!(out.is_empty());
@@ -104,5 +158,18 @@ mod tests {
             chunk[0] = 9;
         });
         assert_eq!(data[0], 9);
+    }
+
+    #[test]
+    fn serial_override_runs_inline_in_order() {
+        // threads = 1 must process chunks sequentially on the caller thread.
+        let tid = std::thread::current().id();
+        let mut seen = std::sync::Mutex::new(Vec::new());
+        let mut data = vec![0u8; 300];
+        par_chunks_mut_threads(1, &mut data, 100, |i, _| {
+            assert_eq!(std::thread::current().id(), tid);
+            seen.lock().unwrap().push(i);
+        });
+        assert_eq!(*seen.get_mut().unwrap(), vec![0, 1, 2]);
     }
 }

@@ -6,7 +6,7 @@
 //! and homogeneous arrays. JSON support is complete (emit + parse) and is
 //! used for bench artifacts and report round-trips.
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -269,7 +269,7 @@ impl Value {
                 .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
             let key = k.trim().to_string();
             let val = parse_toml_value(v.trim())
-                .with_context(|| format!("line {}: value for '{key}'", lineno + 1))?;
+                .map_err(|e| e.context(format!("line {}: value for '{key}'", lineno + 1)))?;
             let tbl = navigate(&mut root, &path);
             if let Value::Table(m) = tbl {
                 m.insert(key, val);

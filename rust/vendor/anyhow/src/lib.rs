@@ -1,0 +1,189 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! This build environment is fully offline (see the workspace's
+//! `src/util/mod.rs`), so the real crates.io `anyhow` cannot be fetched.
+//! This vendored shim implements exactly the subset the workspace uses —
+//! [`Error`], [`Result`], [`Context`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros — with matching semantics: contexts stack
+//! outermost-first, `Display` shows the outermost message, `{:#}` joins the
+//! chain with `": "`, and `{:?}` renders the full cause chain.
+
+use std::fmt;
+
+/// An error: an outermost message plus its cause chain (outermost first).
+///
+/// Like `anyhow::Error`, this type deliberately does **not** implement
+/// `std::error::Error` so that the blanket `From<E: std::error::Error>`
+/// conversion (what makes `?` work on any std error) stays coherent.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap the error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` defaulting the error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, like `anyhow::Context`.
+///
+/// Implemented for `Result<T, E>` over std errors and for `Option<T>`
+/// (where the context becomes the error message). Call sites that need
+/// context on an already-`anyhow` `Result` use `map_err` +
+/// [`Error::context`] instead, keeping the impls trivially coherent.
+pub trait Context<T>: Sized {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_message_only() {
+        let e: Error = Err::<(), _>(io_err()).context("open config").unwrap_err();
+        assert_eq!(e.to_string(), "open config");
+        assert_eq!(format!("{e:#}"), "open config: missing");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| format!("open {}", "x.toml"))
+            .unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("open x.toml"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("missing"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+        fn fails(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("three is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(fails(2).unwrap(), 2);
+        assert_eq!(fails(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(fails(99).unwrap_err().to_string(), "n too big: 99");
+        assert_eq!(anyhow!("x = {}", 7).to_string(), "x = 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(read().is_err());
+    }
+}
