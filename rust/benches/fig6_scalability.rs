@@ -1,53 +1,181 @@
-//! Figure 6 — throughput scaling with worker count.
+//! Figure 6 — throughput scaling with worker count, across interconnect
+//! topologies.
 //!
 //! Paper: RapidGNN scales near-linearly; at P=3 speedup 1.5× (products) to
-//! 1.6× (reddit) over P=2; at P=4, 1.7–2.1×. We sweep P ∈ {2,3,4,6,8}
-//! (extending past the paper's 4-machine testbed) on all three datasets.
+//! 1.6× (reddit) over P=2; at P=4, 1.7–2.1×. We sweep P ∈ {2,4,8,16}
+//! (extending past the paper's 4-machine testbed) on all three datasets and
+//! four fabric topologies (flat switch, 2-rack spine oversubscribed 8×,
+//! ring, star/parameter-server — see `rust/src/sim/README.md` for how a
+//! bench selects a topology: set `cfg.fabric.topology`).
+//!
+//! Conformance gate (per ISSUE 2): for every (topology × P) cell the
+//! event-driven full mode must report *identical* `total_remote_rows()` to
+//! trace mode, and on the homogeneous flat topology the event makespan must
+//! match the closed-form `pipeline_schedule` within 1e-9 (the cluster
+//! runtime's per-worker timelines equal the recurrence, so trace epoch time
+//! doubles as the closed-form reference). The identity cells run on a
+//! 0.1×-scaled reddit-sim so real full-mode SGD stays tractable at P=16.
 
-use rapidgnn::config::{DatasetPreset, Engine};
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, ExecMode, RunConfig, Topology};
 use rapidgnn::coordinator;
 use rapidgnn::util::bench::{fmt_secs, Table};
 use rapidgnn::util::bench_support::paper_run;
 use rapidgnn::util::value::Value;
 
-const WORKERS: [u32; 5] = [2, 3, 4, 6, 8];
+const WORKERS: [u32; 4] = [2, 4, 8, 16];
+
+fn topologies() -> Vec<(&'static str, Topology)> {
+    vec![
+        ("flat", Topology::Flat),
+        ("2tier-8x", Topology::TwoTier { racks: 2, oversubscription: 8.0 }),
+        ("ring", Topology::Ring),
+        ("star", Topology::Star { hub: 0 }),
+    ]
+}
+
+/// Small full-mode-capable config for the per-cell trace/full identity gate.
+fn identity_cfg(topo: Topology, workers: u32, mode: ExecMode) -> RunConfig {
+    let mut cfg = RunConfig {
+        dataset: DatasetConfig::preset(DatasetPreset::RedditSim, 0.1),
+        engine: Engine::Rapid,
+        num_workers: workers,
+        batch_size: 64,
+        epochs: 2,
+        n_hot: 2_000,
+        exec_mode: mode,
+        ..Default::default()
+    };
+    cfg.dataset.train_fraction = 0.66;
+    cfg.fabric.topology = topo;
+    cfg
+}
 
 fn main() -> rapidgnn::Result<()> {
     let mut json = Vec::new();
+
+    // --- scaling sweep: topology × P, trace mode, paper-scale datasets
     for preset in DatasetPreset::PAPER {
+        for (tname, topo) in topologies() {
+            let mut t = Table::new(
+                &format!("Fig 6 — RapidGNN scaling on {} over {tname}", preset.name()),
+                &["P", "epoch time", "speedup vs P=2", "DGL-METIS epoch", "Rapid vs METIS"],
+            );
+            let mut p2 = 0.0;
+            for &p in &WORKERS {
+                let mut cfg = paper_run(preset, Engine::Rapid, 1000);
+                cfg.num_workers = p;
+                cfg.fabric.topology = topo;
+                let rapid = coordinator::run(&cfg)?;
+                let mut bcfg = paper_run(preset, Engine::DglMetis, 1000);
+                bcfg.num_workers = p;
+                bcfg.fabric.topology = topo;
+                let metis = coordinator::run(&bcfg)?;
+                let epoch = rapid.total_time / cfg.epochs as f64;
+                let metis_epoch = metis.total_time / bcfg.epochs as f64;
+                if p == 2 {
+                    p2 = epoch;
+                }
+                t.row(&[
+                    p.to_string(),
+                    fmt_secs(epoch),
+                    format!("{:.2}x", p2 / epoch),
+                    fmt_secs(metis_epoch),
+                    format!("{:.2}x", metis_epoch / epoch),
+                ]);
+                let mut cell = Value::table();
+                cell.set("dataset", preset.name())
+                    .set("topology", tname)
+                    .set("workers", p)
+                    .set("rapid_epoch_time", epoch)
+                    .set("metis_epoch_time", metis_epoch);
+                json.push(cell);
+            }
+            t.print();
+        }
+    }
+
+    // --- straggler sensitivity: one slow worker on the flat fabric
+    {
         let mut t = Table::new(
-            &format!("Fig 6 — RapidGNN scaling on {}", preset.name()),
-            &["P", "epoch time", "speedup vs P=2", "DGL-METIS epoch", "Rapid vs METIS"],
+            "Fig 6b — straggler sensitivity (flat, P=4, worker 0 slowed)",
+            &["slowdown", "Rapid epoch", "vs clean"],
         );
-        let mut p2 = 0.0;
-        for &p in &WORKERS {
-            let mut cfg = paper_run(preset, Engine::Rapid, 1000);
-            cfg.num_workers = p;
-            let rapid = coordinator::run(&cfg)?;
-            let mut bcfg = paper_run(preset, Engine::DglMetis, 1000);
-            bcfg.num_workers = p;
-            let metis = coordinator::run(&bcfg)?;
-            let epoch = rapid.total_time / cfg.epochs as f64;
-            let metis_epoch = metis.total_time / bcfg.epochs as f64;
-            if p == 2 {
-                p2 = epoch;
+        let mut clean_epoch = 0.0;
+        for factor in [1.0f64, 2.0, 4.0] {
+            let mut cfg = paper_run(DatasetPreset::RedditSim, Engine::Rapid, 1000);
+            cfg.num_workers = 4;
+            if factor > 1.0 {
+                cfg.fabric.straggler_worker = 0;
+                cfg.fabric.straggler_factor = factor;
+            }
+            let r = coordinator::run(&cfg)?;
+            let epoch = r.total_time / cfg.epochs as f64;
+            if factor == 1.0 {
+                clean_epoch = epoch;
             }
             t.row(&[
-                p.to_string(),
+                format!("{factor:.0}x"),
                 fmt_secs(epoch),
-                format!("{:.2}x", p2 / epoch),
-                fmt_secs(metis_epoch),
-                format!("{:.2}x", metis_epoch / epoch),
+                format!("{:.2}x", epoch / clean_epoch),
             ]);
             let mut cell = Value::table();
-            cell.set("dataset", preset.name())
-                .set("workers", p)
-                .set("rapid_epoch_time", epoch)
-                .set("metis_epoch_time", metis_epoch);
+            cell.set("dataset", "reddit-sim straggler")
+                .set("straggler_factor", factor)
+                .set("rapid_epoch_time", epoch);
             json.push(cell);
         }
         t.print();
     }
+
+    // --- conformance gate: event-driven full mode vs trace, every cell
+    let mut gate = Table::new(
+        "Fig 6c — event-driven full mode vs trace (0.1× reddit-sim)",
+        &["topology", "P", "remote rows", "full == trace", "makespan vs closed form"],
+    );
+    for (tname, topo) in topologies() {
+        for &p in &WORKERS {
+            let trace = coordinator::run(&identity_cfg(topo, p, ExecMode::Trace))?;
+            let full = coordinator::run(&identity_cfg(topo, p, ExecMode::Full))?;
+            assert_eq!(
+                trace.total_remote_rows(),
+                full.total_remote_rows(),
+                "{tname} P={p}: full mode moved different rows than trace"
+            );
+            assert_eq!(trace.sync_remote_rows(), full.sync_remote_rows(), "{tname} P={p}");
+            // Trace epoch times come from the closed-form pipeline_schedule;
+            // full-mode times from the event-driven cluster runtime. On any
+            // homogeneous (straggler-free) topology they must agree.
+            let mut max_dt = 0.0f64;
+            for f in &full.epochs {
+                let t = trace
+                    .epochs
+                    .iter()
+                    .find(|e| e.worker == f.worker && e.epoch == f.epoch)
+                    .expect("matching trace epoch");
+                max_dt = max_dt.max((t.epoch_time - f.epoch_time).abs());
+            }
+            assert!(
+                max_dt < 1e-9,
+                "{tname} P={p}: event vs closed-form drift {max_dt}"
+            );
+            gate.row(&[
+                tname.into(),
+                p.to_string(),
+                trace.total_remote_rows().to_string(),
+                "yes".into(),
+                format!("{max_dt:.1e}"),
+            ]);
+            let mut cell = Value::table();
+            cell.set("dataset", "reddit-sim-0.1x identity")
+                .set("topology", tname)
+                .set("workers", p)
+                .set("remote_rows", trace.total_remote_rows())
+                .set("event_vs_closed_form_drift", max_dt);
+            json.push(cell);
+        }
+    }
+    gate.print();
+
     println!("paper: P=3 → 1.5-1.6x over P=2; P=4 → 1.7-2.1x (reddit)");
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/fig6.json", Value::Arr(json).to_json_pretty())?;

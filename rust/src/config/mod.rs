@@ -10,7 +10,9 @@ mod dataset;
 mod run;
 
 pub use dataset::{DatasetConfig, DatasetPreset};
-pub use run::{Engine, ExecMode, FabricConfig, PowerConfig, RunConfig, TrainerBackend};
+pub use run::{
+    Engine, ExecMode, FabricConfig, LinkModel, PowerConfig, RunConfig, Topology, TrainerBackend,
+};
 
 use crate::util::value::Value;
 use crate::Result;

@@ -132,6 +132,67 @@ impl FromStr for TrainerBackend {
     }
 }
 
+/// Cluster interconnect topology: how worker-to-worker links are laid out.
+///
+/// The fabric cost model charges every RPC against the (latency, bandwidth)
+/// of the specific `src → dst` link under the selected topology, so sweeps
+/// over this axis expose locality effects the flat model cannot (Fig-6
+/// topology × worker-count sweeps; see `sim/README.md`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Topology {
+    /// Single non-blocking switch: every pair is one hop at full bandwidth
+    /// (the paper testbed's 10 GbE — the previous implicit model).
+    Flat,
+    /// Two-tier rack/spine fabric: workers in the same rack (assigned
+    /// round-robin, `rack = w % racks`) talk at full bandwidth; cross-rack
+    /// traffic crosses the oversubscribed spine (2× latency, bandwidth
+    /// divided by the oversubscription factor).
+    TwoTier {
+        /// Number of racks (≥ 1).
+        racks: u32,
+        /// Spine oversubscription ratio (≥ 1; 1 = non-blocking).
+        oversubscription: f64,
+    },
+    /// Unidirectional-cable ring: cost scales with hop distance
+    /// `min(|s−d|, P−|s−d|)` — latency × hops, bandwidth ÷ hops
+    /// (store-and-forward through every intermediate link).
+    Ring,
+    /// Star / parameter-server: all traffic transits the hub worker. Links
+    /// touching the hub are one hop; everything else pays 2× latency and
+    /// half bandwidth (both spokes on the path).
+    Star {
+        /// Worker id acting as the hub.
+        hub: u32,
+    },
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::Flat
+    }
+}
+
+impl Topology {
+    /// Config-file identifier.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::TwoTier { .. } => "two-tier",
+            Topology::Ring => "ring",
+            Topology::Star { .. } => "star",
+        }
+    }
+}
+
+/// Per-link effective parameters derived from a topology.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Effective one-RPC latency on this link (seconds).
+    pub latency_sec: f64,
+    /// Effective bandwidth on this link (bytes/second).
+    pub bandwidth_bytes_per_sec: f64,
+}
+
 /// Simulated network fabric parameters (paper testbed: 10 Gbps Ethernet).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FabricConfig {
@@ -141,6 +202,17 @@ pub struct FabricConfig {
     pub rpc_latency_sec: f64,
     /// Per-node serialization overhead (id lookup, tensor slicing) in seconds.
     pub per_node_overhead_sec: f64,
+    /// Interconnect layout; per-link costs derive from it ([`Self::link_model`]).
+    pub topology: Topology,
+    /// Per-link loss rate in [0, 1): deterministically, every
+    /// `round(1/loss_rate)`-th RPC *on each link* times out and is retried
+    /// once at double latency. 0 disables injection.
+    pub loss_rate: f64,
+    /// Straggler injection: worker id whose links and local work run slow,
+    /// or -1 for none (i64 keeps the config Copy + trivially serializable).
+    pub straggler_worker: i64,
+    /// Slowdown multiplier for the straggler (≥ 1; 1 = no effect).
+    pub straggler_factor: f64,
 }
 
 impl Default for FabricConfig {
@@ -149,31 +221,154 @@ impl Default for FabricConfig {
             bandwidth_bytes_per_sec: 10.0e9 / 8.0, // 10 Gbps
             rpc_latency_sec: 150e-6,               // ~150 µs RPC round trip
             per_node_overhead_sec: 0.3e-6,         // serialization cost per row
+            topology: Topology::Flat,
+            loss_rate: 0.0,
+            straggler_worker: -1,
+            straggler_factor: 1.0,
         }
     }
 }
 
 impl FabricConfig {
-    /// Time to transfer one RPC carrying `bytes` for `nodes` feature rows.
+    /// Time to transfer one RPC carrying `bytes` for `nodes` feature rows
+    /// over a flat one-hop link (topology-unaware; kept for cost-model
+    /// calibration and the closed-form pipeline reference).
     pub fn rpc_time(&self, bytes: u64, nodes: u64) -> f64 {
         self.rpc_latency_sec
             + bytes as f64 / self.bandwidth_bytes_per_sec
             + nodes as f64 * self.per_node_overhead_sec
     }
 
+    /// Effective per-link parameters for `src → dst` under the topology.
+    /// `world` is the worker count (0 = unknown: ring distance degrades to
+    /// the non-wrapped `|src − dst|`).
+    pub fn link_model(&self, src: u32, dst: u32, world: u32) -> LinkModel {
+        let l = self.rpc_latency_sec;
+        let b = self.bandwidth_bytes_per_sec;
+        let (lat, bw) = match self.topology {
+            Topology::Flat => (l, b),
+            Topology::TwoTier { racks, oversubscription } => {
+                let r = racks.max(1);
+                if src % r == dst % r {
+                    (l, b)
+                } else {
+                    (2.0 * l, b / oversubscription.max(1.0))
+                }
+            }
+            Topology::Ring => {
+                let d = src.abs_diff(dst);
+                let hops = if world > d { d.min(world - d) } else { d }.max(1);
+                (hops as f64 * l, b / hops as f64)
+            }
+            Topology::Star { hub } => {
+                if src == hub || dst == hub {
+                    (l, b)
+                } else {
+                    (2.0 * l, b / 2.0)
+                }
+            }
+        };
+        LinkModel { latency_sec: lat, bandwidth_bytes_per_sec: bw }
+    }
+
+    /// Topology-aware RPC time for `src → dst`.
+    pub fn rpc_time_on_link(&self, src: u32, dst: u32, world: u32, bytes: u64, nodes: u64) -> f64 {
+        let link = self.link_model(src, dst, world);
+        link.latency_sec
+            + bytes as f64 / link.bandwidth_bytes_per_sec
+            + nodes as f64 * self.per_node_overhead_sec
+    }
+
+    /// Deterministic per-link retry cadence implied by `loss_rate`
+    /// (`None` when injection is disabled).
+    pub fn loss_every(&self) -> Option<u64> {
+        if self.loss_rate > 0.0 {
+            Some(((1.0 / self.loss_rate).round() as u64).max(1))
+        } else {
+            None
+        }
+    }
+
+    /// Configured straggler as `(worker, factor)`, if any.
+    pub fn straggler(&self) -> Option<(u32, f64)> {
+        if self.straggler_worker >= 0 && self.straggler_factor > 1.0 {
+            Some((self.straggler_worker as u32, self.straggler_factor))
+        } else {
+            None
+        }
+    }
+
+    /// Internal consistency checks (called from [`RunConfig::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.bandwidth_bytes_per_sec > 0.0, "bandwidth must be positive");
+        ensure!(self.rpc_latency_sec >= 0.0, "latency must be non-negative");
+        ensure!(
+            (0.0..1.0).contains(&self.loss_rate),
+            "loss_rate must be in [0,1)"
+        );
+        ensure!(self.straggler_factor >= 1.0, "straggler_factor must be >= 1");
+        match self.topology {
+            Topology::TwoTier { racks, oversubscription } => {
+                ensure!(racks >= 1, "two-tier topology needs >= 1 rack");
+                ensure!(oversubscription >= 1.0, "oversubscription must be >= 1");
+            }
+            Topology::Flat | Topology::Ring | Topology::Star { .. } => {}
+        }
+        Ok(())
+    }
+
     fn to_value(self) -> Value {
+        let (racks, oversub, hub) = match self.topology {
+            Topology::TwoTier { racks, oversubscription } => (racks, oversubscription, 0u32),
+            Topology::Star { hub } => (0, 1.0, hub),
+            _ => (0, 1.0, 0),
+        };
         let mut v = Value::table();
         v.set("bandwidth_bytes_per_sec", self.bandwidth_bytes_per_sec)
             .set("rpc_latency_sec", self.rpc_latency_sec)
-            .set("per_node_overhead_sec", self.per_node_overhead_sec);
+            .set("per_node_overhead_sec", self.per_node_overhead_sec)
+            .set("topology", self.topology.id())
+            .set("topology_racks", racks)
+            .set("topology_oversubscription", oversub)
+            .set("topology_hub", hub)
+            .set("loss_rate", self.loss_rate)
+            .set("straggler_worker", self.straggler_worker)
+            .set("straggler_factor", self.straggler_factor);
         v
     }
 
     fn from_value(v: &Value) -> Result<Self> {
+        // Topology keys are optional so pre-topology config files still load.
+        let topology = match v.get("topology") {
+            None => Topology::Flat,
+            Some(Value::Str(s)) => match s.as_str() {
+                "flat" => Topology::Flat,
+                "two-tier" => Topology::TwoTier {
+                    racks: v.req_u32("topology_racks")?,
+                    oversubscription: v.req_f64("topology_oversubscription")?,
+                },
+                "ring" => Topology::Ring,
+                "star" => Topology::Star { hub: v.req_u32("topology_hub")? },
+                other => bail!("unknown topology '{other}' (flat|two-tier|ring|star)"),
+            },
+            Some(other) => bail!("topology: expected string, got {other:?}"),
+        };
         Ok(FabricConfig {
             bandwidth_bytes_per_sec: v.req_f64("bandwidth_bytes_per_sec")?,
             rpc_latency_sec: v.req_f64("rpc_latency_sec")?,
             per_node_overhead_sec: v.req_f64("per_node_overhead_sec")?,
+            topology,
+            loss_rate: if v.get("loss_rate").is_some() { v.req_f64("loss_rate")? } else { 0.0 },
+            straggler_worker: if v.get("straggler_worker").is_some() {
+                v.req_i64("straggler_worker")?
+            } else {
+                -1
+            },
+            straggler_factor: if v.get("straggler_factor").is_some() {
+                v.req_f64("straggler_factor")?
+            } else {
+                1.0
+            },
         })
     }
 }
@@ -325,6 +520,14 @@ impl RunConfig {
             self.dataset.train_fraction > 0.0 && self.dataset.train_fraction <= 1.0,
             "train_fraction must be in (0,1]"
         );
+        self.fabric.validate()?;
+        if let Topology::Star { hub } = self.fabric.topology {
+            ensure!(hub < self.num_workers, "star hub {hub} >= num_workers");
+        }
+        ensure!(
+            self.fabric.straggler_worker < self.num_workers as i64,
+            "straggler worker out of range"
+        );
         Ok(())
     }
 
@@ -419,6 +622,128 @@ mod tests {
         assert!(f.rpc_time(2_000_000, 100) > f.rpc_time(1_000_000, 100));
         // latency floor: even a zero-byte RPC costs the round trip
         assert!(f.rpc_time(0, 0) >= f.rpc_latency_sec);
+    }
+
+    #[test]
+    fn flat_topology_matches_legacy_rpc_time() {
+        let f = FabricConfig::default();
+        for (src, dst) in [(0u32, 1u32), (3, 7), (15, 0)] {
+            assert_eq!(
+                f.rpc_time_on_link(src, dst, 16, 100_000, 250),
+                f.rpc_time(100_000, 250),
+                "flat link {src}->{dst} must equal the one-hop model"
+            );
+        }
+    }
+
+    #[test]
+    fn two_tier_charges_cross_rack_traffic_more() {
+        let mut f = FabricConfig::default();
+        f.topology = Topology::TwoTier { racks: 2, oversubscription: 4.0 };
+        // 0 and 2 share rack 0; 0 and 1 cross the spine.
+        let intra = f.rpc_time_on_link(0, 2, 4, 1_000_000, 0);
+        let inter = f.rpc_time_on_link(0, 1, 4, 1_000_000, 0);
+        assert!(inter > intra, "spine path {inter} !> rack path {intra}");
+        let intra_link = f.link_model(0, 2, 4);
+        let inter_link = f.link_model(0, 1, 4);
+        assert_eq!(intra_link.latency_sec, f.rpc_latency_sec);
+        assert_eq!(inter_link.latency_sec, 2.0 * f.rpc_latency_sec);
+        assert_eq!(
+            inter_link.bandwidth_bytes_per_sec,
+            f.bandwidth_bytes_per_sec / 4.0
+        );
+    }
+
+    #[test]
+    fn ring_cost_scales_with_wrapped_hop_distance() {
+        let mut f = FabricConfig::default();
+        f.topology = Topology::Ring;
+        let one = f.link_model(0, 1, 8);
+        let far = f.link_model(0, 4, 8);
+        let wrap = f.link_model(0, 7, 8); // distance 1 the short way round
+        assert_eq!(far.latency_sec, 4.0 * one.latency_sec);
+        assert_eq!(wrap.latency_sec, one.latency_sec);
+        assert_eq!(far.bandwidth_bytes_per_sec, one.bandwidth_bytes_per_sec / 4.0);
+    }
+
+    #[test]
+    fn star_hub_links_are_cheaper_than_spoke_to_spoke() {
+        let mut f = FabricConfig::default();
+        f.topology = Topology::Star { hub: 0 };
+        let to_hub = f.link_model(3, 0, 4);
+        let spoke = f.link_model(1, 3, 4);
+        assert_eq!(to_hub.latency_sec, f.rpc_latency_sec);
+        assert_eq!(spoke.latency_sec, 2.0 * f.rpc_latency_sec);
+        assert_eq!(spoke.bandwidth_bytes_per_sec, f.bandwidth_bytes_per_sec / 2.0);
+    }
+
+    #[test]
+    fn loss_rate_maps_to_deterministic_cadence() {
+        let mut f = FabricConfig::default();
+        assert_eq!(f.loss_every(), None);
+        f.loss_rate = 0.2;
+        assert_eq!(f.loss_every(), Some(5));
+        f.loss_rate = 0.5;
+        assert_eq!(f.loss_every(), Some(2));
+    }
+
+    #[test]
+    fn straggler_accessor_and_validation() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.fabric.straggler(), None);
+        c.fabric.straggler_worker = 1;
+        c.fabric.straggler_factor = 3.0;
+        assert_eq!(c.fabric.straggler(), Some((1, 3.0)));
+        c.validate().unwrap();
+        c.fabric.straggler_worker = 5; // only 2 workers
+        assert!(c.validate().is_err());
+        c.fabric.straggler_worker = 0;
+        c.fabric.straggler_factor = 0.5; // speedups are not stragglers
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_topologies() {
+        let mut c = RunConfig::default();
+        c.fabric.topology = Topology::TwoTier { racks: 0, oversubscription: 4.0 };
+        assert!(c.validate().is_err());
+        c.fabric.topology = Topology::TwoTier { racks: 2, oversubscription: 0.5 };
+        assert!(c.validate().is_err());
+        c.fabric.topology = Topology::Star { hub: 9 }; // 2 workers
+        assert!(c.validate().is_err());
+        c.fabric.topology = Topology::Star { hub: 1 };
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn topology_value_round_trip() {
+        for topo in [
+            Topology::Flat,
+            Topology::TwoTier { racks: 2, oversubscription: 8.0 },
+            Topology::Ring,
+            Topology::Star { hub: 1 },
+        ] {
+            let mut c = RunConfig::default();
+            c.fabric.topology = topo;
+            c.fabric.loss_rate = 0.125;
+            c.fabric.straggler_worker = 1;
+            c.fabric.straggler_factor = 2.5;
+            let back = RunConfig::from_value(&c.to_value()).unwrap();
+            assert_eq!(c, back, "{}", topo.id());
+        }
+    }
+
+    #[test]
+    fn pre_topology_fabric_values_still_parse() {
+        // Config files written before the topology axis lack the new keys.
+        let mut v = Value::table();
+        v.set("bandwidth_bytes_per_sec", 1.25e9)
+            .set("rpc_latency_sec", 150e-6)
+            .set("per_node_overhead_sec", 0.3e-6);
+        let f = FabricConfig::from_value(&v).unwrap();
+        assert_eq!(f.topology, Topology::Flat);
+        assert_eq!(f.loss_rate, 0.0);
+        assert_eq!(f.straggler(), None);
     }
 
     #[test]

@@ -15,12 +15,15 @@
 //! models the baseline's online sampling cost, not ours.
 
 use super::common::RunContext;
+use super::SharedTrainer;
 use crate::config::ExecMode;
 use crate::metrics::{CommStats, EpochReport, PhaseTimes};
 use crate::sampler::khop::sample_blocks;
 use crate::sampler::seed::derive_seed;
 use crate::sampler::{enumerate_epoch, BatchMeta};
+use crate::sim::{ClusterSim, WorkerActor};
 use crate::trainer::{batch_labels, feature_mat, TrainStep};
+use crate::util::mpmc;
 use crate::WorkerId;
 use std::time::Instant;
 
@@ -59,10 +62,14 @@ pub fn run_worker(
         let mut m_max = 0u64;
         let (mut loss_sum, mut correct, mut total) = (0.0f64, 0u64, 0u64);
 
+        let slow = ctx.slowdown(worker);
         for meta in &sched.batches {
             let n_input = meta.input_nodes.len();
             m_max = m_max.max(n_input as u64);
-            phases.sample += ctx.costs.sample_time(n_input);
+            // Local work (sampling, assembly, compute) carries the straggler
+            // slowdown; the fetch is charged per-link by the fabric, which
+            // applies its own straggler factor to links touching the worker.
+            phases.sample += slow * ctx.costs.sample_time(n_input);
 
             // On-demand fetch of every remote input feature, synchronously on
             // the critical path (local rows gather free of network).
@@ -74,7 +81,7 @@ pub fn run_worker(
                 &mut comm,
             );
             phases.fetch += pull.time;
-            phases.assemble += ctx.costs.assemble_time(n_input, d);
+            phases.assemble += slow * ctx.costs.assemble_time(n_input, d);
 
             if full {
                 let t0 = Instant::now();
@@ -84,7 +91,7 @@ pub fn run_worker(
                 correct += out.1 as u64;
                 total += out.2 as u64;
             } else {
-                phases.compute += ctx.compute_time(n_input, meta.seeds.len());
+                phases.compute += slow * ctx.compute_time(n_input, meta.seeds.len());
             }
         }
 
@@ -134,6 +141,159 @@ pub(super) fn full_train_step(
     let labels = batch_labels(&ctx.ds, &batch);
     let out = trainer.step(&x0, &batch, &labels, ctx.cfg.learning_rate);
     (out.loss, out.correct, out.total)
+}
+
+/// One baseline worker's epoch as a [`WorkerActor`]: online sampling + the
+/// full on-demand fetch in the stage slot, assemble + train in the consume
+/// slot, with `Q = 0` (no overlap — the reactive DistDGL behaviour). The
+/// single-slot [`mpmc`] ring carries the fetched batch to the trainer.
+struct BaselineEpochActor<'a> {
+    ctx: &'a RunContext,
+    worker: WorkerId,
+    epoch: u32,
+    slow: f64,
+    full: bool,
+    batches: std::vec::IntoIter<BatchMeta>,
+    queue_tx: mpmc::Sender<(BatchMeta, Vec<f32>)>,
+    queue_rx: mpmc::Receiver<(BatchMeta, Vec<f32>)>,
+    trainer: Option<SharedTrainer>,
+    comm: CommStats,
+    phases: PhaseTimes,
+    m_max: u64,
+    loss_sum: f64,
+    correct: u64,
+    total: u64,
+}
+
+impl<'a> BaselineEpochActor<'a> {
+    fn new(
+        ctx: &'a RunContext,
+        worker: WorkerId,
+        epoch: u32,
+        batches: Vec<BatchMeta>,
+        trainer: Option<SharedTrainer>,
+    ) -> Self {
+        let (queue_tx, queue_rx) = mpmc::bounded(1);
+        BaselineEpochActor {
+            worker,
+            epoch,
+            slow: ctx.slowdown(worker),
+            full: ctx.cfg.exec_mode == ExecMode::Full,
+            batches: batches.into_iter(),
+            queue_tx,
+            queue_rx,
+            trainer,
+            comm: CommStats::default(),
+            phases: PhaseTimes::default(),
+            m_max: 0,
+            loss_sum: 0.0,
+            correct: 0,
+            total: 0,
+            ctx,
+        }
+    }
+}
+
+impl WorkerActor for BaselineEpochActor<'_> {
+    fn stage_next(&mut self) -> Option<f64> {
+        let meta = self.batches.next()?;
+        let n_input = meta.input_nodes.len();
+        self.m_max = self.m_max.max(n_input as u64);
+        let sample = self.slow * self.ctx.costs.sample_time(n_input);
+        self.phases.sample += sample;
+        let mut features: Vec<f32> = Vec::new();
+        let pull = self.ctx.kv.sync_pull(
+            self.worker,
+            &meta.input_nodes,
+            if self.full { Some(&mut features) } else { None },
+            &mut self.comm,
+        );
+        self.phases.fetch += pull.time;
+        if self.queue_tx.try_send((meta, features)).is_err() {
+            panic!("cluster scheduler overflowed the serial staging slot");
+        }
+        Some(sample + pull.time)
+    }
+
+    fn consume_next(&mut self) -> f64 {
+        let (meta, features) = self
+            .queue_rx
+            .try_recv()
+            .expect("scheduler consumes only staged batches");
+        let n_input = meta.input_nodes.len();
+        let d = self.ctx.cfg.dataset.feature_dim;
+        let assemble = self.slow * self.ctx.costs.assemble_time(n_input, d);
+        let compute = self.slow * self.ctx.compute_time(n_input, meta.seeds.len());
+        if self.full {
+            let out = match &self.trainer {
+                Some(tr) => {
+                    let mut t = tr.lock().unwrap();
+                    full_train_step(self.ctx, self.worker, self.epoch, &meta, features, Some(&mut **t))
+                }
+                None => (f64::NAN, 0, 0),
+            };
+            self.loss_sum += out.0;
+            self.correct += out.1 as u64;
+            self.total += out.2 as u64;
+        }
+        self.phases.assemble += assemble;
+        self.phases.compute += compute;
+        assemble + compute
+    }
+}
+
+/// Run every baseline worker concurrently on the shared virtual clock — the
+/// event-driven replacement for the old sequential full-mode loop. Each
+/// worker is still internally serial (`Q = 0`), but cross-worker train steps
+/// interleave in deterministic virtual-time order on the shared model.
+pub fn run_cluster(ctx: &RunContext, trainer: Option<SharedTrainer>) -> Vec<EpochReport> {
+    let cfg = &ctx.cfg;
+    let fanouts = ctx.fanouts();
+    let full = cfg.exec_mode == ExecMode::Full;
+    let d = cfg.dataset.feature_dim;
+    let mut reports = Vec::with_capacity((cfg.num_workers * cfg.epochs) as usize);
+
+    for epoch in 0..cfg.epochs {
+        let mut sim = ClusterSim::new();
+        let mut sched_bytes: Vec<u64> = Vec::with_capacity(cfg.num_workers as usize);
+        for w in 0..cfg.num_workers {
+            let sched = enumerate_epoch(
+                &ctx.ds.graph,
+                &ctx.part,
+                &ctx.shards[w as usize],
+                &fanouts,
+                cfg.batch_size,
+                cfg.base_seed,
+                w,
+                epoch,
+            );
+            sched_bytes.push(sched.batches.iter().map(|b| b.byte_size()).sum());
+            sim.add_worker(0, BaselineEpochActor::new(ctx, w, epoch, sched.batches, trainer.clone()));
+        }
+        for (w, done) in sim.run().into_iter().enumerate() {
+            let timeline = done.timeline;
+            let actor = done.actor;
+            let steps = timeline.steps() as u32;
+            reports.push(EpochReport {
+                epoch,
+                worker: w as WorkerId,
+                steps,
+                epoch_time: timeline.makespan,
+                phases: actor.phases,
+                comm: actor.comm,
+                cache: Default::default(),
+                mean_loss: if full { actor.loss_sum / steps.max(1) as f64 } else { f64::NAN },
+                train_acc: if full && actor.total > 0 {
+                    actor.correct as f64 / actor.total as f64
+                } else {
+                    f64::NAN
+                },
+                device_bytes: actor.m_max * d as u64 * 4,
+                host_bytes: sched_bytes[w],
+            });
+        }
+    }
+    reports
 }
 
 #[cfg(test)]
@@ -202,6 +362,42 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.comm.remote_rows, y.comm.remote_rows);
             assert!((x.epoch_time - y.epoch_time).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cluster_runtime_matches_sequential_worker_path() {
+        // Q = 0 actors on the shared virtual clock must reproduce the serial
+        // per-worker accounting: identical counters, epoch times within
+        // float-accumulation noise (the event path sums per-batch, the
+        // serial path per-phase).
+        let seq_ctx = ctx(Engine::DglMetis);
+        let mut seq = Vec::new();
+        for w in 0..seq_ctx.cfg.num_workers {
+            seq.extend(run_worker(&seq_ctx, w, None));
+        }
+        let clu_ctx = ctx(Engine::DglMetis);
+        let clu = run_cluster(&clu_ctx, None);
+        assert_eq!(seq.len(), clu.len());
+        for c in &clu {
+            let s = seq
+                .iter()
+                .find(|r| r.worker == c.worker && r.epoch == c.epoch)
+                .expect("matching report");
+            assert_eq!(s.comm.remote_rows, c.comm.remote_rows);
+            assert_eq!(s.comm.bytes, c.comm.bytes);
+            assert_eq!(s.comm.sync_pulls, c.comm.sync_pulls);
+            assert_eq!(s.steps, c.steps);
+            assert_eq!(s.host_bytes, c.host_bytes);
+            assert_eq!(s.device_bytes, c.device_bytes);
+            assert!(
+                (s.epoch_time - c.epoch_time).abs() < 1e-9,
+                "w{} e{}: {} vs {}",
+                c.worker,
+                c.epoch,
+                s.epoch_time,
+                c.epoch_time
+            );
         }
     }
 }

@@ -9,7 +9,7 @@ use crate::partition::{partition, Partition, Partitioner};
 use crate::sampler::khop::Fanout;
 use crate::sim::ComputeModel;
 use crate::util::tempdir::TempDir;
-use crate::{NodeId, Result};
+use crate::{NodeId, Result, WorkerId};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -94,7 +94,7 @@ impl RunContext {
             Partitioner::Random
         };
         let part = Arc::new(partition(&ds.graph, cfg.num_workers, which, cfg.base_seed));
-        let fabric = NetFabric::new(cfg.fabric);
+        let fabric = NetFabric::new(cfg.fabric).with_world_size(cfg.num_workers);
         let kv = Arc::new(KvStore::new(&ds, part.clone(), fabric.clone()));
         let shards: Vec<Vec<NodeId>> = (0..cfg.num_workers)
             .map(|w| {
@@ -142,6 +142,20 @@ impl RunContext {
     /// Simulated compute time for a batch (trace mode).
     pub fn compute_time(&self, n_input: usize, n_seeds: usize) -> f64 {
         self.compute.step_time(&self.cfg, n_input as u64, n_seeds as u64)
+    }
+
+    /// Local-work slowdown multiplier for `worker` (straggler injection:
+    /// ≥ 1, and 1.0 for everyone but the configured straggler). Scales the
+    /// host-side costs on the training path — sampling, SSD streaming,
+    /// cache lookups, assembly, compute, and the background `C_sec`
+    /// stream+rank work; the straggler's *network* slowdown is applied
+    /// per-link by the fabric itself. The offline precompute pass is not
+    /// scaled: it is one-time setup, reported separately from training time.
+    pub fn slowdown(&self, worker: WorkerId) -> f64 {
+        match self.cfg.fabric.straggler() {
+            Some((w, factor)) if w == worker => factor,
+            _ => 1.0,
+        }
     }
 }
 

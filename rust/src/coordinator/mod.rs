@@ -3,8 +3,10 @@
 //!
 //! [`run`] executes a full distributed-training simulation for any
 //! [`Engine`]: it builds the dataset/partition/KV substrate, runs every
-//! worker (parallel threads in trace mode; sequential with a shared model in
-//! full mode — sequential SGD over the shard union, DESIGN.md §4), and
+//! worker (parallel threads in trace mode; the event-driven cluster runtime
+//! in full mode, where all workers' pipelines advance concurrently on one
+//! shared virtual clock and train-step order on the shared model is resolved
+//! deterministically in virtual time — [`crate::sim::cluster`]), and
 //! aggregates per-epoch reports plus energy into a [`RunReport`].
 
 mod baseline;
@@ -12,13 +14,20 @@ mod common;
 mod rapid;
 
 pub use common::{CostParams, RunContext};
-pub use rapid::{epoch_remote_frequency, precompute, RapidSetup};
+pub use rapid::{epoch_remote_frequency, precompute, run_cluster, RapidSetup};
 
 use crate::config::{Engine, ExecMode, RunConfig, TrainerBackend};
 use crate::energy::run_energy;
 use crate::metrics::{EpochReport, RunReport};
 use crate::trainer::{SageModel, TrainStep};
 use crate::Result;
+use std::sync::{Arc, Mutex};
+
+/// The full-mode model, shared across all worker actors on the virtual
+/// clock. The cluster event loop is single-threaded, so the mutex is
+/// uncontended — it exists to hand `&mut` access to whichever worker's
+/// train step fires next.
+pub type SharedTrainer = Arc<Mutex<Box<dyn TrainStep>>>;
 
 /// Execute a full run for `cfg` and aggregate the report.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
@@ -48,14 +57,20 @@ pub fn run_with_context(ctx: &RunContext) -> Result<RunReport> {
             }
         }
         ExecMode::Full => {
-            // Shared model across workers: sequential SGD over the shard
-            // union (workers run in turn; see DESIGN.md §4).
-            let mut model = build_trainer(ctx)?;
-            for w in 0..cfg.num_workers {
-                let (st, reps) = run_one_worker(ctx, w, Some(model.as_mut()))?;
-                setup_time = setup_time.max(st);
-                epochs.extend(reps);
-            }
+            // Shared model across workers, stepped by the event-driven
+            // cluster runtime: every worker's sampler→prefetcher→trainer
+            // pipeline advances concurrently on one virtual clock, and SGD
+            // steps interleave across workers in deterministic virtual-time
+            // order (replaces the old strictly-sequential worker loop).
+            let model: SharedTrainer = Arc::new(Mutex::new(build_trainer(ctx)?));
+            let (st, reps) = match cfg.engine {
+                Engine::Rapid => rapid::run_cluster(ctx, Some(model))?,
+                Engine::DglMetis | Engine::DglRandom | Engine::DistGcn => {
+                    (0.0, baseline::run_cluster(ctx, Some(model)))
+                }
+            };
+            setup_time = st;
+            epochs = reps;
         }
     }
 

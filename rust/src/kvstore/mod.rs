@@ -82,6 +82,12 @@ impl KvStore {
         self.shards.iter().any(|s| !s.is_empty())
     }
 
+    /// The fabric all pulls are charged against (topology-aware per-link
+    /// stats live here — Fig-4/Fig-6 benches and failure-path tests read it).
+    pub fn fabric(&self) -> &NetFabric {
+        &self.fabric
+    }
+
     /// Copy node `v`'s feature row into `out` (must be materialized).
     #[inline]
     pub fn copy_row(&self, v: NodeId, out: &mut [f32]) {

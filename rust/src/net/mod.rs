@@ -1,17 +1,34 @@
-//! Simulated network fabric: the paper testbed's 10 GbE, as a cost model.
+//! Simulated network fabric: the paper testbed's 10 GbE, as a cost model —
+//! now with pluggable interconnect topologies.
 //!
 //! Every KV-store RPC is *charged* against a [`NetFabric`] which converts
 //! (bytes, rows, rpc count) into simulated seconds using the linear model
-//! `latency + bytes/bandwidth + rows·overhead`. The paper's results are
-//! functions of exactly these quantities (remote rows fetched, bytes moved,
-//! stall time on the critical path), so a charged model reproduces the
-//! evaluation without a physical cluster (DESIGN.md §3). Per-link counters
-//! feed Fig-4-style data-transfer reports.
+//! `latency + bytes/bandwidth + rows·overhead`, where latency and bandwidth
+//! are the *per-link* values derived from the configured
+//! [`crate::config::Topology`] (flat switch, two-tier rack/spine, ring,
+//! star/parameter-server — see [`crate::config::FabricConfig::link_model`]).
+//! The paper's results are functions of exactly these quantities (remote rows
+//! fetched, bytes moved, stall time on the critical path), so a charged model
+//! reproduces the evaluation without a physical cluster (DESIGN.md §3).
+//! Per-link counters feed Fig-4-style data-transfer reports.
+//!
+//! Failure injection is deterministic, so every run with the same config is
+//! bit-reproducible:
+//! - [`NetFabric::with_failures`] retries every global `n`-th RPC at double
+//!   latency (the legacy whole-fabric knob);
+//! - [`crate::config::FabricConfig::loss_rate`] promotes that to *per-link*
+//!   cadence: every `round(1/loss_rate)`-th RPC **on each link** is retried.
+//!
+//! All counters live behind a single mutex ([`FabricState`]) so one lock
+//! acquisition covers the retry decision and the link accounting — the old
+//! split `links` / `rpc_counter` locks could interleave under concurrent
+//! charges (counter ticks from two RPCs, then both account their links).
 
 use crate::config::FabricConfig;
 use crate::WorkerId;
-use std::sync::Mutex;
+use std::collections::HashMap;
 use std::sync::Arc;
+use std::sync::Mutex;
 
 /// One charged transfer.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,17 +45,30 @@ pub struct LinkStats {
     pub rpcs: u64,
     pub bytes: u64,
     pub time: f64,
+    /// RPCs that timed out and were retried (2× latency charged).
+    pub retries: u64,
+}
+
+/// All mutable fabric state under one lock: the retry decision for an RPC and
+/// its link accounting commit atomically.
+#[derive(Debug, Default)]
+struct FabricState {
+    links: HashMap<(WorkerId, WorkerId), LinkStats>,
+    rpc_counter: u64,
 }
 
 /// Shared simulated fabric. Cloneable handle; counters are global.
 #[derive(Debug, Clone)]
 pub struct NetFabric {
     cfg: FabricConfig,
-    links: Arc<Mutex<std::collections::HashMap<(WorkerId, WorkerId), LinkStats>>>,
-    /// Optional failure injection: every Nth RPC on any link "times out" and
-    /// is retried once at double latency (tests the miss-handling paths).
+    /// Worker count, used by topologies whose link costs depend on it
+    /// (ring hop distance). 0 = unknown (degraded ring distances).
+    world: u32,
+    /// Optional failure injection: every global Nth RPC on any link "times
+    /// out" and is retried once at double latency (tests the miss-handling
+    /// paths). Per-link cadence comes from `cfg.loss_rate`.
     fail_every: Option<u64>,
-    rpc_counter: Arc<Mutex<u64>>,
+    state: Arc<Mutex<FabricState>>,
 }
 
 impl NetFabric {
@@ -46,10 +76,17 @@ impl NetFabric {
     pub fn new(cfg: FabricConfig) -> Self {
         NetFabric {
             cfg,
-            links: Arc::new(Mutex::new(std::collections::HashMap::new())),
+            world: 0,
             fail_every: None,
-            rpc_counter: Arc::new(Mutex::new(0)),
+            state: Arc::new(Mutex::new(FabricState::default())),
         }
+    }
+
+    /// Set the worker count (ring topologies need it for wrapped hop
+    /// distances; harmless otherwise).
+    pub fn with_world_size(mut self, world: u32) -> Self {
+        self.world = world;
+        self
     }
 
     /// Enable failure injection: every `n`-th RPC is retried at 2× latency.
@@ -64,22 +101,39 @@ impl NetFabric {
         &self.cfg
     }
 
+    /// Configured worker count (0 = unknown).
+    pub fn world_size(&self) -> u32 {
+        self.world
+    }
+
     /// Charge one RPC from `src` to `dst` carrying `rows` feature rows of
     /// `row_bytes` each. Returns the simulated cost.
     pub fn charge_rpc(&self, src: WorkerId, dst: WorkerId, rows: u64, row_bytes: u64) -> Charge {
         let bytes = rows * row_bytes + 64; // 64B header
-        let mut time = self.cfg.rpc_time(bytes, rows);
-        if let Some(n) = self.fail_every {
-            let mut c = self.rpc_counter.lock().unwrap();
-            *c += 1;
-            if *c % n == 0 {
-                // timeout + one retry: pay the latency again
-                time += self.cfg.rpc_latency_sec;
+        let link = self.cfg.link_model(src, dst, self.world);
+        let mut time = self.cfg.rpc_time_on_link(src, dst, self.world, bytes, rows);
+
+        let mut st = self.state.lock().unwrap();
+        st.rpc_counter += 1;
+        let mut retried = match self.fail_every {
+            Some(n) => st.rpc_counter % n == 0,
+            None => false,
+        };
+        let e = st.links.entry((src, dst)).or_default();
+        e.rpcs += 1;
+        if let Some(per_link) = self.cfg.loss_every() {
+            retried |= e.rpcs % per_link == 0;
+        }
+        if retried {
+            // timeout + one retry: pay the (per-link) latency again
+            time += link.latency_sec;
+            e.retries += 1;
+        }
+        if let Some((w, factor)) = self.cfg.straggler() {
+            if src == w || dst == w {
+                time *= factor;
             }
         }
-        let mut links = self.links.lock().unwrap();
-        let e = links.entry((src, dst)).or_default();
-        e.rpcs += 1;
         e.bytes += bytes;
         e.time += time;
         Charge { time, bytes }
@@ -109,26 +163,45 @@ impl NetFabric {
 
     /// Snapshot of per-link stats.
     pub fn link_stats(&self) -> Vec<((WorkerId, WorkerId), LinkStats)> {
-        let mut v: Vec<_> = self.links.lock().unwrap().iter().map(|(&k, &s)| (k, s)).collect();
+        let mut v: Vec<_> = self
+            .state
+            .lock()
+            .unwrap()
+            .links
+            .iter()
+            .map(|(&k, &s)| (k, s))
+            .collect();
         v.sort_by_key(|&(k, _)| k);
         v
     }
 
     /// Total bytes across all links.
     pub fn total_bytes(&self) -> u64 {
-        self.links.lock().unwrap().values().map(|s| s.bytes).sum()
+        self.state.lock().unwrap().links.values().map(|s| s.bytes).sum()
+    }
+
+    /// Total RPCs across all links.
+    pub fn total_rpcs(&self) -> u64 {
+        self.state.lock().unwrap().links.values().map(|s| s.rpcs).sum()
+    }
+
+    /// Total injected retries across all links.
+    pub fn total_retries(&self) -> u64 {
+        self.state.lock().unwrap().links.values().map(|s| s.retries).sum()
     }
 
     /// Reset all counters (between bench configurations).
     pub fn reset(&self) {
-        self.links.lock().unwrap().clear();
-        *self.rpc_counter.lock().unwrap() = 0;
+        let mut st = self.state.lock().unwrap();
+        st.links.clear();
+        st.rpc_counter = 0;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Topology;
 
     fn fabric() -> NetFabric {
         NetFabric::new(FabricConfig::default())
@@ -192,11 +265,139 @@ mod tests {
     }
 
     #[test]
+    fn retry_accounting_charges_exactly_one_extra_latency() {
+        // Every 3rd RPC retried: time = n·base + floor(n/3)·latency, and the
+        // rpc/bytes counters are unaffected by the retries.
+        let lat = FabricConfig::default().rpc_latency_sec;
+        let clean = fabric();
+        let base = clean.charge_rpc(0, 1, 10, 4).time;
+        let faulty = NetFabric::new(FabricConfig::default()).with_failures(3);
+        let mut total = 0.0;
+        for _ in 0..9 {
+            total += faulty.charge_rpc(0, 1, 10, 4).time;
+        }
+        assert!((total - (9.0 * base + 3.0 * lat)).abs() < 1e-12, "{total}");
+        let stats = faulty.link_stats();
+        assert_eq!(stats.len(), 1);
+        let l = stats[0].1;
+        assert_eq!(l.rpcs, 9, "retries must not inflate the RPC count");
+        assert_eq!(l.retries, 3);
+        assert_eq!(l.bytes, 9 * (10 * 4 + 64), "retries must not inflate bytes");
+        assert_eq!(faulty.total_retries(), 3);
+        assert_eq!(faulty.total_rpcs(), 9);
+    }
+
+    #[test]
+    fn per_link_loss_rate_is_counted_per_link_not_globally() {
+        // loss_rate 0.5 → every 2nd RPC *per link* retried. Alternating
+        // between two links, a global cadence would retry every other RPC on
+        // the same link; per-link cadence retries the 2nd and 4th on each.
+        let mut cfg = FabricConfig::default();
+        cfg.loss_rate = 0.5;
+        let f = NetFabric::new(cfg);
+        for _ in 0..4 {
+            f.charge_rpc(0, 1, 10, 4);
+            f.charge_rpc(0, 2, 10, 4);
+        }
+        for (link, s) in f.link_stats() {
+            assert_eq!(s.rpcs, 4, "{link:?}");
+            assert_eq!(s.retries, 2, "{link:?}: 2nd and 4th RPC retried");
+        }
+        assert_eq!(f.total_retries(), 4);
+    }
+
+    #[test]
+    fn loss_rate_charges_double_latency_on_retry_cadence() {
+        let lat = FabricConfig::default().rpc_latency_sec;
+        let clean = fabric();
+        let base = clean.charge_rpc(0, 1, 10, 4).time;
+        let mut cfg = FabricConfig::default();
+        cfg.loss_rate = 0.25; // every 4th RPC on the link
+        let f = NetFabric::new(cfg);
+        let times: Vec<f64> = (0..4).map(|_| f.charge_rpc(0, 1, 10, 4).time).collect();
+        for t in &times[..3] {
+            assert!((t - base).abs() < 1e-12);
+        }
+        assert!((times[3] - base - lat).abs() < 1e-12, "4th pays the retry");
+    }
+
+    #[test]
+    fn topology_changes_per_link_charges() {
+        let mut cfg = FabricConfig::default();
+        cfg.topology = Topology::TwoTier { racks: 2, oversubscription: 8.0 };
+        let f = NetFabric::new(cfg).with_world_size(4);
+        let intra = f.charge_rpc(0, 2, 1000, 400); // same rack (0%2 == 2%2)
+        let inter = f.charge_rpc(0, 1, 1000, 400); // cross-rack
+        assert!(inter.time > intra.time);
+        assert_eq!(inter.bytes, intra.bytes, "topology changes time, not bytes");
+    }
+
+    #[test]
+    fn straggler_slows_only_its_links() {
+        let mut cfg = FabricConfig::default();
+        cfg.straggler_worker = 1;
+        cfg.straggler_factor = 4.0;
+        let f = NetFabric::new(cfg).with_world_size(4);
+        let clean = fabric();
+        let base = clean.charge_rpc(0, 2, 1000, 400).time;
+        let untouched = f.charge_rpc(0, 2, 1000, 400).time;
+        let slow_dst = f.charge_rpc(0, 1, 1000, 400).time;
+        let slow_src = f.charge_rpc(1, 2, 1000, 400).time;
+        assert!((untouched - base).abs() < 1e-12);
+        assert!((slow_dst - 4.0 * base).abs() < 1e-12);
+        assert!((slow_src - 4.0 * base).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_charges_keep_counters_consistent() {
+        // The merged-lock regression test: many threads hammer the same
+        // fabric; rpc/bytes/retry totals must come out exact (the old split
+        // rpc_counter/links locks could skew the retry cadence vs the link
+        // counts under interleaving).
+        const THREADS: u64 = 8;
+        const PER: u64 = 500;
+        let mut cfg = FabricConfig::default();
+        cfg.loss_rate = 0.2; // every 5th per link
+        let f = NetFabric::new(cfg).with_failures(7);
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let f = f.clone();
+                s.spawn(move || {
+                    for i in 0..PER {
+                        // spread over a few links, deterministically per thread
+                        let dst = 1 + ((t + i) % 3) as u32;
+                        f.charge_rpc(0, dst, 10, 4);
+                    }
+                });
+            }
+        });
+        let total = THREADS * PER;
+        assert_eq!(f.total_rpcs(), total);
+        assert_eq!(f.total_bytes(), total * (10 * 4 + 64));
+        // per-link loss retries: exactly floor(link_rpcs/5) on each link,
+        // plus global every-7th retries — both derived from counters that
+        // now commit atomically with the accounting.
+        let per_link_expected: u64 = f.link_stats().iter().map(|(_, s)| s.rpcs / 5).sum();
+        let global_expected = total / 7;
+        let got = f.total_retries();
+        // A single RPC can trip both cadences at once (counted once), so the
+        // total lies between max(..) and the sum.
+        assert!(
+            got >= per_link_expected.max(global_expected) && got <= per_link_expected + global_expected,
+            "retries {got} outside [{}, {}]",
+            per_link_expected.max(global_expected),
+            per_link_expected + global_expected
+        );
+    }
+
+    #[test]
     fn reset_clears() {
         let f = fabric();
         f.charge_rpc(0, 1, 10, 4);
         assert!(f.total_bytes() > 0);
         f.reset();
         assert_eq!(f.total_bytes(), 0);
+        assert_eq!(f.total_rpcs(), 0);
+        assert_eq!(f.total_retries(), 0);
     }
 }

@@ -32,6 +32,11 @@ pub struct StagedBatch {
     pub features: Option<Vec<f32>>,
     /// Simulated staging time: cache lookups + residual SyncPull.
     pub stage_time: f64,
+    /// Network portion of `stage_time` (the residual SyncPull). The cluster
+    /// runtime splits it out so straggler slowdowns scale only the *local*
+    /// staging work — the network side is already charged per-link by the
+    /// topology-aware fabric.
+    pub pull_time: f64,
     /// Remote nodes served from the steady cache.
     pub cache_hits: u32,
     /// Remote nodes that missed the cache (fetched via SyncPull).
@@ -102,6 +107,7 @@ pub fn stage_batch(
         meta,
         features,
         stage_time,
+        pull_time: pull.time,
         cache_hits: hits.len() as u32,
         misses: misses.len() as u32,
     }

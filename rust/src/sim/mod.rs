@@ -1,6 +1,9 @@
 //! Simulated-time machinery: per-worker virtual clocks, the analytic compute
-//! model used in trace mode, and the bounded-queue pipeline recurrence that
-//! converts per-step costs into end-to-end epoch times.
+//! model used in trace mode, the bounded-queue pipeline recurrence that
+//! converts per-step costs into end-to-end epoch times, and the
+//! discrete-event cluster runtime ([`cluster`]) that schedules many worker
+//! pipelines concurrently on one shared virtual clock (see `sim/README.md`
+//! for the event model and topology presets).
 //!
 //! The pipeline model is the heart of the Table-2 reproduction: RapidGNN's
 //! prefetcher and trainer form a two-stage pipeline coupled by a bounded
@@ -9,8 +12,10 @@
 //! yields exactly the overlap behaviour the paper describes — communication
 //! hidden behind compute except where misses exceed the window.
 
+pub mod cluster;
 mod pipeline;
 
+pub use cluster::{ClusterSim, ClusterWorker, ScriptedActor, WorkerActor, WorkerTimeline};
 pub use pipeline::{pipeline_schedule, PipelineStep, PipelineTimes};
 
 use crate::config::RunConfig;

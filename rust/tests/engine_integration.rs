@@ -2,7 +2,9 @@
 //! and end-to-end invariants that unit tests can't see.
 
 use rapidgnn::cache::{top_hot, CacheBuffer, DoubleBufferCache};
-use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, ExecMode, FabricConfig, RunConfig};
+use rapidgnn::config::{
+    DatasetConfig, DatasetPreset, Engine, ExecMode, FabricConfig, RunConfig, Topology,
+};
 use rapidgnn::coordinator::{self, RunContext};
 use rapidgnn::graph::build_dataset;
 use rapidgnn::kvstore::KvStore;
@@ -86,6 +88,116 @@ fn network_failures_slow_but_do_not_break() {
         .sum();
     assert_eq!(faulty_stats.remote_rows, clean_epoch0_rows);
     assert!(faulty_stats.net_time > 0.0);
+}
+
+#[test]
+fn per_link_loss_rates_leave_data_movement_unchanged() {
+    // The promoted failure path: per-link loss rates slow runs down but must
+    // not change what either engine fetches — Rapid and the baseline move
+    // exactly the same remote rows with and without injected failures.
+    for engine in [Engine::Rapid, Engine::DglMetis] {
+        let clean_cfg = tiny_cfg(engine);
+        let mut faulty_cfg = tiny_cfg(engine);
+        faulty_cfg.fabric.loss_rate = 0.2; // every 5th RPC per link retried
+        let clean_ctx = RunContext::build(&clean_cfg).unwrap();
+        let faulty_ctx = RunContext::build(&faulty_cfg).unwrap();
+        let clean = coordinator::run_with_context(&clean_ctx).unwrap();
+        let faulty = coordinator::run_with_context(&faulty_ctx).unwrap();
+        assert_eq!(
+            clean.total_remote_rows(),
+            faulty.total_remote_rows(),
+            "{}: loss injection must not change data movement",
+            engine.name()
+        );
+        assert_eq!(clean.sync_remote_rows(), faulty.sync_remote_rows());
+        assert_eq!(faulty_ctx.fabric.total_rpcs(), clean_ctx.fabric.total_rpcs());
+        assert!(faulty_ctx.fabric.total_retries() > 0, "retries were injected");
+        assert_eq!(clean_ctx.fabric.total_retries(), 0);
+        assert!(
+            faulty.total_time > clean.total_time - 1e-12,
+            "{}: failures cannot speed a run up",
+            engine.name()
+        );
+    }
+    // The serial baseline pays every retry on the critical path.
+    let mut faulty_cfg = tiny_cfg(Engine::DglMetis);
+    faulty_cfg.fabric.loss_rate = 0.5;
+    let clean = coordinator::run(&tiny_cfg(Engine::DglMetis)).unwrap();
+    let faulty = coordinator::run(&faulty_cfg).unwrap();
+    assert!(
+        faulty.total_time > clean.total_time,
+        "baseline with 50% loss: {} !> {}",
+        faulty.total_time,
+        clean.total_time
+    );
+}
+
+#[test]
+fn topology_changes_time_but_not_rows() {
+    // The topology axis prices links differently; it must never change which
+    // rows move. An 8×-oversubscribed spine must slow the on-demand baseline
+    // (every fetch on the critical path) relative to the flat switch.
+    let topologies = [
+        Topology::Flat,
+        Topology::TwoTier { racks: 2, oversubscription: 8.0 },
+        Topology::Ring,
+        Topology::Star { hub: 0 },
+    ];
+    for engine in [Engine::Rapid, Engine::DglMetis] {
+        let flat = coordinator::run(&tiny_cfg(engine)).unwrap();
+        for topo in topologies {
+            let mut cfg = tiny_cfg(engine);
+            cfg.fabric.topology = topo;
+            let r = coordinator::run(&cfg).unwrap();
+            assert_eq!(
+                r.total_remote_rows(),
+                flat.total_remote_rows(),
+                "{} on {}: rows must be topology-invariant",
+                engine.name(),
+                topo.id()
+            );
+        }
+    }
+    let mut spine = tiny_cfg(Engine::DglMetis);
+    spine.fabric.topology = Topology::TwoTier { racks: 2, oversubscription: 8.0 };
+    let flat = coordinator::run(&tiny_cfg(Engine::DglMetis)).unwrap();
+    let slow = coordinator::run(&spine).unwrap();
+    assert!(
+        slow.total_time > flat.total_time,
+        "oversubscribed spine {} !> flat {}",
+        slow.total_time,
+        flat.total_time
+    );
+}
+
+#[test]
+fn full_mode_cluster_runtime_matches_trace_on_every_topology() {
+    // The Fig-6 acceptance invariant, in-tree: on each topology the
+    // event-driven full mode (concurrent worker actors, shared model) counts
+    // exactly the trace-mode communication.
+    for topo in [
+        Topology::Flat,
+        Topology::TwoTier { racks: 2, oversubscription: 4.0 },
+        Topology::Ring,
+        Topology::Star { hub: 1 },
+    ] {
+        let mut trace = tiny_cfg(Engine::Rapid);
+        trace.batch_size = 64;
+        trace.epochs = 2;
+        trace.fabric.topology = topo;
+        let mut full = trace.clone();
+        full.exec_mode = ExecMode::Full;
+        let rt = coordinator::run(&trace).unwrap();
+        let rf = coordinator::run(&full).unwrap();
+        assert_eq!(
+            rt.total_remote_rows(),
+            rf.total_remote_rows(),
+            "topology {}",
+            topo.id()
+        );
+        assert_eq!(rt.sync_remote_rows(), rf.sync_remote_rows(), "topology {}", topo.id());
+        assert!((rt.cache_hit_rate() - rf.cache_hit_rate()).abs() < 1e-12);
+    }
 }
 
 #[test]

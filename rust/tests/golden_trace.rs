@@ -1,0 +1,100 @@
+//! Golden-trace conformance suite: the end-to-end determinism contract.
+//!
+//! A `Tiny`-preset trace run is serialized to JSON and compared byte-for-byte
+//! against (a) a second run in the same process, (b) runs at different
+//! `RAPIDGNN_THREADS` worker counts, and (c) a checked-in fixture. Any change
+//! to sampling, ranking, caching, fabric charging, or the event-driven
+//! cluster runtime that perturbs a single counter or simulated nanosecond
+//! fails loudly here.
+//!
+//! Blessing: if the fixture file does not exist yet it is written and the
+//! test passes (first run in a fresh checkout / CI runner bootstraps it).
+//! After an *intentional* behaviour change, refresh it with
+//! `UPDATE_GOLDEN=1 cargo test -p rapidgnn --test golden_trace`.
+
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+use rapidgnn::coordinator;
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// All three tests render traces and one of them mutates the process-global
+/// `RAPIDGNN_THREADS`; serialize them so a renders never races the env
+/// mutation (cargo's default harness runs tests in parallel threads).
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn golden_cfg(engine: Engine) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+    c.engine = engine;
+    c.epochs = 2;
+    c.n_hot = 300;
+    c
+}
+
+/// The canonical serialized trace: both headline engines in one document
+/// (remote rows, cache hit rates, per-epoch times — everything `to_json`
+/// emits, which is every field of every `EpochReport`).
+fn render_trace() -> String {
+    let rapid = coordinator::run(&golden_cfg(Engine::Rapid)).unwrap();
+    let metis = coordinator::run(&golden_cfg(Engine::DglMetis)).unwrap();
+    format!(
+        "{{\n\"rapid\": {},\n\"dgl-metis\": {}\n}}\n",
+        rapid.to_json(),
+        metis.to_json()
+    )
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden_tiny_trace.json")
+}
+
+#[test]
+fn golden_trace_is_byte_stable_across_runs() {
+    let _guard = env_lock();
+    assert_eq!(render_trace(), render_trace(), "same-process runs must be byte-identical");
+}
+
+#[test]
+fn golden_trace_is_byte_stable_across_thread_counts() {
+    // The parallel schedule precompute, sharded frequency tally, and worker
+    // threads must not leak thread count into any reported quantity.
+    let _guard = env_lock();
+    let prev = std::env::var("RAPIDGNN_THREADS").ok();
+    std::env::set_var("RAPIDGNN_THREADS", "1");
+    let serial = render_trace();
+    for threads in ["2", "8"] {
+        std::env::set_var("RAPIDGNN_THREADS", threads);
+        let parallel = render_trace();
+        assert_eq!(serial, parallel, "threads={threads} changed the report");
+    }
+    match prev {
+        Some(v) => std::env::set_var("RAPIDGNN_THREADS", v),
+        None => std::env::remove_var("RAPIDGNN_THREADS"),
+    }
+}
+
+#[test]
+fn golden_trace_matches_checked_in_fixture() {
+    let _guard = env_lock();
+    let path = fixture_path();
+    let rendered = render_trace();
+    let bless = std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &rendered).unwrap();
+        eprintln!("blessed golden fixture at {}", path.display());
+        return;
+    }
+    let fixture = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        rendered, fixture,
+        "trace diverged from {} — if the change is intentional, \
+         re-bless with UPDATE_GOLDEN=1",
+        path.display()
+    );
+}
