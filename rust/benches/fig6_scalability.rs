@@ -176,6 +176,46 @@ fn main() -> rapidgnn::Result<()> {
     }
     gate.print();
 
+    // --- registry scenario engines: scaling cells + the same full==trace
+    // gate, through the shared strategy pipeline (no engine-specific code
+    // in this bench — `cfg.engine` is all that changes).
+    let mut reg = Table::new(
+        "Fig 6d — registry engines on the flat fabric (0.1× reddit-sim)",
+        &["engine", "P", "epoch time", "remote rows", "full == trace"],
+    );
+    for engine in [Engine::FastSample, Engine::GreenWindow] {
+        for &p in &[2u32, 4, 8] {
+            let mut tcfg = identity_cfg(Topology::Flat, p, ExecMode::Trace);
+            tcfg.engine = engine;
+            let mut fcfg = identity_cfg(Topology::Flat, p, ExecMode::Full);
+            fcfg.engine = engine;
+            let trace = coordinator::run(&tcfg)?;
+            let full = coordinator::run(&fcfg)?;
+            assert_eq!(
+                trace.total_remote_rows(),
+                full.total_remote_rows(),
+                "{} P={p}: full mode moved different rows than trace",
+                engine.id()
+            );
+            let epoch = trace.total_time / tcfg.epochs as f64;
+            reg.row(&[
+                engine.id().into(),
+                p.to_string(),
+                fmt_secs(epoch),
+                trace.total_remote_rows().to_string(),
+                "yes".into(),
+            ]);
+            let mut cell = Value::table();
+            cell.set("dataset", "reddit-sim-0.1x registry")
+                .set("engine", engine.id())
+                .set("workers", p)
+                .set("epoch_time", epoch)
+                .set("remote_rows", trace.total_remote_rows());
+            json.push(cell);
+        }
+    }
+    reg.print();
+
     println!("paper: P=3 → 1.5-1.6x over P=2; P=4 → 1.7-2.1x (reddit)");
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/fig6.json", Value::Arr(json).to_json_pretty())?;

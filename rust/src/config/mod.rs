@@ -11,7 +11,8 @@ mod run;
 
 pub use dataset::{DatasetConfig, DatasetPreset};
 pub use run::{
-    Engine, ExecMode, FabricConfig, LinkModel, PowerConfig, RunConfig, Topology, TrainerBackend,
+    Engine, EngineParams, ExecMode, FabricConfig, LinkModel, PowerConfig, RunConfig, Topology,
+    TrainerBackend,
 };
 
 use crate::util::value::Value;

@@ -6,21 +6,37 @@ use crate::Result;
 use anyhow::{bail, ensure};
 use std::str::FromStr;
 
-/// Training engine selection — RapidGNN plus the paper's three baselines.
+/// Training-engine id, resolved against the strategy registry
+/// ([`crate::coordinator::EngineRegistry`]).
+///
+/// Thin by design: the config only *names* the engine — all behavior lives in
+/// the [`crate::coordinator::TrainingStrategy`] the registry constructs for
+/// this id (partitioner, fan-out policy, setup, staging, epoch bookkeeping).
+/// Parsing validates against the registry, so every `Engine` obtained through
+/// [`FromStr`] or the `Engine::Rapid`-style constants names a registered
+/// strategy. Per-engine tuning knobs live in [`EngineParams`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Engine {
-    /// The paper's system: deterministic schedule + hot-set cache + prefetcher.
-    Rapid,
-    /// DistDGL-style GraphSAGE with METIS-like partitions, on-demand fetch.
-    DglMetis,
-    /// DistDGL-style GraphSAGE with random partitions, on-demand fetch.
-    DglRandom,
-    /// Dist-GCN baseline: full-neighborhood k-hop expansion, on-demand fetch.
-    DistGcn,
-}
+pub struct Engine(&'static str);
 
+#[allow(non_upper_case_globals)] // variant-style names predate the registry
 impl Engine {
-    /// All engines compared in the paper's Table 2.
+    /// The paper's system: deterministic schedule + hot-set cache + prefetcher.
+    pub const Rapid: Engine = Engine("rapid");
+    /// DistDGL-style GraphSAGE with METIS-like partitions, on-demand fetch.
+    pub const DglMetis: Engine = Engine("dgl-metis");
+    /// DistDGL-style GraphSAGE with random partitions, on-demand fetch.
+    pub const DglRandom: Engine = Engine("dgl-random");
+    /// Dist-GCN baseline: full-neighborhood k-hop expansion, on-demand fetch.
+    pub const DistGcn: Engine = Engine("dist-gcn");
+    /// FastSample-style periodic re-sampling: the schedule is re-enumerated
+    /// every `EngineParams::resample_period` epochs and replayed in between.
+    pub const FastSample: Engine = Engine("fast-sample");
+    /// GreenGNN-style windowed communication: remote fetches of
+    /// `EngineParams::fetch_window` consecutive batches merge into one pull.
+    pub const GreenWindow: Engine = Engine("green-window");
+
+    /// The engines compared in the paper's Table 2. The registry may hold
+    /// more — `EngineRegistry::engines()` is the full open set.
     pub const ALL: [Engine; 4] = [
         Engine::Rapid,
         Engine::DglMetis,
@@ -28,41 +44,97 @@ impl Engine {
         Engine::DistGcn,
     ];
 
-    /// Display name used in bench tables.
+    /// Display name used in bench tables (from the registry entry).
     pub fn name(&self) -> &'static str {
-        match self {
-            Engine::Rapid => "RapidGNN",
-            Engine::DglMetis => "DGL-METIS",
-            Engine::DglRandom => "DGL-Random",
-            Engine::DistGcn => "Dist-GCN",
-        }
+        crate::coordinator::EngineRegistry::global()
+            .display_name(self.0)
+            .unwrap_or(self.0)
     }
 
-    /// Config-file identifier.
+    /// Config-file identifier (the registry key).
     pub fn id(&self) -> &'static str {
-        match self {
-            Engine::Rapid => "rapid",
-            Engine::DglMetis => "dgl-metis",
-            Engine::DglRandom => "dgl-random",
-            Engine::DistGcn => "dist-gcn",
-        }
+        self.0
     }
 
-    /// Whether this engine uses the METIS-like (vs random) partitioner.
-    pub fn uses_metis(&self) -> bool {
-        !matches!(self, Engine::DglRandom)
+    /// Registry-internal constructor: wrap a registry key as an `Engine`.
+    /// Only the registry hands out ids, so the value always resolves.
+    pub(crate) fn from_registry_id(id: &'static str) -> Engine {
+        Engine(id)
     }
 }
 
 impl FromStr for Engine {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self> {
-        Ok(match s {
-            "rapid" | "rapidgnn" => Engine::Rapid,
-            "dgl-metis" => Engine::DglMetis,
-            "dgl-random" => Engine::DglRandom,
-            "dist-gcn" | "gcn" => Engine::DistGcn,
-            _ => bail!("unknown engine '{s}' (rapid|dgl-metis|dgl-random|dist-gcn)"),
+        // Historical aliases, kept for old config files and muscle memory.
+        let wanted = match s {
+            "rapidgnn" => "rapid",
+            "gcn" => "dist-gcn",
+            other => other,
+        };
+        let reg = crate::coordinator::EngineRegistry::global();
+        match reg.canonical_id(wanted) {
+            Some(id) => Ok(Engine(id)),
+            None => bail!(
+                "unknown engine '{s}' (registered: {})",
+                reg.ids().collect::<Vec<_>>().join("|")
+            ),
+        }
+    }
+}
+
+/// Per-engine tuning parameters.
+///
+/// One flat struct rather than a per-engine map so the TOML round-trip stays
+/// trivial and typed; each strategy reads only its own fields and ignores the
+/// rest. All fields have engine-neutral defaults, so configs written before
+/// an engine existed still load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineParams {
+    /// `fast-sample`: re-enumerate the schedule every `k` epochs; epochs
+    /// inside a period replay the period-start schedule, amortizing the
+    /// precompute pass (and its cache rebuilds) over `k` epochs.
+    pub resample_period: u32,
+    /// `green-window`: number of consecutive batches whose remote fetches
+    /// are merged into one windowed pull — fewer, larger RPCs at the price
+    /// of first-step latency per window.
+    pub fetch_window: u32,
+}
+
+impl Default for EngineParams {
+    fn default() -> Self {
+        EngineParams { resample_period: 4, fetch_window: 4 }
+    }
+}
+
+impl EngineParams {
+    /// Internal consistency checks (called from [`RunConfig::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.resample_period >= 1, "resample_period must be >= 1");
+        ensure!(self.fetch_window >= 1, "fetch_window must be >= 1");
+        Ok(())
+    }
+
+    fn to_value(self) -> Value {
+        let mut v = Value::table();
+        v.set("resample_period", self.resample_period)
+            .set("fetch_window", self.fetch_window);
+        v
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let d = EngineParams::default();
+        Ok(EngineParams {
+            resample_period: if v.get("resample_period").is_some() {
+                v.req_u32("resample_period")?
+            } else {
+                d.resample_period
+            },
+            fetch_window: if v.get("fetch_window").is_some() {
+                v.req_u32("fetch_window")?
+            } else {
+                d.fetch_window
+            },
         })
     }
 }
@@ -194,7 +266,7 @@ pub struct LinkModel {
 }
 
 /// Simulated network fabric parameters (paper testbed: 10 Gbps Ethernet).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
     /// Link bandwidth in bytes/second (default 10 Gbps).
     pub bandwidth_bytes_per_sec: f64,
@@ -208,8 +280,14 @@ pub struct FabricConfig {
     /// `round(1/loss_rate)`-th RPC *on each link* times out and is retried
     /// once at double latency. 0 disables injection.
     pub loss_rate: f64,
-    /// Straggler injection: worker id whose links and local work run slow,
-    /// or -1 for none (i64 keeps the config Copy + trivially serializable).
+    /// Per-worker slowdown multipliers (heterogeneous cluster model): entry
+    /// `w` scales worker `w`'s local work and every link touching it. Empty
+    /// (the default) means all-ones; entries past the end default to 1.0.
+    /// All entries must be ≥ 1 — slowdowns, not speedups, like
+    /// `straggler_factor`. Resolved per worker by [`Self::slowdown_of`].
+    pub worker_speed: Vec<f64>,
+    /// Single-straggler sugar: worker id whose links and local work run
+    /// slow, or -1 for none. Combines multiplicatively with `worker_speed`.
     pub straggler_worker: i64,
     /// Slowdown multiplier for the straggler (≥ 1; 1 = no effect).
     pub straggler_factor: f64,
@@ -223,6 +301,7 @@ impl Default for FabricConfig {
             per_node_overhead_sec: 0.3e-6,         // serialization cost per row
             topology: Topology::Flat,
             loss_rate: 0.0,
+            worker_speed: Vec::new(),
             straggler_worker: -1,
             straggler_factor: 1.0,
         }
@@ -298,6 +377,18 @@ impl FabricConfig {
         }
     }
 
+    /// Resolved slowdown multiplier for `worker`: its `worker_speed` entry
+    /// (1.0 when absent) times the straggler sugar when it names this worker.
+    /// ≥ 1 by validation; 1.0 for an unconfigured worker.
+    pub fn slowdown_of(&self, worker: u32) -> f64 {
+        let base = self.worker_speed.get(worker as usize).copied().unwrap_or(1.0);
+        match self.straggler() {
+            Some((w, factor)) if w == worker => base * factor,
+            _ => base,
+        }
+    }
+
+
     /// Internal consistency checks (called from [`RunConfig::validate`]).
     pub fn validate(&self) -> Result<()> {
         ensure!(self.bandwidth_bytes_per_sec > 0.0, "bandwidth must be positive");
@@ -307,6 +398,10 @@ impl FabricConfig {
             "loss_rate must be in [0,1)"
         );
         ensure!(self.straggler_factor >= 1.0, "straggler_factor must be >= 1");
+        ensure!(
+            self.worker_speed.iter().all(|s| s.is_finite() && *s >= 1.0),
+            "worker_speed entries must be finite slowdown factors >= 1"
+        );
         match self.topology {
             Topology::TwoTier { racks, oversubscription } => {
                 ensure!(racks >= 1, "two-tier topology needs >= 1 rack");
@@ -317,7 +412,7 @@ impl FabricConfig {
         Ok(())
     }
 
-    fn to_value(self) -> Value {
+    fn to_value(&self) -> Value {
         let (racks, oversub, hub) = match self.topology {
             Topology::TwoTier { racks, oversubscription } => (racks, oversubscription, 0u32),
             Topology::Star { hub } => (0, 1.0, hub),
@@ -332,6 +427,7 @@ impl FabricConfig {
             .set("topology_oversubscription", oversub)
             .set("topology_hub", hub)
             .set("loss_rate", self.loss_rate)
+            .set("worker_speed", &self.worker_speed[..])
             .set("straggler_worker", self.straggler_worker)
             .set("straggler_factor", self.straggler_factor);
         v
@@ -359,6 +455,11 @@ impl FabricConfig {
             per_node_overhead_sec: v.req_f64("per_node_overhead_sec")?,
             topology,
             loss_rate: if v.get("loss_rate").is_some() { v.req_f64("loss_rate")? } else { 0.0 },
+            worker_speed: if v.get("worker_speed").is_some() {
+                v.req_f64_array("worker_speed")?
+            } else {
+                Vec::new()
+            },
             straggler_worker: if v.get("straggler_worker").is_some() {
                 v.req_i64("straggler_worker")?
             } else {
@@ -461,6 +562,8 @@ pub struct RunConfig {
     pub fabric: FabricConfig,
     /// Power model for energy accounting.
     pub power: PowerConfig,
+    /// Per-engine tuning parameters (each strategy reads only its own).
+    pub engine_params: EngineParams,
     /// Cap on neighbors expanded per node for the Dist-GCN full-neighborhood
     /// baseline (prevents pathological hub blowup; paper's GCN uses the full
     /// neighborhood, which our generator's hubs would make degenerate).
@@ -488,6 +591,7 @@ impl Default for RunConfig {
             backend: TrainerBackend::Host,
             fabric: FabricConfig::default(),
             power: PowerConfig::default(),
+            engine_params: EngineParams::default(),
             gcn_neighbor_cap: 64,
             metadata_dir: String::new(),
         }
@@ -521,12 +625,19 @@ impl RunConfig {
             "train_fraction must be in (0,1]"
         );
         self.fabric.validate()?;
+        self.engine_params.validate()?;
         if let Topology::Star { hub } = self.fabric.topology {
             ensure!(hub < self.num_workers, "star hub {hub} >= num_workers");
         }
         ensure!(
             self.fabric.straggler_worker < self.num_workers as i64,
             "straggler worker out of range"
+        );
+        ensure!(
+            self.fabric.worker_speed.len() <= self.num_workers as usize,
+            "worker_speed has {} entries for {} workers",
+            self.fabric.worker_speed.len(),
+            self.num_workers
         );
         Ok(())
     }
@@ -555,7 +666,8 @@ impl RunConfig {
             .set("metadata_dir", self.metadata_dir.as_str())
             .set("dataset", self.dataset.to_value())
             .set("fabric", self.fabric.to_value())
-            .set("power", self.power.to_value());
+            .set("power", self.power.to_value())
+            .set("engine_params", self.engine_params.to_value());
         v
     }
 
@@ -577,6 +689,11 @@ impl RunConfig {
             backend: v.req_str("backend")?.parse()?,
             fabric: FabricConfig::from_value(v.req_table("fabric")?)?,
             power: PowerConfig::from_value(v.req_table("power")?)?,
+            // Optional so pre-registry config files still load.
+            engine_params: match v.get("engine_params") {
+                Some(t) => EngineParams::from_value(t)?,
+                None => EngineParams::default(),
+            },
             gcn_neighbor_cap: v.req_u32("gcn_neighbor_cap")?,
             metadata_dir: v.req_str("metadata_dir")?.to_string(),
         };
@@ -703,6 +820,54 @@ mod tests {
     }
 
     #[test]
+    fn worker_speed_vector_resolves_per_worker() {
+        let mut f = FabricConfig::default();
+        assert_eq!(f.slowdown_of(0), 1.0);
+        f.worker_speed = vec![1.0, 2.5];
+        assert_eq!(f.slowdown_of(0), 1.0);
+        assert_eq!(f.slowdown_of(1), 2.5);
+        assert_eq!(f.slowdown_of(7), 1.0, "past-the-end workers run nominal");
+        // straggler sugar composes multiplicatively with the vector
+        f.straggler_worker = 1;
+        f.straggler_factor = 2.0;
+        assert_eq!(f.slowdown_of(1), 5.0);
+        assert_eq!(f.slowdown_of(0), 1.0);
+    }
+
+    #[test]
+    fn straggler_sugar_equals_equivalent_speed_vector() {
+        let mut sugar = FabricConfig::default();
+        sugar.straggler_worker = 1;
+        sugar.straggler_factor = 3.0;
+        let mut vector = FabricConfig::default();
+        vector.worker_speed = vec![1.0, 3.0];
+        for w in 0..4 {
+            assert_eq!(sugar.slowdown_of(w), vector.slowdown_of(w), "worker {w}");
+        }
+    }
+
+    #[test]
+    fn worker_speed_validation() {
+        let mut c = RunConfig::default();
+        c.fabric.worker_speed = vec![1.0, 2.0];
+        c.validate().unwrap();
+        c.fabric.worker_speed = vec![1.0, 2.0, 3.0]; // 2 workers only
+        assert!(c.validate().is_err());
+        c.fabric.worker_speed = vec![0.5]; // speedups rejected like stragglers
+        assert!(c.validate().is_err());
+        c.fabric.worker_speed = vec![f64::NAN];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn worker_speed_survives_value_round_trip() {
+        let mut c = RunConfig::default();
+        c.fabric.worker_speed = vec![1.0, 4.5];
+        let back = RunConfig::from_value(&c.to_value()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
     fn rejects_bad_topologies() {
         let mut c = RunConfig::default();
         c.fabric.topology = Topology::TwoTier { racks: 0, oversubscription: 4.0 };
@@ -756,19 +921,64 @@ mod tests {
     }
 
     #[test]
-    fn engine_names_and_partitioners() {
+    fn engine_names_come_from_the_registry() {
         assert_eq!(Engine::Rapid.name(), "RapidGNN");
-        assert!(Engine::DglMetis.uses_metis());
-        assert!(!Engine::DglRandom.uses_metis());
-        assert!(Engine::Rapid.uses_metis());
+        assert_eq!(Engine::DglMetis.name(), "DGL-METIS");
+        assert_eq!(Engine::FastSample.name(), "FastSample");
+        assert_eq!(Engine::GreenWindow.name(), "GreenWindow");
     }
 
     #[test]
-    fn engine_parse_round_trip() {
-        for e in Engine::ALL {
+    fn engine_parse_round_trip_covers_every_registered_id() {
+        for e in crate::coordinator::EngineRegistry::global().engines() {
             assert_eq!(e.id().parse::<Engine>().unwrap(), e);
         }
-        assert!("bogus".parse::<Engine>().is_err());
+        // historical aliases still resolve
+        assert_eq!("rapidgnn".parse::<Engine>().unwrap(), Engine::Rapid);
+        assert_eq!("gcn".parse::<Engine>().unwrap(), Engine::DistGcn);
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_registered_ids() {
+        let err = "bogus".parse::<Engine>().unwrap_err().to_string();
+        for id in crate::coordinator::EngineRegistry::global().ids() {
+            assert!(err.contains(id), "error '{err}' does not mention '{id}'");
+        }
+    }
+
+    #[test]
+    fn every_registered_engine_survives_value_round_trip() {
+        // The registry-wide config contract: id + per-engine params survive
+        // to_value → from_value → validate bit-identically.
+        for e in crate::coordinator::EngineRegistry::global().engines() {
+            let mut c = RunConfig::default();
+            c.engine = e;
+            c.engine_params.resample_period = 3;
+            c.engine_params.fetch_window = 7;
+            let back = RunConfig::from_value(&c.to_value()).unwrap();
+            assert_eq!(c, back, "{}", e.id());
+            back.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn engine_params_validate() {
+        let mut c = RunConfig::default();
+        c.engine_params.resample_period = 0;
+        assert!(c.validate().is_err());
+        c.engine_params.resample_period = 1;
+        c.engine_params.fetch_window = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pre_registry_configs_without_engine_params_still_parse() {
+        let mut v = RunConfig::default().to_value();
+        if let Value::Table(m) = &mut v {
+            m.remove("engine_params");
+        }
+        let cfg = RunConfig::from_value(&v).unwrap();
+        assert_eq!(cfg.engine_params, EngineParams::default());
     }
 
     #[test]

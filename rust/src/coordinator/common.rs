@@ -1,11 +1,12 @@
-//! Shared engine plumbing: run context, host-side cost models, fan-out
-//! policies, and report assembly.
+//! Shared engine plumbing: run context, host-side cost models, and the
+//! substrate (dataset, partition, KV store) every strategy trains against.
 
-use crate::config::{Engine, ExecMode, RunConfig};
+use super::strategy::{EngineRegistry, TrainingStrategy};
+use crate::config::{ExecMode, RunConfig};
 use crate::graph::{build_dataset, Dataset};
 use crate::kvstore::KvStore;
 use crate::net::NetFabric;
-use crate::partition::{partition, Partition, Partitioner};
+use crate::partition::{partition, Partition};
 use crate::sampler::khop::Fanout;
 use crate::sim::ComputeModel;
 use crate::util::tempdir::TempDir;
@@ -65,9 +66,14 @@ impl CostParams {
     }
 }
 
-/// Everything the engines share for one run.
+/// Everything the engines share for one run, plus the resolved strategy
+/// that drives it (the registry's answer for `cfg.engine`, or an explicit
+/// override via [`crate::coordinator::RunBuilder::with_strategy`]).
 pub struct RunContext {
     pub cfg: RunConfig,
+    /// The engine under test. One stateless instance serves all workers;
+    /// per-worker state lives in the pipeline.
+    pub strategy: Arc<dyn TrainingStrategy>,
     pub ds: Arc<Dataset>,
     pub part: Arc<Partition>,
     pub kv: Arc<KvStore>,
@@ -83,18 +89,26 @@ pub struct RunContext {
 }
 
 impl RunContext {
-    /// Build dataset, partition, and KV store for a config.
+    /// Build dataset, partition, and KV store for a config, resolving the
+    /// strategy from the global [`EngineRegistry`].
     pub fn build(cfg: &RunConfig) -> Result<RunContext> {
+        let strategy: Arc<dyn TrainingStrategy> =
+            Arc::from(EngineRegistry::global().create(cfg)?);
+        RunContext::build_with_strategy(cfg, strategy)
+    }
+
+    /// Build with an explicit strategy (bypasses the registry — the
+    /// `RunBuilder::with_strategy` escape hatch for unregistered engines).
+    pub fn build_with_strategy(
+        cfg: &RunConfig,
+        strategy: Arc<dyn TrainingStrategy>,
+    ) -> Result<RunContext> {
         cfg.validate()?;
         let with_features = cfg.exec_mode == ExecMode::Full;
         let ds = Arc::new(build_dataset(&cfg.dataset, with_features));
-        let which = if cfg.engine.uses_metis() {
-            Partitioner::MetisLike
-        } else {
-            Partitioner::Random
-        };
+        let which = strategy.partitioner();
         let part = Arc::new(partition(&ds.graph, cfg.num_workers, which, cfg.base_seed));
-        let fabric = NetFabric::new(cfg.fabric).with_world_size(cfg.num_workers);
+        let fabric = NetFabric::new(cfg.fabric.clone()).with_world_size(cfg.num_workers);
         let kv = Arc::new(KvStore::new(&ds, part.clone(), fabric.clone()));
         let shards: Vec<Vec<NodeId>> = (0..cfg.num_workers)
             .map(|w| {
@@ -114,6 +128,7 @@ impl RunContext {
         };
         Ok(RunContext {
             cfg: cfg.clone(),
+            strategy,
             ds,
             part,
             kv,
@@ -126,17 +141,9 @@ impl RunContext {
         })
     }
 
-    /// Per-layer fan-out policy for this engine.
+    /// Per-layer fan-out policy for this engine (strategy-defined).
     pub fn fanouts(&self) -> Vec<Fanout> {
-        match self.cfg.engine {
-            Engine::DistGcn => self
-                .cfg
-                .fanout
-                .iter()
-                .map(|_| Fanout::FullCapped(self.cfg.gcn_neighbor_cap))
-                .collect(),
-            _ => self.cfg.fanout.iter().map(|&f| Fanout::Sample(f)).collect(),
-        }
+        self.strategy.fanouts(&self.cfg)
     }
 
     /// Simulated compute time for a batch (trace mode).
@@ -144,18 +151,16 @@ impl RunContext {
         self.compute.step_time(&self.cfg, n_input as u64, n_seeds as u64)
     }
 
-    /// Local-work slowdown multiplier for `worker` (straggler injection:
-    /// ≥ 1, and 1.0 for everyone but the configured straggler). Scales the
-    /// host-side costs on the training path — sampling, SSD streaming,
-    /// cache lookups, assembly, compute, and the background `C_sec`
-    /// stream+rank work; the straggler's *network* slowdown is applied
-    /// per-link by the fabric itself. The offline precompute pass is not
-    /// scaled: it is one-time setup, reported separately from training time.
+    /// Local-work slowdown multiplier for `worker` (heterogeneous speeds:
+    /// the `FabricConfig::worker_speed` vector plus the single-straggler
+    /// sugar; ≥ 1, and 1.0 for unconfigured workers). Scales the host-side
+    /// costs on the training path — sampling, SSD streaming, cache lookups,
+    /// assembly, compute, and the background `C_sec` stream+rank work; the
+    /// worker's *network* slowdown is applied per-link by the fabric
+    /// itself. The offline precompute pass is not scaled: it is one-time
+    /// setup, reported separately from training time.
     pub fn slowdown(&self, worker: WorkerId) -> f64 {
-        match self.cfg.fabric.straggler() {
-            Some((w, factor)) if w == worker => factor,
-            _ => 1.0,
-        }
+        self.cfg.fabric.slowdown_of(worker)
     }
 }
 

@@ -1,22 +1,73 @@
-//! The Layer-3 coordinator: engine dispatch, worker orchestration, and run
-//! reporting — the paper's system contribution wired together.
+//! The Layer-3 coordinator: the pluggable [`TrainingStrategy`] engine API,
+//! the one worker pipeline that drives any strategy, and run reporting —
+//! the paper's system contribution wired together as an *open* set of
+//! engines.
 //!
-//! [`run`] executes a full distributed-training simulation for any
-//! [`Engine`]: it builds the dataset/partition/KV substrate, runs every
-//! worker (parallel threads in trace mode; the event-driven cluster runtime
-//! in full mode, where all workers' pipelines advance concurrently on one
-//! shared virtual clock and train-step order on the shared model is resolved
-//! deterministically in virtual time — [`crate::sim::cluster`]), and
-//! aggregates per-epoch reports plus energy into a [`RunReport`].
+//! # Architecture
+//!
+//! ```text
+//! config::Engine (thin id) ──► EngineRegistry ──► Box<dyn TrainingStrategy>
+//!                                                     │
+//!            RunContext (dataset, partition, KV, fabric, strategy)
+//!                                                     │
+//!       pipeline::run_worker (sequential)   pipeline::run_cluster (event-
+//!            trace mode, parallel threads     driven virtual clock, full
+//!                                             mode, shared-model SGD)
+//! ```
+//!
+//! A strategy's lifecycle per worker: `setup` (one-time, e.g. RapidGNN's
+//! offline precompute) → per epoch `plan_epoch` (the batch source: staging
+//! side effects + costs) → the shared pipeline consumes each staged batch
+//! (assembly + the real or analytic train step) → `finish_epoch` (cache
+//! swaps, background work, the epoch-time policy). See [`strategy`] for the
+//! trait contract and how to register a new engine — registration is one
+//! [`EngineEntry`] in [`EngineRegistry::builtin`]; nothing else dispatches
+//! on the engine.
+//!
+//! # Entry points
+//!
+//! [`RunBuilder`] is the composable entry:
+//!
+//! ```ignore
+//! let report = RunBuilder::new(cfg)
+//!     .with_strategy(Box::new(MyStrategy))   // optional: bypass the registry
+//!     .with_trainer(Box::new(my_backend))    // optional: custom TrainStep
+//!     .run()?;
+//! ```
+//!
+//! [`run`] and [`run_with_context`] remain as thin shims over it (every
+//! bench and test uses them).
+//!
+//! # Migration note (pre-registry API)
+//!
+//! The per-engine `rapid::run_worker` / `rapid::run_cluster` and
+//! `baseline::run_worker` / `baseline::run_cluster` exports are gone —
+//! engine choice is no longer an enum match, so there is nothing
+//! engine-specific left to export. Use [`run_worker`] / [`run_cluster`]
+//! (strategy-agnostic; the context carries the strategy) or the [`run`] /
+//! [`RunBuilder`] front door. The threaded prefetcher with the paper's
+//! trainer-side race fallback lives on in [`crate::prefetch::Prefetcher`]
+//! (exercised directly by the integration tests); the simulation paths
+//! stage inline, which produces bit-identical staging (pinned by the
+//! prefetch tests).
 
-mod baseline;
 mod common;
-mod rapid;
+mod pipeline;
+pub mod strategies;
+pub mod strategy;
 
 pub use common::{CostParams, RunContext};
-pub use rapid::{epoch_remote_frequency, precompute, run_cluster, RapidSetup};
+pub use pipeline::{run_cluster, run_worker};
+pub use strategies::baseline::{DglStrategy, DistGcnStrategy};
+pub use strategies::fast_sample::FastSampleStrategy;
+pub use strategies::green_window::GreenWindowStrategy;
+pub use strategies::rapid::{epoch_remote_frequency, precompute, RapidSetup, RapidStrategy};
+pub use strategy::{
+    BatchPlan, EngineEntry, EngineRegistry, EpochFinish, EpochTotals, PipelineOutcome,
+    StagedStep, StrategyCtor, StrategySetup, StrategyState, TrainingStrategy,
+};
 
-use crate::config::{Engine, ExecMode, RunConfig, TrainerBackend};
+use crate::config::{ExecMode, RunConfig, TrainerBackend};
 use crate::energy::run_energy;
 use crate::metrics::{EpochReport, RunReport};
 use crate::trainer::{SageModel, TrainStep};
@@ -29,14 +80,59 @@ use std::sync::{Arc, Mutex};
 /// train step fires next.
 pub type SharedTrainer = Arc<Mutex<Box<dyn TrainStep>>>;
 
+/// Builder-style run entry: configure, optionally override the strategy or
+/// the trainer backend, and execute.
+pub struct RunBuilder {
+    cfg: RunConfig,
+    strategy: Option<Box<dyn TrainingStrategy>>,
+    trainer: Option<Box<dyn TrainStep>>,
+}
+
+impl RunBuilder {
+    /// Start from a run config (the strategy resolves from the registry via
+    /// `cfg.engine` unless overridden).
+    pub fn new(cfg: RunConfig) -> RunBuilder {
+        RunBuilder { cfg, strategy: None, trainer: None }
+    }
+
+    /// Drive the run with an explicit strategy instead of the registry's
+    /// answer for `cfg.engine` (unregistered/experimental engines).
+    pub fn with_strategy(mut self, strategy: Box<dyn TrainingStrategy>) -> RunBuilder {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    /// Use an explicit train-step backend in full mode instead of the one
+    /// `cfg.backend` selects. Ignored in trace mode (no model runs).
+    pub fn with_trainer(mut self, trainer: Box<dyn TrainStep>) -> RunBuilder {
+        self.trainer = Some(trainer);
+        self
+    }
+
+    /// Execute the run and aggregate the report.
+    pub fn run(self) -> Result<RunReport> {
+        let ctx = match self.strategy {
+            Some(s) => RunContext::build_with_strategy(&self.cfg, Arc::from(s))?,
+            None => RunContext::build(&self.cfg)?,
+        };
+        run_with_overrides(&ctx, self.trainer)
+    }
+}
+
 /// Execute a full run for `cfg` and aggregate the report.
 pub fn run(cfg: &RunConfig) -> Result<RunReport> {
-    let ctx = RunContext::build(cfg)?;
-    run_with_context(&ctx)
+    RunBuilder::new(cfg.clone()).run()
 }
 
 /// Execute with a pre-built context (benches reuse datasets across configs).
 pub fn run_with_context(ctx: &RunContext) -> Result<RunReport> {
+    run_with_overrides(ctx, None)
+}
+
+fn run_with_overrides(
+    ctx: &RunContext,
+    trainer_override: Option<Box<dyn TrainStep>>,
+) -> Result<RunReport> {
     let cfg = &ctx.cfg;
     let mut setup_time = 0.0f64;
     let mut epochs: Vec<EpochReport> = Vec::new();
@@ -46,7 +142,7 @@ pub fn run_with_context(ctx: &RunContext) -> Result<RunReport> {
             // Workers are independent in trace mode — run them in parallel.
             let results: Vec<Result<(f64, Vec<EpochReport>)>> = std::thread::scope(|s| {
                 let handles: Vec<_> = (0..cfg.num_workers)
-                    .map(|w| s.spawn(move || run_one_worker(ctx, w, None)))
+                    .map(|w| s.spawn(move || pipeline::run_worker(ctx, w, None)))
                     .collect();
                 handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
             });
@@ -58,17 +154,15 @@ pub fn run_with_context(ctx: &RunContext) -> Result<RunReport> {
         }
         ExecMode::Full => {
             // Shared model across workers, stepped by the event-driven
-            // cluster runtime: every worker's sampler→prefetcher→trainer
-            // pipeline advances concurrently on one virtual clock, and SGD
-            // steps interleave across workers in deterministic virtual-time
-            // order (replaces the old strictly-sequential worker loop).
-            let model: SharedTrainer = Arc::new(Mutex::new(build_trainer(ctx)?));
-            let (st, reps) = match cfg.engine {
-                Engine::Rapid => rapid::run_cluster(ctx, Some(model))?,
-                Engine::DglMetis | Engine::DglRandom | Engine::DistGcn => {
-                    (0.0, baseline::run_cluster(ctx, Some(model)))
-                }
+            // cluster runtime: every worker's pipeline advances concurrently
+            // on one virtual clock and SGD steps interleave across workers
+            // in deterministic virtual-time order.
+            let trainer = match trainer_override {
+                Some(t) => t,
+                None => build_trainer(ctx)?,
             };
+            let model: SharedTrainer = Arc::new(Mutex::new(trainer));
+            let (st, reps) = pipeline::run_cluster(ctx, Some(model))?;
             setup_time = st;
             epochs = reps;
         }
@@ -83,7 +177,7 @@ pub fn run_with_context(ctx: &RunContext) -> Result<RunReport> {
     let total_time = per_worker_total.iter().cloned().fold(0.0, f64::max);
 
     let mut report = RunReport {
-        engine: cfg.engine.name().to_string(),
+        engine: ctx.strategy.name().to_string(),
         dataset: cfg.dataset.name.clone(),
         num_workers: cfg.num_workers,
         batch_size: cfg.batch_size,
@@ -97,19 +191,6 @@ pub fn run_with_context(ctx: &RunContext) -> Result<RunReport> {
     report.cpu_energy_j = energy.cpu.total_j;
     report.gpu_energy_j = energy.gpu.total_j;
     Ok(report)
-}
-
-fn run_one_worker(
-    ctx: &RunContext,
-    worker: u32,
-    trainer: Option<&mut (dyn TrainStep + 'static)>,
-) -> Result<(f64, Vec<EpochReport>)> {
-    match ctx.cfg.engine {
-        Engine::Rapid => rapid::run_worker(ctx, worker, trainer),
-        Engine::DglMetis | Engine::DglRandom | Engine::DistGcn => {
-            Ok((0.0, baseline::run_worker(ctx, worker, trainer)))
-        }
-    }
 }
 
 /// Instantiate the configured train-step backend.
@@ -130,7 +211,7 @@ pub fn build_trainer(ctx: &RunContext) -> Result<Box<dyn TrainStep>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DatasetConfig, DatasetPreset};
+    use crate::config::{DatasetConfig, DatasetPreset, Engine};
 
     fn cfg(engine: Engine) -> RunConfig {
         let mut c = RunConfig::default();
@@ -142,12 +223,14 @@ mod tests {
     }
 
     #[test]
-    fn trace_run_all_engines() {
-        for engine in Engine::ALL {
+    fn trace_run_all_registered_engines() {
+        // Every registry id runs end to end through the shared pipeline —
+        // no per-engine dispatch anywhere on this path.
+        for engine in EngineRegistry::global().engines() {
             let report = run(&cfg(engine)).unwrap();
             assert_eq!(report.engine, engine.name());
             assert_eq!(report.epochs.len(), 2 * 2, "2 workers × 2 epochs");
-            assert!(report.total_time > 0.0);
+            assert!(report.total_time > 0.0, "{}", engine.id());
             assert!(report.cpu_energy_j > 0.0);
             assert!(report.gpu_energy_j > 0.0);
         }
@@ -187,11 +270,7 @@ mod tests {
         let curve = report.accuracy_curve();
         assert_eq!(curve.len(), 3);
         // accuracy improves from epoch 0 to the last epoch
-        assert!(
-            curve.last().unwrap().1 > curve[0].1,
-            "accuracy {:?}",
-            curve
-        );
+        assert!(curve.last().unwrap().1 > curve[0].1, "accuracy {:?}", curve);
         assert!(report.loss_curve().last().unwrap().1 < report.loss_curve()[0].1);
     }
 
@@ -211,5 +290,29 @@ mod tests {
         let sum: f64 = report.epochs.iter().map(|e| e.epoch_time).sum();
         assert!(report.total_time < sum, "workers run concurrently");
         assert!(report.total_time > 0.0);
+    }
+
+    #[test]
+    fn run_builder_with_custom_strategy_bypasses_registry() {
+        // The RunBuilder escape hatch: an unregistered strategy drives the
+        // same pipeline end to end.
+        let report = RunBuilder::new(cfg(Engine::DglMetis))
+            .with_strategy(Box::new(DglStrategy { random_partition: false }))
+            .run()
+            .unwrap();
+        let registry_report = run(&cfg(Engine::DglMetis)).unwrap();
+        assert_eq!(report.total_remote_rows(), registry_report.total_remote_rows());
+        assert_eq!(report.engine, registry_report.engine);
+    }
+
+    #[test]
+    fn run_builder_with_custom_trainer_runs_full_mode() {
+        let mut c = cfg(Engine::DglMetis);
+        c.exec_mode = ExecMode::Full;
+        c.batch_size = 64;
+        let ctx = RunContext::build(&c).unwrap();
+        let trainer = build_trainer(&ctx).unwrap();
+        let report = RunBuilder::new(c).with_trainer(trainer).run().unwrap();
+        assert!(report.loss_curve().iter().all(|&(_, l)| l.is_finite()));
     }
 }

@@ -1,0 +1,555 @@
+//! The one worker pipeline that drives every [`TrainingStrategy`].
+//!
+//! Two entry points, both strategy-agnostic:
+//!
+//! - [`run_worker`] — one worker, sequentially: stage each batch through the
+//!   strategy's [`BatchPlan`], consume it (assemble + compute, the real
+//!   train step in full mode), then convert the per-step costs into the
+//!   epoch time via the closed-form bounded-queue recurrence
+//!   ([`pipeline_schedule`]).
+//! - [`run_cluster`] — all workers concurrently on the shared virtual clock:
+//!   the same plans wrapped in a [`StrategyEpochActor`] and scheduled by the
+//!   event-driven [`ClusterSim`]; cross-worker SGD interleaving on the
+//!   shared model is resolved in deterministic virtual-time order.
+//!
+//! The consume side is identical for every engine, so it lives here:
+//! assembly and compute costs from the shared cost models (slowdown-scaled),
+//! and in full mode the real GraphSAGE step rebuilt from the batch's
+//! deterministic seed. What a batch *costs to stage* — and everything else
+//! that distinguishes an engine — comes from the strategy hooks.
+//!
+//! These functions replaced the per-engine `rapid::run_worker` /
+//! `baseline::run_worker` (and `run_cluster`) pairs; the conformance tests
+//! below pin that the sequential and event-driven paths still agree exactly.
+
+use super::common::RunContext;
+use super::strategy::{EpochTotals, PipelineOutcome, StrategyState, TrainingStrategy};
+use super::SharedTrainer;
+use crate::config::ExecMode;
+use crate::metrics::{CommStats, EpochReport, PhaseTimes};
+use crate::prefetch::StagedBatch;
+use crate::sampler::khop::sample_blocks;
+use crate::sampler::seed::derive_seed;
+use crate::sampler::BatchMeta;
+use crate::sim::{pipeline_schedule, ClusterSim, PipelineStep, WorkerActor};
+use crate::trainer::{batch_labels, feature_mat, TrainStep};
+use crate::util::mpmc;
+use crate::{Result, WorkerId};
+use std::time::Instant;
+
+/// Per-epoch consume-side accumulators.
+#[derive(Default)]
+struct EpochAcc {
+    m_max: u64,
+    loss_sum: f64,
+    correct: u64,
+    total: u64,
+}
+
+/// Execute a real training step (full mode): rebuild the batch's blocks from
+/// its deterministic seed, wrap the fetched features, and step the model.
+pub(super) fn full_train_step(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epoch: u32,
+    meta: &BatchMeta,
+    features: Vec<f32>,
+    trainer: Option<&mut (dyn TrainStep + 'static)>,
+) -> (f64, u32, u32) {
+    let Some(trainer) = trainer else {
+        return (f64::NAN, 0, 0);
+    };
+    let fanouts = ctx.fanouts();
+    let rng_seed = derive_seed(ctx.cfg.base_seed, worker, epoch, meta.batch);
+    let batch = sample_blocks(&ctx.ds.graph, &meta.seeds, &fanouts, rng_seed);
+    debug_assert_eq!(batch.input_nodes(), &meta.input_nodes[..], "determinism");
+    let x0 = feature_mat(features, meta.input_nodes.len(), ctx.cfg.dataset.feature_dim as usize);
+    let labels = batch_labels(&ctx.ds, &batch);
+    let out = trainer.step(&x0, &batch, &labels, ctx.cfg.learning_rate);
+    (out.loss, out.correct, out.total)
+}
+
+/// Consume one staged batch on the sequential path: charge assemble+compute
+/// (wall-clock-measured in full mode), run the real train step when present,
+/// and return the consume cost for the pipeline schedule. `seed_epoch` is
+/// the *schedule* epoch ([`TrainingStrategy::schedule_epoch`]) — the one the
+/// staged metadata was enumerated under, which a replaying engine maps away
+/// from the training epoch.
+fn consume_staged(
+    ctx: &RunContext,
+    worker: WorkerId,
+    seed_epoch: u32,
+    staged: StagedBatch,
+    phases: &mut PhaseTimes,
+    acc: &mut EpochAcc,
+    trainer: Option<&mut (dyn TrainStep + 'static)>,
+) -> f64 {
+    let full = ctx.cfg.exec_mode == ExecMode::Full;
+    let d = ctx.cfg.dataset.feature_dim;
+    let slow = ctx.slowdown(worker);
+    let n_input = staged.meta.input_nodes.len();
+    acc.m_max = acc.m_max.max(n_input as u64);
+    let assemble = slow * ctx.costs.assemble_time(n_input, d);
+    let compute = if full {
+        let t0 = Instant::now();
+        let out = full_train_step(
+            ctx,
+            worker,
+            seed_epoch,
+            &staged.meta,
+            staged.features.unwrap_or_default(),
+            trainer,
+        );
+        acc.loss_sum += out.0;
+        acc.correct += out.1 as u64;
+        acc.total += out.2 as u64;
+        t0.elapsed().as_secs_f64()
+    } else {
+        slow * ctx.compute_time(n_input, staged.meta.seeds.len())
+    };
+    phases.assemble += assemble;
+    phases.compute += compute;
+    assemble + compute
+}
+
+/// Assemble one (worker, epoch) report from the pipeline's measurements and
+/// the strategy's epoch verdict.
+#[allow(clippy::too_many_arguments)]
+fn make_report(
+    epoch: u32,
+    worker: WorkerId,
+    full: bool,
+    totals: &EpochTotals,
+    acc: &EpochAcc,
+    finish: super::strategy::EpochFinish,
+    phases: PhaseTimes,
+    comm: CommStats,
+) -> EpochReport {
+    EpochReport {
+        epoch,
+        worker,
+        steps: totals.steps,
+        epoch_time: finish.epoch_time,
+        phases,
+        comm,
+        cache: finish.cache,
+        mean_loss: if full { acc.loss_sum / totals.steps.max(1) as f64 } else { f64::NAN },
+        train_acc: if full && acc.total > 0 {
+            acc.correct as f64 / acc.total as f64
+        } else {
+            f64::NAN
+        },
+        device_bytes: finish.device_bytes,
+        host_bytes: finish.host_bytes,
+    }
+}
+
+/// Run one worker's full training for the context's strategy, sequentially.
+/// `trainer` present in full mode. Returns (setup time, per-epoch reports).
+pub fn run_worker(
+    ctx: &RunContext,
+    worker: WorkerId,
+    mut trainer: Option<&mut (dyn TrainStep + 'static)>,
+) -> Result<(f64, Vec<EpochReport>)> {
+    let strategy = &*ctx.strategy;
+    let setup = strategy.setup(ctx, worker)?;
+    let mut state = setup.state;
+    let cfg = &ctx.cfg;
+    let full = cfg.exec_mode == ExecMode::Full;
+    let q = strategy.queue_depth(cfg);
+    let mut reports = Vec::with_capacity(cfg.epochs as usize);
+
+    for epoch in 0..cfg.epochs {
+        let seed_epoch = strategy.schedule_epoch(cfg, epoch);
+        let mut comm = CommStats::default();
+        let mut phases = PhaseTimes::default();
+        let mut steps: Vec<PipelineStep> = Vec::new();
+        let mut acc = EpochAcc::default();
+        {
+            let mut plan = strategy.plan_epoch(ctx, &mut state, worker, epoch, &mut comm)?;
+            while let Some(step) = plan.next(&mut comm, &mut phases)? {
+                let consume = consume_staged(
+                    ctx,
+                    worker,
+                    seed_epoch,
+                    step.staged,
+                    &mut phases,
+                    &mut acc,
+                    trainer.as_deref_mut(),
+                );
+                steps.push(PipelineStep { stage: step.cost, consume });
+            }
+        }
+        let times = pipeline_schedule(&steps, q);
+        let outcome = PipelineOutcome {
+            total: times.total,
+            total_wait: times.total_wait,
+            event_driven: false,
+        };
+        let totals = EpochTotals { steps: steps.len() as u32, m_max: acc.m_max };
+        let finish = strategy.finish_epoch(
+            ctx, &mut state, worker, epoch, &outcome, &totals, &mut phases, &mut comm,
+        )?;
+        reports.push(make_report(epoch, worker, full, &totals, &acc, finish, phases, comm));
+    }
+    Ok((setup.setup_time, reports))
+}
+
+/// One worker's (epoch, plan) as a [`WorkerActor`] for the event-driven
+/// cluster runtime: the strategy's plan feeds the stage slot, the shared
+/// consume logic the consume slot, coupled by a bounded [`mpmc`] ring of
+/// depth `Q` — popped in exact virtual-time order. In full mode the real
+/// shared-model train step runs at the virtual instant the consume fires
+/// (virtual cost still from the analytic models, so event order and epoch
+/// times stay deterministic).
+struct StrategyEpochActor<'a> {
+    ctx: &'a RunContext,
+    worker: WorkerId,
+    /// The schedule epoch the staged metadata was enumerated under
+    /// ([`TrainingStrategy::schedule_epoch`]) — seeds train-step rebuilds.
+    seed_epoch: u32,
+    plan: Box<dyn super::strategy::BatchPlan + 'a>,
+    queue_tx: mpmc::Sender<StagedBatch>,
+    queue_rx: mpmc::Receiver<StagedBatch>,
+    trainer: Option<SharedTrainer>,
+    slow: f64,
+    full: bool,
+    comm: CommStats,
+    phases: PhaseTimes,
+    acc: EpochAcc,
+    /// Set when the plan failed mid-epoch (e.g. a truncated metadata
+    /// stream); surfaced as an error by [`run_cluster`] after the simulation
+    /// drains — the actor interface can't propagate it, and silently
+    /// truncating the epoch would lose steps.
+    error: Option<anyhow::Error>,
+}
+
+impl WorkerActor for StrategyEpochActor<'_> {
+    fn stage_next(&mut self) -> Option<f64> {
+        match self.plan.next(&mut self.comm, &mut self.phases) {
+            Ok(Some(step)) => {
+                if self.queue_tx.try_send(step.staged).is_err() {
+                    panic!("cluster scheduler overflowed the bounded staging queue");
+                }
+                Some(step.cost)
+            }
+            Ok(None) => None,
+            Err(e) => {
+                self.error = Some(e);
+                None
+            }
+        }
+    }
+
+    fn consume_next(&mut self) -> f64 {
+        let staged = self
+            .queue_rx
+            .try_recv()
+            .expect("scheduler consumes only staged batches");
+        let n_input = staged.meta.input_nodes.len();
+        self.acc.m_max = self.acc.m_max.max(n_input as u64);
+        let d = self.ctx.cfg.dataset.feature_dim;
+        let assemble = self.slow * self.ctx.costs.assemble_time(n_input, d);
+        let compute = self.slow * self.ctx.compute_time(n_input, staged.meta.seeds.len());
+        if self.full {
+            // Virtual time uses the analytic model (deterministic event
+            // order + reproducible epoch times); the real step still runs.
+            let out = match &self.trainer {
+                Some(tr) => {
+                    let mut t = tr.lock().unwrap();
+                    full_train_step(
+                        self.ctx,
+                        self.worker,
+                        self.seed_epoch,
+                        &staged.meta,
+                        staged.features.unwrap_or_default(),
+                        Some(&mut **t),
+                    )
+                }
+                None => (f64::NAN, 0, 0),
+            };
+            self.acc.loss_sum += out.0;
+            self.acc.correct += out.1 as u64;
+            self.acc.total += out.2 as u64;
+        }
+        self.phases.assemble += assemble;
+        self.phases.compute += compute;
+        assemble + compute
+    }
+}
+
+/// Run all workers concurrently on the shared virtual clock for the
+/// context's strategy — the event-driven counterpart of [`run_worker`]. Per
+/// epoch every worker's pipeline advances together in one [`ClusterSim`];
+/// between epochs each worker runs its strategy's `finish_epoch` exactly as
+/// the sequential path does, so the two paths report identical communication
+/// counters (pinned by the conformance tests). Returns (max setup time,
+/// per-(worker, epoch) reports).
+pub fn run_cluster(
+    ctx: &RunContext,
+    trainer: Option<SharedTrainer>,
+) -> Result<(f64, Vec<EpochReport>)> {
+    let strategy = &*ctx.strategy;
+    let cfg = &ctx.cfg;
+    let full = cfg.exec_mode == ExecMode::Full;
+    let q = strategy.queue_depth(cfg);
+
+    // One-time setup per worker (setup time reported separately).
+    let mut setup_time = 0.0f64;
+    let mut states: Vec<StrategyState> = Vec::with_capacity(cfg.num_workers as usize);
+    for w in 0..cfg.num_workers {
+        let s = strategy.setup(ctx, w)?;
+        setup_time = setup_time.max(s.setup_time);
+        states.push(s.state);
+    }
+
+    let mut reports = Vec::with_capacity((cfg.num_workers * cfg.epochs) as usize);
+    for epoch in 0..cfg.epochs {
+        let mut sim = ClusterSim::new();
+        for w in 0..cfg.num_workers {
+            let mut comm = CommStats::default();
+            let plan =
+                strategy.plan_epoch(ctx, &mut states[w as usize], w, epoch, &mut comm)?;
+            let (queue_tx, queue_rx) = mpmc::bounded(q.max(1) as usize);
+            sim.add_worker(
+                q,
+                StrategyEpochActor {
+                    ctx,
+                    worker: w,
+                    seed_epoch: strategy.schedule_epoch(cfg, epoch),
+                    plan,
+                    queue_tx,
+                    queue_rx,
+                    trainer: trainer.clone(),
+                    slow: ctx.slowdown(w),
+                    full,
+                    comm,
+                    phases: PhaseTimes::default(),
+                    acc: EpochAcc::default(),
+                    error: None,
+                },
+            );
+        }
+        for (w, done) in sim.run().into_iter().enumerate() {
+            let worker = w as WorkerId;
+            let timeline = done.timeline;
+            let mut actor = done.actor;
+            if let Some(e) = actor.error.take() {
+                return Err(e.context(format!(
+                    "batch plan for worker {worker} epoch {epoch} failed mid-epoch"
+                )));
+            }
+            let outcome = PipelineOutcome {
+                total: timeline.makespan,
+                total_wait: timeline.total_wait,
+                event_driven: true,
+            };
+            let totals = EpochTotals { steps: timeline.steps() as u32, m_max: actor.acc.m_max };
+            let mut phases = actor.phases;
+            let mut comm = actor.comm;
+            let finish = strategy.finish_epoch(
+                ctx,
+                &mut states[w],
+                worker,
+                epoch,
+                &outcome,
+                &totals,
+                &mut phases,
+                &mut comm,
+            )?;
+            reports.push(make_report(epoch, worker, full, &totals, &actor.acc, finish, phases, comm));
+        }
+    }
+    Ok((setup_time, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+
+    fn ctx(engine: Engine) -> RunContext {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = engine;
+        c.epochs = 3;
+        c.n_hot = 300;
+        RunContext::build(&c).unwrap()
+    }
+
+    fn assert_cluster_matches_sequential(engine: Engine, time_tol: f64) {
+        // The conformance contract every registered strategy inherits: the
+        // event-driven cluster runtime and the per-worker sequential path
+        // agree — identical counters, epoch times within `time_tol` (exact
+        // for pipeline-scheduled engines; float-accumulation noise for the
+        // serial per-phase accounting of the on-demand ones).
+        let seq_ctx = ctx(engine);
+        let mut seq = Vec::new();
+        let mut seq_setup = 0.0f64;
+        for w in 0..seq_ctx.cfg.num_workers {
+            let (st, reps) = run_worker(&seq_ctx, w, None).unwrap();
+            seq_setup = seq_setup.max(st);
+            seq.extend(reps);
+        }
+        let clu_ctx = ctx(engine);
+        let (clu_setup, clu) = run_cluster(&clu_ctx, None).unwrap();
+        assert_eq!(seq_setup, clu_setup, "{}", engine.id());
+        assert_eq!(seq.len(), clu.len());
+        for c in &clu {
+            let s = seq
+                .iter()
+                .find(|r| r.worker == c.worker && r.epoch == c.epoch)
+                .expect("matching report");
+            let tag = format!("{} w{} e{}", engine.id(), c.worker, c.epoch);
+            assert_eq!(s.comm.remote_rows, c.comm.remote_rows, "{tag}");
+            assert_eq!(s.comm.bytes, c.comm.bytes, "{tag}");
+            assert_eq!(s.comm.sync_pulls, c.comm.sync_pulls, "{tag}");
+            assert_eq!(s.comm.vector_pulls, c.comm.vector_pulls, "{tag}");
+            assert_eq!(s.cache.hits, c.cache.hits, "{tag}");
+            assert_eq!(s.cache.lookups, c.cache.lookups, "{tag}");
+            assert_eq!(s.steps, c.steps, "{tag}");
+            assert_eq!(s.device_bytes, c.device_bytes, "{tag}");
+            assert_eq!(s.host_bytes, c.host_bytes, "{tag}");
+            assert!(
+                (s.epoch_time - c.epoch_time).abs() < time_tol,
+                "{tag}: {} vs {}",
+                s.epoch_time,
+                c.epoch_time
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_matches_sequential_for_rapid() {
+        // The event schedule reproduces the closed-form pipeline recurrence
+        // bit-for-bit on a homogeneous fabric.
+        assert_cluster_matches_sequential(Engine::Rapid, 1e-12);
+    }
+
+    #[test]
+    fn cluster_matches_sequential_for_baselines() {
+        // Q = 0 actors: the event path sums per-batch, the serial path
+        // per-phase — equal within float-accumulation noise.
+        assert_cluster_matches_sequential(Engine::DglMetis, 1e-9);
+        assert_cluster_matches_sequential(Engine::DistGcn, 1e-9);
+    }
+
+    #[test]
+    fn cluster_matches_sequential_for_registry_only_engines() {
+        assert_cluster_matches_sequential(Engine::FastSample, 1e-12);
+        assert_cluster_matches_sequential(Engine::GreenWindow, 1e-9);
+    }
+
+    #[test]
+    fn cluster_full_mode_matches_sequential_counters() {
+        // The sequential full-mode path (inline staging + real SGD) and the
+        // cluster path must count identical communication and cache traffic
+        // — only SGD interleaving across workers differs.
+        let full_cfg = || {
+            let mut c = ctx(Engine::Rapid).cfg.clone();
+            c.exec_mode = crate::config::ExecMode::Full;
+            c.batch_size = 64;
+            c
+        };
+        let seq_ctx = RunContext::build(&full_cfg()).unwrap();
+        let mut seq = Vec::new();
+        for w in 0..seq_ctx.cfg.num_workers {
+            let (_, reps) = run_worker(&seq_ctx, w, None).unwrap();
+            seq.extend(reps);
+        }
+        let clu_ctx = RunContext::build(&full_cfg()).unwrap();
+        let (_, clu) = run_cluster(&clu_ctx, None).unwrap();
+        assert_eq!(seq.len(), clu.len());
+        for c in &clu {
+            let s = seq
+                .iter()
+                .find(|r| r.worker == c.worker && r.epoch == c.epoch)
+                .expect("matching report");
+            assert_eq!(s.comm.remote_rows, c.comm.remote_rows, "w{} e{}", c.worker, c.epoch);
+            assert_eq!(s.comm.bytes, c.comm.bytes);
+            assert_eq!(s.cache.hits, c.cache.hits);
+            assert_eq!(s.cache.lookups, c.cache.lookups);
+            assert_eq!(s.steps, c.steps);
+        }
+    }
+
+    #[test]
+    fn cluster_runtime_is_deterministic() {
+        let (s1, a) = run_cluster(&ctx(Engine::Rapid), None).unwrap();
+        let (s2, b) = run_cluster(&ctx(Engine::Rapid), None).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.comm.remote_rows, y.comm.remote_rows);
+            assert_eq!(x.cache.hits, y.cache.hits);
+            assert!((x.epoch_time - y.epoch_time).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn straggler_slows_its_own_worker_most() {
+        let mut cfg = ctx(Engine::Rapid).cfg.clone();
+        cfg.fabric.straggler_worker = 0;
+        cfg.fabric.straggler_factor = 5.0;
+        let slow_ctx = RunContext::build(&cfg).unwrap();
+        let (_, slow) = run_cluster(&slow_ctx, None).unwrap();
+        let (_, clean) = run_cluster(&ctx(Engine::Rapid), None).unwrap();
+        let total = |rs: &[EpochReport], w: u32| -> f64 {
+            rs.iter().filter(|r| r.worker == w).map(|r| r.epoch_time).sum()
+        };
+        // Straggler injection must not change data movement, only time.
+        let rows = |rs: &[EpochReport]| -> u64 { rs.iter().map(|r| r.comm.remote_rows).sum() };
+        assert_eq!(rows(&slow), rows(&clean));
+        assert!(
+            total(&slow, 0) > 2.0 * total(&clean, 0),
+            "straggler {} !> 2x clean {}",
+            total(&slow, 0),
+            total(&clean, 0)
+        );
+        // the other worker pays at most the straggler's *link* penalty, so
+        // it must inflate far less than the straggler itself
+        let inflation_w0 = total(&slow, 0) / total(&clean, 0);
+        let inflation_w1 = total(&slow, 1) / total(&clean, 1);
+        assert!(inflation_w0 > inflation_w1, "w0 {inflation_w0} !> w1 {inflation_w1}");
+    }
+
+    #[test]
+    fn worker_speed_vector_reproduces_straggler_sugar() {
+        // The generalized per-worker speed model: an explicit vector must
+        // produce the same run as the equivalent straggler sugar.
+        let mut sugar_cfg = ctx(Engine::Rapid).cfg.clone();
+        sugar_cfg.fabric.straggler_worker = 1;
+        sugar_cfg.fabric.straggler_factor = 3.0;
+        let mut vec_cfg = ctx(Engine::Rapid).cfg.clone();
+        vec_cfg.fabric.worker_speed = vec![1.0, 3.0];
+        let (_, sugar) = run_cluster(&RunContext::build(&sugar_cfg).unwrap(), None).unwrap();
+        let (_, vector) = run_cluster(&RunContext::build(&vec_cfg).unwrap(), None).unwrap();
+        assert_eq!(sugar.len(), vector.len());
+        for (a, b) in sugar.iter().zip(&vector) {
+            assert_eq!(a.comm.remote_rows, b.comm.remote_rows);
+            assert!((a.epoch_time - b.epoch_time).abs() < 1e-12, "w{} e{}", a.worker, a.epoch);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_speeds_order_worker_times() {
+        // Three distinct speeds → three distinct per-worker epoch times, in
+        // speed order; traffic unchanged.
+        let mut cfg = ctx(Engine::DglMetis).cfg.clone();
+        cfg.num_workers = 3;
+        cfg.fabric.worker_speed = vec![1.0, 2.0, 4.0];
+        let (_, het) = run_cluster(&RunContext::build(&cfg).unwrap(), None).unwrap();
+        let mut clean_cfg = cfg.clone();
+        clean_cfg.fabric.worker_speed.clear();
+        let (_, clean) = run_cluster(&RunContext::build(&clean_cfg).unwrap(), None).unwrap();
+        let total = |rs: &[EpochReport], w: u32| -> f64 {
+            rs.iter().filter(|r| r.worker == w).map(|r| r.epoch_time).sum()
+        };
+        let rows = |rs: &[EpochReport]| -> u64 { rs.iter().map(|r| r.comm.remote_rows).sum() };
+        assert_eq!(rows(&het), rows(&clean), "speeds change time, not traffic");
+        let inflation = |w: u32| total(&het, w) / total(&clean, w);
+        assert!(inflation(1) > 1.5, "w1 {}", inflation(1));
+        assert!(inflation(2) > inflation(1), "{} !> {}", inflation(2), inflation(1));
+        assert!(inflation(0) < inflation(1), "{} !< {}", inflation(0), inflation(1));
+    }
+}

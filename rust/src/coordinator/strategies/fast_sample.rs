@@ -1,0 +1,212 @@
+//! `fast-sample` — FastSample-style periodic re-sampling (arXiv 2311.17847)
+//! as a registry-only engine.
+//!
+//! RapidGNN precomputes *every* epoch's schedule offline; FastSample
+//! re-enumerates only every `k = EngineParams::resample_period` epochs and
+//! replays the period-start schedule in between. That amortizes the
+//! precompute pass (and the per-epoch `C_sec` cache rebuilds, which are
+//! pointless while the schedule is frozen) over `k` epochs:
+//!
+//! - setup enumerates `ceil(epochs / k)` schedules instead of `epochs`;
+//! - the hot-set cache is rebuilt only at period boundaries, so the steady
+//!   cache is always ranked on *exactly* the schedule being replayed —
+//!   fewer `VectorPull` rebuild rows than `rapid`, at the price of stale
+//!   sampling randomness within a period (the FastSample trade).
+//!
+//! At `k = 1` this engine degenerates to `rapid` exactly (every epoch
+//! enumerated, rebuilt, and swapped) — pinned by a test below.
+//!
+//! Everything else — staging, costs, memory accounting — is shared with the
+//! `rapid` strategy through `plan_cached_epoch`/`finish_cached_epoch`; this
+//! file only maps epochs onto period-start schedules.
+
+use super::rapid::{precompute_epochs, plan_cached_epoch, finish_cached_epoch, RapidState};
+use crate::config::RunConfig;
+use crate::coordinator::common::RunContext;
+use crate::coordinator::strategy::{
+    BatchPlan, EpochFinish, EpochTotals, PipelineOutcome, StrategySetup, StrategyState,
+    TrainingStrategy,
+};
+use crate::metrics::{CommStats, PhaseTimes};
+use crate::{Result, WorkerId};
+
+/// Periodic re-sampling engine.
+pub struct FastSampleStrategy {
+    /// Re-enumerate every `period` epochs (≥ 1, from `EngineParams`).
+    period: u32,
+}
+
+/// Registry constructor.
+pub fn ctor(cfg: &RunConfig) -> Box<dyn TrainingStrategy> {
+    Box::new(FastSampleStrategy { period: cfg.engine_params.resample_period.max(1) })
+}
+
+impl FastSampleStrategy {
+    /// The period-start epoch whose on-disk schedule epoch `e` replays.
+    fn sched_epoch(&self, epoch: u32) -> u32 {
+        epoch - epoch % self.period
+    }
+}
+
+impl TrainingStrategy for FastSampleStrategy {
+    fn id(&self) -> &'static str {
+        "fast-sample"
+    }
+
+    fn name(&self) -> &'static str {
+        "FastSample"
+    }
+
+    fn queue_depth(&self, cfg: &RunConfig) -> u32 {
+        cfg.prefetch_q
+    }
+
+    fn schedule_epoch(&self, _cfg: &RunConfig, epoch: u32) -> u32 {
+        self.sched_epoch(epoch)
+    }
+
+    fn setup(&self, ctx: &RunContext, worker: WorkerId) -> Result<StrategySetup> {
+        let starts: Vec<u32> = (0..ctx.cfg.epochs).step_by(self.period as usize).collect();
+        let s = precompute_epochs(ctx, worker, &starts)?;
+        Ok(StrategySetup {
+            setup_time: s.setup_time,
+            state: Box::new(RapidState { cache: s.cache, setup_comm: s.setup_comm }),
+        })
+    }
+
+    fn plan_epoch<'a>(
+        &self,
+        ctx: &'a RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        comm: &mut CommStats,
+    ) -> Result<Box<dyn BatchPlan + 'a>> {
+        plan_cached_epoch(ctx, state, worker, epoch, self.sched_epoch(epoch), comm)
+    }
+
+    fn finish_epoch(
+        &self,
+        ctx: &RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        outcome: &PipelineOutcome,
+        totals: &EpochTotals,
+        phases: &mut PhaseTimes,
+        comm: &mut CommStats,
+    ) -> Result<EpochFinish> {
+        // Rebuild C_sec only when the next epoch starts a new period — the
+        // steady cache already matches the schedule being replayed otherwise.
+        let next = epoch + 1;
+        let rebuild = if next < ctx.cfg.epochs && next % self.period == 0 {
+            Some(next) // a period start: its schedule is on disk
+        } else {
+            None
+        };
+        finish_cached_epoch(ctx, state, worker, rebuild, outcome, totals, phases, comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+    use crate::coordinator::common::RunContext;
+    use crate::coordinator::pipeline::run_worker;
+    use crate::metrics::EpochReport;
+
+    fn cfg(period: u32, epochs: u32) -> RunConfig {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = Engine::FastSample;
+        c.engine_params.resample_period = period;
+        c.epochs = epochs;
+        c.n_hot = 300;
+        c
+    }
+
+    #[test]
+    fn period_one_degenerates_to_rapid_exactly() {
+        let fs_ctx = RunContext::build(&cfg(1, 3)).unwrap();
+        let (fs_setup, fs) = run_worker(&fs_ctx, 0, None).unwrap();
+        let mut rcfg = cfg(1, 3);
+        rcfg.engine = Engine::Rapid;
+        let r_ctx = RunContext::build(&rcfg).unwrap();
+        let (r_setup, rapid) = run_worker(&r_ctx, 0, None).unwrap();
+        assert_eq!(fs_setup, r_setup);
+        assert_eq!(fs.len(), rapid.len());
+        for (a, b) in fs.iter().zip(&rapid) {
+            assert_eq!(a.comm.remote_rows, b.comm.remote_rows, "epoch {}", a.epoch);
+            assert_eq!(a.comm.vector_rows, b.comm.vector_rows);
+            assert_eq!(a.cache.hits, b.cache.hits);
+            assert!((a.epoch_time - b.epoch_time).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn replayed_epochs_repeat_the_period_start_schedule() {
+        // Within one period every epoch replays the same schedule against
+        // the same cache → identical per-epoch counters.
+        let ctx = RunContext::build(&cfg(3, 3)).unwrap();
+        let (_, reports) = run_worker(&ctx, 0, None).unwrap();
+        assert_eq!(reports.len(), 3);
+        for r in &reports[1..] {
+            assert_eq!(r.comm.remote_rows - r.comm.vector_rows,
+                reports[0].comm.remote_rows - reports[0].comm.vector_rows,
+                "epoch {} must replay epoch 0's miss set", r.epoch);
+            assert_eq!(r.steps, reports[0].steps);
+            assert_eq!(r.cache.lookups, reports[0].cache.lookups);
+            assert_eq!(r.cache.hits, reports[0].cache.hits);
+        }
+    }
+
+    #[test]
+    fn amortizes_precompute_and_cache_rebuilds_vs_rapid() {
+        let fs_ctx = RunContext::build(&cfg(4, 4)).unwrap();
+        let (fs_setup, fs) = run_worker(&fs_ctx, 0, None).unwrap();
+        let mut rcfg = cfg(4, 4);
+        rcfg.engine = Engine::Rapid;
+        let r_ctx = RunContext::build(&rcfg).unwrap();
+        let (r_setup, rapid) = run_worker(&r_ctx, 0, None).unwrap();
+        assert!(
+            fs_setup < 0.5 * r_setup,
+            "one enumerated epoch vs four: setup {fs_setup} !< half of {r_setup}"
+        );
+        let vector_rows = |rs: &[EpochReport]| -> u64 {
+            rs.iter().map(|r| r.comm.vector_rows).sum()
+        };
+        assert!(
+            vector_rows(&fs) < vector_rows(&rapid),
+            "frozen periods skip C_sec rebuilds: {} !< {}",
+            vector_rows(&fs),
+            vector_rows(&rapid)
+        );
+    }
+
+    #[test]
+    fn full_mode_trains_on_replayed_schedules() {
+        // The seed-epoch mapping: a replayed epoch must rebuild its blocks
+        // from the *period-start* schedule's seeds, or the staged features
+        // misalign with the rebuilt batch (full_train_step's determinism
+        // debug_assert pins this).
+        let mut c = cfg(3, 3);
+        c.exec_mode = crate::config::ExecMode::Full;
+        c.batch_size = 64;
+        let report = crate::coordinator::run(&c).unwrap();
+        assert_eq!(report.loss_curve().len(), 3);
+        assert!(report.loss_curve().iter().all(|&(_, l)| l.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a_ctx = RunContext::build(&cfg(2, 4)).unwrap();
+        let (sa, a) = run_worker(&a_ctx, 0, None).unwrap();
+        let b_ctx = RunContext::build(&cfg(2, 4)).unwrap();
+        let (sb, b) = run_worker(&b_ctx, 0, None).unwrap();
+        assert_eq!(sa, sb);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.comm.remote_rows, y.comm.remote_rows);
+            assert!((x.epoch_time - y.epoch_time).abs() < 1e-12);
+        }
+    }
+}

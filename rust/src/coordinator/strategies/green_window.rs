@@ -1,0 +1,256 @@
+//! `green-window` — GreenGNN-style energy-aware windowed communication
+//! (arXiv 2606.02916) as a registry-only engine.
+//!
+//! Like the on-demand baselines it samples online and fetches every remote
+//! feature synchronously — but instead of one pull per batch it merges the
+//! fetches of `W = EngineParams::fetch_window` consecutive batches into one
+//! windowed pull. Same rows on the wire, far fewer RPCs: per window each
+//! touched owner shard is paid one RPC latency instead of `W`. The trade is
+//! step latency — the first batch of each window stalls for the whole
+//! window's sampling + fetch (its staging cost), while the remaining `W−1`
+//! batches stage for free. Fewer, larger RPCs also mean less time stalled in
+//! polling RPC loops, which is where the CPU burns `cpu_net_wait_w` — the
+//! GreenGNN energy argument.
+//!
+//! At `W = 1` this engine is exactly `dgl-metis` (pinned by a test below).
+
+use crate::config::{ExecMode, RunConfig};
+use crate::coordinator::common::RunContext;
+use crate::coordinator::strategies::baseline::{
+    enumerate_on_demand, finish_on_demand_epoch, on_demand_setup,
+};
+use crate::coordinator::strategy::{
+    BatchPlan, EpochFinish, EpochTotals, PipelineOutcome, StagedStep, StrategySetup,
+    StrategyState, TrainingStrategy,
+};
+use crate::metrics::{CommStats, PhaseTimes};
+use crate::prefetch::StagedBatch;
+use crate::sampler::BatchMeta;
+use crate::{NodeId, Result, WorkerId};
+use std::collections::VecDeque;
+
+/// Windowed-communication engine.
+pub struct GreenWindowStrategy {
+    /// Batches per fetch window (≥ 1, from `EngineParams`).
+    window: u32,
+}
+
+/// Registry constructor.
+pub fn ctor(cfg: &RunConfig) -> Box<dyn TrainingStrategy> {
+    Box::new(GreenWindowStrategy { window: cfg.engine_params.fetch_window.max(1) })
+}
+
+/// The windowed batch plan: buffers one window of staged batches; the first
+/// `next` of a window performs all of its sampling and the single merged
+/// pull, later `next`s drain the buffer at zero staging cost.
+struct WindowedPlan<'a> {
+    ctx: &'a RunContext,
+    worker: WorkerId,
+    batches: std::vec::IntoIter<BatchMeta>,
+    window: usize,
+    ready: VecDeque<StagedStep>,
+    slow: f64,
+    full: bool,
+}
+
+impl BatchPlan for WindowedPlan<'_> {
+    fn next(&mut self, comm: &mut CommStats, phases: &mut PhaseTimes) -> Result<Option<StagedStep>> {
+        if let Some(step) = self.ready.pop_front() {
+            return Ok(Some(step));
+        }
+        let metas: Vec<BatchMeta> = self.batches.by_ref().take(self.window).collect();
+        if metas.is_empty() {
+            return Ok(None);
+        }
+
+        // Online sampling is still per batch (the windowing only merges the
+        // network side); local work carries the worker slowdown.
+        let mut sample_total = 0.0;
+        for meta in &metas {
+            let s = self.slow * self.ctx.costs.sample_time(meta.input_nodes.len());
+            phases.sample += s;
+            sample_total += s;
+        }
+
+        // One merged pull over the window's concatenated input sets: the
+        // fabric charges one RPC per touched owner shard per *window*. No
+        // dedup across batches — every row a per-batch engine would move
+        // still moves, so remote rows match `dgl-metis` exactly; only the
+        // RPC count shrinks (and with it the per-RPC latency charges and
+        // 64-byte header bytes).
+        let all_ids: Vec<NodeId> = metas
+            .iter()
+            .flat_map(|m| m.input_nodes.iter().copied())
+            .collect();
+        let mut rows: Vec<f32> = Vec::new();
+        let materialize = self.full && self.ctx.kv.has_values();
+        let pull = self.ctx.kv.sync_pull(
+            self.worker,
+            &all_ids,
+            if materialize { Some(&mut rows) } else { None },
+            comm,
+        );
+        phases.fetch += pull.time;
+
+        // Split the gathered block back per batch (request order == the
+        // concatenation order), and attribute the whole window's cost to its
+        // first batch — that is the step-latency trade.
+        let d = self.ctx.kv.feature_dim();
+        let mut offset = 0usize;
+        for (i, meta) in metas.into_iter().enumerate() {
+            let n = meta.input_nodes.len();
+            let features = if materialize {
+                let block = rows[offset * d..(offset + n) * d].to_vec();
+                Some(block)
+            } else {
+                None
+            };
+            offset += n;
+            let num_remote = meta.num_remote;
+            let cost = if i == 0 { sample_total + pull.time } else { 0.0 };
+            self.ready.push_back(StagedStep {
+                staged: StagedBatch {
+                    meta,
+                    features,
+                    stage_time: cost,
+                    pull_time: if i == 0 { pull.time } else { 0.0 },
+                    cache_hits: 0,
+                    misses: num_remote,
+                },
+                cost,
+            });
+        }
+        Ok(self.ready.pop_front())
+    }
+}
+
+impl TrainingStrategy for GreenWindowStrategy {
+    fn id(&self) -> &'static str {
+        "green-window"
+    }
+
+    fn name(&self) -> &'static str {
+        "GreenWindow"
+    }
+
+    fn queue_depth(&self, _cfg: &RunConfig) -> u32 {
+        0
+    }
+
+    fn setup(&self, _ctx: &RunContext, _worker: WorkerId) -> Result<StrategySetup> {
+        Ok(on_demand_setup())
+    }
+
+    fn plan_epoch<'a>(
+        &self,
+        ctx: &'a RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        _comm: &mut CommStats,
+    ) -> Result<Box<dyn BatchPlan + 'a>> {
+        let batches = enumerate_on_demand(ctx, state, worker, epoch);
+        Ok(Box::new(WindowedPlan {
+            ctx,
+            worker,
+            batches: batches.into_iter(),
+            window: self.window as usize,
+            ready: VecDeque::new(),
+            slow: ctx.slowdown(worker),
+            full: ctx.cfg.exec_mode == ExecMode::Full,
+        }))
+    }
+
+    fn finish_epoch(
+        &self,
+        ctx: &RunContext,
+        state: &mut StrategyState,
+        _worker: WorkerId,
+        _epoch: u32,
+        outcome: &PipelineOutcome,
+        totals: &EpochTotals,
+        phases: &mut PhaseTimes,
+        _comm: &mut CommStats,
+    ) -> Result<EpochFinish> {
+        finish_on_demand_epoch(ctx, state, outcome, totals, phases)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+    use crate::coordinator::common::RunContext;
+    use crate::coordinator::pipeline::run_worker;
+    use crate::metrics::EpochReport;
+
+    fn cfg(engine: Engine, window: u32) -> RunConfig {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = engine;
+        c.engine_params.fetch_window = window;
+        c.epochs = 2;
+        c
+    }
+
+    fn rows(rs: &[EpochReport]) -> u64 {
+        rs.iter().map(|r| r.comm.remote_rows).sum()
+    }
+
+    fn rpcs(rs: &[EpochReport]) -> u64 {
+        rs.iter().map(|r| r.comm.sync_pulls).sum()
+    }
+
+    #[test]
+    fn window_one_is_exactly_dgl_metis() {
+        let g_ctx = RunContext::build(&cfg(Engine::GreenWindow, 1)).unwrap();
+        let (_, green) = run_worker(&g_ctx, 0, None).unwrap();
+        let m_ctx = RunContext::build(&cfg(Engine::DglMetis, 1)).unwrap();
+        let (_, metis) = run_worker(&m_ctx, 0, None).unwrap();
+        assert_eq!(green.len(), metis.len());
+        for (a, b) in green.iter().zip(&metis) {
+            assert_eq!(a.comm.remote_rows, b.comm.remote_rows);
+            assert_eq!(a.comm.sync_pulls, b.comm.sync_pulls);
+            assert_eq!(a.comm.bytes, b.comm.bytes);
+            assert_eq!(a.steps, b.steps);
+            assert!((a.epoch_time - b.epoch_time).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn windowing_cuts_rpcs_not_rows() {
+        let g_ctx = RunContext::build(&cfg(Engine::GreenWindow, 4)).unwrap();
+        let (_, green) = run_worker(&g_ctx, 0, None).unwrap();
+        let m_ctx = RunContext::build(&cfg(Engine::DglMetis, 4)).unwrap();
+        let (_, metis) = run_worker(&m_ctx, 0, None).unwrap();
+        assert_eq!(rows(&green), rows(&metis), "windowing must not change data movement");
+        assert!(
+            rpcs(&green) < rpcs(&metis),
+            "merged windows must issue fewer RPCs: {} !< {}",
+            rpcs(&green),
+            rpcs(&metis)
+        );
+    }
+
+    #[test]
+    fn fewer_rpcs_means_less_network_time() {
+        // The latency amortization the energy argument rests on.
+        let g_ctx = RunContext::build(&cfg(Engine::GreenWindow, 4)).unwrap();
+        let (_, green) = run_worker(&g_ctx, 0, None).unwrap();
+        let m_ctx = RunContext::build(&cfg(Engine::DglMetis, 4)).unwrap();
+        let (_, metis) = run_worker(&m_ctx, 0, None).unwrap();
+        let net = |rs: &[EpochReport]| -> f64 { rs.iter().map(|r| r.comm.net_time).sum() };
+        assert!(net(&green) < net(&metis), "{} !< {}", net(&green), net(&metis));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a_ctx = RunContext::build(&cfg(Engine::GreenWindow, 4)).unwrap();
+        let (_, a) = run_worker(&a_ctx, 0, None).unwrap();
+        let b_ctx = RunContext::build(&cfg(Engine::GreenWindow, 4)).unwrap();
+        let (_, b) = run_worker(&b_ctx, 0, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.comm.remote_rows, y.comm.remote_rows);
+            assert!((x.epoch_time - y.epoch_time).abs() < 1e-12);
+        }
+    }
+}

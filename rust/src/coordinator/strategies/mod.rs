@@ -1,0 +1,19 @@
+//! Concrete [`crate::coordinator::TrainingStrategy`] implementations.
+//!
+//! - [`rapid`] — the paper's engine: precomputed schedules on SSD, hot-set
+//!   double-buffered cache, prefetch window `Q`.
+//! - [`baseline`] — the on-demand DistDGL-style baselines (`dgl-metis`,
+//!   `dgl-random`, `dist-gcn`): online sampling, every remote feature
+//!   fetched synchronously, `Q = 0`.
+//! - [`fast_sample`] — FastSample-style periodic re-sampling (arXiv
+//!   2311.17847): re-enumerate every `k` epochs, replay in between.
+//! - [`green_window`] — GreenGNN-style windowed communication (arXiv
+//!   2606.02916): merge `W` consecutive batches' fetches into one pull.
+//!
+//! The latter two are registry-only engines: no coordinator file outside
+//! this directory knows they exist.
+
+pub mod baseline;
+pub mod fast_sample;
+pub mod green_window;
+pub mod rapid;

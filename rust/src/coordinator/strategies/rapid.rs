@@ -1,0 +1,467 @@
+//! The RapidGNN engine as a [`TrainingStrategy`]: Algorithm 1 end to end.
+//!
+//! Per worker:
+//! 1. **Precompute** (offline, once): enumerate every epoch's schedule with
+//!    derived seeds and stream the metadata blocks to SSD (setup time, not
+//!    training time — reported separately like the paper).
+//! 2. **Initial cache build**: rank epoch 0's remote accesses (`TopHot`) and
+//!    materialize the steady cache `C_s` with one `VectorPull`.
+//! 3. **Per epoch**: the plan streams the schedule from SSD, staging each
+//!    batch cache-first with residual `SyncPull` misses; `finish_epoch`
+//!    builds `C_sec` for epoch e+1 in the background (only its *overrun*
+//!    past the epoch stalls the swap) and swaps at the boundary.
+//!
+//! The precompute pass is shared with the `fast-sample` engine through
+//! [`precompute_epochs`], which enumerates an explicit epoch list.
+
+use crate::cache::{top_hot, CacheBuffer, DoubleBufferCache};
+use crate::config::{ExecMode, RunConfig};
+use crate::coordinator::common::RunContext;
+use crate::coordinator::strategy::{
+    BatchPlan, EpochFinish, EpochTotals, PipelineOutcome, StagedStep, StrategySetup,
+    StrategyState, TrainingStrategy,
+};
+use crate::metrics::CommStats;
+use crate::prefetch::stage_batch;
+use crate::sampler::{enumerate_epoch, remote_frequency, BatchMeta};
+use crate::storage::{write_epoch, EpochReader};
+use crate::{NodeId, Result, WorkerId};
+use std::sync::{Arc, Mutex};
+
+/// Setup products of the precompute pass.
+pub struct RapidSetup {
+    /// Simulated setup seconds (offline sampling + SSD writes + initial
+    /// ranking + initial VectorPull).
+    pub setup_time: f64,
+    /// Comm stats of the initial cache build (merged into epoch 0's report).
+    pub setup_comm: CommStats,
+    /// The double-buffered cache with `C_s` installed for the first epoch.
+    pub cache: Arc<Mutex<DoubleBufferCache>>,
+}
+
+/// Per-worker state: the cache plus the initial-build traffic to merge into
+/// the first epoch's report. Shared by the `fast-sample` strategy.
+pub(crate) struct RapidState {
+    pub(crate) cache: Arc<Mutex<DoubleBufferCache>>,
+    pub(crate) setup_comm: CommStats,
+}
+
+/// Precompute all epochs to disk and build the initial steady cache (the
+/// classic RapidGNN setup — `rapidgnn tune` and the Fig-3 bench call this).
+pub fn precompute(ctx: &RunContext, worker: WorkerId) -> Result<RapidSetup> {
+    let epochs: Vec<u32> = (0..ctx.cfg.epochs).collect();
+    precompute_epochs(ctx, worker, &epochs)
+}
+
+/// Precompute an explicit list of epochs to disk and build the initial
+/// steady cache from the first listed epoch's schedule.
+///
+/// The enumeration fans out over all cores (`enumerate_epoch` parallelizes
+/// over batches — deterministic by the per-batch derived seeds). The first
+/// epoch's `TopHot` ranking runs from the in-memory schedule and is
+/// accounted as background work overlapping the later epochs' write stream:
+/// only its overrun past that stream lands on setup time (the same overrun
+/// idiom `finish_epoch` uses for the `C_sec` builds).
+pub(crate) fn precompute_epochs(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epochs: &[u32],
+) -> Result<RapidSetup> {
+    let cfg = &ctx.cfg;
+    let fanouts = ctx.fanouts();
+    let mut setup_time = 0.0;
+
+    // Offline enumeration, streamed epoch by epoch (bounded CPU memory).
+    let mut hot: Vec<NodeId> = Vec::new();
+    let mut rank_time = 0.0;
+    let mut later_stream_time = 0.0;
+    for (k, &epoch) in epochs.iter().enumerate() {
+        let sched = enumerate_epoch(
+            &ctx.ds.graph,
+            &ctx.part,
+            &ctx.shards[worker as usize],
+            &fanouts,
+            cfg.batch_size,
+            cfg.base_seed,
+            worker,
+            epoch,
+        );
+        for b in &sched.batches {
+            setup_time += ctx.costs.sample_time(b.input_nodes.len());
+            let write = b.byte_size() as f64 / ctx.costs.ssd_bytes_per_sec;
+            setup_time += write;
+            if k > 0 {
+                later_stream_time += write;
+            }
+        }
+        write_epoch(&ctx.metadata_path, &sched)?;
+        if k == 0 {
+            rank_time = sched.total_remote() as f64 * ctx.costs.rank_per_access_sec;
+            hot = top_hot(&sched.batches, cfg.n_hot);
+        }
+    }
+    // The first epoch's ranking runs in the background of the remaining
+    // epochs' writes; only the overrun is serial setup time.
+    setup_time += (rank_time - later_stream_time).max(0.0);
+
+    // Initial cache: pull the top-n_hot features in one VectorPull.
+    let mut setup_comm = CommStats::default();
+    let mut rows: Vec<f32> = Vec::new();
+    let materialize = cfg.exec_mode == ExecMode::Full;
+    let pull = ctx.kv.vector_pull(
+        worker,
+        &hot,
+        if materialize { Some(&mut rows) } else { None },
+        &mut setup_comm,
+    );
+    setup_time += pull.time;
+    let mut cache = DoubleBufferCache::default();
+    cache.install_steady(CacheBuffer::new(&hot, rows, ctx.kv.feature_dim()));
+
+    Ok(RapidSetup {
+        setup_time,
+        setup_comm,
+        cache: Arc::new(Mutex::new(cache)),
+    })
+}
+
+/// Stream one epoch's blocks from SSD and rank its remote accesses (the
+/// background `C_sec` build). Returns the top-`n_hot` node list and the
+/// simulated background time (stream read + frequency tally).
+pub(crate) fn stream_top_hot(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epoch: u32,
+) -> Result<(Vec<NodeId>, f64)> {
+    let mut reader = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
+    let mut batches: Vec<BatchMeta> = Vec::with_capacity(reader.num_batches as usize);
+    let mut time = 0.0;
+    let mut accesses = 0u64;
+    while let Some(b) = reader.next_batch()? {
+        time += ctx.costs.stream_time(b.byte_size());
+        accesses += b.num_remote as u64;
+        batches.push(b);
+    }
+    time += accesses as f64 * ctx.costs.rank_per_access_sec;
+    let hot = top_hot(&batches, ctx.cfg.n_hot);
+    Ok((hot, time))
+}
+
+/// The scheduled batch plan: stream precomputed metadata from SSD and stage
+/// each batch cache-first. Shared by `rapid` and `fast-sample` (the latter
+/// opens a period-start epoch's file).
+pub(crate) struct ScheduledPlan<'a> {
+    pub(crate) ctx: &'a RunContext,
+    pub(crate) worker: WorkerId,
+    pub(crate) reader: EpochReader,
+    pub(crate) cache: Arc<Mutex<DoubleBufferCache>>,
+    /// Local-work slowdown (heterogeneous speeds); 1.0 normally.
+    pub(crate) slow: f64,
+    pub(crate) full: bool,
+}
+
+impl BatchPlan for ScheduledPlan<'_> {
+    fn next(
+        &mut self,
+        comm: &mut CommStats,
+        _phases: &mut crate::metrics::PhaseTimes,
+    ) -> Result<Option<StagedStep>> {
+        let Some(meta) = self.reader.next_batch()? else {
+            return Ok(None);
+        };
+        let stream = self.ctx.costs.stream_time(meta.byte_size());
+        let staged = stage_batch(&self.ctx.kv, &self.cache, meta, self.worker, self.full, comm);
+        // Network part at the fabric's per-link price; local part (SSD
+        // stream + cache lookups) scaled by the worker's slowdown.
+        let cost =
+            staged.pull_time + self.slow * (staged.stage_time - staged.pull_time + stream);
+        Ok(Some(StagedStep { staged, cost }))
+    }
+}
+
+/// The paper's engine.
+pub struct RapidStrategy;
+
+/// Registry constructor.
+pub fn ctor(_cfg: &RunConfig) -> Box<dyn TrainingStrategy> {
+    Box::new(RapidStrategy)
+}
+
+/// Shared epoch-boundary bookkeeping for schedule-driven cached engines:
+/// optionally build `C_sec` from `rebuild_from` (an on-disk epoch), account
+/// the overrun, and swap at the boundary.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_cached_epoch(
+    ctx: &RunContext,
+    state: &mut StrategyState,
+    worker: WorkerId,
+    rebuild_from: Option<u32>,
+    outcome: &PipelineOutcome,
+    totals: &EpochTotals,
+    phases: &mut crate::metrics::PhaseTimes,
+    comm: &mut CommStats,
+) -> Result<EpochFinish> {
+    let cfg = &ctx.cfg;
+    let full = cfg.exec_mode == ExecMode::Full;
+    let st = state.downcast_mut::<RapidState>().expect("rapid-family worker state");
+
+    // Background C_sec build for the next epoch (accounted as parallel work;
+    // only its *overrun* past the epoch stalls the swap).
+    let mut bg_time = 0.0;
+    if let Some(source_epoch) = rebuild_from {
+        let (hot, rank_time) = stream_top_hot(ctx, worker, source_epoch)?;
+        // Local work (stream read + ranking) carries the worker slowdown;
+        // the VectorPull below is priced per-link by the fabric.
+        bg_time += ctx.slowdown(worker) * rank_time;
+        let mut rows: Vec<f32> = Vec::new();
+        let pull = ctx.kv.vector_pull(
+            worker,
+            &hot,
+            if full { Some(&mut rows) } else { None },
+            comm,
+        );
+        bg_time += pull.time;
+        st.cache
+            .lock()
+            .unwrap()
+            .stage_secondary(CacheBuffer::new(&hot, rows, ctx.kv.feature_dim()));
+    }
+
+    let overrun = (bg_time - outcome.total).max(0.0);
+    phases.fetch = outcome.total_wait; // residual stalls visible to trainer
+    phases.idle = overrun;
+    let epoch_time = outcome.total + overrun;
+
+    let (cache_stats, device_cache_bytes) = {
+        let mut c = st.cache.lock().unwrap();
+        let s = c.stats();
+        let bytes = c.device_bytes();
+        c.swap_at_epoch_boundary();
+        (s, bytes)
+    };
+
+    let d = cfg.dataset.feature_dim;
+    Ok(EpochFinish {
+        epoch_time,
+        cache: cache_stats,
+        // Paper bound: 2·n_hot·d + Q·m_max·d (both cache buffers + the
+        // staged queue). Trace mode reports the bound-equivalent since rows
+        // aren't materialized.
+        device_bytes: device_cache_bytes.max(2 * cfg.n_hot as u64 * d as u64 * 4)
+            + cfg.prefetch_q as u64 * totals.m_max * d as u64 * 4,
+        // Streaming keeps host memory at one batch + the ranking tally.
+        host_bytes: totals.m_max * 8 + cfg.n_hot as u64 * 12,
+    })
+}
+
+/// Shared plan construction for schedule-driven cached engines: reset cache
+/// stats, merge the setup pull into epoch 0, stream `sched_epoch` from SSD.
+pub(crate) fn plan_cached_epoch<'a>(
+    ctx: &'a RunContext,
+    state: &mut StrategyState,
+    worker: WorkerId,
+    epoch: u32,
+    sched_epoch: u32,
+    comm: &mut CommStats,
+) -> Result<Box<dyn BatchPlan + 'a>> {
+    let st = state.downcast_mut::<RapidState>().expect("rapid-family worker state");
+    st.cache.lock().unwrap().reset_stats();
+    if epoch == 0 {
+        comm.merge(&st.setup_comm); // initial VectorPull bytes
+    }
+    let reader = EpochReader::open(&ctx.metadata_path, worker, sched_epoch)?;
+    Ok(Box::new(ScheduledPlan {
+        ctx,
+        worker,
+        reader,
+        cache: st.cache.clone(),
+        slow: ctx.slowdown(worker),
+        full: ctx.cfg.exec_mode == ExecMode::Full,
+    }))
+}
+
+impl TrainingStrategy for RapidStrategy {
+    fn id(&self) -> &'static str {
+        "rapid"
+    }
+
+    fn name(&self) -> &'static str {
+        "RapidGNN"
+    }
+
+    fn queue_depth(&self, cfg: &RunConfig) -> u32 {
+        cfg.prefetch_q
+    }
+
+    fn setup(&self, ctx: &RunContext, worker: WorkerId) -> Result<StrategySetup> {
+        let s = precompute(ctx, worker)?;
+        Ok(StrategySetup {
+            setup_time: s.setup_time,
+            state: Box::new(RapidState { cache: s.cache, setup_comm: s.setup_comm }),
+        })
+    }
+
+    fn plan_epoch<'a>(
+        &self,
+        ctx: &'a RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        comm: &mut CommStats,
+    ) -> Result<Box<dyn BatchPlan + 'a>> {
+        plan_cached_epoch(ctx, state, worker, epoch, epoch, comm)
+    }
+
+    fn finish_epoch(
+        &self,
+        ctx: &RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        outcome: &PipelineOutcome,
+        totals: &EpochTotals,
+        phases: &mut crate::metrics::PhaseTimes,
+        comm: &mut CommStats,
+    ) -> Result<EpochFinish> {
+        let rebuild = if epoch + 1 < ctx.cfg.epochs { Some(epoch + 1) } else { None };
+        finish_cached_epoch(ctx, state, worker, rebuild, outcome, totals, phases, comm)
+    }
+}
+
+/// Streamed frequency ranking, exposed for the Fig-3 bench and `tune`.
+pub fn epoch_remote_frequency(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epoch: u32,
+) -> Result<Vec<(NodeId, u32)>> {
+    let mut reader = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
+    let mut batches = Vec::new();
+    while let Some(b) = reader.next_batch()? {
+        batches.push(b);
+    }
+    Ok(remote_frequency(&batches))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+    use crate::coordinator::pipeline::run_worker;
+    use crate::metrics::EpochReport;
+
+    fn ctx() -> RunContext {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = Engine::Rapid;
+        c.epochs = 3;
+        c.n_hot = 300;
+        RunContext::build(&c).unwrap()
+    }
+
+    #[test]
+    fn precompute_writes_all_epochs() {
+        let ctx = ctx();
+        let setup = precompute(&ctx, 0).unwrap();
+        assert!(setup.setup_time > 0.0);
+        assert!(setup.setup_comm.vector_pulls > 0, "initial VectorPull issued");
+        for e in 0..3 {
+            assert!(EpochReader::open(&ctx.metadata_path, 0, e).is_ok(), "epoch {e} on disk");
+        }
+        assert!(!setup.cache.lock().unwrap().steady().is_empty());
+    }
+
+    #[test]
+    fn rapid_runs_and_hits_cache() {
+        let ctx = ctx();
+        let (setup_time, reports) = run_worker(&ctx, 0, None).unwrap();
+        assert!(setup_time > 0.0);
+        assert_eq!(reports.len(), 3);
+        for r in &reports {
+            assert!(r.steps >= 1);
+            assert!(r.cache.lookups > 0);
+            assert!(r.cache.hit_rate() > 0.2, "hit rate {}", r.cache.hit_rate());
+        }
+    }
+
+    #[test]
+    fn rapid_moves_fewer_remote_rows_than_baseline() {
+        // The paper's headline mechanism, on the tiny graph.
+        let rctx = ctx();
+        let (_, rapid) = run_worker(&rctx, 0, None).unwrap();
+        let mut bcfg = rctx.cfg.clone();
+        bcfg.engine = Engine::DglMetis;
+        let bctx = RunContext::build(&bcfg).unwrap();
+        let (_, base) = run_worker(&bctx, 0, None).unwrap();
+        let rows = |rs: &[EpochReport]| -> u64 { rs.iter().map(|r| r.comm.remote_rows).sum() };
+        assert!(
+            rows(&rapid) < rows(&base),
+            "rapid {} !< baseline {}",
+            rows(&rapid),
+            rows(&base)
+        );
+    }
+
+    #[test]
+    fn rapid_is_faster_per_epoch_than_baseline() {
+        let rctx = ctx();
+        let (_, rapid) = run_worker(&rctx, 0, None).unwrap();
+        let mut bcfg = rctx.cfg.clone();
+        bcfg.engine = Engine::DglMetis;
+        let bctx = RunContext::build(&bcfg).unwrap();
+        let (_, base) = run_worker(&bctx, 0, None).unwrap();
+        let t = |rs: &[EpochReport]| -> f64 { rs.iter().map(|r| r.epoch_time).sum() };
+        assert!(t(&rapid) < t(&base), "rapid {} !< baseline {}", t(&rapid), t(&base));
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let c1 = ctx();
+        let (s1, a) = run_worker(&c1, 0, None).unwrap();
+        let c2 = ctx();
+        let (s2, b) = run_worker(&c2, 0, None).unwrap();
+        assert_eq!(s1, s2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.comm.remote_rows, y.comm.remote_rows);
+            assert_eq!(x.cache.hits, y.cache.hits);
+            assert!((x.epoch_time - y.epoch_time).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn memory_respects_paper_bound() {
+        let ctx = ctx();
+        let (_, reports) = run_worker(&ctx, 0, None).unwrap();
+        for r in &reports {
+            // bound with index overhead allowance (+16B/entry)
+            let m_max = 2_000u64; // tiny graph: generous m_max envelope
+            let bound = crate::cache::device_memory_bound(
+                ctx.cfg.n_hot,
+                ctx.cfg.prefetch_q,
+                m_max as u32,
+                ctx.cfg.dataset.feature_dim,
+            );
+            let slack = 2 * ctx.cfg.n_hot as u64 * 16;
+            assert!(
+                r.device_bytes <= bound + slack,
+                "device {} > bound {}",
+                r.device_bytes,
+                bound + slack
+            );
+        }
+    }
+
+    #[test]
+    fn later_epochs_swap_cache() {
+        let ctx = ctx();
+        let setup = precompute(&ctx, 0).unwrap();
+        let cache = setup.cache;
+        // stage + swap manually to verify the boundary logic end to end
+        let (hot, _) = stream_top_hot(&ctx, 0, 1).unwrap();
+        cache
+            .lock()
+            .unwrap()
+            .stage_secondary(CacheBuffer::new(&hot, Vec::new(), ctx.kv.feature_dim()));
+        assert!(cache.lock().unwrap().swap_at_epoch_boundary());
+        assert_eq!(cache.lock().unwrap().swaps(), 1);
+    }
+}

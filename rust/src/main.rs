@@ -5,8 +5,12 @@
 //! rapidgnn train   [--config run.toml] [--dataset tiny] [--engine rapid] ...
 //! rapidgnn compare [--dataset products-sim] [--batch-size 1000] ...
 //! rapidgnn partition-stats [--dataset tiny] [--workers 4]
+//! rapidgnn tune    [--dataset tiny]
 //! rapidgnn info
 //! ```
+//!
+//! `--engine` accepts any id in the `EngineRegistry` (`rapidgnn help` lists
+//! them); `compare` iterates the whole registry.
 //!
 //! Flag parsing is hand-rolled (this build environment has no clap); every
 //! flag has the form `--name value`.
@@ -15,7 +19,7 @@ use anyhow::{bail, Context};
 use rapidgnn::config::{
     load_run_config, save_run_config, DatasetConfig, DatasetPreset, Engine, RunConfig,
 };
-use rapidgnn::coordinator;
+use rapidgnn::coordinator::{self, EngineRegistry};
 use rapidgnn::graph::{build_dataset, degree_stats};
 use rapidgnn::partition::{partition_quality, Partitioner};
 use rapidgnn::util::bench::{fmt_bytes, fmt_secs, Table};
@@ -46,11 +50,12 @@ fn dispatch(args: &[String]) -> Result<()> {
             print_usage();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (train|compare|partition-stats|info)"),
+        other => bail!("unknown command '{other}' (train|compare|partition-stats|tune|info)"),
     }
 }
 
 fn print_usage() {
+    let engines = EngineRegistry::global().ids().collect::<Vec<_>>().join(" | ");
     println!(
         "RapidGNN — communication-efficient distributed GNN training (paper reproduction)
 
@@ -58,7 +63,7 @@ USAGE: rapidgnn <command> [--flag value]...
 
 COMMANDS
   train             run one engine and print the run report
-  compare           run all four engines, print Table-2-style speedups
+  compare           run every registered engine, print Table-2-style speedups
   partition-stats   partition quality for a dataset (METIS-like vs random)
   tune              recommend n_hot from the access-frequency distribution
   info              artifact + platform diagnostics
@@ -68,7 +73,7 @@ COMMON FLAGS
   --save-config P   write the effective config to a TOML file and exit
   --dataset NAME    tiny | reddit-sim | products-sim | papers-sim
   --scale F         dataset node-count scale factor (default 1.0)
-  --engine NAME     rapid | dgl-metis | dgl-random | dist-gcn
+  --engine NAME     {engines}
   --workers P       number of workers / partitions
   --batch-size N    seeds per mini-batch
   --epochs E        training epochs
@@ -78,6 +83,8 @@ COMMON FLAGS
   --exec MODE       trace | full
   --backend B       host | pjrt (full mode)
   --seed S          base seed s0
+  --resample-period K   fast-sample: re-enumerate the schedule every K epochs
+  --fetch-window W  green-window: batches merged per windowed fetch
   --json PATH       write the run report as JSON"
     );
 }
@@ -144,6 +151,12 @@ fn config_from_flags(flags: &Flags) -> Result<RunConfig> {
     }
     if let Some(v) = flags.get("seed") {
         cfg.base_seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("resample-period") {
+        cfg.engine_params.resample_period = v.parse()?;
+    }
+    if let Some(v) = flags.get("fetch-window") {
+        cfg.engine_params.fetch_window = v.parse()?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -229,7 +242,9 @@ fn cmd_compare(flags: &Flags) -> Result<()> {
     let mut rapid_step = 0.0;
     let mut rapid_net = 0.0;
     let mut rows = Vec::new();
-    for engine in Engine::ALL {
+    // The comparison set is the registry, not a hard-coded list: a newly
+    // registered engine shows up here with no CLI changes.
+    for engine in EngineRegistry::global().engines() {
         let mut cfg = base.clone();
         cfg.engine = engine;
         let report = coordinator::run(&cfg)?;
@@ -404,6 +419,8 @@ mod tests {
             ("exec", "full"),
             ("backend", "host"),
             ("seed", "99"),
+            ("resample-period", "6"),
+            ("fetch-window", "3"),
         ]);
         let cfg = config_from_flags(&f).unwrap();
         assert_eq!(cfg.dataset.name, "products-sim");
@@ -416,6 +433,16 @@ mod tests {
         assert_eq!(cfg.prefetch_q, 7);
         assert_eq!(cfg.fanout, vec![4, 9]);
         assert_eq!(cfg.base_seed, 99);
+        assert_eq!(cfg.engine_params.resample_period, 6);
+        assert_eq!(cfg.engine_params.fetch_window, 3);
+    }
+
+    #[test]
+    fn registry_engine_ids_parse_from_flags() {
+        for id in EngineRegistry::global().ids() {
+            let cfg = config_from_flags(&flags(&[("engine", id)])).unwrap();
+            assert_eq!(cfg.engine.id(), id);
+        }
     }
 
     #[test]

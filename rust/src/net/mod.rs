@@ -129,10 +129,12 @@ impl NetFabric {
             time += link.latency_sec;
             e.retries += 1;
         }
-        if let Some((w, factor)) = self.cfg.straggler() {
-            if src == w || dst == w {
-                time *= factor;
-            }
+        // Heterogeneous-speed injection: a link is as slow as its slowest
+        // endpoint (worker_speed vector + straggler sugar, both resolved by
+        // `slowdown_of`). 1.0 for homogeneous clusters — no float op.
+        let slow = self.cfg.slowdown_of(src).max(self.cfg.slowdown_of(dst));
+        if slow != 1.0 {
+            time *= slow;
         }
         e.bytes += bytes;
         e.time += time;
@@ -346,6 +348,19 @@ mod tests {
         assert!((untouched - base).abs() < 1e-12);
         assert!((slow_dst - 4.0 * base).abs() < 1e-12);
         assert!((slow_src - 4.0 * base).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_speed_vector_slows_matching_links() {
+        // The generalized straggler: every link touching a slowed worker is
+        // scaled by that worker's factor; two slowed endpoints pay the max.
+        let mut cfg = FabricConfig::default();
+        cfg.worker_speed = vec![1.0, 2.0, 4.0];
+        let f = NetFabric::new(cfg).with_world_size(4);
+        let base = fabric().charge_rpc(0, 3, 1000, 400).time;
+        assert!((f.charge_rpc(0, 3, 1000, 400).time - base).abs() < 1e-12);
+        assert!((f.charge_rpc(0, 1, 1000, 400).time - 2.0 * base).abs() < 1e-12);
+        assert!((f.charge_rpc(1, 2, 1000, 400).time - 4.0 * base).abs() < 1e-12, "max endpoint wins");
     }
 
     #[test]

@@ -94,6 +94,20 @@ impl Value {
         }
     }
 
+    pub fn req_f64_array(&self, key: &str) -> Result<Vec<f64>> {
+        match self.get(key) {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|v| match v {
+                    Value::Float(f) => Ok(*f),
+                    Value::Int(i) => Ok(*i as f64),
+                    other => bail!("key '{key}': non-numeric array item {other:?}"),
+                })
+                .collect(),
+            other => bail!("key '{key}': expected array, got {other:?}"),
+        }
+    }
+
     pub fn req_u32_array(&self, key: &str) -> Result<Vec<u32>> {
         match self.get(key) {
             Some(Value::Arr(items)) => items
@@ -609,6 +623,11 @@ impl From<Vec<Value>> for Value {
 impl From<&[u32]> for Value {
     fn from(v: &[u32]) -> Value {
         Value::Arr(v.iter().map(|&x| Value::Int(x as i64)).collect())
+    }
+}
+impl From<&[f64]> for Value {
+    fn from(v: &[f64]) -> Value {
+        Value::Arr(v.iter().map(|&x| Value::Float(x)).collect())
     }
 }
 
