@@ -4,9 +4,12 @@
 //! Paper: RapidGNN scales near-linearly; at P=3 speedup 1.5× (products) to
 //! 1.6× (reddit) over P=2; at P=4, 1.7–2.1×. We sweep P ∈ {2,4,8,16}
 //! (extending past the paper's 4-machine testbed) on all three datasets and
-//! four fabric topologies (flat switch, 2-rack spine oversubscribed 8×,
-//! ring, star/parameter-server — see `rust/src/sim/README.md` for how a
-//! bench selects a topology: set `cfg.fabric.topology`).
+//! six fabric topologies (flat switch, 2-rack spine oversubscribed 8×,
+//! ring, star/parameter-server, 4-pod fat tree, 2×2 dragonfly — see
+//! `rust/src/sim/README.md` for how a bench selects a topology: set
+//! `cfg.fabric.topology`). A final sweep turns on shared-link queueing
+//! (`fabric.contention`) over the two-tier oversubscription axis and dumps
+//! per-link utilization telemetry to `bench_results/fig6_links.json`.
 //!
 //! Conformance gate (per ISSUE 2): for every (topology × P) cell the
 //! event-driven full mode must report *identical* `total_remote_rows()` to
@@ -30,6 +33,8 @@ fn topologies() -> Vec<(&'static str, Topology)> {
         ("2tier-8x", Topology::TwoTier { racks: 2, oversubscription: 8.0 }),
         ("ring", Topology::Ring),
         ("star", Topology::Star { hub: 0 }),
+        ("fat-tree-4", Topology::FatTree { k: 4 }),
+        ("dragonfly-2x2", Topology::Dragonfly { groups: 2, routers: 2 }),
     ]
 }
 
@@ -215,6 +220,107 @@ fn main() -> rapidgnn::Result<()> {
         }
     }
     reg.print();
+
+    // --- oversubscription × contention: shared-link queueing on the
+    // two-tier spine. Gates (per ISSUE 4): with contention on, the
+    // on-demand baseline's epoch time is monotonically non-decreasing in
+    // the oversubscription factor and never beats the linear price; and
+    // rapid's advantage over dgl-metis *widens* under contention (the
+    // baseline's synchronous fetches queue on the spine, rapid's residual
+    // misses mostly don't).
+    {
+        let cell = |engine: Engine, oversub: f64, contention: bool| -> rapidgnn::Result<f64> {
+            let mut cfg = identity_cfg(
+                Topology::TwoTier { racks: 2, oversubscription: oversub },
+                4,
+                ExecMode::Trace,
+            );
+            cfg.engine = engine;
+            cfg.fabric.contention = contention;
+            Ok(coordinator::run(&cfg)?.total_time / cfg.epochs as f64)
+        };
+        let mut t = Table::new(
+            "Fig 6e — oversubscription × contention (two-tier, 0.1× reddit-sim, P=4)",
+            &["oversub", "metis linear", "metis contended", "rapid contended", "metis/rapid"],
+        );
+        let mut prev_contended = 0.0f64;
+        let mut ratios: Vec<(f64, f64, f64)> = Vec::new(); // (oversub, linear ratio, contended ratio)
+        for oversub in [1.0f64, 2.0, 4.0, 8.0, 16.0] {
+            let metis_lin = cell(Engine::DglMetis, oversub, false)?;
+            let rapid_lin = cell(Engine::Rapid, oversub, false)?;
+            let metis_con = cell(Engine::DglMetis, oversub, true)?;
+            let rapid_con = cell(Engine::Rapid, oversub, true)?;
+            assert!(
+                metis_con >= metis_lin - 1e-9,
+                "oversub {oversub}: contended {metis_con} beat the linear price {metis_lin}"
+            );
+            assert!(
+                rapid_con >= rapid_lin - 1e-9,
+                "oversub {oversub}: contended rapid {rapid_con} beat linear {rapid_lin}"
+            );
+            assert!(
+                metis_con >= prev_contended - 1e-9,
+                "epoch time must be monotone in oversubscription: {metis_con} < {prev_contended}"
+            );
+            prev_contended = metis_con;
+            ratios.push((oversub, metis_lin / rapid_lin, metis_con / rapid_con));
+            t.row(&[
+                format!("{oversub:.0}x"),
+                fmt_secs(metis_lin),
+                fmt_secs(metis_con),
+                fmt_secs(rapid_con),
+                format!("{:.2}x", metis_con / rapid_con),
+            ]);
+            let mut cellv = Value::table();
+            cellv
+                .set("dataset", "reddit-sim-0.1x contention")
+                .set("oversubscription", oversub)
+                .set("metis_epoch_linear", metis_lin)
+                .set("metis_epoch_contended", metis_con)
+                .set("rapid_epoch_contended", rapid_con);
+            json.push(cellv);
+        }
+        t.print();
+        let &(o, lin, con) = ratios.last().unwrap();
+        assert!(
+            con >= lin - 1e-9,
+            "oversub {o}: contention must widen rapid's advantage ({con} !>= {lin})"
+        );
+    }
+
+    // --- per-link utilization artifact: a contended fat-tree run's link
+    // telemetry, with the conservation gate Σ busy ≥ Σ bytes / bandwidth.
+    {
+        let mut cfg = identity_cfg(Topology::FatTree { k: 4 }, 8, ExecMode::Trace);
+        cfg.engine = Engine::DglMetis;
+        cfg.fabric.contention = true;
+        let r = coordinator::run(&cfg)?;
+        assert!(!r.links.is_empty(), "contended run must report link telemetry");
+        let busy: f64 = r.links.iter().map(|l| l.busy_sec).sum();
+        let bytes: u64 = r.epochs.iter().map(|e| e.comm.bytes).sum();
+        let floor = bytes as f64 / cfg.fabric.bandwidth_bytes_per_sec;
+        assert!(busy >= floor - 1e-9, "Σ link busy {busy} < Σ bytes/bw {floor}");
+        let links: Vec<Value> = r
+            .links
+            .iter()
+            .map(|l| {
+                let mut v = l.to_value();
+                v.set("dataset", "reddit-sim-0.1x fat-tree contended")
+                    .set("engine", "dgl-metis")
+                    .set("workers", 8u32);
+                v
+            })
+            .collect();
+        std::fs::create_dir_all("bench_results").ok();
+        std::fs::write(
+            "bench_results/fig6_links.json",
+            Value::Arr(links).to_json_pretty(),
+        )?;
+        println!(
+            "per-link utilization for {} links written to bench_results/fig6_links.json",
+            r.links.len()
+        );
+    }
 
     println!("paper: P=3 → 1.5-1.6x over P=2; P=4 → 1.7-2.1x (reddit)");
     std::fs::create_dir_all("bench_results").ok();

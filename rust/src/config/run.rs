@@ -236,6 +236,27 @@ pub enum Topology {
         /// Worker id acting as the hub.
         hub: u32,
     },
+    /// Simplified k-ary fat tree: `k` pods (edge switches, workers assigned
+    /// `pod = w % k`) joined by `max(k/2, 1)` core spines with full bisection
+    /// bandwidth. Cross-pod traffic takes one deterministically ECMP-hashed
+    /// spine (`(src + dst) % spines`); in the linear price that is 2× latency
+    /// at full bandwidth — contention mode exposes the hash collisions.
+    FatTree {
+        /// Pod / edge-switch count (≥ 2); spines = `max(k/2, 1)`.
+        k: u32,
+    },
+    /// Simplified dragonfly: `groups` groups of `routers` routers each
+    /// (`group = w % groups`, `router = (w / groups) % routers`), all-to-all
+    /// local links inside a group and one global link per ordered group pair
+    /// (owned by gateway router `dst_group % routers`). Linear price grows
+    /// with the hop count of the minimal route (local ≤ 1 hop each side +
+    /// one long global hop).
+    Dragonfly {
+        /// Group count (≥ 1).
+        groups: u32,
+        /// Routers per group (≥ 1).
+        routers: u32,
+    },
 }
 
 impl Default for Topology {
@@ -252,8 +273,65 @@ impl Topology {
             Topology::TwoTier { .. } => "two-tier",
             Topology::Ring => "ring",
             Topology::Star { .. } => "star",
+            Topology::FatTree { .. } => "fat-tree",
+            Topology::Dragonfly { .. } => "dragonfly",
         }
     }
+}
+
+/// One shared physical link in the contention model. Workers see *routes* —
+/// ordered hop lists over these links — and the `net::contention` simulator
+/// shares each link's bandwidth processor-sharing-style among the transfers
+/// in flight on it. Identity is structural so every RPC that crosses the
+/// same cable lands on the same queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LinkKey {
+    /// Worker `w`'s NIC egress (access link up into the fabric).
+    HostUp(u32),
+    /// Worker `w`'s NIC ingress (access link down from the fabric).
+    HostDown(u32),
+    /// Two-tier: rack `r`'s oversubscribed uplink into the spine.
+    RackUp(u32),
+    /// Two-tier: rack `r`'s oversubscribed downlink from the spine.
+    RackDown(u32),
+    /// Ring: the directed cable from worker `from` to its neighbour `to`.
+    RingSeg { from: u32, to: u32 },
+    /// Fat tree: pod `pod`'s uplink to core spine `spine`.
+    EdgeUp { pod: u32, spine: u32 },
+    /// Fat tree: pod `pod`'s downlink from core spine `spine`.
+    EdgeDown { pod: u32, spine: u32 },
+    /// Dragonfly: the local cable between routers `a < b` inside `group`.
+    Local { group: u32, a: u32, b: u32 },
+    /// Dragonfly: the long global cable from group `from` to group `to`.
+    Global { from: u32, to: u32 },
+}
+
+impl LinkKey {
+    /// Stable human-readable label (telemetry JSON, bench tables).
+    pub fn label(&self) -> String {
+        match self {
+            LinkKey::HostUp(w) => format!("host-up:{w}"),
+            LinkKey::HostDown(w) => format!("host-down:{w}"),
+            LinkKey::RackUp(r) => format!("rack-up:{r}"),
+            LinkKey::RackDown(r) => format!("rack-down:{r}"),
+            LinkKey::RingSeg { from, to } => format!("ring:{from}>{to}"),
+            LinkKey::EdgeUp { pod, spine } => format!("edge-up:p{pod}/s{spine}"),
+            LinkKey::EdgeDown { pod, spine } => format!("edge-down:p{pod}/s{spine}"),
+            LinkKey::Local { group, a, b } => format!("dfly-local:g{group}:{a}-{b}"),
+            LinkKey::Global { from, to } => format!("dfly-global:{from}>{to}"),
+        }
+    }
+}
+
+/// One hop of a route: the shared link it crosses plus that link's
+/// propagation latency and capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteHop {
+    pub link: LinkKey,
+    /// Propagation/processing latency of this hop (seconds).
+    pub latency_sec: f64,
+    /// Capacity of the shared link (bytes/second).
+    pub bandwidth_bytes_per_sec: f64,
 }
 
 /// Per-link effective parameters derived from a topology.
@@ -263,6 +341,20 @@ pub struct LinkModel {
     pub latency_sec: f64,
     /// Effective bandwidth on this link (bytes/second).
     pub bandwidth_bytes_per_sec: f64,
+}
+
+/// One transient-straggler phase: from `from_epoch` onward (until the next
+/// phase takes over) worker `w` is additionally slowed by `speeds[w]`
+/// (entries past the end default to 1.0). Layered multiplicatively over the
+/// static [`FabricConfig::worker_speed`] vector, so a single phase starting
+/// at epoch 0 over an empty static vector is bit-identical to configuring
+/// `worker_speed` directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedPhase {
+    /// First epoch this phase applies to.
+    pub from_epoch: u32,
+    /// Per-worker slowdown multipliers (≥ 1; missing entries = 1.0).
+    pub speeds: Vec<f64>,
 }
 
 /// Simulated network fabric parameters (paper testbed: 10 Gbps Ethernet).
@@ -286,11 +378,22 @@ pub struct FabricConfig {
     /// All entries must be ≥ 1 — slowdowns, not speedups, like
     /// `straggler_factor`. Resolved per worker by [`Self::slowdown_of`].
     pub worker_speed: Vec<f64>,
+    /// Transient stragglers: epoch-indexed speed phases layered over the
+    /// static `worker_speed` vector. Each entry switches the cluster's
+    /// per-worker multipliers from its `from_epoch` onward; entries must be
+    /// sorted by strictly increasing `from_epoch`. Empty = no phases.
+    pub worker_speed_phases: Vec<SpeedPhase>,
     /// Single-straggler sugar: worker id whose links and local work run
     /// slow, or -1 for none. Combines multiplicatively with `worker_speed`.
     pub straggler_worker: i64,
     /// Slowdown multiplier for the straggler (≥ 1; 1 = no effect).
     pub straggler_factor: f64,
+    /// Shared-link queueing: when true, RPCs contend for the physical links
+    /// on their route (processor-sharing bandwidth, discrete-event drained on
+    /// the cluster runtime's virtual clock — see `net::contention`) instead
+    /// of the closed-form linear per-RPC price. Off by default, which keeps
+    /// every existing trace byte-identical.
+    pub contention: bool,
 }
 
 impl Default for FabricConfig {
@@ -302,8 +405,10 @@ impl Default for FabricConfig {
             topology: Topology::Flat,
             loss_rate: 0.0,
             worker_speed: Vec::new(),
+            worker_speed_phases: Vec::new(),
             straggler_worker: -1,
             straggler_factor: 1.0,
+            contention: false,
         }
     }
 }
@@ -346,8 +451,163 @@ impl FabricConfig {
                     (2.0 * l, b / 2.0)
                 }
             }
+            // The multi-hop presets derive their linear price from the same
+            // route the contention model queues on: latency = sum of hop
+            // latencies, bandwidth = the route's bottleneck capacity. This
+            // keeps the two pricing modes consistent: an uncongested
+            // contended transfer costs exactly the linear price.
+            Topology::FatTree { .. } | Topology::Dragonfly { .. } => {
+                let hops = self.route(src, dst, world);
+                let lat: f64 = hops.iter().map(|h| h.latency_sec).sum();
+                let bw = hops
+                    .iter()
+                    .map(|h| h.bandwidth_bytes_per_sec)
+                    .fold(f64::INFINITY, f64::min);
+                (lat, if bw.is_finite() { bw } else { b })
+            }
         };
         LinkModel { latency_sec: lat, bandwidth_bytes_per_sec: bw }
+    }
+
+    /// The ordered shared-link route an RPC `src → dst` takes under the
+    /// topology — the unit the contention model queues on. Invariants the
+    /// `net::contention` tests pin: hop latencies sum to (at least) the
+    /// linear [`Self::link_model`] latency, and for the switched presets
+    /// (flat, two-tier, fat-tree, dragonfly) the bottleneck hop capacity
+    /// equals the linear bandwidth, so an uncongested contended transfer
+    /// costs exactly the linear price. Ring and star are *cheaper* per hop
+    /// uncongested (cut-through vs the linear model's store-and-forward /
+    /// half-duplex approximations) but share cables the linear model cannot.
+    pub fn route(&self, src: u32, dst: u32, world: u32) -> Vec<RouteHop> {
+        let l = self.rpc_latency_sec;
+        let b = self.bandwidth_bytes_per_sec;
+        let hop = |link: LinkKey, latency: f64, bw: f64| RouteHop {
+            link,
+            latency_sec: latency,
+            bandwidth_bytes_per_sec: bw,
+        };
+        let nic_pair = |src: u32, dst: u32| {
+            vec![
+                hop(LinkKey::HostUp(src), 0.5 * l, b),
+                hop(LinkKey::HostDown(dst), 0.5 * l, b),
+            ]
+        };
+        // Self-transfers never cross the fabric: every topology prices them
+        // as the NIC loopback pair (the ring walk below would otherwise
+        // circle the whole ring for src == dst).
+        if src == dst {
+            return nic_pair(src, dst);
+        }
+        match self.topology {
+            Topology::Flat => nic_pair(src, dst),
+            Topology::TwoTier { racks, oversubscription } => {
+                let r = racks.max(1);
+                let o = oversubscription.max(1.0);
+                if src % r == dst % r {
+                    nic_pair(src, dst)
+                } else {
+                    vec![
+                        hop(LinkKey::HostUp(src), 0.5 * l, b),
+                        hop(LinkKey::RackUp(src % r), 0.5 * l, b / o),
+                        hop(LinkKey::RackDown(dst % r), 0.5 * l, b / o),
+                        hop(LinkKey::HostDown(dst), 0.5 * l, b),
+                    ]
+                }
+            }
+            Topology::Ring => {
+                // Walk the shorter direction (forward on ties), one cable
+                // per hop, each at full capacity and one hop latency.
+                // Unknown world degrades to a ring just large enough.
+                let p = world.max(src.max(dst) + 1).max(2);
+                let d = src.abs_diff(dst);
+                let fwd_dist = if dst >= src { d } else { p - d };
+                let forward = fwd_dist <= p - fwd_dist;
+                let mut hops = Vec::new();
+                let mut cur = src;
+                loop {
+                    let next = if forward { (cur + 1) % p } else { (cur + p - 1) % p };
+                    hops.push(hop(LinkKey::RingSeg { from: cur, to: next }, l, b));
+                    cur = next;
+                    if cur == dst || hops.len() as u32 >= p {
+                        break;
+                    }
+                }
+                hops
+            }
+            Topology::Star { hub } => {
+                if src == hub || dst == hub {
+                    nic_pair(src, dst)
+                } else {
+                    // Spoke-to-spoke transits the hub worker's NIC both ways
+                    // — the shared cables every parameter-server pull queues
+                    // on (the incast hotspot).
+                    vec![
+                        hop(LinkKey::HostUp(src), 0.5 * l, b),
+                        hop(LinkKey::HostDown(hub), 0.5 * l, b),
+                        hop(LinkKey::HostUp(hub), 0.5 * l, b),
+                        hop(LinkKey::HostDown(dst), 0.5 * l, b),
+                    ]
+                }
+            }
+            Topology::FatTree { k } => {
+                let pods = k.max(1);
+                let spines = (k / 2).max(1);
+                let (ps, pd) = (src % pods, dst % pods);
+                if ps == pd {
+                    nic_pair(src, dst)
+                } else {
+                    // Deterministic ECMP: the (src, dst) pair hashes to one
+                    // spine, so repeat transfers collide repeatably.
+                    let spine = (src + dst) % spines;
+                    vec![
+                        hop(LinkKey::HostUp(src), 0.5 * l, b),
+                        hop(LinkKey::EdgeUp { pod: ps, spine }, 0.5 * l, b),
+                        hop(LinkKey::EdgeDown { pod: pd, spine }, 0.5 * l, b),
+                        hop(LinkKey::HostDown(dst), 0.5 * l, b),
+                    ]
+                }
+            }
+            Topology::Dragonfly { groups, routers } => {
+                let g = groups.max(1);
+                let r = routers.max(1);
+                let (gs, gd) = (src % g, dst % g);
+                let (rs, rd) = ((src / g) % r, (dst / g) % r);
+                let local = |group: u32, x: u32, y: u32| {
+                    hop(
+                        LinkKey::Local { group, a: x.min(y), b: x.max(y) },
+                        0.5 * l,
+                        b,
+                    )
+                };
+                if gs == gd {
+                    if rs == rd {
+                        nic_pair(src, dst)
+                    } else {
+                        vec![
+                            hop(LinkKey::HostUp(src), 0.5 * l, b),
+                            local(gs, rs, rd),
+                            hop(LinkKey::HostDown(dst), 0.5 * l, b),
+                        ]
+                    }
+                } else {
+                    // Minimal route: local hop to the gateway router owning
+                    // the global cable, the long global hop, local hop from
+                    // the destination group's gateway.
+                    let gw_src = gd % r; // router in gs with the link to gd
+                    let gw_dst = gs % r; // router in gd with the link from gs
+                    let mut hops = vec![hop(LinkKey::HostUp(src), 0.5 * l, b)];
+                    if rs != gw_src {
+                        hops.push(local(gs, rs, gw_src));
+                    }
+                    hops.push(hop(LinkKey::Global { from: gs, to: gd }, 2.0 * l, b));
+                    if gw_dst != rd {
+                        hops.push(local(gd, gw_dst, rd));
+                    }
+                    hops.push(hop(LinkKey::HostDown(dst), 0.5 * l, b));
+                    hops
+                }
+            }
+        }
     }
 
     /// Topology-aware RPC time for `src → dst`.
@@ -388,6 +648,34 @@ impl FabricConfig {
         }
     }
 
+    /// Transient-phase multiplier for `worker` at `epoch`: the entry from
+    /// the last phase whose `from_epoch` ≤ `epoch` (1.0 when no phase is
+    /// active or the phase has no entry for this worker).
+    pub fn phase_factor(&self, worker: u32, epoch: u32) -> f64 {
+        let mut factor = 1.0;
+        for phase in &self.worker_speed_phases {
+            if phase.from_epoch <= epoch {
+                factor = phase.speeds.get(worker as usize).copied().unwrap_or(1.0);
+            } else {
+                break;
+            }
+        }
+        factor
+    }
+
+    /// Epoch-aware slowdown: the static [`Self::slowdown_of`] layered with
+    /// the transient phase active at `epoch`. With no phases configured this
+    /// is exactly `slowdown_of` (same float ops), so existing runs are
+    /// bit-identical.
+    pub fn slowdown_at(&self, worker: u32, epoch: u32) -> f64 {
+        let base = self.slowdown_of(worker);
+        if self.worker_speed_phases.is_empty() {
+            base
+        } else {
+            base * self.phase_factor(worker, epoch)
+        }
+    }
+
 
     /// Internal consistency checks (called from [`RunConfig::validate`]).
     pub fn validate(&self) -> Result<()> {
@@ -402,10 +690,31 @@ impl FabricConfig {
             self.worker_speed.iter().all(|s| s.is_finite() && *s >= 1.0),
             "worker_speed entries must be finite slowdown factors >= 1"
         );
+        let mut prev_from: Option<u32> = None;
+        for phase in &self.worker_speed_phases {
+            ensure!(
+                phase.speeds.iter().all(|s| s.is_finite() && *s >= 1.0),
+                "worker_speed_phases entries must be finite slowdown factors >= 1"
+            );
+            if let Some(p) = prev_from {
+                ensure!(
+                    phase.from_epoch > p,
+                    "worker_speed_phases must have strictly increasing from_epoch"
+                );
+            }
+            prev_from = Some(phase.from_epoch);
+        }
         match self.topology {
             Topology::TwoTier { racks, oversubscription } => {
                 ensure!(racks >= 1, "two-tier topology needs >= 1 rack");
                 ensure!(oversubscription >= 1.0, "oversubscription must be >= 1");
+            }
+            Topology::FatTree { k } => {
+                ensure!(k >= 2, "fat-tree needs k >= 2 pods");
+            }
+            Topology::Dragonfly { groups, routers } => {
+                ensure!(groups >= 1, "dragonfly needs >= 1 group");
+                ensure!(routers >= 1, "dragonfly needs >= 1 router per group");
             }
             Topology::Flat | Topology::Ring | Topology::Star { .. } => {}
         }
@@ -418,6 +727,11 @@ impl FabricConfig {
             Topology::Star { hub } => (0, 1.0, hub),
             _ => (0, 1.0, 0),
         };
+        let (fat_k, groups, routers) = match self.topology {
+            Topology::FatTree { k } => (k, 0, 0),
+            Topology::Dragonfly { groups, routers } => (0, groups, routers),
+            _ => (0, 0, 0),
+        };
         let mut v = Value::table();
         v.set("bandwidth_bytes_per_sec", self.bandwidth_bytes_per_sec)
             .set("rpc_latency_sec", self.rpc_latency_sec)
@@ -426,10 +740,25 @@ impl FabricConfig {
             .set("topology_racks", racks)
             .set("topology_oversubscription", oversub)
             .set("topology_hub", hub)
+            .set("topology_fat_k", fat_k)
+            .set("topology_groups", groups)
+            .set("topology_routers", routers)
             .set("loss_rate", self.loss_rate)
             .set("worker_speed", &self.worker_speed[..])
             .set("straggler_worker", self.straggler_worker)
-            .set("straggler_factor", self.straggler_factor);
+            .set("straggler_factor", self.straggler_factor)
+            .set("contention", self.contention);
+        // Phases flatten to scalar arrays so the TOML subset (no arrays of
+        // tables) round-trips them: one epoch list plus one speeds array per
+        // phase, keyed by index.
+        if !self.worker_speed_phases.is_empty() {
+            let epochs: Vec<u32> =
+                self.worker_speed_phases.iter().map(|p| p.from_epoch).collect();
+            v.set("phase_from_epochs", &epochs[..]);
+            for (i, phase) in self.worker_speed_phases.iter().enumerate() {
+                v.set(&format!("phase_speeds_{i}"), &phase.speeds[..]);
+            }
+        }
         v
     }
 
@@ -445,10 +774,26 @@ impl FabricConfig {
                 },
                 "ring" => Topology::Ring,
                 "star" => Topology::Star { hub: v.req_u32("topology_hub")? },
-                other => bail!("unknown topology '{other}' (flat|two-tier|ring|star)"),
+                "fat-tree" => Topology::FatTree { k: v.req_u32("topology_fat_k")? },
+                "dragonfly" => Topology::Dragonfly {
+                    groups: v.req_u32("topology_groups")?,
+                    routers: v.req_u32("topology_routers")?,
+                },
+                other => bail!(
+                    "unknown topology '{other}' (flat|two-tier|ring|star|fat-tree|dragonfly)"
+                ),
             },
             Some(other) => bail!("topology: expected string, got {other:?}"),
         };
+        let mut worker_speed_phases = Vec::new();
+        if v.get("phase_from_epochs").is_some() {
+            for (i, from_epoch) in v.req_u32_array("phase_from_epochs")?.into_iter().enumerate() {
+                worker_speed_phases.push(SpeedPhase {
+                    from_epoch,
+                    speeds: v.req_f64_array(&format!("phase_speeds_{i}"))?,
+                });
+            }
+        }
         Ok(FabricConfig {
             bandwidth_bytes_per_sec: v.req_f64("bandwidth_bytes_per_sec")?,
             rpc_latency_sec: v.req_f64("rpc_latency_sec")?,
@@ -460,6 +805,7 @@ impl FabricConfig {
             } else {
                 Vec::new()
             },
+            worker_speed_phases,
             straggler_worker: if v.get("straggler_worker").is_some() {
                 v.req_i64("straggler_worker")?
             } else {
@@ -469,6 +815,11 @@ impl FabricConfig {
                 v.req_f64("straggler_factor")?
             } else {
                 1.0
+            },
+            contention: if v.get("contention").is_some() {
+                v.req_bool("contention")?
+            } else {
+                false
             },
         })
     }
@@ -639,6 +990,15 @@ impl RunConfig {
             self.fabric.worker_speed.len(),
             self.num_workers
         );
+        for phase in &self.fabric.worker_speed_phases {
+            ensure!(
+                phase.speeds.len() <= self.num_workers as usize,
+                "speed phase at epoch {} has {} entries for {} workers",
+                phase.from_epoch,
+                phase.speeds.len(),
+                self.num_workers
+            );
+        }
         Ok(())
     }
 
@@ -887,6 +1247,8 @@ mod tests {
             Topology::TwoTier { racks: 2, oversubscription: 8.0 },
             Topology::Ring,
             Topology::Star { hub: 1 },
+            Topology::FatTree { k: 4 },
+            Topology::Dragonfly { groups: 2, routers: 2 },
         ] {
             let mut c = RunConfig::default();
             c.fabric.topology = topo;
@@ -896,6 +1258,181 @@ mod tests {
             let back = RunConfig::from_value(&c.to_value()).unwrap();
             assert_eq!(c, back, "{}", topo.id());
         }
+    }
+
+    #[test]
+    fn fat_tree_routes_and_linear_price_agree() {
+        let mut f = FabricConfig::default();
+        f.topology = Topology::FatTree { k: 4 };
+        // same pod (0 and 4 with k=4): one switch hop
+        let intra = f.link_model(0, 4, 8);
+        assert_eq!(intra.latency_sec, f.rpc_latency_sec);
+        assert_eq!(intra.bandwidth_bytes_per_sec, f.bandwidth_bytes_per_sec);
+        // cross-pod: 2× latency, full bisection bandwidth
+        let inter = f.link_model(0, 1, 8);
+        assert!((inter.latency_sec - 2.0 * f.rpc_latency_sec).abs() < 1e-15);
+        assert_eq!(inter.bandwidth_bytes_per_sec, f.bandwidth_bytes_per_sec);
+        // the route's hop latencies sum to the linear price and its
+        // bottleneck equals the linear bandwidth
+        let route = f.route(0, 1, 8);
+        let lat: f64 = route.iter().map(|h| h.latency_sec).sum();
+        assert!((lat - inter.latency_sec).abs() < 1e-18);
+        assert_eq!(route.len(), 4, "host-up, edge-up, edge-down, host-down");
+        // deterministic ECMP: same pair → same spine, different pair may
+        // land elsewhere but stays in range
+        assert_eq!(f.route(0, 1, 8), f.route(0, 1, 8));
+        for h in f.route(2, 5, 8) {
+            if let LinkKey::EdgeUp { spine, .. } = h.link {
+                assert!(spine < 2);
+            }
+        }
+    }
+
+    #[test]
+    fn dragonfly_routes_scale_with_hop_count() {
+        let mut f = FabricConfig::default();
+        f.topology = Topology::Dragonfly { groups: 2, routers: 2 };
+        // workers: group = w % 2, router = (w / 2) % 2
+        // 0 and 4: both group 0, routers 0 and 0 → same router
+        let same_router = f.link_model(0, 4, 8);
+        assert_eq!(same_router.latency_sec, f.rpc_latency_sec);
+        // 0 and 2: group 0, routers 0 and 1 → one local hop
+        let same_group = f.link_model(0, 2, 8);
+        assert_eq!(same_group.latency_sec, 1.5 * f.rpc_latency_sec);
+        // 0 and 1: different groups → global cable on the path
+        let cross = f.link_model(0, 1, 8);
+        assert!(cross.latency_sec >= 3.0 * f.rpc_latency_sec);
+        let route = f.route(0, 1, 8);
+        assert!(
+            route.iter().any(|h| matches!(h.link, LinkKey::Global { .. })),
+            "cross-group route must cross a global cable"
+        );
+        let lat: f64 = route.iter().map(|h| h.latency_sec).sum();
+        assert!((lat - cross.latency_sec).abs() < 1e-18);
+    }
+
+    #[test]
+    fn two_tier_route_bottleneck_matches_linear_bandwidth() {
+        let mut f = FabricConfig::default();
+        f.topology = Topology::TwoTier { racks: 2, oversubscription: 8.0 };
+        let route = f.route(0, 1, 4); // cross-rack
+        let min_bw = route
+            .iter()
+            .map(|h| h.bandwidth_bytes_per_sec)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(min_bw, f.bandwidth_bytes_per_sec / 8.0);
+        let lat: f64 = route.iter().map(|h| h.latency_sec).sum();
+        assert!((lat - f.link_model(0, 1, 4).latency_sec).abs() < 1e-18);
+        // intra-rack stays off the spine
+        assert!(f
+            .route(0, 2, 4)
+            .iter()
+            .all(|h| matches!(h.link, LinkKey::HostUp(_) | LinkKey::HostDown(_))));
+    }
+
+    #[test]
+    fn ring_route_walks_the_short_direction() {
+        let mut f = FabricConfig::default();
+        f.topology = Topology::Ring;
+        assert_eq!(f.route(0, 1, 8).len(), 1);
+        assert_eq!(f.route(0, 4, 8).len(), 4);
+        let wrap = f.route(0, 7, 8);
+        assert_eq!(wrap.len(), 1, "wraps the short way round");
+        assert_eq!(wrap[0].link, LinkKey::RingSeg { from: 0, to: 7 });
+        // self-transfers don't circle the ring — NIC loopback pair like
+        // every other topology
+        assert_eq!(f.route(3, 3, 8).len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_new_topologies() {
+        let mut c = RunConfig::default();
+        c.fabric.topology = Topology::FatTree { k: 1 };
+        assert!(c.validate().is_err());
+        c.fabric.topology = Topology::Dragonfly { groups: 0, routers: 2 };
+        assert!(c.validate().is_err());
+        c.fabric.topology = Topology::Dragonfly { groups: 2, routers: 0 };
+        assert!(c.validate().is_err());
+        c.fabric.topology = Topology::FatTree { k: 4 };
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn contention_flag_round_trips_and_defaults_off() {
+        let mut c = RunConfig::default();
+        assert!(!c.fabric.contention);
+        c.fabric.contention = true;
+        let back = RunConfig::from_value(&c.to_value()).unwrap();
+        assert!(back.fabric.contention);
+        // pre-contention configs (no key) parse to off
+        let mut v = Value::table();
+        v.set("bandwidth_bytes_per_sec", 1.25e9)
+            .set("rpc_latency_sec", 150e-6)
+            .set("per_node_overhead_sec", 0.3e-6);
+        assert!(!FabricConfig::from_value(&v).unwrap().contention);
+    }
+
+    #[test]
+    fn speed_phases_resolve_by_epoch() {
+        let mut f = FabricConfig::default();
+        assert_eq!(f.slowdown_at(0, 5), 1.0);
+        f.worker_speed_phases = vec![
+            SpeedPhase { from_epoch: 2, speeds: vec![1.0, 3.0] },
+            SpeedPhase { from_epoch: 4, speeds: vec![2.0] },
+        ];
+        assert_eq!(f.phase_factor(1, 0), 1.0, "before the first phase");
+        assert_eq!(f.phase_factor(1, 2), 3.0);
+        assert_eq!(f.phase_factor(1, 3), 3.0);
+        assert_eq!(f.phase_factor(1, 4), 1.0, "later phase replaces, entry absent");
+        assert_eq!(f.phase_factor(0, 4), 2.0);
+        // layered multiplicatively over the static vector
+        f.worker_speed = vec![1.0, 2.0];
+        assert_eq!(f.slowdown_at(1, 2), 6.0);
+        assert_eq!(f.slowdown_at(1, 0), 2.0);
+    }
+
+    #[test]
+    fn single_phase_matches_static_vector_bit_exactly() {
+        let mut phased = FabricConfig::default();
+        phased.worker_speed_phases =
+            vec![SpeedPhase { from_epoch: 0, speeds: vec![1.0, 3.5, 2.0] }];
+        let mut fixed = FabricConfig::default();
+        fixed.worker_speed = vec![1.0, 3.5, 2.0];
+        for w in 0..5 {
+            for e in 0..4 {
+                assert_eq!(phased.slowdown_at(w, e), fixed.slowdown_at(w, e), "w{w} e{e}");
+            }
+        }
+    }
+
+    #[test]
+    fn speed_phases_survive_value_round_trip() {
+        let mut c = RunConfig::default();
+        c.fabric.worker_speed_phases = vec![
+            SpeedPhase { from_epoch: 0, speeds: vec![1.0, 2.0] },
+            SpeedPhase { from_epoch: 1, speeds: vec![4.0] },
+        ];
+        let back = RunConfig::from_value(&c.to_value()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn speed_phase_validation() {
+        let mut c = RunConfig::default();
+        c.fabric.worker_speed_phases =
+            vec![SpeedPhase { from_epoch: 0, speeds: vec![0.5] }];
+        assert!(c.validate().is_err(), "speedups rejected");
+        c.fabric.worker_speed_phases = vec![
+            SpeedPhase { from_epoch: 1, speeds: vec![2.0] },
+            SpeedPhase { from_epoch: 1, speeds: vec![3.0] },
+        ];
+        assert!(c.validate().is_err(), "from_epoch must strictly increase");
+        c.fabric.worker_speed_phases =
+            vec![SpeedPhase { from_epoch: 0, speeds: vec![1.0, 2.0, 3.0] }];
+        assert!(c.validate().is_err(), "more entries than workers");
+        c.fabric.worker_speed_phases =
+            vec![SpeedPhase { from_epoch: 0, speeds: vec![1.0, 2.0] }];
+        c.validate().unwrap();
     }
 
     #[test]

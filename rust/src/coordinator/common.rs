@@ -162,6 +162,14 @@ impl RunContext {
     pub fn slowdown(&self, worker: WorkerId) -> f64 {
         self.cfg.fabric.slowdown_of(worker)
     }
+
+    /// Epoch-aware [`Self::slowdown`]: layers the transient speed phase
+    /// active at `epoch` (`fabric.worker_speed_phases`) over the static
+    /// per-worker factors. Identical to `slowdown` when no phases are
+    /// configured.
+    pub fn slowdown_at(&self, worker: WorkerId, epoch: u32) -> f64 {
+        self.cfg.fabric.slowdown_at(worker, epoch)
+    }
 }
 
 #[cfg(test)]

@@ -138,6 +138,14 @@ fn run_with_overrides(
     let mut epochs: Vec<EpochReport> = Vec::new();
 
     match cfg.exec_mode {
+        ExecMode::Trace if cfg.fabric.contention => {
+            // Shared-link queueing needs every worker's transfers on one
+            // virtual clock — contended trace runs go through the same
+            // event-driven cluster runtime as full mode (no trainer).
+            let (st, reps) = pipeline::run_cluster(ctx, None)?;
+            setup_time = st;
+            epochs = reps;
+        }
         ExecMode::Trace => {
             // Workers are independent in trace mode — run them in parallel.
             let results: Vec<Result<(f64, Vec<EpochReport>)>> = std::thread::scope(|s| {
@@ -186,7 +194,25 @@ fn run_with_overrides(
         setup_time,
         cpu_energy_j: 0.0,
         gpu_energy_j: 0.0,
+        links: Vec::new(),
     };
+    // Contended runs surface per-physical-link telemetry (accumulated over
+    // the run's epochs by the link network); empty otherwise, which keeps
+    // the serialized report — and the golden trace — byte-identical.
+    report.links = ctx
+        .fabric
+        .link_utilization()
+        .into_iter()
+        .map(|(key, u)| crate::metrics::LinkReport {
+            link: key.label(),
+            capacity_bytes_per_sec: u.capacity_bytes_per_sec,
+            busy_sec: u.busy_sec,
+            served_bytes: u.served_bytes,
+            flows: u.flows,
+            peak_flows: u.peak_flows,
+            peak_backlog_bytes: u.peak_backlog_bytes,
+        })
+        .collect();
     let energy = run_energy(&report, &cfg.power);
     report.cpu_energy_j = energy.cpu.total_j;
     report.gpu_energy_j = energy.gpu.total_j;

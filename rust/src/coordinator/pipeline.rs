@@ -74,11 +74,14 @@ pub(super) fn full_train_step(
 /// and return the consume cost for the pipeline schedule. `seed_epoch` is
 /// the *schedule* epoch ([`TrainingStrategy::schedule_epoch`]) — the one the
 /// staged metadata was enumerated under, which a replaying engine maps away
-/// from the training epoch.
+/// from the training epoch. `slow` is the worker's local slowdown for the
+/// *training* epoch (transient phases resolve per epoch).
+#[allow(clippy::too_many_arguments)]
 fn consume_staged(
     ctx: &RunContext,
     worker: WorkerId,
     seed_epoch: u32,
+    slow: f64,
     staged: StagedBatch,
     phases: &mut PhaseTimes,
     acc: &mut EpochAcc,
@@ -86,7 +89,6 @@ fn consume_staged(
 ) -> f64 {
     let full = ctx.cfg.exec_mode == ExecMode::Full;
     let d = ctx.cfg.dataset.feature_dim;
-    let slow = ctx.slowdown(worker);
     let n_input = staged.meta.input_nodes.len();
     acc.m_max = acc.m_max.max(n_input as u64);
     let assemble = slow * ctx.costs.assemble_time(n_input, d);
@@ -161,6 +163,7 @@ pub fn run_worker(
 
     for epoch in 0..cfg.epochs {
         let seed_epoch = strategy.schedule_epoch(cfg, epoch);
+        let slow = ctx.slowdown_at(worker, epoch);
         let mut comm = CommStats::default();
         let mut phases = PhaseTimes::default();
         let mut steps: Vec<PipelineStep> = Vec::new();
@@ -172,6 +175,7 @@ pub fn run_worker(
                     ctx,
                     worker,
                     seed_epoch,
+                    slow,
                     step.staged,
                     &mut phases,
                     &mut acc,
@@ -214,6 +218,12 @@ struct StrategyEpochActor<'a> {
     trainer: Option<SharedTrainer>,
     slow: f64,
     full: bool,
+    /// Shared-link queueing mode: each stage's pulls become route claims
+    /// drained by the simulation's [`crate::net::ContentionNet`]; the stage
+    /// cost handed to the scheduler is the local residual only.
+    contention: bool,
+    /// Route claims of the last `stage_next` (drained by `take_flows`).
+    pending_flows: Vec<crate::net::FlowSpec>,
     comm: CommStats,
     phases: PhaseTimes,
     acc: EpochAcc,
@@ -228,10 +238,20 @@ impl WorkerActor for StrategyEpochActor<'_> {
     fn stage_next(&mut self) -> Option<f64> {
         match self.plan.next(&mut self.comm, &mut self.phases) {
             Ok(Some(step)) => {
+                let cost = if self.contention {
+                    // The staging pulls just recorded their route claims on
+                    // the fabric; hand them to the link network (via
+                    // `take_flows`) and keep only the local residual — the
+                    // scalar `pull_time` was the linear network estimate.
+                    self.pending_flows = self.ctx.fabric.take_route_claims();
+                    (step.cost - step.staged.pull_time).max(0.0)
+                } else {
+                    step.cost
+                };
                 if self.queue_tx.try_send(step.staged).is_err() {
                     panic!("cluster scheduler overflowed the bounded staging queue");
                 }
-                Some(step.cost)
+                Some(cost)
             }
             Ok(None) => None,
             Err(e) => {
@@ -239,6 +259,10 @@ impl WorkerActor for StrategyEpochActor<'_> {
                 None
             }
         }
+    }
+
+    fn take_flows(&mut self) -> Vec<crate::net::FlowSpec> {
+        std::mem::take(&mut self.pending_flows)
     }
 
     fn consume_next(&mut self) -> f64 {
@@ -292,6 +316,7 @@ pub fn run_cluster(
     let strategy = &*ctx.strategy;
     let cfg = &ctx.cfg;
     let full = cfg.exec_mode == ExecMode::Full;
+    let contention = cfg.fabric.contention;
     let q = strategy.queue_depth(cfg);
 
     // One-time setup per worker (setup time reported separately).
@@ -302,10 +327,19 @@ pub fn run_cluster(
         setup_time = setup_time.max(s.setup_time);
         states.push(s.state);
     }
+    if contention {
+        // Setup pulls (offline precompute, initial cache builds) keep their
+        // linear pricing — they are one-time background work, not epoch
+        // traffic. Discard any claims they recorded.
+        drop(ctx.fabric.take_route_claims());
+    }
 
     let mut reports = Vec::with_capacity((cfg.num_workers * cfg.epochs) as usize);
     for epoch in 0..cfg.epochs {
         let mut sim = ClusterSim::new();
+        if contention {
+            sim = sim.with_network(crate::net::ContentionNet::new(&ctx.fabric));
+        }
         for w in 0..cfg.num_workers {
             let mut comm = CommStats::default();
             let plan =
@@ -321,8 +355,10 @@ pub fn run_cluster(
                     queue_tx,
                     queue_rx,
                     trainer: trainer.clone(),
-                    slow: ctx.slowdown(w),
+                    slow: ctx.slowdown_at(w, epoch),
                     full,
+                    contention,
+                    pending_flows: Vec::new(),
                     comm,
                     phases: PhaseTimes::default(),
                     acc: EpochAcc::default(),
@@ -358,6 +394,11 @@ pub fn run_cluster(
                 &mut comm,
             )?;
             reports.push(make_report(epoch, worker, full, &totals, &actor.acc, finish, phases, comm));
+        }
+        if contention {
+            // `finish_epoch` background pulls (C_sec rebuilds) are priced
+            // linearly as overlap work; discard their claims.
+            drop(ctx.fabric.take_route_claims());
         }
     }
     Ok((setup_time, reports))

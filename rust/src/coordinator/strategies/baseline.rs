@@ -43,6 +43,8 @@ pub(crate) struct OnDemandPlan<'a> {
     pub(crate) batches: std::vec::IntoIter<BatchMeta>,
     pub(crate) slow: f64,
     pub(crate) full: bool,
+    /// Training epoch this plan stages (transient-phase resolution).
+    pub(crate) epoch: u32,
 }
 
 impl BatchPlan for OnDemandPlan<'_> {
@@ -62,11 +64,12 @@ impl BatchPlan for OnDemandPlan<'_> {
         // the critical path (local rows gather free of network).
         let mut features: Vec<f32> = Vec::new();
         let materialize = self.full && self.ctx.kv.has_values();
-        let pull = self.ctx.kv.sync_pull(
+        let pull = self.ctx.kv.sync_pull_at(
             self.worker,
             &meta.input_nodes,
             if materialize { Some(&mut features) } else { None },
             comm,
+            self.epoch,
         );
         phases.fetch += pull.time;
 
@@ -119,8 +122,9 @@ pub(crate) fn plan_on_demand_epoch<'a>(
         ctx,
         worker,
         batches: batches.into_iter(),
-        slow: ctx.slowdown(worker),
+        slow: ctx.slowdown_at(worker, epoch),
         full: ctx.cfg.exec_mode == ExecMode::Full,
+        epoch,
     }))
 }
 

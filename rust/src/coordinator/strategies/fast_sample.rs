@@ -104,7 +104,7 @@ impl TrainingStrategy for FastSampleStrategy {
         } else {
             None
         };
-        finish_cached_epoch(ctx, state, worker, rebuild, outcome, totals, phases, comm)
+        finish_cached_epoch(ctx, state, worker, epoch, rebuild, outcome, totals, phases, comm)
     }
 }
 

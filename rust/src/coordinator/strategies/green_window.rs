@@ -51,6 +51,8 @@ struct WindowedPlan<'a> {
     ready: VecDeque<StagedStep>,
     slow: f64,
     full: bool,
+    /// Training epoch this plan stages (transient-phase resolution).
+    epoch: u32,
 }
 
 impl BatchPlan for WindowedPlan<'_> {
@@ -84,11 +86,12 @@ impl BatchPlan for WindowedPlan<'_> {
             .collect();
         let mut rows: Vec<f32> = Vec::new();
         let materialize = self.full && self.ctx.kv.has_values();
-        let pull = self.ctx.kv.sync_pull(
+        let pull = self.ctx.kv.sync_pull_at(
             self.worker,
             &all_ids,
             if materialize { Some(&mut rows) } else { None },
             comm,
+            self.epoch,
         );
         phases.fetch += pull.time;
 
@@ -156,8 +159,9 @@ impl TrainingStrategy for GreenWindowStrategy {
             batches: batches.into_iter(),
             window: self.window as usize,
             ready: VecDeque::new(),
-            slow: ctx.slowdown(worker),
+            slow: ctx.slowdown_at(worker, epoch),
             full: ctx.cfg.exec_mode == ExecMode::Full,
+            epoch,
         }))
     }
 

@@ -22,7 +22,7 @@ use crate::coordinator::strategy::{
     StrategyState, TrainingStrategy,
 };
 use crate::metrics::CommStats;
-use crate::prefetch::stage_batch;
+use crate::prefetch::stage_batch_at;
 use crate::sampler::{enumerate_epoch, remote_frequency, BatchMeta};
 use crate::storage::{write_epoch, EpochReader};
 use crate::{NodeId, Result, WorkerId};
@@ -158,6 +158,8 @@ pub(crate) struct ScheduledPlan<'a> {
     /// Local-work slowdown (heterogeneous speeds); 1.0 normally.
     pub(crate) slow: f64,
     pub(crate) full: bool,
+    /// Training epoch this plan stages (transient-phase resolution).
+    pub(crate) epoch: u32,
 }
 
 impl BatchPlan for ScheduledPlan<'_> {
@@ -170,7 +172,15 @@ impl BatchPlan for ScheduledPlan<'_> {
             return Ok(None);
         };
         let stream = self.ctx.costs.stream_time(meta.byte_size());
-        let staged = stage_batch(&self.ctx.kv, &self.cache, meta, self.worker, self.full, comm);
+        let staged = stage_batch_at(
+            &self.ctx.kv,
+            &self.cache,
+            meta,
+            self.worker,
+            self.full,
+            comm,
+            self.epoch,
+        );
         // Network part at the fabric's per-link price; local part (SSD
         // stream + cache lookups) scaled by the worker's slowdown.
         let cost =
@@ -195,6 +205,7 @@ pub(crate) fn finish_cached_epoch(
     ctx: &RunContext,
     state: &mut StrategyState,
     worker: WorkerId,
+    epoch: u32,
     rebuild_from: Option<u32>,
     outcome: &PipelineOutcome,
     totals: &EpochTotals,
@@ -211,14 +222,16 @@ pub(crate) fn finish_cached_epoch(
     if let Some(source_epoch) = rebuild_from {
         let (hot, rank_time) = stream_top_hot(ctx, worker, source_epoch)?;
         // Local work (stream read + ranking) carries the worker slowdown;
-        // the VectorPull below is priced per-link by the fabric.
-        bg_time += ctx.slowdown(worker) * rank_time;
+        // the VectorPull below is priced per-link by the fabric. Both run
+        // during `epoch`, so that epoch's transient phase applies.
+        bg_time += ctx.slowdown_at(worker, epoch) * rank_time;
         let mut rows: Vec<f32> = Vec::new();
-        let pull = ctx.kv.vector_pull(
+        let pull = ctx.kv.vector_pull_at(
             worker,
             &hot,
             if full { Some(&mut rows) } else { None },
             comm,
+            epoch,
         );
         bg_time += pull.time;
         st.cache
@@ -275,8 +288,9 @@ pub(crate) fn plan_cached_epoch<'a>(
         worker,
         reader,
         cache: st.cache.clone(),
-        slow: ctx.slowdown(worker),
+        slow: ctx.slowdown_at(worker, epoch),
         full: ctx.cfg.exec_mode == ExecMode::Full,
+        epoch,
     }))
 }
 
@@ -324,7 +338,7 @@ impl TrainingStrategy for RapidStrategy {
         comm: &mut CommStats,
     ) -> Result<EpochFinish> {
         let rebuild = if epoch + 1 < ctx.cfg.epochs { Some(epoch + 1) } else { None };
-        finish_cached_epoch(ctx, state, worker, rebuild, outcome, totals, phases, comm)
+        finish_cached_epoch(ctx, state, worker, epoch, rebuild, outcome, totals, phases, comm)
     }
 }
 

@@ -113,11 +113,13 @@ impl KvStore {
 
     /// Internal: group `ids` by owner, charge the fabric for the remote
     /// portion, and optionally gather rows (in `ids` order) into `out`.
+    /// `epoch` resolves transient speed phases on the charge.
     fn pull_impl(
         &self,
         requester: WorkerId,
         ids: &[NodeId],
         mut out: Option<&mut Vec<f32>>,
+        epoch: u32,
     ) -> Pull {
         let row_bytes = (self.feature_dim * 4) as u64;
         // rows per remote owner shard
@@ -146,7 +148,7 @@ impl KvStore {
             .filter(|&(_, &r)| r > 0)
             .map(|(p, &r)| (p as WorkerId, r))
             .collect();
-        let charge = self.fabric.charge_fanout(requester, &dsts, row_bytes);
+        let charge = self.fabric.charge_fanout_at(requester, &dsts, row_bytes, epoch);
         Pull {
             time: charge.time,
             bytes: charge.bytes,
@@ -164,7 +166,20 @@ impl KvStore {
         out: Option<&mut Vec<f32>>,
         stats: &mut CommStats,
     ) -> Pull {
-        let p = self.pull_impl(requester, ids, out);
+        self.vector_pull_at(requester, ids, out, stats, 0)
+    }
+
+    /// Epoch-aware [`Self::vector_pull`]: transient speed phases resolve
+    /// against the requester's current training epoch.
+    pub fn vector_pull_at(
+        &self,
+        requester: WorkerId,
+        ids: &[NodeId],
+        out: Option<&mut Vec<f32>>,
+        stats: &mut CommStats,
+        epoch: u32,
+    ) -> Pull {
+        let p = self.pull_impl(requester, ids, out, epoch);
         stats.vector_pulls += p.rpcs;
         stats.remote_rows += p.remote_rows;
         stats.vector_rows += p.remote_rows;
@@ -181,7 +196,19 @@ impl KvStore {
         out: Option<&mut Vec<f32>>,
         stats: &mut CommStats,
     ) -> Pull {
-        let p = self.pull_impl(requester, ids, out);
+        self.sync_pull_at(requester, ids, out, stats, 0)
+    }
+
+    /// Epoch-aware [`Self::sync_pull`] (see [`Self::vector_pull_at`]).
+    pub fn sync_pull_at(
+        &self,
+        requester: WorkerId,
+        ids: &[NodeId],
+        out: Option<&mut Vec<f32>>,
+        stats: &mut CommStats,
+        epoch: u32,
+    ) -> Pull {
+        let p = self.pull_impl(requester, ids, out, epoch);
         stats.sync_pulls += p.rpcs;
         stats.remote_rows += p.remote_rows;
         stats.bytes += p.bytes;

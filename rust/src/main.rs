@@ -17,7 +17,7 @@
 
 use anyhow::{bail, Context};
 use rapidgnn::config::{
-    load_run_config, save_run_config, DatasetConfig, DatasetPreset, Engine, RunConfig,
+    load_run_config, save_run_config, DatasetConfig, DatasetPreset, Engine, RunConfig, Topology,
 };
 use rapidgnn::coordinator::{self, EngineRegistry};
 use rapidgnn::graph::{build_dataset, degree_stats};
@@ -83,6 +83,13 @@ COMMON FLAGS
   --exec MODE       trace | full
   --backend B       host | pjrt (full mode)
   --seed S          base seed s0
+  --topology T      flat | two-tier | ring | star | fat-tree | dragonfly
+  --contention [B]  shared-link queueing instead of the linear RPC price
+                    (bare flag = true; emits per-link utilization telemetry)
+  --racks N / --oversubscription F     two-tier knobs (defaults 2 / 4)
+  --hub W           star hub worker (default 0)
+  --fat-k K         fat-tree pod count (default 4)
+  --groups G / --routers R             dragonfly knobs (defaults 2 / 2)
   --resample-period K   fast-sample: re-enumerate the schedule every K epochs
   --fetch-window W  green-window: batches merged per windowed fetch
   --json PATH       write the run report as JSON"
@@ -91,19 +98,36 @@ COMMON FLAGS
 
 type Flags = HashMap<String, String>;
 
+/// Flags that may appear bare (no value ⇒ "true"), e.g. `--contention`.
+const BOOL_FLAGS: [&str; 1] = ["contention"];
+
 fn parse_flags(args: &[String]) -> Result<Flags> {
     let mut flags = Flags::new();
-    let mut it = args.iter();
+    let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         let Some(name) = a.strip_prefix("--") else {
             bail!("expected --flag, got '{a}'");
         };
-        let v = it
-            .next()
-            .with_context(|| format!("flag --{name} needs a value"))?;
-        flags.insert(name.to_string(), v.clone());
+        let v = if BOOL_FLAGS.contains(&name)
+            && it.peek().map_or(true, |next| next.starts_with("--"))
+        {
+            "true".to_string()
+        } else {
+            it.next()
+                .with_context(|| format!("flag --{name} needs a value"))?
+                .clone()
+        };
+        flags.insert(name.to_string(), v);
     }
     Ok(flags)
+}
+
+fn parse_bool(name: &str, v: &str) -> Result<bool> {
+    match v {
+        "true" | "on" | "1" | "yes" => Ok(true),
+        "false" | "off" | "0" | "no" => Ok(false),
+        other => bail!("flag --{name}: expected true|false, got '{other}'"),
+    }
 }
 
 /// Build a RunConfig from `--config` + flag overrides.
@@ -151,6 +175,69 @@ fn config_from_flags(flags: &Flags) -> Result<RunConfig> {
     }
     if let Some(v) = flags.get("seed") {
         cfg.base_seed = v.parse()?;
+    }
+    {
+        let opt_u32 = |key: &str, default: u32| -> Result<u32> {
+            flags.get(key).map_or(Ok(default), |s| s.parse().context("topology knob"))
+        };
+        let opt_f64 = |key: &str, default: f64| -> Result<f64> {
+            flags.get(key).map_or(Ok(default), |s| s.parse().context("topology knob"))
+        };
+        // With --topology, build the named preset (knobs override its
+        // defaults). Without it, knobs refine whatever topology the config
+        // file (or the default) selected. Either way, a knob the final
+        // topology cannot use errors rather than being silently dropped.
+        cfg.fabric.topology = match flags.get("topology").map(String::as_str) {
+            Some("flat") => Topology::Flat,
+            Some("two-tier") => Topology::TwoTier {
+                racks: opt_u32("racks", 2)?,
+                oversubscription: opt_f64("oversubscription", 4.0)?,
+            },
+            Some("ring") => Topology::Ring,
+            Some("star") => Topology::Star { hub: opt_u32("hub", 0)? },
+            Some("fat-tree") => Topology::FatTree { k: opt_u32("fat-k", 4)? },
+            Some("dragonfly") => Topology::Dragonfly {
+                groups: opt_u32("groups", 2)?,
+                routers: opt_u32("routers", 2)?,
+            },
+            Some(other) => bail!(
+                "unknown topology '{other}' (flat|two-tier|ring|star|fat-tree|dragonfly)"
+            ),
+            None => match cfg.fabric.topology {
+                Topology::TwoTier { racks, oversubscription } => Topology::TwoTier {
+                    racks: opt_u32("racks", racks)?,
+                    oversubscription: opt_f64("oversubscription", oversubscription)?,
+                },
+                Topology::Star { hub } => Topology::Star { hub: opt_u32("hub", hub)? },
+                Topology::FatTree { k } => Topology::FatTree { k: opt_u32("fat-k", k)? },
+                Topology::Dragonfly { groups, routers } => Topology::Dragonfly {
+                    groups: opt_u32("groups", groups)?,
+                    routers: opt_u32("routers", routers)?,
+                },
+                topo @ (Topology::Flat | Topology::Ring) => topo,
+            },
+        };
+        let used: &[&str] = match cfg.fabric.topology {
+            Topology::TwoTier { .. } => &["racks", "oversubscription"],
+            Topology::Star { .. } => &["hub"],
+            Topology::FatTree { .. } => &["fat-k"],
+            Topology::Dragonfly { .. } => &["groups", "routers"],
+            Topology::Flat | Topology::Ring => &[],
+        };
+        const KNOBS: [&str; 6] =
+            ["racks", "oversubscription", "hub", "fat-k", "groups", "routers"];
+        if let Some(k) = KNOBS
+            .iter()
+            .find(|k| flags.contains_key(**k) && !used.contains(*k))
+        {
+            bail!(
+                "--{k} has no effect on the '{}' topology",
+                cfg.fabric.topology.id()
+            );
+        }
+    }
+    if let Some(v) = flags.get("contention") {
+        cfg.fabric.contention = parse_bool("contention", v)?;
     }
     if let Some(v) = flags.get("resample-period") {
         cfg.engine_params.resample_period = v.parse()?;
@@ -223,6 +310,28 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         report.gpu_energy_j,
         report.total_remote_rows(),
     );
+    if !report.links.is_empty() {
+        let mut links = report.links.clone();
+        links.sort_by(|a, b| b.busy_sec.total_cmp(&a.busy_sec));
+        let mut lt = Table::new(
+            "Per-link utilization (contention mode, busiest first)",
+            &["link", "busy", "served", "util", "peak flows", "peak backlog"],
+        );
+        for l in links.iter().take(12) {
+            lt.row(&[
+                l.link.clone(),
+                fmt_secs(l.busy_sec),
+                fmt_bytes(l.served_bytes),
+                format!("{:.0}%", 100.0 * l.utilization()),
+                l.peak_flows.to_string(),
+                fmt_bytes(l.peak_backlog_bytes),
+            ]);
+        }
+        lt.print();
+        if links.len() > 12 {
+            println!("({} more links in the JSON report)", links.len() - 12);
+        }
+    }
     if let Some(p) = flags.get("json") {
         std::fs::write(p, report.to_json())?;
         println!("report written to {p}");
@@ -402,6 +511,84 @@ mod tests {
     fn parse_flags_rejects_bare_and_dangling() {
         assert!(parse_flags(&["bare".to_string()]).is_err());
         assert!(parse_flags(&["--x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn contention_flag_parses_bare_and_with_value() {
+        let bare: Vec<String> =
+            ["--contention", "--epochs", "2"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&bare).unwrap();
+        assert_eq!(f["contention"], "true");
+        assert_eq!(f["epochs"], "2");
+        let trailing: Vec<String> = ["--contention"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(parse_flags(&trailing).unwrap()["contention"], "true");
+        let explicit: Vec<String> =
+            ["--contention", "false"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(parse_flags(&explicit).unwrap()["contention"], "false");
+        let cfg = config_from_flags(&flags(&[("contention", "true")])).unwrap();
+        assert!(cfg.fabric.contention);
+        assert!(config_from_flags(&flags(&[("contention", "maybe")])).is_err());
+    }
+
+    #[test]
+    fn topology_flags_select_presets() {
+        use rapidgnn::config::Topology;
+        let cfg = config_from_flags(&flags(&[("topology", "fat-tree")])).unwrap();
+        assert_eq!(cfg.fabric.topology, Topology::FatTree { k: 4 });
+        let cfg = config_from_flags(&flags(&[("topology", "fat-tree"), ("fat-k", "8")])).unwrap();
+        assert_eq!(cfg.fabric.topology, Topology::FatTree { k: 8 });
+        let cfg = config_from_flags(&flags(&[
+            ("topology", "dragonfly"),
+            ("groups", "3"),
+            ("routers", "2"),
+        ]))
+        .unwrap();
+        assert_eq!(cfg.fabric.topology, Topology::Dragonfly { groups: 3, routers: 2 });
+        let cfg = config_from_flags(&flags(&[
+            ("topology", "two-tier"),
+            ("oversubscription", "8"),
+        ]))
+        .unwrap();
+        assert_eq!(
+            cfg.fabric.topology,
+            Topology::TwoTier { racks: 2, oversubscription: 8.0 }
+        );
+        let cfg = config_from_flags(&flags(&[("topology", "ring")])).unwrap();
+        assert_eq!(cfg.fabric.topology, Topology::Ring);
+        assert!(config_from_flags(&flags(&[("topology", "torus")])).is_err());
+    }
+
+    #[test]
+    fn topology_knobs_refine_config_selected_topology_or_error() {
+        use rapidgnn::config::Topology;
+        // a knob without --topology on the default flat fabric must not be
+        // silently dropped
+        let err = config_from_flags(&flags(&[("oversubscription", "16")]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("oversubscription"), "{err}");
+        // same for an explicit preset that lacks the knob
+        assert!(config_from_flags(&flags(&[
+            ("topology", "flat"),
+            ("oversubscription", "8"),
+        ]))
+        .is_err());
+        assert!(config_from_flags(&flags(&[("topology", "two-tier"), ("hub", "1")])).is_err());
+        // but it refines a config file whose topology already uses it
+        let dir = rapidgnn::util::tempdir::TempDir::new("cli-topo").unwrap();
+        let path = dir.path().join("run.toml");
+        let mut base = RunConfig::default();
+        base.fabric.topology = Topology::TwoTier { racks: 2, oversubscription: 4.0 };
+        save_run_config(&base, &path).unwrap();
+        let cfg = config_from_flags(&flags(&[
+            ("config", path.to_str().unwrap()),
+            ("oversubscription", "16"),
+        ]))
+        .unwrap();
+        assert_eq!(
+            cfg.fabric.topology,
+            Topology::TwoTier { racks: 2, oversubscription: 16.0 }
+        );
     }
 
     #[test]

@@ -141,6 +141,52 @@ impl EpochReport {
     }
 }
 
+/// Per-physical-link utilization telemetry from a contended run
+/// (`fabric.contention = true`); mirrors `net::LinkUtilization` with the
+/// link identity flattened to its stable label.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LinkReport {
+    /// Stable link label (e.g. `host-up:0`, `rack-up:1`, `dfly-global:0>1`).
+    pub link: String,
+    /// Link capacity (bytes/second).
+    pub capacity_bytes_per_sec: f64,
+    /// Virtual seconds with at least one transfer in flight.
+    pub busy_sec: f64,
+    /// Bytes drained through the link.
+    pub served_bytes: f64,
+    /// Transfers that crossed the link.
+    pub flows: u64,
+    /// Peak concurrent in-flight transfers (queue depth).
+    pub peak_flows: u32,
+    /// Peak queued bytes at any instant.
+    pub peak_backlog_bytes: f64,
+}
+
+impl LinkReport {
+    /// Mean utilization in [0,1] over the link's busy time.
+    pub fn utilization(&self) -> f64 {
+        if self.busy_sec <= 0.0 {
+            0.0
+        } else {
+            self.served_bytes / (self.capacity_bytes_per_sec * self.busy_sec)
+        }
+    }
+
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("link", self.link.as_str())
+            .set("capacity_bytes_per_sec", self.capacity_bytes_per_sec)
+            .set("busy_sec", self.busy_sec)
+            .set("served_bytes", self.served_bytes)
+            .set("flows", self.flows)
+            .set("peak_flows", u64::from(self.peak_flows))
+            .set("peak_backlog_bytes", self.peak_backlog_bytes)
+            .set("utilization", self.utilization());
+        v
+    }
+}
+
 /// Whole-run summary aggregated across workers and epochs.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunReport {
@@ -158,6 +204,10 @@ pub struct RunReport {
     /// CPU / GPU energy in joules (from [`crate::energy`]).
     pub cpu_energy_j: f64,
     pub gpu_energy_j: f64,
+    /// Per-link utilization telemetry (contended runs only; empty — and
+    /// omitted from the serialized report — otherwise, so default-mode
+    /// traces stay byte-identical).
+    pub links: Vec<LinkReport>,
 }
 
 impl RunReport {
@@ -272,6 +322,10 @@ impl RunReport {
             .set("gpu_energy_j", self.gpu_energy_j);
         let epochs: Vec<Value> = self.epochs.iter().map(EpochReport::to_value).collect();
         v.set("epochs", epochs);
+        if !self.links.is_empty() {
+            let links: Vec<Value> = self.links.iter().map(LinkReport::to_value).collect();
+            v.set("links", links);
+        }
         v
     }
 

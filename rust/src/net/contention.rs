@@ -1,0 +1,598 @@
+//! Shared-link contention: the discrete-event queueing model behind
+//! `fabric.contention = true`.
+//!
+//! The linear price charges every RPC independently — two concurrent pulls
+//! through an oversubscribed spine never slow each other down, which is
+//! exactly the effect RapidGNN's prefetch scheduling is designed to hide.
+//! This module replaces that price with a fluid queueing model over the
+//! *physical* links of the topology:
+//!
+//! - every RPC recorded by the charge path becomes a [`FlowSpec`] route
+//!   claim: **enqueue** (registered at the virtual instant its stage starts)
+//!   → **transmit** (after the route's fixed latency/serialization offset)
+//!   → **drain** (when its service bytes finish at the shared rates);
+//! - each hop of the claim's route ([`FabricConfig::route`]) is a shared
+//!   link whose capacity is divided **processor-sharing** style: a
+//!   transmitting flow's rate is the minimum over its route of
+//!   `capacity / in-flight transfers` on that link;
+//! - rates are piecewise constant between events, so the next event
+//!   (an activation or the earliest drain) is exact; events are processed
+//!   in virtual-time order with deterministic tie-breaking on
+//!   `(time, src, dst, seq)` — `seq` is the fabric's global RPC counter.
+//!
+//! [`ContentionNet`] plugs into [`crate::sim::ClusterSim`]: stage events and
+//! link events interleave on one virtual clock, so a worker's `StageDone`
+//! fires when its *contended* flows drain (plus the stage's local residual
+//! cost), not at the closed-form linear price. Uncongested, a flow costs
+//! exactly the linear price on the switched topologies (flat, two-tier,
+//! fat-tree, dragonfly) — the tests below pin this — so contention only ever
+//! adds time there.
+//!
+//! Per-link telemetry (busy time, served bytes, peak in-flight transfers,
+//! peak backlog) accumulates while flows drain and is committed to the
+//! owning [`NetFabric`] by [`ContentionNet::finalize`], where it surfaces as
+//! [`super::LinkUtilization`] in `RunReport.links` and the fig6 bench.
+
+use super::{FlowSpec, LinkUtilization, NetFabric};
+use crate::config::{FabricConfig, LinkKey};
+use std::collections::BTreeMap;
+
+/// Residual service (bytes) below which a flow counts as drained — absorbs
+/// float drift from `rate · (remaining / rate)` round trips. Well below one
+/// wire byte; far above f64 noise at realistic transfer sizes.
+const EPS_BYTES: f64 = 1e-6;
+/// Residual *time* (seconds) below which a flow counts as drained, scaled by
+/// its current rate — the relative counterpart of [`EPS_BYTES`] for very
+/// large transfers.
+const EPS_SEC: f64 = 1e-9;
+
+/// One shared physical link's live state.
+struct LinkSlot {
+    key: LinkKey,
+    capacity: f64,
+    /// Transmitting flows currently crossing this link.
+    active: u32,
+    busy_sec: f64,
+    served_bytes: f64,
+    flows: u64,
+    peak_flows: u32,
+    /// Outstanding service bytes of all flows (latent + transmitting)
+    /// routed over this link.
+    backlog_bytes: f64,
+    peak_backlog_bytes: f64,
+}
+
+/// One in-flight transfer.
+struct Flow {
+    stage: usize,
+    route: Vec<usize>,
+    /// When the fixed latency/serialization offset elapses and bytes start
+    /// flowing.
+    activate_at: f64,
+    transmitting: bool,
+    /// Service bytes left to drain.
+    remaining: f64,
+    /// Current service rate (bytes/sec); valid while transmitting.
+    rate: f64,
+    src: u32,
+    dst: u32,
+    seq: u64,
+    done: bool,
+}
+
+impl Flow {
+    fn is_drained(&self, now: f64) -> bool {
+        self.transmitting
+            && (self.remaining <= EPS_BYTES
+                || (self.rate > 0.0
+                    // residual drains in under a nanosecond, or in less than
+                    // one float ulp of the clock (no representable progress)
+                    && (self.remaining <= self.rate * EPS_SEC
+                        || now + self.remaining / self.rate <= now)))
+    }
+}
+
+/// One staging call's pending network work: `outstanding` flows must drain
+/// before the stage's `StageDone` (plus `local_cost`) may fire.
+struct Stage {
+    worker: u32,
+    local_cost: f64,
+    outstanding: u32,
+}
+
+/// The shared-link discrete-event network, driven by the cluster runtime's
+/// virtual clock. One instance per simulated epoch; telemetry accumulates
+/// into the owning fabric across epochs.
+pub struct ContentionNet {
+    fabric: NetFabric,
+    cfg: FabricConfig,
+    world: u32,
+    links: Vec<LinkSlot>,
+    index: BTreeMap<LinkKey, usize>,
+    /// Resolved `(src, dst) → link indices` — routes are static per
+    /// topology, so each pair derives its hop list once per epoch.
+    routes: BTreeMap<(u32, u32), Vec<usize>>,
+    flows: Vec<Flow>,
+    stages: Vec<Stage>,
+    now: f64,
+}
+
+impl ContentionNet {
+    /// New network over the fabric's topology (telemetry commits back to it).
+    pub fn new(fabric: &NetFabric) -> Self {
+        ContentionNet {
+            cfg: fabric.config().clone(),
+            world: fabric.world_size(),
+            fabric: fabric.clone(),
+            links: Vec::new(),
+            index: BTreeMap::new(),
+            routes: BTreeMap::new(),
+            flows: Vec::new(),
+            stages: Vec::new(),
+            now: 0.0,
+        }
+    }
+
+    /// Link indices of the `(src, dst)` route, derived once per pair.
+    fn route_of(&mut self, src: u32, dst: u32) -> Vec<usize> {
+        if let Some(r) = self.routes.get(&(src, dst)) {
+            return r.clone();
+        }
+        let hops = self.cfg.route(src, dst, self.world);
+        debug_assert!(!hops.is_empty(), "every topology routes over >= 1 link");
+        let mut route = Vec::with_capacity(hops.len());
+        for h in hops {
+            route.push(self.link_idx(h.link, h.bandwidth_bytes_per_sec));
+        }
+        self.routes.insert((src, dst), route.clone());
+        route
+    }
+
+    fn link_idx(&mut self, key: LinkKey, capacity: f64) -> usize {
+        if let Some(&i) = self.index.get(&key) {
+            return i;
+        }
+        let i = self.links.len();
+        self.links.push(LinkSlot {
+            key,
+            capacity,
+            active: 0,
+            busy_sec: 0.0,
+            served_bytes: 0.0,
+            flows: 0,
+            peak_flows: 0,
+            backlog_bytes: 0.0,
+            peak_backlog_bytes: 0.0,
+        });
+        self.index.insert(key, i);
+        i
+    }
+
+    /// Integrate transmissions at the current (piecewise-constant) rates
+    /// from `self.now` to `t`.
+    fn integrate_to(&mut self, t: f64) {
+        let dt = t - self.now;
+        debug_assert!(dt >= -1e-15, "virtual time went backwards: {} -> {t}", self.now);
+        if dt > 0.0 {
+            for l in &mut self.links {
+                if l.active > 0 {
+                    l.busy_sec += dt;
+                }
+            }
+            for f in &mut self.flows {
+                if f.done || !f.transmitting {
+                    continue;
+                }
+                let delta = (f.rate * dt).min(f.remaining);
+                f.remaining -= delta;
+                for &li in &f.route {
+                    let l = &mut self.links[li];
+                    l.served_bytes += delta;
+                    l.backlog_bytes = (l.backlog_bytes - delta).max(0.0);
+                }
+            }
+        }
+        self.now = t;
+    }
+
+    /// Latent flows whose fixed offset has elapsed start transmitting.
+    fn activate_due(&mut self) {
+        for f in &mut self.flows {
+            if !f.done && !f.transmitting && f.activate_at <= self.now {
+                f.transmitting = true;
+            }
+        }
+    }
+
+    /// Recompute every transmitting flow's processor-sharing rate and the
+    /// per-link concurrency telemetry. Called whenever the flow set changes.
+    fn recompute_rates(&mut self) {
+        for l in &mut self.links {
+            l.active = 0;
+        }
+        for f in &self.flows {
+            if f.done || !f.transmitting {
+                continue;
+            }
+            for &li in &f.route {
+                self.links[li].active += 1;
+            }
+        }
+        for l in &mut self.links {
+            l.peak_flows = l.peak_flows.max(l.active);
+        }
+        for fi in 0..self.flows.len() {
+            if self.flows[fi].done || !self.flows[fi].transmitting {
+                continue;
+            }
+            let mut rate = f64::INFINITY;
+            for &li in &self.flows[fi].route {
+                let l = &self.links[li];
+                rate = rate.min(l.capacity / l.active as f64);
+            }
+            self.flows[fi].rate = rate;
+        }
+    }
+
+    /// Register one stage's flows at virtual instant `now` (≥ the last event
+    /// time). The stage completes — and is returned by [`Self::advance`] —
+    /// once every flow drains.
+    pub fn begin_stage(&mut self, now: f64, worker: u32, local_cost: f64, specs: Vec<FlowSpec>) {
+        debug_assert!(!specs.is_empty(), "flow-less stages schedule directly");
+        self.integrate_to(now.max(self.now));
+        let stage = self.stages.len();
+        self.stages.push(Stage { worker, local_cost, outstanding: specs.len() as u32 });
+        for spec in specs {
+            let route = self.route_of(spec.src, spec.dst);
+            for &li in &route {
+                let l = &mut self.links[li];
+                l.flows += 1;
+                l.backlog_bytes += spec.service_bytes;
+                l.peak_backlog_bytes = l.peak_backlog_bytes.max(l.backlog_bytes);
+            }
+            self.flows.push(Flow {
+                stage,
+                route,
+                activate_at: self.now + spec.fixed_sec,
+                transmitting: false,
+                remaining: spec.service_bytes,
+                rate: 0.0,
+                src: spec.src,
+                dst: spec.dst,
+                seq: spec.seq,
+                done: false,
+            });
+        }
+        self.activate_due();
+        self.recompute_rates();
+    }
+
+    /// Earliest pending network event: a latent flow's activation or the
+    /// earliest drain at current rates. `None` when the network is idle.
+    pub fn next_event_time(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        for f in &self.flows {
+            if f.done {
+                continue;
+            }
+            let c = if f.transmitting {
+                if f.is_drained(self.now) {
+                    self.now
+                } else {
+                    self.now + f.remaining / f.rate
+                }
+            } else {
+                f.activate_at
+            };
+            t = t.min(c);
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Advance the network to virtual time `t`: integrate transmissions,
+    /// drain completed flows (tie-broken on `(src, dst, seq)` at equal
+    /// times), start newly due ones, and re-share the links. Returns every
+    /// stage whose last flow drained at `t` as `(worker, local_cost)`.
+    pub fn advance(&mut self, t: f64) -> Vec<(u32, f64)> {
+        self.integrate_to(t.max(self.now));
+        let now = self.now;
+        let mut drained: Vec<usize> = (0..self.flows.len())
+            .filter(|&fi| !self.flows[fi].done && self.flows[fi].is_drained(now))
+            .collect();
+        drained.sort_by_key(|&fi| {
+            let f = &self.flows[fi];
+            (f.src, f.dst, f.seq)
+        });
+        let drained_any = !drained.is_empty();
+        let mut finished = Vec::new();
+        for fi in drained {
+            let (stage_idx, residual) = {
+                let f = &mut self.flows[fi];
+                f.done = true;
+                f.transmitting = false;
+                let r = f.remaining;
+                f.remaining = 0.0;
+                (f.stage, r)
+            };
+            for li_pos in 0..self.flows[fi].route.len() {
+                let li = self.flows[fi].route[li_pos];
+                let l = &mut self.links[li];
+                l.backlog_bytes = (l.backlog_bytes - residual).max(0.0);
+                // account the residual as served so per-link conservation
+                // (served == Σ flow service) holds exactly
+                l.served_bytes += residual;
+            }
+            let st = &mut self.stages[stage_idx];
+            st.outstanding -= 1;
+            if st.outstanding == 0 {
+                finished.push((st.worker, st.local_cost));
+            }
+        }
+        // Prune drained flows (relative order preserved → deterministic):
+        // every per-event scan stays proportional to the *in-flight* flow
+        // count instead of all flows the epoch ever created.
+        if drained_any {
+            self.flows.retain(|f| !f.done);
+        }
+        self.activate_due();
+        self.recompute_rates();
+        finished
+    }
+
+    /// Commit per-link telemetry to the owning fabric. Call when the epoch's
+    /// simulation has quiesced; all flows must have drained.
+    pub fn finalize(self) {
+        debug_assert!(self.flows.iter().all(|f| f.done), "undrained flows at finalize");
+        debug_assert!(self.stages.iter().all(|s| s.outstanding == 0));
+        let ContentionNet { fabric, links, .. } = self;
+        let entries = links
+            .into_iter()
+            .map(|l| {
+                (
+                    l.key,
+                    LinkUtilization {
+                        capacity_bytes_per_sec: l.capacity,
+                        busy_sec: l.busy_sec,
+                        served_bytes: l.served_bytes,
+                        flows: l.flows,
+                        peak_flows: l.peak_flows,
+                        peak_backlog_bytes: l.peak_backlog_bytes,
+                    },
+                )
+            })
+            .collect();
+        fabric.record_link_utilization(entries);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Topology;
+
+    fn two_tier_fabric(oversub: f64) -> NetFabric {
+        let mut cfg = FabricConfig::default();
+        cfg.topology = Topology::TwoTier { racks: 2, oversubscription: oversub };
+        cfg.contention = true;
+        NetFabric::new(cfg).with_world_size(4)
+    }
+
+    fn spec(src: u32, dst: u32, bytes: u64, fixed: f64, seq: u64) -> FlowSpec {
+        FlowSpec { src, dst, bytes, fixed_sec: fixed, service_bytes: bytes as f64, seq }
+    }
+
+    /// Drive the network to quiescence; returns (time, worker, local).
+    fn drain(net: &mut ContentionNet) -> Vec<(f64, u32, f64)> {
+        let mut out = Vec::new();
+        let mut guard = 0;
+        while let Some(t) = net.next_event_time() {
+            for (w, local) in net.advance(t) {
+                out.push((t, w, local));
+            }
+            guard += 1;
+            assert!(guard < 100_000, "network failed to quiesce");
+        }
+        out
+    }
+
+    #[test]
+    fn uncongested_flow_costs_exactly_the_linear_price() {
+        let f = two_tier_fabric(4.0);
+        let cfg = f.config().clone();
+        let bytes = 1_000_000u64;
+        let linear = cfg.rpc_time_on_link(0, 1, 4, bytes, 0); // cross-rack
+        let mut net = ContentionNet::new(&f);
+        let lat = cfg.link_model(0, 1, 4).latency_sec;
+        net.begin_stage(0.0, 0, 0.25, vec![spec(0, 1, bytes, lat, 1)]);
+        let done = drain(&mut net);
+        assert_eq!(done.len(), 1);
+        let (t, w, local) = done[0];
+        assert_eq!(w, 0);
+        assert_eq!(local, 0.25);
+        assert!(
+            (t - linear).abs() < 1e-12 * linear.max(1.0),
+            "uncongested {t} != linear {linear}"
+        );
+        net.finalize();
+        let util = f.link_utilization();
+        assert!(!util.is_empty());
+        let spine_busy: f64 = util
+            .iter()
+            .filter(|(k, _)| matches!(k, LinkKey::RackUp(_) | LinkKey::RackDown(_)))
+            .map(|(_, u)| u.busy_sec)
+            .sum();
+        assert!(spine_busy > 0.0, "cross-rack flow must occupy the spine");
+    }
+
+    #[test]
+    fn two_flows_share_the_spine_half_rate_each() {
+        let f = two_tier_fabric(4.0);
+        let cfg = f.config().clone();
+        let bytes = 2_000_000u64;
+        let solo = cfg.rpc_time_on_link(0, 1, 4, bytes, 0);
+        let lat = cfg.link_model(0, 1, 4).latency_sec;
+        let mut net = ContentionNet::new(&f);
+        // two cross-rack flows, distinct hosts, same spine uplink (rack 0)
+        net.begin_stage(0.0, 0, 0.0, vec![spec(0, 1, bytes, lat, 1)]);
+        net.begin_stage(0.0, 1, 0.0, vec![spec(2, 3, bytes, lat, 2)]);
+        let done = drain(&mut net);
+        assert_eq!(done.len(), 2);
+        // each flow's service takes 2× solo service (half the spine each);
+        // total = latency + 2 × (solo − latency)
+        let expect = lat + 2.0 * (solo - lat);
+        for &(t, _, _) in &done {
+            assert!((t - expect).abs() < 1e-9, "shared spine: {t} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn late_arrival_slows_the_flow_already_in_flight() {
+        let f = two_tier_fabric(8.0);
+        let cfg = f.config().clone();
+        let bytes = 4_000_000u64;
+        let solo = cfg.rpc_time_on_link(0, 1, 4, bytes, 0);
+        let lat = cfg.link_model(0, 1, 4).latency_sec;
+        let mut net = ContentionNet::new(&f);
+        net.begin_stage(0.0, 0, 0.0, vec![spec(0, 1, bytes, lat, 1)]);
+        // second flow enters halfway through the first's solo schedule
+        let mid = solo / 2.0;
+        // drive events up to `mid` first so time only moves forward
+        while let Some(t) = net.next_event_time() {
+            if t > mid {
+                break;
+            }
+            net.advance(t);
+        }
+        net.begin_stage(mid, 1, 0.0, vec![spec(2, 3, bytes, lat, 2)]);
+        let done = drain(&mut net);
+        assert_eq!(done.len(), 2);
+        let first = done.iter().find(|&&(_, w, _)| w == 0).unwrap().0;
+        assert!(first > solo + 1e-12, "contended {first} !> solo {solo}");
+        assert!(first < 2.0 * solo, "but better than fully serialized");
+    }
+
+    #[test]
+    fn incast_on_flat_topology_shares_the_destination_nic() {
+        let mut cfg = FabricConfig::default();
+        cfg.contention = true;
+        let f = NetFabric::new(cfg.clone()).with_world_size(4);
+        let bytes = 1_000_000u64;
+        let solo = cfg.rpc_time_on_link(1, 0, 4, bytes, 0);
+        let lat = cfg.link_model(1, 0, 4).latency_sec;
+        let mut net = ContentionNet::new(&f);
+        // three workers pull from worker 0 simultaneously: the hotspot is
+        // worker 0's NIC, which the linear price cannot see.
+        for (i, src) in [1u32, 2, 3].iter().enumerate() {
+            net.begin_stage(0.0, *src, 0.0, vec![spec(0, *src, bytes, lat, i as u64 + 1)]);
+        }
+        let done = drain(&mut net);
+        assert_eq!(done.len(), 3);
+        let expect = lat + 3.0 * (solo - lat);
+        for &(t, _, _) in &done {
+            assert!((t - expect).abs() < 1e-9, "incast: {t} vs {expect}");
+        }
+        net.finalize();
+        let util = f.link_utilization();
+        let hot = util
+            .iter()
+            .find(|(k, _)| *k == LinkKey::HostUp(0))
+            .expect("worker 0 egress accounted")
+            .1;
+        assert_eq!(hot.flows, 3);
+        assert_eq!(hot.peak_flows, 3);
+        assert!(hot.peak_backlog_bytes >= 3.0 * bytes as f64);
+    }
+
+    #[test]
+    fn served_bytes_and_busy_time_are_conserved() {
+        let f = two_tier_fabric(4.0);
+        let cfg = f.config().clone();
+        let lat = cfg.link_model(0, 1, 4).latency_sec;
+        let mut net = ContentionNet::new(&f);
+        let mut total_bytes = 0u64;
+        for (i, (s, d)) in [(0u32, 1u32), (2, 3), (1, 2), (3, 0)].iter().enumerate() {
+            let bytes = 500_000 + 250_000 * i as u64;
+            total_bytes += bytes;
+            net.begin_stage(0.0, *s, 0.0, vec![spec(*s, *d, bytes, lat, i as u64 + 1)]);
+        }
+        drain(&mut net);
+        net.finalize();
+        let util = f.link_utilization();
+        let b = cfg.bandwidth_bytes_per_sec;
+        // per link: served bytes never exceed capacity × busy time
+        for (k, u) in &util {
+            assert!(
+                u.served_bytes <= u.capacity_bytes_per_sec * u.busy_sec * (1.0 + 1e-9),
+                "{k:?}: served {} > cap×busy {}",
+                u.served_bytes,
+                u.capacity_bytes_per_sec * u.busy_sec
+            );
+        }
+        // the ISSUE's conservation bound: Σ busy ≥ Σ RPC bytes / bandwidth
+        let busy: f64 = util.iter().map(|(_, u)| u.busy_sec).sum();
+        assert!(
+            busy >= total_bytes as f64 / b - 1e-9,
+            "Σ busy {busy} < Σ bytes/bw {}",
+            total_bytes as f64 / b
+        );
+        // every byte of every flow crossed each host egress exactly once
+        let egress: f64 = util
+            .iter()
+            .filter(|(k, _)| matches!(k, LinkKey::HostUp(_)))
+            .map(|(_, u)| u.served_bytes)
+            .sum();
+        assert!((egress - total_bytes as f64).abs() < 1e-3, "{egress} vs {total_bytes}");
+    }
+
+    #[test]
+    fn event_order_is_deterministic() {
+        let run = || {
+            let f = two_tier_fabric(8.0);
+            let cfg = f.config().clone();
+            let lat = cfg.link_model(0, 1, 4).latency_sec;
+            let mut net = ContentionNet::new(&f);
+            for (i, (s, d)) in
+                [(0u32, 1u32), (2, 3), (0, 3), (1, 2), (3, 0), (2, 1)].iter().enumerate()
+            {
+                net.begin_stage(
+                    i as f64 * 1e-5,
+                    *s,
+                    0.1 * i as f64,
+                    vec![spec(*s, *d, 700_000 + i as u64, lat, i as u64 + 1)],
+                );
+            }
+            let events = drain(&mut net);
+            net.finalize();
+            (events, f.link_utilization())
+        };
+        let (e1, u1) = run();
+        let (e2, u2) = run();
+        assert_eq!(e1.len(), e2.len());
+        for (a, b) in e1.iter().zip(&e2) {
+            assert_eq!(a.1, b.1);
+            assert_eq!(a.2, b.2);
+            assert!((a.0 - b.0).abs() < 1e-18, "event times must be bit-stable");
+        }
+        assert_eq!(u1.len(), u2.len());
+        for ((ka, ua), (kb, ub)) in u1.iter().zip(&u2) {
+            assert_eq!(ka, kb);
+            assert_eq!(ua, ub);
+        }
+    }
+
+    #[test]
+    fn lower_spine_capacity_never_speeds_a_flow_up() {
+        let mut last = 0.0;
+        for oversub in [1.0f64, 4.0, 16.0] {
+            let f = two_tier_fabric(oversub);
+            let cfg = f.config().clone();
+            let lat = cfg.link_model(0, 1, 4).latency_sec;
+            let mut net = ContentionNet::new(&f);
+            net.begin_stage(0.0, 0, 0.0, vec![spec(0, 1, 1_000_000, lat, 1)]);
+            net.begin_stage(0.0, 1, 0.0, vec![spec(2, 3, 1_000_000, lat, 2)]);
+            let t = drain(&mut net).iter().map(|e| e.0).fold(0.0, f64::max);
+            assert!(t >= last - 1e-12, "oversub {oversub}: {t} < {last}");
+            last = t;
+        }
+    }
+}

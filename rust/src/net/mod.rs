@@ -24,9 +24,13 @@
 //! split `links` / `rpc_counter` locks could interleave under concurrent
 //! charges (counter ticks from two RPCs, then both account their links).
 
-use crate::config::FabricConfig;
+pub mod contention;
+
+pub use contention::ContentionNet;
+
+use crate::config::{FabricConfig, LinkKey, LinkModel};
 use crate::WorkerId;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 use std::sync::Mutex;
 
@@ -37,6 +41,58 @@ pub struct Charge {
     pub time: f64,
     /// Bytes on the wire.
     pub bytes: u64,
+}
+
+/// One RPC's claim on its route, recorded by the charge path when
+/// [`FabricConfig::contention`] is on. The scalar [`Charge`] stays the
+/// serialized linear estimate (counters are mode-invariant); the claim is
+/// what the [`ContentionNet`] actually drains on the shared links — its
+/// uncongested duration `fixed_sec + service_bytes / bottleneck` equals the
+/// linear price on the switched topologies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowSpec {
+    /// Worker the payload leaves (a pull's *owner* side).
+    pub src: WorkerId,
+    /// Worker the payload lands on (the *requester*).
+    pub dst: WorkerId,
+    /// Wire bytes (what the counters record).
+    pub bytes: u64,
+    /// Fixed pre-transmission cost: route latency (doubled on an injected
+    /// retry) plus per-row serialization, scaled by the endpoint slowdown.
+    pub fixed_sec: f64,
+    /// Service demand on the route in bytes (wire bytes × slowdown).
+    pub service_bytes: f64,
+    /// Global RPC sequence number — the deterministic tie-break.
+    pub seq: u64,
+}
+
+/// Accumulated contention telemetry for one shared link.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LinkUtilization {
+    /// Link capacity (bytes/second).
+    pub capacity_bytes_per_sec: f64,
+    /// Virtual seconds the link had at least one transfer in flight.
+    pub busy_sec: f64,
+    /// Bytes actually drained through the link.
+    pub served_bytes: f64,
+    /// Transfers that crossed the link.
+    pub flows: u64,
+    /// Peak concurrent in-flight transfers (queue depth).
+    pub peak_flows: u32,
+    /// Peak backlog: max total bytes queued on the link at any instant.
+    pub peak_backlog_bytes: f64,
+}
+
+impl LinkUtilization {
+    /// Merge another window of telemetry for the same link.
+    pub fn merge(&mut self, o: &LinkUtilization) {
+        self.capacity_bytes_per_sec = o.capacity_bytes_per_sec;
+        self.busy_sec += o.busy_sec;
+        self.served_bytes += o.served_bytes;
+        self.flows += o.flows;
+        self.peak_flows = self.peak_flows.max(o.peak_flows);
+        self.peak_backlog_bytes = self.peak_backlog_bytes.max(o.peak_backlog_bytes);
+    }
 }
 
 /// Per-link accounting entry.
@@ -55,6 +111,16 @@ pub struct LinkStats {
 struct FabricState {
     links: HashMap<(WorkerId, WorkerId), LinkStats>,
     rpc_counter: u64,
+    /// Route claims recorded since the last [`NetFabric::take_route_claims`]
+    /// (only populated when `cfg.contention` is on).
+    claims: Vec<FlowSpec>,
+    /// Per-physical-link contention telemetry committed by [`ContentionNet`].
+    util: BTreeMap<LinkKey, LinkUtilization>,
+    /// Memoized per-pair link models: the multi-hop presets derive theirs
+    /// from the full route, which would otherwise be rebuilt per RPC on the
+    /// charge hot path. Valid for the fabric's lifetime (config-immutable),
+    /// so `reset` keeps it.
+    link_models: HashMap<(WorkerId, WorkerId), LinkModel>,
 }
 
 /// Shared simulated fabric. Cloneable handle; counters are global.
@@ -109,12 +175,40 @@ impl NetFabric {
     /// Charge one RPC from `src` to `dst` carrying `rows` feature rows of
     /// `row_bytes` each. Returns the simulated cost.
     pub fn charge_rpc(&self, src: WorkerId, dst: WorkerId, rows: u64, row_bytes: u64) -> Charge {
-        let bytes = rows * row_bytes + 64; // 64B header
-        let link = self.cfg.link_model(src, dst, self.world);
-        let mut time = self.cfg.rpc_time_on_link(src, dst, self.world, bytes, rows);
+        self.charge_rpc_at(src, dst, rows, row_bytes, 0)
+    }
 
+    /// Epoch-aware [`Self::charge_rpc`]: transient speed phases
+    /// ([`FabricConfig::worker_speed_phases`]) resolve against the
+    /// requester's current `epoch`. With no phases configured this is
+    /// bit-identical to the epoch-0 charge.
+    pub fn charge_rpc_at(
+        &self,
+        src: WorkerId,
+        dst: WorkerId,
+        rows: u64,
+        row_bytes: u64,
+        epoch: u32,
+    ) -> Charge {
+        let bytes = rows * row_bytes + 64; // 64B header
         let mut st = self.state.lock().unwrap();
+        let link = match st.link_models.get(&(src, dst)) {
+            Some(&m) => m,
+            None => {
+                let m = self.cfg.link_model(src, dst, self.world);
+                st.link_models.insert((src, dst), m);
+                m
+            }
+        };
+        // Same expression as `FabricConfig::rpc_time_on_link`, computed from
+        // the memoized link model — that helper would re-derive it, which on
+        // the multi-hop presets rebuilds the whole route per call.
+        let mut time = link.latency_sec
+            + bytes as f64 / link.bandwidth_bytes_per_sec
+            + rows as f64 * self.cfg.per_node_overhead_sec;
+
         st.rpc_counter += 1;
+        let seq = st.rpc_counter;
         let mut retried = match self.fail_every {
             Some(n) => st.rpc_counter % n == 0,
             None => false,
@@ -130,14 +224,43 @@ impl NetFabric {
             e.retries += 1;
         }
         // Heterogeneous-speed injection: a link is as slow as its slowest
-        // endpoint (worker_speed vector + straggler sugar, both resolved by
-        // `slowdown_of`). 1.0 for homogeneous clusters — no float op.
-        let slow = self.cfg.slowdown_of(src).max(self.cfg.slowdown_of(dst));
+        // endpoint (worker_speed vector + straggler sugar + the transient
+        // phase active at the requester's epoch, resolved by `slowdown_at`).
+        // 1.0 for homogeneous clusters — no float op.
+        let slow = self
+            .cfg
+            .slowdown_at(src, epoch)
+            .max(self.cfg.slowdown_at(dst, epoch));
         if slow != 1.0 {
             time *= slow;
         }
         e.bytes += bytes;
         e.time += time;
+        if self.cfg.contention {
+            // Record the route claim the contention simulator will drain;
+            // the scalar time above stays the serialized linear estimate.
+            // The flow is oriented in the *data* direction: a pull's payload
+            // leaves the owner (`dst` of the charge) and lands on the
+            // requester, so incast on a hot owner queues on that owner's
+            // egress NIC and a requester's fan-out shares its ingress. Route
+            // costs are direction-symmetric, so only telemetry labels (and
+            // any future asymmetric-capacity links) depend on this.
+            let mut fixed = link.latency_sec * if retried { 2.0 } else { 1.0 }
+                + rows as f64 * self.cfg.per_node_overhead_sec;
+            let mut service = bytes as f64;
+            if slow != 1.0 {
+                fixed *= slow;
+                service *= slow;
+            }
+            st.claims.push(FlowSpec {
+                src: dst,
+                dst: src,
+                bytes,
+                fixed_sec: fixed,
+                service_bytes: service,
+                seq,
+            });
+        }
         Charge { time, bytes }
     }
 
@@ -150,17 +273,58 @@ impl NetFabric {
         per_dst_rows: &[(WorkerId, u64)],
         row_bytes: u64,
     ) -> Charge {
+        self.charge_fanout_at(src, per_dst_rows, row_bytes, 0)
+    }
+
+    /// Epoch-aware [`Self::charge_fanout`] (see [`Self::charge_rpc_at`]).
+    pub fn charge_fanout_at(
+        &self,
+        src: WorkerId,
+        per_dst_rows: &[(WorkerId, u64)],
+        row_bytes: u64,
+        epoch: u32,
+    ) -> Charge {
         let mut max_time = 0f64;
         let mut total_bytes = 0u64;
         for &(dst, rows) in per_dst_rows {
             if rows == 0 {
                 continue;
             }
-            let c = self.charge_rpc(src, dst, rows, row_bytes);
+            let c = self.charge_rpc_at(src, dst, rows, row_bytes, epoch);
             max_time = max_time.max(c.time);
             total_bytes += c.bytes;
         }
         Charge { time: max_time, bytes: total_bytes }
+    }
+
+    /// Drain the route claims recorded since the last call (empty unless
+    /// `cfg.contention` is on). The cluster runtime drains after every
+    /// staging call so each stage's flows are attributed to it; offline
+    /// phases (setup, background cache builds) drain-and-discard, keeping
+    /// their linear pricing.
+    pub fn take_route_claims(&self) -> Vec<FlowSpec> {
+        std::mem::take(&mut self.state.lock().unwrap().claims)
+    }
+
+    /// Merge per-link contention telemetry (called by [`ContentionNet`] when
+    /// an epoch's simulation finishes; accumulates across epochs).
+    pub fn record_link_utilization(&self, entries: Vec<(LinkKey, LinkUtilization)>) {
+        let mut st = self.state.lock().unwrap();
+        for (key, u) in entries {
+            st.util.entry(key).or_default().merge(&u);
+        }
+    }
+
+    /// Snapshot of per-physical-link contention telemetry, sorted by link
+    /// key. Empty unless a contended simulation ran on this fabric.
+    pub fn link_utilization(&self) -> Vec<(LinkKey, LinkUtilization)> {
+        self.state
+            .lock()
+            .unwrap()
+            .util
+            .iter()
+            .map(|(&k, &u)| (k, u))
+            .collect()
     }
 
     /// Snapshot of per-link stats.
@@ -197,6 +361,8 @@ impl NetFabric {
         let mut st = self.state.lock().unwrap();
         st.links.clear();
         st.rpc_counter = 0;
+        st.claims.clear();
+        st.util.clear();
     }
 }
 
@@ -414,5 +580,65 @@ mod tests {
         assert_eq!(f.total_bytes(), 0);
         assert_eq!(f.total_rpcs(), 0);
         assert_eq!(f.total_retries(), 0);
+    }
+
+    #[test]
+    fn route_claims_recorded_only_in_contention_mode() {
+        let off = fabric();
+        off.charge_rpc(0, 1, 10, 4);
+        assert!(off.take_route_claims().is_empty(), "linear mode records no claims");
+
+        let mut cfg = FabricConfig::default();
+        cfg.contention = true;
+        let on = NetFabric::new(cfg.clone()).with_world_size(4);
+        let c = on.charge_rpc(0, 1, 100, 4);
+        on.charge_fanout(0, &[(1, 5), (2, 0), (3, 7)], 4);
+        let claims = on.take_route_claims();
+        assert_eq!(claims.len(), 3, "one claim per non-empty RPC");
+        assert_eq!(claims[0].bytes, c.bytes);
+        assert_eq!(claims[0].service_bytes, c.bytes as f64);
+        // flows are oriented in the data direction: the pull charge_rpc(0→1)
+        // moves payload owner 1 → requester 0
+        assert_eq!((claims[0].src, claims[0].dst), (1, 0));
+        // uncongested flow duration equals the linear charge
+        let dur = claims[0].fixed_sec
+            + claims[0].service_bytes / cfg.link_model(0, 1, 4).bandwidth_bytes_per_sec;
+        assert!((dur - c.time).abs() < 1e-15, "{dur} vs {c:?}");
+        // seq strictly increases in charge order
+        assert!(claims.windows(2).all(|w| w[0].seq < w[1].seq));
+        // drained: a second take is empty
+        assert!(on.take_route_claims().is_empty());
+    }
+
+    #[test]
+    fn claims_scale_with_endpoint_slowdowns_and_retries() {
+        let mut cfg = FabricConfig::default();
+        cfg.contention = true;
+        cfg.worker_speed = vec![1.0, 3.0];
+        let f = NetFabric::new(cfg).with_failures(1); // every RPC retried
+        let c = f.charge_rpc(0, 1, 100, 4);
+        let claim = f.take_route_claims().pop().unwrap();
+        let lat = FabricConfig::default().rpc_latency_sec;
+        let ovh = 100.0 * FabricConfig::default().per_node_overhead_sec;
+        assert!((claim.fixed_sec - 3.0 * (2.0 * lat + ovh)).abs() < 1e-15);
+        assert_eq!(claim.service_bytes, 3.0 * c.bytes as f64);
+    }
+
+    #[test]
+    fn phase_epochs_resolve_on_the_charge_path() {
+        // A phase switching at epoch 2 scales charges only from that epoch
+        // on, and reproduces the static worker_speed semantics (max over
+        // endpoints) within it.
+        let mut cfg = FabricConfig::default();
+        cfg.worker_speed_phases = vec![crate::config::SpeedPhase {
+            from_epoch: 2,
+            speeds: vec![1.0, 4.0],
+        }];
+        let f = NetFabric::new(cfg).with_world_size(4);
+        let base = fabric().charge_rpc(0, 1, 1000, 400).time;
+        assert!((f.charge_rpc_at(0, 1, 1000, 400, 0).time - base).abs() < 1e-15);
+        assert!((f.charge_rpc_at(0, 1, 1000, 400, 2).time - 4.0 * base).abs() < 1e-12);
+        assert!((f.charge_rpc_at(1, 2, 1000, 400, 3).time - 4.0 * base).abs() < 1e-12);
+        assert!((f.charge_rpc_at(2, 3, 1000, 400, 2).time - base).abs() < 1e-15);
     }
 }

@@ -53,6 +53,8 @@ impl StagedBatch {
 /// Stage one batch: split its remote nodes into cache hits/misses, SyncPull
 /// the misses, and (in full mode) assemble the `[n, d]` feature block in
 /// input-node order from the three sources (local shard, cache, pull).
+/// Epoch 0 for the transient-straggler phase axis; the simulation paths use
+/// [`stage_batch_at`] with the live training epoch.
 pub fn stage_batch(
     kv: &KvStore,
     cache: &Mutex<DoubleBufferCache>,
@@ -60,6 +62,20 @@ pub fn stage_batch(
     worker: WorkerId,
     materialize: bool,
     stats: &mut CommStats,
+) -> StagedBatch {
+    stage_batch_at(kv, cache, meta, worker, materialize, stats, 0)
+}
+
+/// Epoch-aware [`stage_batch`]: the residual `SyncPull` is charged under the
+/// transient speed phase active at `epoch`.
+pub fn stage_batch_at(
+    kv: &KvStore,
+    cache: &Mutex<DoubleBufferCache>,
+    meta: BatchMeta,
+    worker: WorkerId,
+    materialize: bool,
+    stats: &mut CommStats,
+    epoch: u32,
 ) -> StagedBatch {
     let mut hits: Vec<NodeId> = Vec::new();
     let mut misses: Vec<NodeId> = Vec::new();
@@ -69,11 +85,12 @@ pub fn stage_batch(
         c.split_hits(&remote, &mut hits, &mut misses);
     }
     let mut pulled: Vec<f32> = Vec::new();
-    let pull = kv.sync_pull(
+    let pull = kv.sync_pull_at(
         worker,
         &misses,
         if materialize && kv.has_values() { Some(&mut pulled) } else { None },
         stats,
+        epoch,
     );
     let stage_time = pull.time + meta.input_nodes.len() as f64 * LOOKUP_COST_SEC;
 
