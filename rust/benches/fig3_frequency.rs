@@ -29,7 +29,11 @@ fn main() -> rapidgnn::Result<()> {
         let hi = lo * 2 - 1;
         let count = freq.iter().filter(|&&(_, c)| c >= lo && c <= hi).count() as u64;
         buckets.push((
-            if lo == hi { format!("{lo}") } else { format!("{lo}-{hi}") },
+            if lo == hi {
+                format!("{lo}")
+            } else {
+                format!("{lo}-{hi}")
+            },
             count,
         ));
         lo *= 2;

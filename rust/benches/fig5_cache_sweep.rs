@@ -5,9 +5,17 @@
 //! flatten — diminishing returns guide practical cache sizing. We count the
 //! critical-path fetches (SyncPull misses; cache-build VectorPulls excluded,
 //! matching the paper's "remote feature fetches" on the training path).
+//!
+//! Extended with adaptive-vs-static cells: the `adaptive-cache` controller,
+//! started well below the knee, must climb to within 5 percentage points of
+//! the best static hit rate anywhere in the sweep — without ever exceeding
+//! its `max_hot` memory envelope (the gate asserted below). A second cell
+//! starts oversized and shows the shrink side: capacity monotonically
+//! released while the clamps hold.
 
 use rapidgnn::config::{DatasetPreset, Engine};
 use rapidgnn::coordinator;
+use rapidgnn::metrics::RunReport;
 use rapidgnn::util::bench::Table;
 use rapidgnn::util::bench_support::{paper_run, FIG5_CACHE_SIZES, PAPER_BATCHES};
 use rapidgnn::util::value::Value;
@@ -19,6 +27,7 @@ fn main() -> rapidgnn::Result<()> {
     );
     let mut json = Vec::new();
     let mut per_batch: Vec<Vec<f64>> = vec![Vec::new(); PAPER_BATCHES.len()];
+    let mut hit_by_batch: Vec<Vec<f64>> = vec![Vec::new(); PAPER_BATCHES.len()];
     for &n_hot in &FIG5_CACHE_SIZES {
         let mut row = vec![n_hot.to_string()];
         for (bi, &batch) in PAPER_BATCHES.iter().enumerate() {
@@ -31,6 +40,7 @@ fn main() -> rapidgnn::Result<()> {
                 / (cfg.epochs * cfg.num_workers) as f64;
             row.push(format!("{fetches:.0}"));
             per_batch[bi].push(fetches);
+            hit_by_batch[bi].push(report.cache_hit_rate());
             let mut cell = Value::table();
             cell.set("n_hot", n_hot)
                 .set("batch", batch)
@@ -56,6 +66,90 @@ fn main() -> rapidgnn::Result<()> {
             early / late.max(1e-9)
         );
     }
+
+    // --- adaptive vs static: the controller sweeps itself. Gate: starting
+    // at the sweep's second-smallest size, the grown cache's steady-state
+    // (final-epoch) hit rate lands within 5 points of the best static cell,
+    // and n_hot never exceeds max_hot.
+    let max_hot = *FIG5_CACHE_SIZES.last().unwrap();
+    let mut at = Table::new(
+        "Fig 5b — adaptive controller vs best static cell (products-sim, P=2)",
+        &["batch", "cell", "start", "final n_hot", "resizes", "final hit", "best static"],
+    );
+    for (bi, &batch) in PAPER_BATCHES.iter().enumerate() {
+        let best_static = hit_by_batch[bi].iter().cloned().fold(0.0, f64::max);
+        let adaptive = |start: u32, target: f64, tail: f64| -> rapidgnn::Result<RunReport> {
+            let mut cfg = paper_run(DatasetPreset::ProductsSim, Engine::AdaptiveCache, batch);
+            cfg.num_workers = 2;
+            cfg.epochs = 8; // headroom for the size trajectory to settle
+            cfg.n_hot = start;
+            cfg.engine_params.resize_period = 1;
+            cfg.engine_params.min_hot = 64;
+            cfg.engine_params.max_hot = max_hot;
+            cfg.engine_params.target_hit_rate = target;
+            cfg.engine_params.tail_utility = tail;
+            cfg.engine_params.hot_growth = 2.0;
+            coordinator::run(&cfg)
+        };
+        let emit = |at: &mut Table, json: &mut Vec<Value>, cell: &str, start: u32, r: &RunReport| {
+            let last = r.epochs.iter().map(|e| e.epoch).max();
+            let final_n = r
+                .cache_timeline()
+                .filter(|(e, _)| Some(e.epoch) == last)
+                .map(|(_, cp)| cp.n_hot)
+                .max()
+                .unwrap_or(0);
+            let resizes = r.cache_timeline().map(|(_, cp)| cp.resize_events).max().unwrap_or(0);
+            at.row(&[
+                batch.to_string(),
+                cell.into(),
+                start.to_string(),
+                final_n.to_string(),
+                resizes.to_string(),
+                format!("{:.1}%", 100.0 * r.final_epoch_hit_rate()),
+                format!("{:.1}%", 100.0 * best_static),
+            ]);
+            let mut v = Value::table();
+            v.set("batch", batch)
+                .set("cell", cell)
+                .set("start_n_hot", start)
+                .set("final_n_hot", final_n)
+                .set("resize_events", resizes)
+                .set("final_epoch_hit_rate", r.final_epoch_hit_rate())
+                .set("best_static_hit_rate", best_static)
+                .set("peak_n_hot", r.peak_n_hot());
+            json.push(v);
+        };
+
+        // Grow cell: undersized start, growth-only controller.
+        let grow = adaptive(FIG5_CACHE_SIZES[1], 1.0, 0.0)?;
+        emit(&mut at, &mut json, "grow", FIG5_CACHE_SIZES[1], &grow);
+        assert!(
+            grow.peak_n_hot() <= max_hot,
+            "batch {batch}: adaptive exceeded max_hot ({} > {max_hot})",
+            grow.peak_n_hot()
+        );
+        assert!(
+            grow.final_epoch_hit_rate() >= best_static - 0.05,
+            "batch {batch}: adaptive steady-state hit {:.3} below best static {:.3} - 5%",
+            grow.final_epoch_hit_rate(),
+            best_static
+        );
+
+        // Shrink cell: oversized start, shrink-only controller — shows the
+        // memory released once the marginal tail stops earning its keep.
+        let shrink = adaptive(max_hot, 0.0, 0.02)?;
+        emit(&mut at, &mut json, "shrink", max_hot, &shrink);
+        let mut prev = u32::MAX;
+        for (e, cp) in shrink.cache_timeline().filter(|(e, _)| e.worker == 0) {
+            assert!(cp.n_hot <= prev, "epoch {}: shrink-only run grew", e.epoch);
+            assert!(cp.n_hot >= 64 && cp.n_hot <= max_hot, "clamps violated");
+            prev = cp.n_hot;
+        }
+    }
+    at.print();
+    println!("(gate: grow-cell final-epoch hit rate within 5 points of best static cell)");
+
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/fig5.json", Value::Arr(json).to_json_pretty())?;
     Ok(())

@@ -244,7 +244,8 @@ fn main() -> rapidgnn::Result<()> {
             &["oversub", "metis linear", "metis contended", "rapid contended", "metis/rapid"],
         );
         let mut prev_contended = 0.0f64;
-        let mut ratios: Vec<(f64, f64, f64)> = Vec::new(); // (oversub, linear ratio, contended ratio)
+        // (oversub, linear ratio, contended ratio)
+        let mut ratios: Vec<(f64, f64, f64)> = Vec::new();
         for oversub in [1.0f64, 2.0, 4.0, 8.0, 16.0] {
             let metis_lin = cell(Engine::DglMetis, oversub, false)?;
             let rapid_lin = cell(Engine::Rapid, oversub, false)?;

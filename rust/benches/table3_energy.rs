@@ -76,11 +76,23 @@ fn main() -> rapidgnn::Result<()> {
     let mg = per_device(&metis, true);
     let fmt = |x: f64| format!("{x:.2}");
     t.row(&["Total Energy (J)".into(), fmt(rc.total), fmt(mc.total), fmt(rg.total), fmt(mg.total)]);
-    t.row(&["Mean Energy/Epoch (J)".into(), fmt(rc.mean), fmt(mc.mean), fmt(rg.mean), fmt(mg.mean)]);
+    t.row(&[
+        "Mean Energy/Epoch (J)".into(),
+        fmt(rc.mean),
+        fmt(mc.mean),
+        fmt(rg.mean),
+        fmt(mg.mean),
+    ]);
     t.row(&["Min Energy/Epoch (J)".into(), fmt(rc.min), fmt(mc.min), fmt(rg.min), fmt(mg.min)]);
     t.row(&["Max Energy/Epoch (J)".into(), fmt(rc.max), fmt(mc.max), fmt(rg.max), fmt(mg.max)]);
     t.row(&["Mean Power (W)".into(), fmt(rc.power), fmt(mc.power), fmt(rg.power), fmt(mg.power)]);
-    t.row(&["Total Duration (s)".into(), fmt(rc.duration), fmt(mc.duration), fmt(rg.duration), fmt(mg.duration)]);
+    t.row(&[
+        "Total Duration (s)".into(),
+        fmt(rc.duration),
+        fmt(mc.duration),
+        fmt(rg.duration),
+        fmt(mg.duration),
+    ]);
     t.print();
 
     println!(

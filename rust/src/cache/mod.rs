@@ -200,6 +200,38 @@ pub fn recommend_n_hot(batches: &[BatchMeta], coverage: f64) -> u32 {
     ranked.len() as u32
 }
 
+/// Fraction of all remote accesses served by the *marginal quarter* of the
+/// top-`n_hot` entries of a frequency ranking. This is the adaptive-cache
+/// controller's shrink signal: when the lowest-ranked quarter of the hot set
+/// serves almost no traffic, those entries are not earning their device
+/// memory.
+///
+/// `top` is the count-descending prefix of the ranking (as produced by
+/// [`remote_frequency`] or a `top_hot`-style partial selection), cut at
+/// **no fewer than `n_hot` entries** when that many distinct nodes exist;
+/// `total_accesses` is the count over the *whole* ranking, so a truncated
+/// prefix still yields the exact global fraction.
+///
+/// Edge conventions: 1.0 when there is nothing to measure (no accesses or
+/// `n_hot == 0`) so an empty epoch never triggers a shrink; 0.0 when the
+/// cache is larger than the distinct remote set — the surplus capacity
+/// serves nothing, the clearest shrink signal there is.
+pub fn tail_mass_fraction(top: &[(NodeId, u32)], total_accesses: u64, n_hot: u32) -> f64 {
+    if total_accesses == 0 {
+        return 1.0;
+    }
+    if (n_hot as usize) > top.len() {
+        return 0.0;
+    }
+    let k = n_hot as usize;
+    if k == 0 {
+        return 1.0;
+    }
+    let tail_w = (k / 4).max(1);
+    let tail: u64 = top[k - tail_w..k].iter().map(|&(_, c)| c as u64).sum();
+    tail as f64 / total_accesses as f64
+}
+
 /// The paper's per-worker device memory bound:
 /// `Mem_device ≤ 2·n_hot·d + Q·m_max·d` (in f32 elements → bytes).
 pub fn device_memory_bound(n_hot: u32, q: u32, m_max: u32, feature_dim: u32) -> u64 {
@@ -315,6 +347,22 @@ mod tests {
         assert_eq!(recommend_n_hot(&batches, 0.8), 2); // 5/6 ≥ 0.8
         assert_eq!(recommend_n_hot(&batches, 1.0), 3);
         assert_eq!(recommend_n_hot(&[], 0.8), 0);
+    }
+
+    #[test]
+    fn tail_mass_fraction_measures_the_marginal_quarter() {
+        let ranked: Vec<(NodeId, u32)> = vec![(1, 80), (2, 10), (3, 6), (4, 4)];
+        // n_hot = 4 → tail quarter is the last entry: 4/100 of all accesses
+        assert!((tail_mass_fraction(&ranked, 100, 4) - 0.04).abs() < 1e-12);
+        // n_hot = 2 → tail quarter rounds up to the 2nd entry: 10/100
+        assert!((tail_mass_fraction(&ranked, 100, 2) - 0.10).abs() < 1e-12);
+        // a truncated prefix with the global total gives the same fraction
+        assert!((tail_mass_fraction(&ranked[..2], 100, 2) - 0.10).abs() < 1e-12);
+        // cache larger than the distinct remote set: pure surplus
+        assert_eq!(tail_mass_fraction(&ranked, 100, 10), 0.0);
+        // nothing to measure → never shrink on emptiness
+        assert_eq!(tail_mass_fraction(&[], 0, 4), 1.0);
+        assert_eq!(tail_mass_fraction(&ranked, 100, 0), 1.0);
     }
 
     #[test]

@@ -34,6 +34,10 @@ impl Engine {
     /// GreenGNN-style windowed communication: remote fetches of
     /// `EngineParams::fetch_window` consecutive batches merge into one pull.
     pub const GreenWindow: Engine = Engine("green-window");
+    /// RapidGNN with a per-epoch hot-cache controller: `n_hot` is resized
+    /// between epochs from observed hit rates and the ranking's marginal
+    /// tail, clamped to `[min_hot, max_hot]` with hysteresis.
+    pub const AdaptiveCache: Engine = Engine("adaptive-cache");
 
     /// The engines compared in the paper's Table 2. The registry may hold
     /// more — `EngineRegistry::engines()` is the full open set.
@@ -99,11 +103,44 @@ pub struct EngineParams {
     /// are merged into one windowed pull — fewer, larger RPCs at the price
     /// of first-step latency per window.
     pub fetch_window: u32,
+    /// `adaptive-cache`: evaluate the resize controller at every k-th epoch
+    /// boundary. 0 disables the controller entirely, which degenerates the
+    /// engine to `rapid` bit-exactly (pinned by a test).
+    pub resize_period: u32,
+    /// `adaptive-cache`: lower clamp on the controller's `n_hot`.
+    pub min_hot: u32,
+    /// `adaptive-cache`: upper clamp on the controller's `n_hot` (the memory
+    /// envelope the run may never exceed).
+    pub max_hot: u32,
+    /// `adaptive-cache`: grow `n_hot` while the observed hit rate is below
+    /// this target (multiplicative increase by `hot_growth`).
+    pub target_hit_rate: f64,
+    /// `adaptive-cache`: shrink `n_hot` when the marginal tail (the lowest-
+    /// ranked quarter of the hot set) serves less than this fraction of all
+    /// remote accesses — those entries are not earning their memory.
+    pub tail_utility: f64,
+    /// `adaptive-cache`: multiplicative resize factor (> 1; grow multiplies,
+    /// shrink divides).
+    pub hot_growth: f64,
+    /// `adaptive-cache`: after a resize, suppress opposite-direction resizes
+    /// for this many controller evaluations (hysteresis against hit-rate
+    /// flip-flop).
+    pub hysteresis: u32,
 }
 
 impl Default for EngineParams {
     fn default() -> Self {
-        EngineParams { resample_period: 4, fetch_window: 4 }
+        EngineParams {
+            resample_period: 4,
+            fetch_window: 4,
+            resize_period: 1,
+            min_hot: 64,
+            max_hot: 65_536,
+            target_hit_rate: 0.85,
+            tail_utility: 0.01,
+            hot_growth: 2.0,
+            hysteresis: 2,
+        }
     }
 }
 
@@ -112,29 +149,65 @@ impl EngineParams {
     pub fn validate(&self) -> Result<()> {
         ensure!(self.resample_period >= 1, "resample_period must be >= 1");
         ensure!(self.fetch_window >= 1, "fetch_window must be >= 1");
+        ensure!(self.min_hot >= 1, "min_hot must be >= 1");
+        ensure!(self.max_hot >= self.min_hot, "max_hot must be >= min_hot");
+        ensure!(
+            (0.0..=1.0).contains(&self.target_hit_rate),
+            "target_hit_rate must be in [0,1]"
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.tail_utility),
+            "tail_utility must be in [0,1)"
+        );
+        ensure!(
+            self.hot_growth.is_finite() && self.hot_growth > 1.0,
+            "hot_growth must be a finite factor > 1"
+        );
         Ok(())
     }
 
     fn to_value(self) -> Value {
         let mut v = Value::table();
         v.set("resample_period", self.resample_period)
-            .set("fetch_window", self.fetch_window);
+            .set("fetch_window", self.fetch_window)
+            .set("resize_period", self.resize_period)
+            .set("min_hot", self.min_hot)
+            .set("max_hot", self.max_hot)
+            .set("target_hit_rate", self.target_hit_rate)
+            .set("tail_utility", self.tail_utility)
+            .set("hot_growth", self.hot_growth)
+            .set("hysteresis", self.hysteresis);
         v
     }
 
     fn from_value(v: &Value) -> Result<Self> {
+        // Every key is optional so configs written before an engine existed
+        // (or before its knobs grew) still load with that knob's default.
         let d = EngineParams::default();
+        let opt_u32 = |key: &str, default: u32| -> Result<u32> {
+            if v.get(key).is_some() {
+                v.req_u32(key)
+            } else {
+                Ok(default)
+            }
+        };
+        let opt_f64 = |key: &str, default: f64| -> Result<f64> {
+            if v.get(key).is_some() {
+                v.req_f64(key)
+            } else {
+                Ok(default)
+            }
+        };
         Ok(EngineParams {
-            resample_period: if v.get("resample_period").is_some() {
-                v.req_u32("resample_period")?
-            } else {
-                d.resample_period
-            },
-            fetch_window: if v.get("fetch_window").is_some() {
-                v.req_u32("fetch_window")?
-            } else {
-                d.fetch_window
-            },
+            resample_period: opt_u32("resample_period", d.resample_period)?,
+            fetch_window: opt_u32("fetch_window", d.fetch_window)?,
+            resize_period: opt_u32("resize_period", d.resize_period)?,
+            min_hot: opt_u32("min_hot", d.min_hot)?,
+            max_hot: opt_u32("max_hot", d.max_hot)?,
+            target_hit_rate: opt_f64("target_hit_rate", d.target_hit_rate)?,
+            tail_utility: opt_f64("tail_utility", d.tail_utility)?,
+            hot_growth: opt_f64("hot_growth", d.hot_growth)?,
+            hysteresis: opt_u32("hysteresis", d.hysteresis)?,
         })
     }
 }
@@ -525,7 +598,11 @@ impl FabricConfig {
                 let mut hops = Vec::new();
                 let mut cur = src;
                 loop {
-                    let next = if forward { (cur + 1) % p } else { (cur + p - 1) % p };
+                    let next = if forward {
+                        (cur + 1) % p
+                    } else {
+                        (cur + p - 1) % p
+                    };
                     hops.push(hop(LinkKey::RingSeg { from: cur, to: next }, l, b));
                     cur = next;
                     if cur == dst || hops.len() as u32 >= p {
@@ -676,7 +753,6 @@ impl FabricConfig {
         }
     }
 
-
     /// Internal consistency checks (called from [`RunConfig::validate`]).
     pub fn validate(&self) -> Result<()> {
         ensure!(self.bandwidth_bytes_per_sec > 0.0, "bandwidth must be positive");
@@ -799,7 +875,11 @@ impl FabricConfig {
             rpc_latency_sec: v.req_f64("rpc_latency_sec")?,
             per_node_overhead_sec: v.req_f64("per_node_overhead_sec")?,
             topology,
-            loss_rate: if v.get("loss_rate").is_some() { v.req_f64("loss_rate")? } else { 0.0 },
+            loss_rate: if v.get("loss_rate").is_some() {
+                v.req_f64("loss_rate")?
+            } else {
+                0.0
+            },
             worker_speed: if v.get("worker_speed").is_some() {
                 v.req_f64_array("worker_speed")?
             } else {
@@ -1492,6 +1572,13 @@ mod tests {
             c.engine = e;
             c.engine_params.resample_period = 3;
             c.engine_params.fetch_window = 7;
+            c.engine_params.resize_period = 2;
+            c.engine_params.min_hot = 32;
+            c.engine_params.max_hot = 4_096;
+            c.engine_params.target_hit_rate = 0.75;
+            c.engine_params.tail_utility = 0.05;
+            c.engine_params.hot_growth = 1.5;
+            c.engine_params.hysteresis = 3;
             let back = RunConfig::from_value(&c.to_value()).unwrap();
             assert_eq!(c, back, "{}", e.id());
             back.validate().unwrap();
@@ -1506,6 +1593,40 @@ mod tests {
         c.engine_params.resample_period = 1;
         c.engine_params.fetch_window = 0;
         assert!(c.validate().is_err());
+        c.engine_params.fetch_window = 1;
+        c.engine_params.min_hot = 0;
+        assert!(c.validate().is_err(), "min_hot must be >= 1");
+        c.engine_params.min_hot = 128;
+        c.engine_params.max_hot = 64; // below min_hot
+        assert!(c.validate().is_err(), "max_hot must be >= min_hot");
+        c.engine_params.max_hot = 256;
+        c.engine_params.target_hit_rate = 1.5;
+        assert!(c.validate().is_err());
+        c.engine_params.target_hit_rate = 0.9;
+        c.engine_params.tail_utility = 1.0; // must stay strictly below 1
+        assert!(c.validate().is_err());
+        c.engine_params.tail_utility = 0.0;
+        c.engine_params.hot_growth = 1.0; // a no-op factor cannot resize
+        assert!(c.validate().is_err());
+        c.engine_params.hot_growth = 2.0;
+        c.engine_params.resize_period = 0; // 0 = controller disabled, legal
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn pre_adaptive_engine_params_still_parse() {
+        // Configs written when EngineParams had only the first two knobs
+        // must load with controller defaults.
+        let mut v = Value::table();
+        v.set("resample_period", 5u32).set("fetch_window", 2u32);
+        let p = EngineParams::from_value(&v).unwrap();
+        assert_eq!(p.resample_period, 5);
+        assert_eq!(p.fetch_window, 2);
+        let d = EngineParams::default();
+        assert_eq!(p.min_hot, d.min_hot);
+        assert_eq!(p.max_hot, d.max_hot);
+        assert_eq!(p.resize_period, d.resize_period);
+        assert_eq!(p.hysteresis, d.hysteresis);
     }
 
     #[test]

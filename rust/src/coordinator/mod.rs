@@ -58,6 +58,7 @@ pub mod strategy;
 
 pub use common::{CostParams, RunContext};
 pub use pipeline::{run_cluster, run_worker};
+pub use strategies::adaptive_cache::AdaptiveCacheStrategy;
 pub use strategies::baseline::{DglStrategy, DistGcnStrategy};
 pub use strategies::fast_sample::FastSampleStrategy;
 pub use strategies::green_window::GreenWindowStrategy;

@@ -135,7 +135,12 @@ fn make_report(
         phases,
         comm,
         cache: finish.cache,
-        mean_loss: if full { acc.loss_sum / totals.steps.max(1) as f64 } else { f64::NAN },
+        cache_plan: finish.cache_plan,
+        mean_loss: if full {
+            acc.loss_sum / totals.steps.max(1) as f64
+        } else {
+            f64::NAN
+        },
         train_acc: if full && acc.total > 0 {
             acc.correct as f64 / acc.total as f64
         } else {
@@ -393,7 +398,8 @@ pub fn run_cluster(
                 &mut phases,
                 &mut comm,
             )?;
-            reports.push(make_report(epoch, worker, full, &totals, &actor.acc, finish, phases, comm));
+            reports
+                .push(make_report(epoch, worker, full, &totals, &actor.acc, finish, phases, comm));
         }
         if contention {
             // `finish_epoch` background pulls (C_sec rebuilds) are priced
@@ -479,6 +485,29 @@ mod tests {
     fn cluster_matches_sequential_for_registry_only_engines() {
         assert_cluster_matches_sequential(Engine::FastSample, 1e-12);
         assert_cluster_matches_sequential(Engine::GreenWindow, 1e-9);
+        assert_cluster_matches_sequential(Engine::AdaptiveCache, 1e-12);
+    }
+
+    #[test]
+    fn cluster_matches_sequential_adaptive_telemetry() {
+        // The adaptive controller runs per worker on both paths; its
+        // telemetry (n_hot trajectory, resize counts) must agree exactly.
+        let seq_ctx = ctx(Engine::AdaptiveCache);
+        let mut seq = Vec::new();
+        for w in 0..seq_ctx.cfg.num_workers {
+            let (_, reps) = run_worker(&seq_ctx, w, None).unwrap();
+            seq.extend(reps);
+        }
+        let clu_ctx = ctx(Engine::AdaptiveCache);
+        let (_, clu) = run_cluster(&clu_ctx, None).unwrap();
+        for c in &clu {
+            let s = seq
+                .iter()
+                .find(|r| r.worker == c.worker && r.epoch == c.epoch)
+                .expect("matching report");
+            assert_eq!(s.cache_plan, c.cache_plan, "w{} e{}", c.worker, c.epoch);
+            assert!(c.cache_plan.is_some(), "adaptive always reports telemetry");
+        }
     }
 
     #[test]

@@ -1,0 +1,501 @@
+//! `adaptive-cache` — RapidGNN with a per-epoch hot-cache controller.
+//!
+//! The paper's Fig-5 sweep shows hit rate and remote-fetch reduction are
+//! sharply sensitive to `n_hot`, yet the right size depends on the access
+//! distribution — a static knob is either undersized (misses on the
+//! critical path) or oversized (device memory spent on entries that never
+//! hit). This engine closes the loop: between epochs a deterministic
+//! controller reads the epoch's observed hit/miss tally (from
+//! `cache::split_hits`) plus the *next* epoch's precomputed remote-frequency
+//! ranking, and resizes `n_hot` before the background `C_sec` build runs:
+//!
+//! - **grow** (multiplicative, × `hot_growth`) while the observed hit rate
+//!   is below `target_hit_rate`;
+//! - **shrink** (÷ `hot_growth`) when the marginal tail — the lowest-ranked
+//!   quarter of the hot set — serves less than `tail_utility` of all remote
+//!   accesses (those entries are not earning their memory);
+//! - clamped to `[min_hot, max_hot]`, with **hysteresis**: after a resize,
+//!   opposite-direction resizes are suppressed for `hysteresis` controller
+//!   evaluations, so alternating hit rates cannot make the size flip-flop.
+//!
+//! Everything is a pure function of simulated quantities — no wall-clock
+//! input — so runs stay bit-reproducible across thread counts and the
+//! cluster/sequential conformance contract holds like every other engine.
+//!
+//! With `resize_period = 0` the controller never fires and the engine is
+//! the static `rapid` strategy *bit-exactly* (same schedules, same cache
+//! builds, same simulated times) — pinned by a test below. The only
+//! reporting difference is the per-epoch [`CacheReport`] telemetry, which
+//! static engines omit.
+//!
+//! Lifecycle (where the resize sits):
+//!
+//! ```text
+//! setup            precompute all epochs; C_s sized clamp(n_hot, min, max)
+//! plan_epoch(e)    stream epoch e's schedule against the current C_s
+//! finish_epoch(e)  1. read epoch e's hit/miss stats
+//!                  2. rank epoch e+1's schedule (stream_ranked_top: O(R)
+//!                     partial selection, cut at the largest size this
+//!                     boundary could need)
+//!                  3. controller: maybe resize n_hot        ← the new step
+//!                  4. build C_sec = top-n_hot of that ranking, swap
+//! ```
+
+use super::rapid::{
+    finish_cached_epoch_with, plan_rapid_epoch, precompute_epochs_n, stream_ranked_top,
+    CacheRebuild, RapidState,
+};
+use crate::cache::tail_mass_fraction;
+use crate::config::{EngineParams, RunConfig};
+use crate::coordinator::common::RunContext;
+use crate::coordinator::strategy::{
+    BatchPlan, EpochFinish, EpochTotals, PipelineOutcome, StrategySetup, StrategyState,
+    TrainingStrategy,
+};
+use crate::metrics::{CacheReport, CommStats, PhaseTimes};
+use crate::{NodeId, Result, WorkerId};
+
+/// The deterministic resize policy: thresholds and clamps, copied out of
+/// [`EngineParams`] at construction.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Controller {
+    pub(crate) min_hot: u32,
+    pub(crate) max_hot: u32,
+    pub(crate) target_hit_rate: f64,
+    pub(crate) tail_utility: f64,
+    pub(crate) growth: f64,
+    pub(crate) hysteresis: u32,
+}
+
+/// Per-worker controller state, evolved at each evaluated epoch boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct CtrlState {
+    /// Current steady-cache capacity.
+    pub(crate) n_hot: u32,
+    /// Direction of the last applied resize (+1 grow, −1 shrink, 0 none).
+    pub(crate) last_dir: i8,
+    /// Evaluations left during which opposite-direction resizes are
+    /// suppressed.
+    pub(crate) cooldown: u32,
+    /// Resizes applied so far (the report's `resize_events`).
+    pub(crate) resizes: u32,
+}
+
+impl CtrlState {
+    fn new(n_hot: u32) -> CtrlState {
+        CtrlState { n_hot, last_dir: 0, cooldown: 0, resizes: 0 }
+    }
+}
+
+impl Controller {
+    fn from_params(p: &EngineParams) -> Controller {
+        Controller {
+            min_hot: p.min_hot,
+            max_hot: p.max_hot,
+            target_hit_rate: p.target_hit_rate,
+            tail_utility: p.tail_utility,
+            growth: p.hot_growth,
+            hysteresis: p.hysteresis,
+        }
+    }
+
+    /// One controller evaluation at an epoch boundary. `hit_rate` is the
+    /// finished epoch's observed rate; `tail_mass` the fraction of all
+    /// remote accesses served by the hot set's marginal quarter under the
+    /// next epoch's ranking. Returns the (possibly unchanged) capacity.
+    pub(crate) fn decide(&self, st: &mut CtrlState, hit_rate: f64, tail_mass: f64) -> u32 {
+        // Shrink precedence: when the marginal entries are useless, growing
+        // would only add entries ranked even lower.
+        let dir: i8 = if tail_mass < self.tail_utility && st.n_hot > self.min_hot {
+            -1
+        } else if hit_rate < self.target_hit_rate && st.n_hot < self.max_hot {
+            1
+        } else {
+            0
+        };
+        // Suppression is checked *before* this evaluation consumes a
+        // cooldown tick, so a resize at evaluation t suppresses opposite
+        // directions at evaluations t+1 … t+hysteresis — exactly the
+        // documented count (hysteresis = 1 damps one evaluation).
+        let suppressed = st.cooldown > 0 && dir != st.last_dir;
+        st.cooldown = st.cooldown.saturating_sub(1);
+        if dir != 0 && !suppressed {
+            let next = if dir > 0 {
+                ((st.n_hot as f64 * self.growth).ceil() as u32).min(self.max_hot)
+            } else {
+                ((st.n_hot as f64 / self.growth).floor() as u32).max(self.min_hot)
+            };
+            if next != st.n_hot {
+                st.n_hot = next;
+                st.last_dir = dir;
+                st.cooldown = self.hysteresis;
+                st.resizes += 1;
+            }
+        }
+        st.n_hot
+    }
+}
+
+/// Per-worker state: the rapid-family cache state plus the controller.
+struct AdaptiveState {
+    inner: RapidState,
+    ctrl: CtrlState,
+}
+
+/// The adaptive engine.
+pub struct AdaptiveCacheStrategy {
+    controller: Controller,
+    /// Evaluate the controller at every `resize_period`-th boundary;
+    /// 0 = never (static degeneration).
+    resize_period: u32,
+}
+
+/// Registry constructor.
+pub fn ctor(cfg: &RunConfig) -> Box<dyn TrainingStrategy> {
+    Box::new(AdaptiveCacheStrategy {
+        controller: Controller::from_params(&cfg.engine_params),
+        resize_period: cfg.engine_params.resize_period,
+    })
+}
+
+impl AdaptiveCacheStrategy {
+    /// Whether the controller evaluates at the boundary *into* `epoch`.
+    fn fires_at(&self, boundary: u32) -> bool {
+        self.resize_period > 0 && boundary % self.resize_period == 0
+    }
+
+    fn initial_n_hot(&self, cfg: &RunConfig) -> u32 {
+        if self.resize_period == 0 {
+            // Controller disabled: static rapid semantics, clamps included —
+            // anything else would break the bit-exact degeneration.
+            cfg.n_hot
+        } else {
+            cfg.n_hot.clamp(self.controller.min_hot, self.controller.max_hot)
+        }
+    }
+}
+
+impl TrainingStrategy for AdaptiveCacheStrategy {
+    fn id(&self) -> &'static str {
+        "adaptive-cache"
+    }
+
+    fn name(&self) -> &'static str {
+        "AdaptiveCache"
+    }
+
+    fn queue_depth(&self, cfg: &RunConfig) -> u32 {
+        cfg.prefetch_q
+    }
+
+    fn setup(&self, ctx: &RunContext, worker: WorkerId) -> Result<StrategySetup> {
+        let initial = self.initial_n_hot(&ctx.cfg);
+        let epochs: Vec<u32> = (0..ctx.cfg.epochs).collect();
+        let s = precompute_epochs_n(ctx, worker, &epochs, initial)?;
+        Ok(StrategySetup {
+            setup_time: s.setup_time,
+            state: Box::new(AdaptiveState {
+                inner: RapidState { cache: s.cache, setup_comm: s.setup_comm },
+                ctrl: CtrlState::new(initial),
+            }),
+        })
+    }
+
+    fn plan_epoch<'a>(
+        &self,
+        ctx: &'a RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        comm: &mut CommStats,
+    ) -> Result<Box<dyn BatchPlan + 'a>> {
+        let st = state.downcast_mut::<AdaptiveState>().expect("adaptive-cache worker state");
+        plan_rapid_epoch(ctx, &mut st.inner, worker, epoch, epoch, comm)
+    }
+
+    fn finish_epoch(
+        &self,
+        ctx: &RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        outcome: &PipelineOutcome,
+        totals: &EpochTotals,
+        phases: &mut PhaseTimes,
+        comm: &mut CommStats,
+    ) -> Result<EpochFinish> {
+        let st = state.downcast_mut::<AdaptiveState>().expect("adaptive-cache worker state");
+        // The capacity that served this epoch, and what it observed.
+        let serving_n = st.ctrl.n_hot;
+        let stats = st.inner.cache.lock().unwrap().stats();
+
+        let next = epoch + 1;
+        let rebuild = if next < ctx.cfg.epochs {
+            // One stream pass yields both the controller's tail signal and
+            // the C_sec hot list; the simulated cost is identical to the
+            // static engine's stream_top_hot pass. An epoch with no cache
+            // lookups carries no hit-rate signal (hit_rate() reads 0.0),
+            // so the controller holds rather than growing on silence —
+            // mirroring tail_mass_fraction's never-shrink-on-empty rule.
+            let fires = self.fires_at(next) && stats.lookups > 0;
+            // Cut the ranking at the largest size this boundary could need
+            // (the grown capacity if the controller fires) — an O(R)
+            // partial selection instead of sorting the full ranking.
+            let k_max = if fires {
+                let grown = ((st.ctrl.n_hot as f64 * self.controller.growth).ceil() as u32)
+                    .min(self.controller.max_hot);
+                st.ctrl.n_hot.max(grown)
+            } else {
+                st.ctrl.n_hot
+            };
+            let (top, total, rank_time) = stream_ranked_top(ctx, worker, next, k_max)?;
+            if fires {
+                let tail = tail_mass_fraction(&top, total, st.ctrl.n_hot);
+                self.controller.decide(&mut st.ctrl, stats.hit_rate(), tail);
+            }
+            let k = (st.ctrl.n_hot as usize).min(top.len());
+            let hot: Vec<NodeId> = top[..k].iter().map(|&(v, _)| v).collect();
+            Some(CacheRebuild { hot, local_time: ctx.slowdown_at(worker, epoch) * rank_time })
+        } else {
+            None
+        };
+        // Capacity of the C_sec just staged — differs from serving_n on a
+        // resize epoch, and the device-memory bound must cover both buffers.
+        let staged_n = if rebuild.is_some() {
+            st.ctrl.n_hot
+        } else {
+            serving_n
+        };
+
+        let mut finish = finish_cached_epoch_with(
+            ctx, &mut st.inner, worker, epoch, rebuild, serving_n, staged_n, outcome, totals,
+            phases, comm,
+        )?;
+        finish.cache_plan = Some(CacheReport {
+            n_hot: serving_n,
+            hits: stats.hits,
+            misses: stats.misses(),
+            hit_rate: stats.hit_rate(),
+            resize_events: st.ctrl.resizes,
+        });
+        Ok(finish)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+    use crate::coordinator::pipeline::run_worker;
+
+    fn cfg(n_hot: u32, epochs: u32) -> RunConfig {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = Engine::AdaptiveCache;
+        c.epochs = epochs;
+        c.n_hot = n_hot;
+        c
+    }
+
+    fn controller() -> Controller {
+        Controller {
+            min_hot: 100,
+            max_hot: 1_600,
+            target_hit_rate: 0.9,
+            tail_utility: 0.01,
+            growth: 2.0,
+            hysteresis: 2,
+        }
+    }
+
+    #[test]
+    fn controller_grows_on_low_hit_rate_and_clamps_at_max() {
+        let c = controller();
+        let mut st = CtrlState::new(400);
+        assert_eq!(c.decide(&mut st, 0.5, 0.5), 800);
+        assert_eq!(c.decide(&mut st, 0.5, 0.5), 1_600);
+        assert_eq!(c.decide(&mut st, 0.5, 0.5), 1_600, "clamped at max_hot");
+        assert_eq!(st.resizes, 2, "clamped evaluations are not resize events");
+    }
+
+    #[test]
+    fn controller_shrinks_on_useless_tail_and_clamps_at_min() {
+        let c = controller();
+        let mut st = CtrlState::new(400);
+        assert_eq!(c.decide(&mut st, 0.99, 0.001), 200);
+        assert_eq!(c.decide(&mut st, 0.99, 0.001), 100);
+        assert_eq!(c.decide(&mut st, 0.99, 0.001), 100, "clamped at min_hot");
+        assert_eq!(st.resizes, 2);
+    }
+
+    #[test]
+    fn controller_holds_inside_the_deadband() {
+        let c = controller();
+        let mut st = CtrlState::new(400);
+        // hit rate at target, tail earning its keep: no movement, ever
+        for _ in 0..5 {
+            assert_eq!(c.decide(&mut st, 0.95, 0.2), 400);
+        }
+        assert_eq!(st.resizes, 0);
+    }
+
+    #[test]
+    fn hysteresis_prevents_flip_flop_on_alternating_signals() {
+        // Alternate a grow signal with a shrink signal at every evaluation.
+        let alternating = |c: &Controller| -> Vec<u32> {
+            let mut st = CtrlState::new(400);
+            (0..6)
+                .map(|i| {
+                    let (hit, tail) =
+                        if i % 2 == 0 { (0.5, 0.5) } else { (0.99, 0.001) };
+                    c.decide(&mut st, hit, tail)
+                })
+                .collect()
+        };
+        // Without hysteresis the size bounces A→B→A immediately.
+        let bare = alternating(&Controller { hysteresis: 0, ..controller() });
+        assert!(
+            bare.windows(3).any(|w| w[0] == w[2] && w[1] != w[0]),
+            "expected oscillation without hysteresis: {bare:?}"
+        );
+        // With hysteresis, no A→B→A bounce anywhere in the trajectory: the
+        // opposite-direction request right after a resize is suppressed.
+        let damped = alternating(&controller());
+        for w in damped.windows(3) {
+            assert!(w[0] != w[2] || w[1] == w[0], "flip-flop {:?} in {:?}", w, damped);
+        }
+    }
+
+    #[test]
+    fn hysteresis_one_damps_exactly_one_evaluation() {
+        // The documented count: hysteresis = 1 suppresses the opposite
+        // direction for exactly the one evaluation after a resize.
+        let c = Controller { hysteresis: 1, ..controller() };
+        let mut st = CtrlState::new(400);
+        assert_eq!(c.decide(&mut st, 0.5, 0.5), 800, "grow applies");
+        assert_eq!(c.decide(&mut st, 0.99, 0.001), 800, "opposite suppressed once");
+        assert_eq!(c.decide(&mut st, 0.99, 0.001), 400, "then allowed");
+    }
+
+    #[test]
+    fn resize_period_zero_degenerates_to_rapid_bit_exactly() {
+        // Controller disabled → the engine must be the static rapid path,
+        // operation for operation: identical setup time, counters, and
+        // simulated epoch times (exact f64 equality, not tolerance). The
+        // n_hot = 32 case sits below the default min_hot clamp: a disabled
+        // controller must not clamp either.
+        for n_hot in [300u32, 32] {
+            let mut a_cfg = cfg(n_hot, 3);
+            a_cfg.engine_params.resize_period = 0;
+            let a_ctx = crate::coordinator::common::RunContext::build(&a_cfg).unwrap();
+            let (a_setup, adaptive) = run_worker(&a_ctx, 0, None).unwrap();
+            let mut r_cfg = cfg(n_hot, 3);
+            r_cfg.engine = Engine::Rapid;
+            let r_ctx = crate::coordinator::common::RunContext::build(&r_cfg).unwrap();
+            let (r_setup, rapid) = run_worker(&r_ctx, 0, None).unwrap();
+            assert_eq!(a_setup, r_setup, "n_hot {n_hot}");
+            assert_eq!(adaptive.len(), rapid.len());
+            for (a, r) in adaptive.iter().zip(&rapid) {
+                let tag = format!("n_hot {n_hot} epoch {}", a.epoch);
+                assert_eq!(a.comm, r.comm, "{tag}");
+                assert_eq!(a.cache, r.cache, "{tag}");
+                assert_eq!(a.steps, r.steps, "{tag}");
+                assert_eq!(a.device_bytes, r.device_bytes, "{tag}");
+                assert_eq!(a.host_bytes, r.host_bytes, "{tag}");
+                assert_eq!(a.epoch_time, r.epoch_time, "{tag}: bit-exact epoch time");
+                // the only divergence: adaptive reports its telemetry
+                let cp = a.cache_plan.expect("adaptive telemetry present");
+                assert_eq!(cp.n_hot, n_hot, "{tag}: no clamp with the controller off");
+                assert_eq!(cp.resize_events, 0);
+                assert!(r.cache_plan.is_none(), "rapid stays telemetry-free");
+            }
+        }
+    }
+
+    #[test]
+    fn undersized_cache_grows_and_improves_hit_rate() {
+        let mut c = cfg(8, 6);
+        c.engine_params.min_hot = 8;
+        c.engine_params.max_hot = 800;
+        c.engine_params.target_hit_rate = 0.99; // keep growing
+        c.engine_params.tail_utility = 0.0; // never shrink
+        let ctx = crate::coordinator::common::RunContext::build(&c).unwrap();
+        let (_, reports) = run_worker(&ctx, 0, None).unwrap();
+        let plans: Vec<_> = reports.iter().map(|r| r.cache_plan.unwrap()).collect();
+        assert_eq!(plans[0].n_hot, 8, "starts at the configured size");
+        for w in plans.windows(2) {
+            assert!(w[1].n_hot >= w[0].n_hot, "growth-only run must be monotone");
+        }
+        assert!(
+            plans.last().unwrap().n_hot > plans[0].n_hot,
+            "undersized cache must have grown"
+        );
+        assert!(plans.iter().all(|p| p.n_hot <= 800), "never exceeds max_hot");
+        assert!(
+            plans.last().unwrap().hit_rate > plans[0].hit_rate,
+            "hit rate {} !> {}",
+            plans.last().unwrap().hit_rate,
+            plans[0].hit_rate
+        );
+        assert!(plans.last().unwrap().resize_events >= 1);
+    }
+
+    #[test]
+    fn oversized_cache_shrinks_toward_the_useful_set() {
+        let mut c = cfg(2_000, 6);
+        c.engine_params.min_hot = 50;
+        c.engine_params.max_hot = 4_000;
+        c.engine_params.target_hit_rate = 0.0; // never grow
+        c.engine_params.tail_utility = 0.9; // shrink while the tail is thin
+        let ctx = crate::coordinator::common::RunContext::build(&c).unwrap();
+        let (_, reports) = run_worker(&ctx, 0, None).unwrap();
+        let plans: Vec<_> = reports.iter().map(|r| r.cache_plan.unwrap()).collect();
+        assert!(
+            plans.last().unwrap().n_hot < plans[0].n_hot,
+            "oversized cache must shrink: {:?}",
+            plans.iter().map(|p| p.n_hot).collect::<Vec<_>>()
+        );
+        assert!(plans.iter().all(|p| p.n_hot >= 50), "never undercuts min_hot");
+    }
+
+    #[test]
+    fn deterministic_across_worker_thread_counts() {
+        // The controller must not observe thread count: identical serialized
+        // reports at RAPIDGNN_THREADS ∈ {1, 2, 8}. (Results are thread-count
+        // invariant by the parallel-determinism contract, so concurrently
+        // running tests are unaffected by this env churn.)
+        let run = || {
+            let mut c = cfg(64, 4);
+            c.engine_params.target_hit_rate = 0.95;
+            crate::coordinator::run(&c).unwrap().to_json()
+        };
+        let prev = std::env::var("RAPIDGNN_THREADS").ok();
+        std::env::set_var("RAPIDGNN_THREADS", "1");
+        let serial = run();
+        for threads in ["2", "8"] {
+            std::env::set_var("RAPIDGNN_THREADS", threads);
+            assert_eq!(serial, run(), "threads={threads} changed the adaptive report");
+        }
+        match prev {
+            Some(v) => std::env::set_var("RAPIDGNN_THREADS", v),
+            None => std::env::remove_var("RAPIDGNN_THREADS"),
+        }
+    }
+
+    #[test]
+    fn resize_period_gates_controller_evaluations() {
+        let mut c = cfg(8, 6);
+        c.engine_params.min_hot = 8;
+        c.engine_params.max_hot = 800;
+        c.engine_params.target_hit_rate = 0.99;
+        c.engine_params.tail_utility = 0.0;
+        c.engine_params.resize_period = 2; // boundaries 2 and 4 only
+        let ctx = crate::coordinator::common::RunContext::build(&c).unwrap();
+        let (_, reports) = run_worker(&ctx, 0, None).unwrap();
+        let plans: Vec<_> = reports.iter().map(|r| r.cache_plan.unwrap()).collect();
+        // Epoch 1 runs before the first evaluated boundary → still initial.
+        assert_eq!(plans[1].n_hot, plans[0].n_hot);
+        assert!(plans.last().unwrap().resize_events <= 2, "at most one per evaluation");
+        assert!(plans.last().unwrap().n_hot > plans[0].n_hot);
+    }
+}

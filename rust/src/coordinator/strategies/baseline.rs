@@ -48,7 +48,11 @@ pub(crate) struct OnDemandPlan<'a> {
 }
 
 impl BatchPlan for OnDemandPlan<'_> {
-    fn next(&mut self, comm: &mut CommStats, phases: &mut PhaseTimes) -> Result<Option<StagedStep>> {
+    fn next(
+        &mut self,
+        comm: &mut CommStats,
+        phases: &mut PhaseTimes,
+    ) -> Result<Option<StagedStep>> {
         let Some(meta) = self.batches.next() else {
             return Ok(None);
         };
@@ -67,7 +71,11 @@ impl BatchPlan for OnDemandPlan<'_> {
         let pull = self.ctx.kv.sync_pull_at(
             self.worker,
             &meta.input_nodes,
-            if materialize { Some(&mut features) } else { None },
+            if materialize {
+                Some(&mut features)
+            } else {
+                None
+            },
             comm,
             self.epoch,
         );
@@ -140,10 +148,15 @@ pub(crate) fn finish_on_demand_epoch(
     phases: &mut PhaseTimes,
 ) -> Result<EpochFinish> {
     let st = state.downcast_mut::<OnDemandState>().expect("on-demand worker state");
-    let epoch_time = if outcome.event_driven { outcome.total } else { phases.total() };
+    let epoch_time = if outcome.event_driven {
+        outcome.total
+    } else {
+        phases.total()
+    };
     Ok(EpochFinish {
         epoch_time,
         cache: CacheStats::default(),
+        cache_plan: None,
         // One batch in flight on device + model activations.
         device_bytes: totals.m_max * ctx.cfg.dataset.feature_dim as u64 * 4,
         host_bytes: st.host_bytes,

@@ -20,7 +20,7 @@
 //! `rapid` strategy through `plan_cached_epoch`/`finish_cached_epoch`; this
 //! file only maps epochs onto period-start schedules.
 
-use super::rapid::{precompute_epochs, plan_cached_epoch, finish_cached_epoch, RapidState};
+use super::rapid::{finish_cached_epoch, plan_cached_epoch, precompute_epochs, RapidState};
 use crate::config::RunConfig;
 use crate::coordinator::common::RunContext;
 use crate::coordinator::strategy::{

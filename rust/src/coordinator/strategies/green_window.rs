@@ -56,7 +56,11 @@ struct WindowedPlan<'a> {
 }
 
 impl BatchPlan for WindowedPlan<'_> {
-    fn next(&mut self, comm: &mut CommStats, phases: &mut PhaseTimes) -> Result<Option<StagedStep>> {
+    fn next(
+        &mut self,
+        comm: &mut CommStats,
+        phases: &mut PhaseTimes,
+    ) -> Result<Option<StagedStep>> {
         if let Some(step) = self.ready.pop_front() {
             return Ok(Some(step));
         }
@@ -110,7 +114,11 @@ impl BatchPlan for WindowedPlan<'_> {
             };
             offset += n;
             let num_remote = meta.num_remote;
-            let cost = if i == 0 { sample_total + pull.time } else { 0.0 };
+            let cost = if i == 0 {
+                sample_total + pull.time
+            } else {
+                0.0
+            };
             self.ready.push_back(StagedStep {
                 staged: StagedBatch {
                     meta,

@@ -9,10 +9,14 @@
 //!   2311.17847): re-enumerate every `k` epochs, replay in between.
 //! - [`green_window`] — GreenGNN-style windowed communication (arXiv
 //!   2606.02916): merge `W` consecutive batches' fetches into one pull.
+//! - [`adaptive_cache`] — RapidGNN with a per-epoch hot-cache controller:
+//!   `n_hot` resized between epochs from observed hit rates, clamped with
+//!   hysteresis.
 //!
-//! The latter two are registry-only engines: no coordinator file outside
-//! this directory knows they exist.
+//! All but the first two are registry-only engines: no coordinator file
+//! outside this directory knows they exist.
 
+pub mod adaptive_cache;
 pub mod baseline;
 pub mod fast_sample;
 pub mod green_window;

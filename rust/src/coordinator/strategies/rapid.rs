@@ -23,8 +23,10 @@ use crate::coordinator::strategy::{
 };
 use crate::metrics::CommStats;
 use crate::prefetch::stage_batch_at;
+use crate::sampler::schedule::{rank_order, tally_remote_threads};
 use crate::sampler::{enumerate_epoch, remote_frequency, BatchMeta};
 use crate::storage::{write_epoch, EpochReader};
+use crate::util::parallel::available_threads;
 use crate::{NodeId, Result, WorkerId};
 use std::sync::{Arc, Mutex};
 
@@ -54,7 +56,18 @@ pub fn precompute(ctx: &RunContext, worker: WorkerId) -> Result<RapidSetup> {
 }
 
 /// Precompute an explicit list of epochs to disk and build the initial
-/// steady cache from the first listed epoch's schedule.
+/// steady cache from the first listed epoch's schedule, sized by the run
+/// config's static `n_hot`.
+pub(crate) fn precompute_epochs(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epochs: &[u32],
+) -> Result<RapidSetup> {
+    precompute_epochs_n(ctx, worker, epochs, ctx.cfg.n_hot)
+}
+
+/// [`precompute_epochs`] with an explicit initial cache capacity — the
+/// `adaptive-cache` engine seeds its controller with a clamped `n_hot`.
 ///
 /// The enumeration fans out over all cores (`enumerate_epoch` parallelizes
 /// over batches — deterministic by the per-batch derived seeds). The first
@@ -62,10 +75,11 @@ pub fn precompute(ctx: &RunContext, worker: WorkerId) -> Result<RapidSetup> {
 /// accounted as background work overlapping the later epochs' write stream:
 /// only its overrun past that stream lands on setup time (the same overrun
 /// idiom `finish_epoch` uses for the `C_sec` builds).
-pub(crate) fn precompute_epochs(
+pub(crate) fn precompute_epochs_n(
     ctx: &RunContext,
     worker: WorkerId,
     epochs: &[u32],
+    n_hot: u32,
 ) -> Result<RapidSetup> {
     let cfg = &ctx.cfg;
     let fanouts = ctx.fanouts();
@@ -97,7 +111,7 @@ pub(crate) fn precompute_epochs(
         write_epoch(&ctx.metadata_path, &sched)?;
         if k == 0 {
             rank_time = sched.total_remote() as f64 * ctx.costs.rank_per_access_sec;
-            hot = top_hot(&sched.batches, cfg.n_hot);
+            hot = top_hot(&sched.batches, n_hot);
         }
     }
     // The first epoch's ranking runs in the background of the remaining
@@ -125,14 +139,13 @@ pub(crate) fn precompute_epochs(
     })
 }
 
-/// Stream one epoch's blocks from SSD and rank its remote accesses (the
-/// background `C_sec` build). Returns the top-`n_hot` node list and the
-/// simulated background time (stream read + frequency tally).
-pub(crate) fn stream_top_hot(
+/// Stream one epoch's blocks from SSD, charging the read + ranking time
+/// shared by every consumer of the on-disk schedule.
+fn stream_epoch_batches(
     ctx: &RunContext,
     worker: WorkerId,
     epoch: u32,
-) -> Result<(Vec<NodeId>, f64)> {
+) -> Result<(Vec<BatchMeta>, f64)> {
     let mut reader = EpochReader::open(&ctx.metadata_path, worker, epoch)?;
     let mut batches: Vec<BatchMeta> = Vec::with_capacity(reader.num_batches as usize);
     let mut time = 0.0;
@@ -143,8 +156,47 @@ pub(crate) fn stream_top_hot(
         batches.push(b);
     }
     time += accesses as f64 * ctx.costs.rank_per_access_sec;
-    let hot = top_hot(&batches, ctx.cfg.n_hot);
-    Ok((hot, time))
+    Ok((batches, time))
+}
+
+/// Stream one epoch's blocks from SSD and rank its remote accesses (the
+/// background `C_sec` build). Returns the top-`n_hot` node list and the
+/// simulated background time (stream read + frequency tally).
+pub(crate) fn stream_top_hot(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epoch: u32,
+) -> Result<(Vec<NodeId>, f64)> {
+    let (batches, time) = stream_epoch_batches(ctx, worker, epoch)?;
+    Ok((top_hot(&batches, ctx.cfg.n_hot), time))
+}
+
+/// Stream one epoch's blocks and return the sorted top-`k` of its
+/// remote-frequency ranking (with counts) plus the total access count — the
+/// adaptive controller's inputs. Partial selection keeps this O(R) like
+/// [`top_hot`] rather than the full ranking's O(R log R) sort; the sorted
+/// prefix equals `remote_frequency(..)[..k]` for any cut (pinned by the
+/// cache module's partial-selection tests). Same simulated time as
+/// [`stream_top_hot`] — identical read and tally charges, only the cut
+/// differs.
+pub(crate) fn stream_ranked_top(
+    ctx: &RunContext,
+    worker: WorkerId,
+    epoch: u32,
+    k: u32,
+) -> Result<(Vec<(NodeId, u32)>, u64, f64)> {
+    let (batches, time) = stream_epoch_batches(ctx, worker, epoch)?;
+    let mut ranked = tally_remote_threads(available_threads(), &batches);
+    let total: u64 = ranked.iter().map(|&(_, c)| c as u64).sum();
+    let n = k as usize;
+    if n == 0 {
+        ranked.clear();
+    } else if n < ranked.len() {
+        ranked.select_nth_unstable_by(n - 1, rank_order);
+        ranked.truncate(n);
+    }
+    ranked.sort_unstable_by(rank_order);
+    Ok((ranked, total, time))
 }
 
 /// The scheduled batch plan: stream precomputed metadata from SSD and stage
@@ -197,6 +249,14 @@ pub fn ctor(_cfg: &RunConfig) -> Box<dyn TrainingStrategy> {
     Box::new(RapidStrategy)
 }
 
+/// A prepared `C_sec` rebuild: the hot-id list to pull plus the local
+/// background time (stream read + ranking, already slowdown-scaled) it cost
+/// to produce.
+pub(crate) struct CacheRebuild {
+    pub(crate) hot: Vec<NodeId>,
+    pub(crate) local_time: f64,
+}
+
 /// Shared epoch-boundary bookkeeping for schedule-driven cached engines:
 /// optionally build `C_sec` from `rebuild_from` (an on-disk epoch), account
 /// the overrun, and swap at the boundary.
@@ -212,23 +272,58 @@ pub(crate) fn finish_cached_epoch(
     phases: &mut crate::metrics::PhaseTimes,
     comm: &mut CommStats,
 ) -> Result<EpochFinish> {
+    let st = state.downcast_mut::<RapidState>().expect("rapid-family worker state");
+    let rebuild = match rebuild_from {
+        Some(source_epoch) => {
+            let (hot, rank_time) = stream_top_hot(ctx, worker, source_epoch)?;
+            // Local work (stream read + ranking) carries the worker
+            // slowdown; the VectorPull is priced per-link by the fabric.
+            // Both run during `epoch`, so that epoch's transient phase
+            // applies.
+            Some(CacheRebuild { hot, local_time: ctx.slowdown_at(worker, epoch) * rank_time })
+        }
+        None => None,
+    };
+    let n_hot = ctx.cfg.n_hot;
+    finish_cached_epoch_with(
+        ctx, st, worker, epoch, rebuild, n_hot, n_hot, outcome, totals, phases, comm,
+    )
+}
+
+/// [`finish_cached_epoch`] with a pre-built rebuild and explicit cache
+/// capacities for the memory report — the adaptive engine decides all three
+/// (its controller may have resized `n_hot` away from the static config).
+/// `steady_n_hot` is the capacity that served this epoch, `staged_n_hot` the
+/// capacity of the `C_sec` being built (they differ on a resize epoch, and
+/// the device bound covers both buffers). With both equal to `cfg.n_hot`
+/// and a rebuild from [`stream_top_hot`] this is operation-for-operation
+/// the static path (the degeneration pin relies on it).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_cached_epoch_with(
+    ctx: &RunContext,
+    st: &mut RapidState,
+    worker: WorkerId,
+    epoch: u32,
+    rebuild: Option<CacheRebuild>,
+    steady_n_hot: u32,
+    staged_n_hot: u32,
+    outcome: &PipelineOutcome,
+    totals: &EpochTotals,
+    phases: &mut crate::metrics::PhaseTimes,
+    comm: &mut CommStats,
+) -> Result<EpochFinish> {
     let cfg = &ctx.cfg;
     let full = cfg.exec_mode == ExecMode::Full;
-    let st = state.downcast_mut::<RapidState>().expect("rapid-family worker state");
 
     // Background C_sec build for the next epoch (accounted as parallel work;
     // only its *overrun* past the epoch stalls the swap).
     let mut bg_time = 0.0;
-    if let Some(source_epoch) = rebuild_from {
-        let (hot, rank_time) = stream_top_hot(ctx, worker, source_epoch)?;
-        // Local work (stream read + ranking) carries the worker slowdown;
-        // the VectorPull below is priced per-link by the fabric. Both run
-        // during `epoch`, so that epoch's transient phase applies.
-        bg_time += ctx.slowdown_at(worker, epoch) * rank_time;
+    if let Some(rb) = rebuild {
+        bg_time += rb.local_time;
         let mut rows: Vec<f32> = Vec::new();
         let pull = ctx.kv.vector_pull_at(
             worker,
-            &hot,
+            &rb.hot,
             if full { Some(&mut rows) } else { None },
             comm,
             epoch,
@@ -237,7 +332,7 @@ pub(crate) fn finish_cached_epoch(
         st.cache
             .lock()
             .unwrap()
-            .stage_secondary(CacheBuffer::new(&hot, rows, ctx.kv.feature_dim()));
+            .stage_secondary(CacheBuffer::new(&rb.hot, rows, ctx.kv.feature_dim()));
     }
 
     let overrun = (bg_time - outcome.total).max(0.0);
@@ -257,13 +352,16 @@ pub(crate) fn finish_cached_epoch(
     Ok(EpochFinish {
         epoch_time,
         cache: cache_stats,
+        cache_plan: None,
         // Paper bound: 2·n_hot·d + Q·m_max·d (both cache buffers + the
-        // staged queue). Trace mode reports the bound-equivalent since rows
-        // aren't materialized.
-        device_bytes: device_cache_bytes.max(2 * cfg.n_hot as u64 * d as u64 * 4)
+        // staged queue; on an adaptive resize epoch the buffers differ, so
+        // the bound sums their capacities). Trace mode reports the
+        // bound-equivalent since rows aren't materialized.
+        device_bytes: device_cache_bytes
+            .max((steady_n_hot as u64 + staged_n_hot as u64) * d as u64 * 4)
             + cfg.prefetch_q as u64 * totals.m_max * d as u64 * 4,
         // Streaming keeps host memory at one batch + the ranking tally.
-        host_bytes: totals.m_max * 8 + cfg.n_hot as u64 * 12,
+        host_bytes: totals.m_max * 8 + steady_n_hot as u64 * 12,
     })
 }
 
@@ -278,6 +376,19 @@ pub(crate) fn plan_cached_epoch<'a>(
     comm: &mut CommStats,
 ) -> Result<Box<dyn BatchPlan + 'a>> {
     let st = state.downcast_mut::<RapidState>().expect("rapid-family worker state");
+    plan_rapid_epoch(ctx, st, worker, epoch, sched_epoch, comm)
+}
+
+/// [`plan_cached_epoch`] on an already-downcast [`RapidState`] (the adaptive
+/// engine nests one inside its own state).
+pub(crate) fn plan_rapid_epoch<'a>(
+    ctx: &'a RunContext,
+    st: &mut RapidState,
+    worker: WorkerId,
+    epoch: u32,
+    sched_epoch: u32,
+    comm: &mut CommStats,
+) -> Result<Box<dyn BatchPlan + 'a>> {
     st.cache.lock().unwrap().reset_stats();
     if epoch == 0 {
         comm.merge(&st.setup_comm); // initial VectorPull bytes
@@ -337,7 +448,11 @@ impl TrainingStrategy for RapidStrategy {
         phases: &mut crate::metrics::PhaseTimes,
         comm: &mut CommStats,
     ) -> Result<EpochFinish> {
-        let rebuild = if epoch + 1 < ctx.cfg.epochs { Some(epoch + 1) } else { None };
+        let rebuild = if epoch + 1 < ctx.cfg.epochs {
+            Some(epoch + 1)
+        } else {
+            None
+        };
         finish_cached_epoch(ctx, state, worker, epoch, rebuild, outcome, totals, phases, comm)
     }
 }

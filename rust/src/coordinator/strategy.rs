@@ -113,6 +113,9 @@ pub struct EpochFinish {
     pub epoch_time: f64,
     /// Cache counters for the report (default for cache-less engines).
     pub cache: CacheStats,
+    /// Adaptive-cache controller telemetry (`None` for static caches;
+    /// omitted from serialized reports so their traces stay byte-stable).
+    pub cache_plan: Option<crate::metrics::CacheReport>,
     /// Peak device bytes attributable to this epoch.
     pub device_bytes: u64,
     /// Peak host bytes attributable to this epoch.
@@ -208,8 +211,9 @@ pub struct EngineRegistry {
 }
 
 impl EngineRegistry {
-    /// The built-in engines: the paper's four plus the two scenario engines
-    /// that prove the registry is open (`fast-sample`, `green-window`).
+    /// The built-in engines: the paper's four plus the scenario engines
+    /// that prove the registry is open (`fast-sample`, `green-window`,
+    /// `adaptive-cache`).
     pub fn builtin() -> EngineRegistry {
         let mut reg = EngineRegistry { entries: Vec::new() };
         for entry in [
@@ -242,6 +246,11 @@ impl EngineRegistry {
                 id: "green-window",
                 display_name: "GreenWindow",
                 ctor: super::strategies::green_window::ctor,
+            },
+            EngineEntry {
+                id: "adaptive-cache",
+                display_name: "AdaptiveCache",
+                ctor: super::strategies::adaptive_cache::ctor,
             },
         ] {
             reg.register(entry).expect("builtin engine ids are unique");
@@ -307,12 +316,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn builtin_registry_holds_all_six_engines() {
+    fn builtin_registry_holds_all_seven_engines() {
         let reg = EngineRegistry::global();
         let ids: Vec<_> = reg.ids().collect();
         assert_eq!(
             ids,
-            ["rapid", "dgl-metis", "dgl-random", "dist-gcn", "fast-sample", "green-window"]
+            [
+                "rapid",
+                "dgl-metis",
+                "dgl-random",
+                "dist-gcn",
+                "fast-sample",
+                "green-window",
+                "adaptive-cache"
+            ]
         );
         for id in ids {
             let s = reg.create_by_id(id, &RunConfig::default()).unwrap();
@@ -382,6 +399,7 @@ mod tests {
                 Ok(EpochFinish {
                     epoch_time: outcome.total,
                     cache: CacheStats::default(),
+                    cache_plan: None,
                     device_bytes: 0,
                     host_bytes: 0,
                 })

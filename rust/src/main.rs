@@ -92,6 +92,13 @@ COMMON FLAGS
   --groups G / --routers R             dragonfly knobs (defaults 2 / 2)
   --resample-period K   fast-sample: re-enumerate the schedule every K epochs
   --fetch-window W  green-window: batches merged per windowed fetch
+  --resize-period K adaptive-cache: evaluate the resize controller every K
+                    epoch boundaries (0 = never, which is exactly `rapid`)
+  --min-hot N / --max-hot N            adaptive-cache n_hot clamps
+  --target-hit-rate F                  adaptive-cache: grow below this rate
+  --tail-utility F  adaptive-cache: shrink when the hot set's marginal
+                    quarter serves under this fraction of remote accesses
+  --hot-growth F / --hysteresis N      resize factor / flip-flop damping
   --json PATH       write the run report as JSON"
     );
 }
@@ -245,6 +252,27 @@ fn config_from_flags(flags: &Flags) -> Result<RunConfig> {
     if let Some(v) = flags.get("fetch-window") {
         cfg.engine_params.fetch_window = v.parse()?;
     }
+    if let Some(v) = flags.get("resize-period") {
+        cfg.engine_params.resize_period = v.parse()?;
+    }
+    if let Some(v) = flags.get("min-hot") {
+        cfg.engine_params.min_hot = v.parse()?;
+    }
+    if let Some(v) = flags.get("max-hot") {
+        cfg.engine_params.max_hot = v.parse()?;
+    }
+    if let Some(v) = flags.get("target-hit-rate") {
+        cfg.engine_params.target_hit_rate = v.parse()?;
+    }
+    if let Some(v) = flags.get("tail-utility") {
+        cfg.engine_params.tail_utility = v.parse()?;
+    }
+    if let Some(v) = flags.get("hot-growth") {
+        cfg.engine_params.hot_growth = v.parse()?;
+    }
+    if let Some(v) = flags.get("hysteresis") {
+        cfg.engine_params.hysteresis = v.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -278,7 +306,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     }
     let mut epochs: Vec<u32> = by_epoch.keys().copied().collect();
     epochs.sort_unstable();
-    for ep in epochs {
+    for &ep in &epochs {
         let group = &by_epoch[&ep];
         let n = group.len() as f64;
         let avg = |f: &dyn Fn(&rapidgnn::metrics::EpochReport) -> f64| -> f64 {
@@ -302,6 +330,40 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         ]);
     }
     t.print();
+    if report.epochs.iter().any(|e| e.cache_plan.is_some()) {
+        let mut ct = Table::new(
+            "Adaptive hot-cache (controller telemetry)",
+            &["epoch", "n_hot", "hits", "misses", "hit rate", "resizes"],
+        );
+        for &ep in &epochs {
+            let plans: Vec<_> = by_epoch[&ep].iter().filter_map(|e| e.cache_plan).collect();
+            if plans.is_empty() {
+                continue;
+            }
+            let hits: u64 = plans.iter().map(|p| p.hits).sum();
+            let misses: u64 = plans.iter().map(|p| p.misses).sum();
+            let lo = plans.iter().map(|p| p.n_hot).min().unwrap();
+            let hi = plans.iter().map(|p| p.n_hot).max().unwrap();
+            let resizes = plans.iter().map(|p| p.resize_events).max().unwrap();
+            ct.row(&[
+                ep.to_string(),
+                if lo == hi {
+                    lo.to_string()
+                } else {
+                    format!("{lo}-{hi}")
+                },
+                hits.to_string(),
+                misses.to_string(),
+                if hits + misses > 0 {
+                    format!("{:.1}%", 100.0 * hits as f64 / (hits + misses) as f64)
+                } else {
+                    "-".into()
+                },
+                resizes.to_string(),
+            ]);
+        }
+        ct.print();
+    }
     println!(
         "total {} (+{} setup) | {:.0} J CPU, {:.0} J GPU | {} remote rows",
         fmt_secs(report.total_time),
@@ -608,6 +670,13 @@ mod tests {
             ("seed", "99"),
             ("resample-period", "6"),
             ("fetch-window", "3"),
+            ("resize-period", "2"),
+            ("min-hot", "16"),
+            ("max-hot", "2048"),
+            ("target-hit-rate", "0.9"),
+            ("tail-utility", "0.02"),
+            ("hot-growth", "1.5"),
+            ("hysteresis", "3"),
         ]);
         let cfg = config_from_flags(&f).unwrap();
         assert_eq!(cfg.dataset.name, "products-sim");
@@ -622,6 +691,13 @@ mod tests {
         assert_eq!(cfg.base_seed, 99);
         assert_eq!(cfg.engine_params.resample_period, 6);
         assert_eq!(cfg.engine_params.fetch_window, 3);
+        assert_eq!(cfg.engine_params.resize_period, 2);
+        assert_eq!(cfg.engine_params.min_hot, 16);
+        assert_eq!(cfg.engine_params.max_hot, 2048);
+        assert!((cfg.engine_params.target_hit_rate - 0.9).abs() < 1e-12);
+        assert!((cfg.engine_params.tail_utility - 0.02).abs() < 1e-12);
+        assert!((cfg.engine_params.hot_growth - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.engine_params.hysteresis, 3);
     }
 
     #[test]

@@ -54,9 +54,45 @@ impl CacheStats {
         }
     }
 
+    /// Lookups that missed the cache.
+    pub fn misses(&self) -> u64 {
+        self.lookups - self.hits
+    }
+
     pub fn merge(&mut self, o: &CacheStats) {
         self.lookups += o.lookups;
         self.hits += o.hits;
+    }
+}
+
+/// Per-epoch hot-cache controller telemetry, reported by engines whose cache
+/// capacity is a live quantity (the `adaptive-cache` strategy). Static-cache
+/// engines leave it `None`, and serialization omits it entirely, so existing
+/// reports — including the golden trace fixture — stay byte-identical.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheReport {
+    /// Steady-cache capacity (`n_hot`) that served this epoch.
+    pub n_hot: u32,
+    /// Cache hits observed this epoch.
+    pub hits: u64,
+    /// Cache misses observed this epoch.
+    pub misses: u64,
+    /// Hit rate in [0,1] for this epoch.
+    pub hit_rate: f64,
+    /// Cumulative controller resizes applied through this epoch's boundary.
+    pub resize_events: u32,
+}
+
+impl CacheReport {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("n_hot", self.n_hot)
+            .set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("hit_rate", self.hit_rate)
+            .set("resize_events", self.resize_events);
+        v
     }
 }
 
@@ -102,6 +138,9 @@ pub struct EpochReport {
     pub phases: PhaseTimes,
     pub comm: CommStats,
     pub cache: CacheStats,
+    /// Adaptive-cache controller telemetry (`None` for static-cache engines;
+    /// omitted from serialization so their traces stay byte-identical).
+    pub cache_plan: Option<CacheReport>,
     /// Mean training loss over the epoch (NaN in trace mode).
     pub mean_loss: f64,
     /// Training accuracy over the epoch's seeds (NaN in trace mode).
@@ -137,6 +176,9 @@ impl EpochReport {
             .set("net_time", self.comm.net_time)
             .set("cache_lookups", self.cache.lookups)
             .set("cache_hits", self.cache.hits);
+        if let Some(cp) = &self.cache_plan {
+            v.set("cache_plan", cp.to_value());
+        }
         v
     }
 }
@@ -267,6 +309,29 @@ impl RunReport {
         c.hit_rate()
     }
 
+    /// Per-(worker, epoch) adaptive-cache telemetry, in report order. Empty
+    /// for static-cache engines.
+    pub fn cache_timeline(&self) -> impl Iterator<Item = (&EpochReport, &CacheReport)> + '_ {
+        self.epochs.iter().filter_map(|e| e.cache_plan.as_ref().map(|cp| (e, cp)))
+    }
+
+    /// Largest steady-cache capacity any worker ran with (the adaptive
+    /// controller's memory envelope); 0 when no engine reported one.
+    pub fn peak_n_hot(&self) -> u32 {
+        self.cache_timeline().map(|(_, cp)| cp.n_hot).max().unwrap_or(0)
+    }
+
+    /// Aggregate hit rate over the final epoch only (the adaptive
+    /// controller's steady state, once resizes have settled).
+    pub fn final_epoch_hit_rate(&self) -> f64 {
+        let last = self.epochs.iter().map(|e| e.epoch).max();
+        let mut c = CacheStats::default();
+        for e in self.epochs.iter().filter(|e| Some(e.epoch) == last) {
+            c.merge(&e.cache);
+        }
+        c.hit_rate()
+    }
+
     /// Peak device bytes over the run.
     pub fn peak_device_bytes(&self) -> u64 {
         self.epochs.iter().map(|e| e.device_bytes).max().unwrap_or(0)
@@ -381,17 +446,78 @@ mod tests {
 
     #[test]
     fn loss_curve_skips_nan_trace_entries() {
-        let r = report_with(vec![EpochReport { epoch: 0, mean_loss: f64::NAN, ..Default::default() }]);
+        let r = report_with(vec![EpochReport {
+            epoch: 0,
+            mean_loss: f64::NAN,
+            ..Default::default()
+        }]);
         assert!(r.loss_curve().is_empty());
     }
 
     #[test]
     fn merge_accumulates() {
-        let mut a = CommStats { vector_pulls: 1, sync_pulls: 2, remote_rows: 3, vector_rows: 1, bytes: 4, net_time: 0.5 };
+        let mut a = CommStats {
+            vector_pulls: 1,
+            sync_pulls: 2,
+            remote_rows: 3,
+            vector_rows: 1,
+            bytes: 4,
+            net_time: 0.5,
+        };
         a.merge(&a.clone());
         assert_eq!(a.vector_pulls, 2);
         assert_eq!(a.bytes, 8);
         assert!((a.net_time - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_plan_is_omitted_unless_present() {
+        // Byte-stability contract: a report without adaptive telemetry must
+        // serialize to exactly the pre-CacheReport shape.
+        let without = EpochReport { steps: 1, ..Default::default() };
+        assert!(!without.to_value().to_json_pretty().contains("cache_plan"));
+        let with = EpochReport {
+            steps: 1,
+            cache_plan: Some(CacheReport {
+                n_hot: 512,
+                hits: 9,
+                misses: 3,
+                hit_rate: 0.75,
+                resize_events: 2,
+            }),
+            ..Default::default()
+        };
+        let json = with.to_value().to_json_pretty();
+        assert!(json.contains("cache_plan") && json.contains("resize_events"), "{json}");
+    }
+
+    #[test]
+    fn cache_timeline_and_peaks() {
+        let mk = |epoch, n_hot, hits, lookups| EpochReport {
+            epoch,
+            cache: CacheStats { lookups, hits },
+            cache_plan: Some(CacheReport {
+                n_hot,
+                hits,
+                misses: lookups - hits,
+                hit_rate: hits as f64 / lookups as f64,
+                resize_events: 0,
+            }),
+            ..Default::default()
+        };
+        let r = report_with(vec![mk(0, 100, 1, 10), mk(1, 200, 9, 10)]);
+        assert_eq!(r.cache_timeline().count(), 2);
+        assert_eq!(r.peak_n_hot(), 200);
+        assert!((r.final_epoch_hit_rate() - 0.9).abs() < 1e-12);
+        assert_eq!(report_with(vec![]).peak_n_hot(), 0);
+        let plain = report_with(vec![EpochReport::default()]);
+        assert_eq!(plain.cache_timeline().count(), 0);
+    }
+
+    #[test]
+    fn cache_stats_misses() {
+        assert_eq!(CacheStats { lookups: 10, hits: 7 }.misses(), 3);
+        assert_eq!(CacheStats::default().misses(), 0);
     }
 
     #[test]

@@ -526,7 +526,10 @@ mod tests {
         let base = fabric().charge_rpc(0, 3, 1000, 400).time;
         assert!((f.charge_rpc(0, 3, 1000, 400).time - base).abs() < 1e-12);
         assert!((f.charge_rpc(0, 1, 1000, 400).time - 2.0 * base).abs() < 1e-12);
-        assert!((f.charge_rpc(1, 2, 1000, 400).time - 4.0 * base).abs() < 1e-12, "max endpoint wins");
+        assert!(
+            (f.charge_rpc(1, 2, 1000, 400).time - 4.0 * base).abs() < 1e-12,
+            "max endpoint wins"
+        );
     }
 
     #[test]
@@ -564,7 +567,8 @@ mod tests {
         // A single RPC can trip both cadences at once (counted once), so the
         // total lies between max(..) and the sum.
         assert!(
-            got >= per_link_expected.max(global_expected) && got <= per_link_expected + global_expected,
+            got >= per_link_expected.max(global_expected)
+                && got <= per_link_expected + global_expected,
             "retries {got} outside [{}, {}]",
             per_link_expected.max(global_expected),
             per_link_expected + global_expected

@@ -43,7 +43,11 @@ pub fn partition_quality(g: &CsrGraph, part: &Partition) -> PartitionQuality {
         part.halo_nodes.iter().map(Vec::len).sum::<usize>() as f64 / part.num_parts as f64;
     PartitionQuality {
         edge_cut_fraction: cut as f64 / g.num_directed_edges().max(1) as f64,
-        balance: if mean_size > 0.0 { max_size / mean_size } else { 1.0 },
+        balance: if mean_size > 0.0 {
+            max_size / mean_size
+        } else {
+            1.0
+        },
         remote_neighbor_fraction: remote_frac_sum / nodes_with_edges.max(1) as f64,
         mean_halo,
     }

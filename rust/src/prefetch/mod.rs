@@ -88,7 +88,11 @@ pub fn stage_batch_at(
     let pull = kv.sync_pull_at(
         worker,
         &misses,
-        if materialize && kv.has_values() { Some(&mut pulled) } else { None },
+        if materialize && kv.has_values() {
+            Some(&mut pulled)
+        } else {
+            None
+        },
         stats,
         epoch,
     );

@@ -60,7 +60,13 @@ pub struct StepOutput {
 
 impl SageModel {
     /// Build an L-layer model: `feature_dim → hidden (×L-1) → num_classes`.
-    pub fn new(feature_dim: usize, hidden: usize, num_classes: usize, layers: usize, seed: u64) -> SageModel {
+    pub fn new(
+        feature_dim: usize,
+        hidden: usize,
+        num_classes: usize,
+        layers: usize,
+        seed: u64,
+    ) -> SageModel {
         assert!(layers >= 1);
         let mut dims = vec![feature_dim];
         for _ in 0..layers - 1 {
@@ -84,7 +90,11 @@ impl SageModel {
         for (l, layer) in self.layers.iter().enumerate() {
             let block = &batch.blocks[l];
             let z = layer_forward(layer, &h, block);
-            h = if l + 1 < self.layers.len() { z.relu() } else { z };
+            h = if l + 1 < self.layers.len() {
+                z.relu()
+            } else {
+                z
+            };
         }
         h
     }
@@ -100,7 +110,13 @@ impl SageModel {
     ///
     /// `x0` is the `[n_input, d]` feature block (input-node order), `labels`
     /// the per-seed labels (u16::MAX = padding).
-    pub fn train_step(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16], lr: f32) -> StepOutput {
+    pub fn train_step(
+        &mut self,
+        x0: &Mat,
+        batch: &SampledBatch,
+        labels: &[u16],
+        lr: f32,
+    ) -> StepOutput {
         let (out, grads) = self.forward_backward(x0, batch, labels);
         for (layer, g) in self.layers.iter_mut().zip(&grads) {
             layer.w_self.sgd(&g.w_self, lr);
@@ -136,7 +152,11 @@ impl SageModel {
             let z = layer_forward_with_agg(layer, &h, &agg, block);
             inputs.push(h);
             aggs.push(agg);
-            let next = if l + 1 < num_layers { z.relu() } else { z.clone() };
+            let next = if l + 1 < num_layers {
+                z.relu()
+            } else {
+                z.clone()
+            };
             pres.push(z);
             h = next;
         }
@@ -305,7 +325,8 @@ mod tests {
     #[test]
     fn forward_shapes() {
         let (ds, batch, x0, _labels) = tiny_batch();
-        let model = SageModel::new(ds.config.feature_dim as usize, 8, ds.config.num_classes as usize, 2, 1);
+        let model =
+            SageModel::new(ds.config.feature_dim as usize, 8, ds.config.num_classes as usize, 2, 1);
         let logits = model.forward(&x0, &batch);
         assert_eq!(logits.rows, batch.seeds().len());
         assert_eq!(logits.cols, ds.config.num_classes as usize);

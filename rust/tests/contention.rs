@@ -210,7 +210,10 @@ fn contended_runs_are_identical_across_thread_counts() {
                     oversubscription: 1.0 + gen::f64_in(rng, 0.0, 15.0),
                 },
                 1 => Topology::FatTree { k: 2 + gen::usize_in(rng, 0, 2) as u32 },
-                2 => Topology::Dragonfly { groups: 2, routers: 1 + gen::usize_in(rng, 0, 1) as u32 },
+                2 => Topology::Dragonfly {
+                    groups: 2,
+                    routers: 1 + gen::usize_in(rng, 0, 1) as u32,
+                },
                 _ => Topology::Star { hub: 0 },
             };
             let engine = if gen::usize_in(rng, 0, 1) == 0 {
