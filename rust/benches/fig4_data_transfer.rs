@@ -1,10 +1,14 @@
 //! Figure 4 — mean data transferred per training step, RapidGNN vs
-//! DGL-METIS, across the three datasets and batch sizes 1000/2000/3000.
+//! DGL-METIS, across the three datasets and batch sizes 1000/2000/3000,
+//! plus the compression cells: quant-pull (int8 feature wire codec) against
+//! rapid's uncompressed pulls.
 //!
 //! Paper: OGBN-Papers 1.5/3.1/4.6 MB vs METIS 4.3/8.3/12.0 (≈2.6–2.8×);
 //! Reddit 0.3/0.6/0.9 MB vs 6.8/10.0/14.0 (15–23×); Products 2.0/3.8/5.4 vs
 //! 4.8/8.8/12.1 (2.2–2.5×). Expected shape: RapidGNN always lower, Reddit's
-//! reduction largest (heaviest tail × widest rows).
+//! reduction largest (heaviest tail × widest rows). The int8 cells stack a
+//! further ≈3.7× payload cut (d + 8·⌈d/128⌉ vs 4d bytes per row) on top of
+//! whatever rows the engine already avoided moving.
 
 use rapidgnn::config::{DatasetPreset, Engine};
 use rapidgnn::coordinator;
@@ -14,14 +18,24 @@ use rapidgnn::util::value::Value;
 
 fn main() -> rapidgnn::Result<()> {
     let mut t = Table::new(
-        "Fig 4 — mean data transfer per step: RapidGNN vs DGL-METIS",
-        &["dataset", "batch", "Rapid/step", "Rapid+cache/step", "METIS/step", "reduction"],
+        "Fig 4 — mean data transfer per step: RapidGNN vs DGL-METIS vs quant-pull",
+        &[
+            "dataset",
+            "batch",
+            "Rapid/step",
+            "Rapid+cache/step",
+            "METIS/step",
+            "reduction",
+            "int8/step",
+            "int8 ratio",
+        ],
     );
     let mut json = Vec::new();
     for preset in DatasetPreset::PAPER {
         for batch in PAPER_BATCHES {
             let rapid = coordinator::run(&paper_run(preset, Engine::Rapid, batch))?;
             let metis = coordinator::run(&paper_run(preset, Engine::DglMetis, batch))?;
+            let quant = coordinator::run(&paper_run(preset, Engine::QuantPull, batch))?;
             let steps: u64 = rapid.epochs.iter().map(|e| e.steps as u64).sum();
             let row_bytes = paper_run(preset, Engine::Rapid, batch)
                 .dataset
@@ -31,6 +45,26 @@ fn main() -> rapidgnn::Result<()> {
             let r_sync = rapid.sync_remote_rows() as f64 * row_bytes as f64 / steps as f64;
             let r_total = rapid.mean_bytes_per_step();
             let m = metis.mean_bytes_per_step();
+            // Compression gates: the codec must never change WHICH rows move,
+            // and the priced feature payload (per-block headers included)
+            // must shrink ≥ 3.5x — the int8 budget at every paper width.
+            assert_eq!(
+                quant.total_remote_rows(),
+                rapid.total_remote_rows(),
+                "{}: quant-pull changed remote row movement",
+                preset.name()
+            );
+            let comp = quant
+                .compression
+                .as_ref()
+                .expect("quant-pull must report compression telemetry");
+            assert!(
+                comp.effective_compression_ratio >= 3.5,
+                "{}: int8 payload ratio {:.2} below the 3.5x gate",
+                preset.name(),
+                comp.effective_compression_ratio
+            );
+            let q_total = quant.mean_bytes_per_step();
             t.row(&[
                 preset.name().into(),
                 batch.to_string(),
@@ -38,18 +72,24 @@ fn main() -> rapidgnn::Result<()> {
                 fmt_bytes(r_total),
                 fmt_bytes(m),
                 format!("{:.1}x", m / r_sync.max(1.0)),
+                fmt_bytes(q_total),
+                format!("{:.2}x", r_total / q_total.max(1.0)),
             ]);
             let mut cell = Value::table();
             cell.set("dataset", preset.name())
                 .set("batch", batch)
                 .set("rapid_sync_bytes_per_step", r_sync)
                 .set("rapid_total_bytes_per_step", r_total)
-                .set("metis_bytes_per_step", m);
+                .set("metis_bytes_per_step", m)
+                .set("quant_pull_bytes_per_step", q_total)
+                .set("quant_payload_ratio", comp.effective_compression_ratio)
+                .set("quant_bytes_saved", comp.bytes_saved);
             json.push(cell);
         }
     }
     t.print();
     println!("paper reductions: Papers ~2.6-2.8x, Products ~2.2-2.5x, Reddit ~15-23x");
+    println!("int8 payload gate: >=3.5x on every dataset, remote rows codec-invariant");
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/fig4.json", Value::Arr(json).to_json_pretty())?;
     Ok(())

@@ -81,6 +81,62 @@ fn main() -> rapidgnn::Result<()> {
             json.push(cell);
         }
     }
+    // Compression convergence cells: error-fed top-k gradient sparsification
+    // at k = 10% against the dense update, same seed stream (identical
+    // sampling — only the optimizer step differs, so the gap isolates the
+    // compression effect). Gate: final loss within 2% relative of dense.
+    for preset in [DatasetPreset::ProductsSim, DatasetPreset::RedditSim] {
+        let batch = 256u32;
+        let dense = coordinator::run(&cfg(preset, Engine::Rapid, batch))?;
+        let sparse = coordinator::run(&cfg(preset, Engine::GradTopk, batch))?;
+        let dl = dense.loss_curve();
+        let sl = sparse.loss_curve();
+        let mut t = Table::new(
+            &format!("Fig 9b — {} batch {}: dense vs grad-topk k=10%", preset.name(), batch),
+            &["epoch", "dense loss", "top-k loss", "gap"],
+        );
+        for ((e, a), (_, b)) in dl.iter().zip(&sl) {
+            t.row(&[
+                e.to_string(),
+                format!("{a:.4}"),
+                format!("{b:.4}"),
+                format!("{:+.2}%", (b - a) / a * 100.0),
+            ]);
+        }
+        t.print();
+        let (fd, fs) = (dl.last().unwrap().1, sl.last().unwrap().1);
+        let rel = (fs - fd).abs() / fd;
+        println!(
+            "grad-topk final-loss gap: {:.2}% relative (gate: < 2%)",
+            rel * 100.0
+        );
+        assert!(
+            rel < 0.02,
+            "{}: grad-topk final loss {fs:.4} strays {:.2}% from dense {fd:.4}",
+            preset.name(),
+            rel * 100.0
+        );
+        let comp = sparse
+            .compression
+            .as_ref()
+            .expect("grad-topk must report gradient telemetry");
+        let mut cell = Value::table();
+        cell.set("dataset", preset.name())
+            .set("batch", batch)
+            .set("dense_final_loss", fd)
+            .set("grad_topk_final_loss", fs)
+            .set("grad_elems_sent", comp.grad_elems_sent)
+            .set("grad_elems_total", comp.grad_elems_total)
+            .set(
+                "dense_loss_curve",
+                Value::Arr(dl.iter().map(|&(_, l)| Value::Float(l)).collect()),
+            )
+            .set(
+                "grad_topk_loss_curve",
+                Value::Arr(sl.iter().map(|&(_, l)| Value::Float(l)).collect()),
+            );
+        json.push(cell);
+    }
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/fig9.json", Value::Arr(json).to_json_pretty())?;
     Ok(())

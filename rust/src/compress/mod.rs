@@ -1,0 +1,599 @@
+//! Communication-compression codecs and gradient sparsifiers.
+//!
+//! Two families, both deterministic and priced end-to-end by the fabric:
+//!
+//! 1. **Feature quantization** ([`BlockCodec`]) — per-block lossy codecs for
+//!    the f32 feature rows shipped by [`crate::kvstore::KvStore`] pulls:
+//!    - `f16`: IEEE binary16 with round-to-nearest-even, 2 bytes/element and
+//!      no header; relative error ≤ 2⁻¹¹ for normal-range inputs.
+//!    - `int8`: per-block affine quantization with an f32 `(min, scale)`
+//!      header per block (8 bytes), 1 byte/element; absolute error ≤ scale/2
+//!      where `scale = (max − min)/255` over the block. All-equal blocks
+//!      (scale 0) round-trip exactly.
+//!    Rows are quantized block-by-block *independently*, so the round-trip is
+//!    invariant to how pulls are batched or windowed — a requirement for the
+//!    bit-determinism contract across `RAPIDGNN_THREADS` and for composing
+//!    the codec with `green-window` pull merging.
+//!
+//! 2. **Gradient sparsification** ([`top_k_indices`], [`rand_k_indices`],
+//!    [`ErrorFeedback`]) — classic error-feedback compression (Stich et al.):
+//!    each step the residual from previous steps is folded into the fresh
+//!    gradient, the top-k (or a seeded random-k) coordinates are applied, and
+//!    the dropped mass is carried forward. Ties in top-k break by lower index
+//!    so selection is total-ordered and deterministic.
+//!
+//! The codec *byte model* lives here too ([`BlockCodec::row_payload_bytes`]):
+//! the kvstore charges the fabric exactly these payload bytes (plus the
+//! fabric's usual 64-byte per-RPC envelope), while `remote_rows` counters
+//! stay codec-invariant.
+
+use crate::sampler::seed::Rng;
+
+/// Wire codec selector as it appears in `EngineParams` / TOML / CLI.
+///
+/// `Default` is a sentinel resolved per-strategy (rapid-family engines resolve
+/// it to `None`; `quant-pull` resolves it to `Int8`), so an explicit
+/// `codec = "none"` disables compression everywhere — the degeneration pin —
+/// while plain configs pick each engine's natural default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Strategy-resolved default.
+    Default,
+    /// Compression off: full-precision f32 rows, legacy charge path.
+    None,
+    /// IEEE binary16, 2 bytes/element, no header.
+    F16,
+    /// Per-block affine int8, 1 byte/element + 8-byte block header.
+    Int8,
+}
+
+impl Codec {
+    /// Every selectable codec (for usage strings and exhaustive tests).
+    pub const ALL: [Codec; 4] = [Codec::Default, Codec::None, Codec::F16, Codec::Int8];
+
+    /// Stable string id (TOML / CLI spelling).
+    pub fn id(self) -> &'static str {
+        match self {
+            Codec::Default => "default",
+            Codec::None => "none",
+            Codec::F16 => "f16",
+            Codec::Int8 => "int8",
+        }
+    }
+}
+
+impl Default for Codec {
+    fn default() -> Self {
+        Codec::Default
+    }
+}
+
+impl std::str::FromStr for Codec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Codec::ALL
+            .into_iter()
+            .find(|c| c.id() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown codec {s:?} (default|none|f16|int8)"))
+    }
+}
+
+/// Gradient-sparsification coordinate selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradMode {
+    /// Largest-|g| coordinates, ties to the lower index.
+    TopK,
+    /// Uniform random-k from a per-step seeded stream.
+    RandK,
+}
+
+impl GradMode {
+    pub const ALL: [GradMode; 2] = [GradMode::TopK, GradMode::RandK];
+
+    /// Stable string id (TOML / CLI spelling).
+    pub fn id(self) -> &'static str {
+        match self {
+            GradMode::TopK => "topk",
+            GradMode::RandK => "randk",
+        }
+    }
+}
+
+impl Default for GradMode {
+    fn default() -> Self {
+        GradMode::TopK
+    }
+}
+
+impl std::str::FromStr for GradMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        GradMode::ALL
+            .into_iter()
+            .find(|m| m.id() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown grad mode {s:?} (topk|randk)"))
+    }
+}
+
+/// A resolved wire codec (never `none`): what the kvstore actually runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCodec {
+    F16,
+    Int8,
+}
+
+/// A wire codec plus its block size: the unit installed into the kvstore.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockCodec {
+    pub kind: WireCodec,
+    /// Elements per quantization block (int8 header granularity). ≥ 1.
+    pub block: usize,
+}
+
+/// Per-block int8 header: `min: f32, scale: f32`.
+pub const INT8_BLOCK_HEADER_BYTES: u64 = 8;
+
+impl BlockCodec {
+    pub fn new(kind: WireCodec, block: u32) -> Self {
+        BlockCodec { kind, block: block.max(1) as usize }
+    }
+
+    /// Stable string id of the wire codec (telemetry label).
+    pub fn id(&self) -> &'static str {
+        match self.kind {
+            WireCodec::F16 => Codec::F16.id(),
+            WireCodec::Int8 => Codec::Int8.id(),
+        }
+    }
+
+    /// Compressed payload bytes for one `d`-element f32 row, headers
+    /// included. The uncompressed equivalent is `4 * d`.
+    pub fn row_payload_bytes(&self, d: usize) -> u64 {
+        match self.kind {
+            WireCodec::F16 => 2 * d as u64,
+            WireCodec::Int8 => {
+                let blocks = d.div_ceil(self.block) as u64;
+                d as u64 + INT8_BLOCK_HEADER_BYTES * blocks
+            }
+        }
+    }
+
+    /// Quantize→dequantize `row` in place; returns the summed squared error.
+    ///
+    /// This is exactly what the receiver would reconstruct from the wire
+    /// format, so training on the round-tripped rows makes convergence
+    /// effects real without materializing byte buffers.
+    pub fn round_trip(&self, row: &mut [f32]) -> f64 {
+        let mut se = 0.0f64;
+        match self.kind {
+            WireCodec::F16 => {
+                for x in row.iter_mut() {
+                    let y = f16_bits_to_f32(f32_to_f16_bits(*x));
+                    se += (*x as f64 - y as f64).powi(2);
+                    *x = y;
+                }
+            }
+            WireCodec::Int8 => {
+                for chunk in row.chunks_mut(self.block) {
+                    se += int8_round_trip_block(chunk);
+                }
+            }
+        }
+        se
+    }
+}
+
+/// Affine int8 round-trip of one block in place; returns summed squared error.
+fn int8_round_trip_block(block: &mut [f32]) -> f64 {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in block.iter() {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let scale = (hi - lo) / 255.0;
+    if !(scale > 0.0) {
+        // All-equal (or empty) block: q ≡ 0, dequant ≡ min — exact.
+        return 0.0;
+    }
+    let mut se = 0.0f64;
+    for x in block.iter_mut() {
+        let q = ((*x - lo) / scale).round().clamp(0.0, 255.0);
+        let y = lo + q * scale;
+        se += (*x as f64 - y as f64).powi(2);
+        *x = y;
+    }
+    se
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even, saturating overflow to
+/// the max finite half (±65504) so finite inputs never become Inf/NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN propagate (callers feed finite values).
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7BFF; // saturate to max finite
+    }
+    if e16 <= 0 {
+        // Subnormal half (or underflow to zero).
+        if e16 < -10 {
+            return sign;
+        }
+        let m = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e16) as u32; // in 14..=24
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let mid = 1u32 << (shift - 1);
+        let rounded = if rem > mid || (rem == mid && half & 1 == 1) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    let half = ((e16 as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && half & 1 == 1) { half + 1 } else { half };
+    if rounded >= 0x7C00 {
+        return sign | 0x7BFF; // mantissa rounding carried into Inf: saturate
+    }
+    sign | rounded as u16
+}
+
+/// IEEE binary16 bits → f32 (exact: every half value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0 {
+        // ±0 and subnormals: value = man · 2⁻²⁴ (exact in f32).
+        let mag = man as f32 * f32::from_bits(0x3380_0000); // 2^-24
+        return if sign != 0 { -mag } else { mag };
+    }
+    if exp == 0x1F {
+        return if man != 0 {
+            f32::NAN
+        } else if sign != 0 {
+            f32::NEG_INFINITY
+        } else {
+            f32::INFINITY
+        };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Number of gradient coordinates kept for a `frac` target over `len`
+/// elements: `ceil(len · frac)`, at least 1 for non-empty inputs.
+pub fn keep_count(len: usize, frac: f64) -> usize {
+    if len == 0 || frac <= 0.0 {
+        return 0;
+    }
+    ((len as f64 * frac).ceil() as usize).clamp(1, len)
+}
+
+/// Indices of the `k` largest-magnitude entries, ascending-sorted.
+///
+/// Deterministic total order: |v| descending, then index ascending, so equal
+/// magnitudes always resolve the same way regardless of thread count.
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(values.len());
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        let (va, vb) = (values[a as usize].abs(), values[b as usize].abs());
+        vb.partial_cmp(&va).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// `k` distinct uniform indices from `0..len`, ascending-sorted, via partial
+/// Fisher–Yates on the supplied deterministic stream.
+pub fn rand_k_indices(len: usize, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let k = k.min(len);
+    let mut pool: Vec<u32> = (0..len as u32).collect();
+    for i in 0..k {
+        let j = i + rng.below((len - i) as u32) as usize;
+        pool.swap(i, j);
+    }
+    pool.truncate(k);
+    pool.sort_unstable();
+    pool
+}
+
+/// Error-feedback residual accumulator for one parameter group.
+///
+/// Protocol per step: [`accumulate`](Self::accumulate) folds the carried
+/// residual into the fresh gradient, the caller selects coordinates on the
+/// *accumulated* values, then [`retain`](Self::retain) zeroes the dropped
+/// coordinates out of the gradient and stores them back as the next
+/// residual. With `keep = all`, the residual stays zero and the gradient is
+/// untouched — the degeneration pin.
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(len: usize) -> Self {
+        ErrorFeedback { residual: vec![0.0; len] }
+    }
+
+    /// `grad += residual` (element-wise).
+    pub fn accumulate(&mut self, grad: &mut [f32]) {
+        debug_assert_eq!(grad.len(), self.residual.len());
+        for (g, r) in grad.iter_mut().zip(self.residual.iter()) {
+            *g += *r;
+        }
+    }
+
+    /// Keep only `keep_sorted` coordinates of `grad`; dropped coordinates are
+    /// zeroed and become the new residual. `keep_sorted` must be ascending.
+    pub fn retain(&mut self, grad: &mut [f32], keep_sorted: &[u32]) {
+        debug_assert_eq!(grad.len(), self.residual.len());
+        let mut keep = keep_sorted.iter().copied().peekable();
+        for (i, (g, r)) in grad.iter_mut().zip(self.residual.iter_mut()).enumerate() {
+            if keep.peek() == Some(&(i as u32)) {
+                keep.next();
+                *r = 0.0;
+            } else {
+                *r = *g;
+                *g = 0.0;
+            }
+        }
+    }
+
+    /// Squared norm of the carried residual (telemetry / tests).
+    pub fn residual_norm_sq(&self) -> f64 {
+        self.residual.iter().map(|&r| (r as f64).powi(2)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{forall, gen};
+
+    #[test]
+    fn codec_ids_round_trip_from_str() {
+        for c in Codec::ALL {
+            assert_eq!(c.id().parse::<Codec>().unwrap(), c);
+        }
+        for m in GradMode::ALL {
+            assert_eq!(m.id().parse::<GradMode>().unwrap(), m);
+        }
+        assert!("gzip".parse::<Codec>().is_err());
+        assert!("topj".parse::<GradMode>().is_err());
+    }
+
+    #[test]
+    fn payload_bytes_match_the_wire_format() {
+        let int8 = BlockCodec::new(WireCodec::Int8, 128);
+        // d=100: one block → 100 + 8 header = 108 (3.70x under 400 raw).
+        assert_eq!(int8.row_payload_bytes(100), 108);
+        // d=602: 5 blocks → 602 + 40 = 642 (3.75x under 2408 raw).
+        assert_eq!(int8.row_payload_bytes(602), 642);
+        // Non-divisible tail still pays a full header.
+        assert_eq!(int8.row_payload_bytes(129), 129 + 16);
+        let f16 = BlockCodec::new(WireCodec::F16, 128);
+        assert_eq!(f16.row_payload_bytes(100), 200);
+        assert_eq!(f16.row_payload_bytes(0), 0);
+    }
+
+    #[test]
+    fn f16_round_trip_is_exact_for_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.103515625e-5] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(x.to_bits(), y.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn f16_saturates_instead_of_overflowing() {
+        for x in [1.0e5f32, -1.0e5, 7.0e4, f32::MAX, f32::MIN] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!(y.is_finite(), "x={x} -> {y}");
+            assert_eq!(y.abs(), 65504.0, "x={x} -> {y}");
+            assert_eq!(y.is_sign_negative(), x.is_sign_negative());
+        }
+    }
+
+    #[test]
+    fn f16_matches_reference_bit_patterns() {
+        // Spot-check against the IEEE 754 binary16 table.
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(6.103515625e-5), 0x0400); // smallest normal
+        assert_eq!(f32_to_f16_bits(5.960464477539063e-8), 0x0001); // smallest subnormal
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960464477539063e-8);
+        // Round-to-nearest-even at a midpoint: 1 + 2^-11 is exactly between
+        // 0x3C00 and 0x3C01 → even (0x3C00).
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3C00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn prop_f16_relative_error_bounded() {
+        // Normal-range magnitudes: relative error ≤ 2^-11 (half-ulp of a
+        // 10-bit mantissa).
+        forall(
+            0xF16,
+            500,
+            |r| {
+                let mag = gen::f64_in(r, -4.0, 4.0); // 1e-4 .. 1e4
+                let sign = if r.below(2) == 0 { 1.0 } else { -1.0 };
+                (sign * 10f64.powf(mag)) as f32
+            },
+            |&x| {
+                let y = f16_bits_to_f32(f32_to_f16_bits(x));
+                let rel = ((x as f64 - y as f64) / x as f64).abs();
+                if rel <= 1.0 / 2048.0 {
+                    Ok(())
+                } else {
+                    Err(format!("rel error {rel} for {x} -> {y}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_f16_never_produces_nan_or_inf_from_finite() {
+        forall(
+            0xF17,
+            500,
+            |r| (gen::f64_in(r, -1.0, 1.0) * 1.0e6) as f32,
+            |&x| {
+                let y = f16_bits_to_f32(f32_to_f16_bits(x));
+                if y.is_finite() { Ok(()) } else { Err(format!("{x} -> {y}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_int8_error_bounded_by_half_scale() {
+        // Random rows with random block sizes, including non-divisible
+        // lengths: every element's round-trip error ≤ scale/2 of its block
+        // (plus float-arithmetic slack).
+        forall(
+            0x1278,
+            300,
+            |r| {
+                let len = gen::usize_in(r, 1, 300);
+                let block = gen::usize_in(r, 1, 200);
+                let lo = gen::f64_in(r, -100.0, 100.0);
+                let span = gen::f64_in(r, 0.0, 50.0);
+                let row =
+                    gen::vec_of(r, len, |r| (lo + gen::f64_in(r, 0.0, 1.0) * span) as f32);
+                (row, block)
+            },
+            |(row, block)| {
+                let codec = BlockCodec::new(WireCodec::Int8, *block as u32);
+                let mut rt = row.clone();
+                codec.round_trip(&mut rt);
+                for (chunk, rt_chunk) in row.chunks(*block).zip(rt.chunks(*block)) {
+                    let lo = chunk.iter().copied().fold(f32::INFINITY, f32::min);
+                    let hi = chunk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let scale = ((hi - lo) / 255.0) as f64;
+                    let bound = 0.5 * scale * 1.001 + 1e-4;
+                    for (&x, &y) in chunk.iter().zip(rt_chunk) {
+                        let err = (x as f64 - y as f64).abs();
+                        if err > bound {
+                            return Err(format!("err {err} > bound {bound} (scale {scale})"));
+                        }
+                        if !y.is_finite() {
+                            return Err(format!("non-finite round-trip {y}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn int8_all_equal_block_is_exact() {
+        let codec = BlockCodec::new(WireCodec::Int8, 64);
+        let mut row = vec![3.25f32; 100];
+        let se = codec.round_trip(&mut row);
+        assert_eq!(se, 0.0);
+        assert!(row.iter().all(|&x| x == 3.25));
+    }
+
+    #[test]
+    fn prop_round_trip_is_deterministic_and_blockwise() {
+        // Quantizing a long row equals quantizing its blocks separately —
+        // the invariance that makes windowed pulls and thread splits agree.
+        forall(
+            0xB10C,
+            200,
+            |r| {
+                let block = gen::usize_in(r, 1, 64);
+                let len = gen::usize_in(r, 1, 256);
+                let row = gen::vec_of(r, len, |r| (gen::f64_in(r, -10.0, 10.0)) as f32);
+                (row, block)
+            },
+            |(row, block)| {
+                let codec = BlockCodec::new(WireCodec::Int8, *block as u32);
+                let mut a = row.clone();
+                let mut b = row.clone();
+                codec.round_trip(&mut a);
+                codec.round_trip(&mut b);
+                if a != b {
+                    return Err("round trip not deterministic".into());
+                }
+                let mut piecewise = row.clone();
+                let mut se = 0.0;
+                for chunk in piecewise.chunks_mut(*block) {
+                    se += codec.round_trip(chunk);
+                }
+                let _ = se;
+                if piecewise != a {
+                    return Err("blockwise split changed the result".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn top_k_picks_largest_with_index_tie_break() {
+        let v = [1.0f32, -3.0, 2.0, 3.0, 0.5];
+        assert_eq!(top_k_indices(&v, 2), vec![1, 3]); // |−3| ties |3| → lower index first
+        assert_eq!(top_k_indices(&v, 3), vec![1, 2, 3]);
+        assert_eq!(top_k_indices(&v, 0), Vec::<u32>::new());
+        assert_eq!(top_k_indices(&v, 10), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rand_k_is_distinct_sorted_and_seeded() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let ka = rand_k_indices(100, 10, &mut a);
+        let kb = rand_k_indices(100, 10, &mut b);
+        assert_eq!(ka, kb);
+        assert_eq!(ka.len(), 10);
+        assert!(ka.windows(2).all(|w| w[0] < w[1]), "sorted & distinct: {ka:?}");
+        assert!(ka.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn keep_count_rounds_up_and_clamps() {
+        assert_eq!(keep_count(100, 0.1), 10);
+        assert_eq!(keep_count(101, 0.1), 11);
+        assert_eq!(keep_count(5, 0.0), 0);
+        assert_eq!(keep_count(0, 0.5), 0);
+        assert_eq!(keep_count(3, 1e-9), 1);
+        assert_eq!(keep_count(3, 2.0), 3);
+    }
+
+    #[test]
+    fn error_feedback_conserves_gradient_mass() {
+        let mut fb = ErrorFeedback::new(4);
+        let mut g = vec![1.0f32, -2.0, 0.5, 4.0];
+        fb.accumulate(&mut g);
+        let keep = top_k_indices(&g, 2); // keeps 1 and 3
+        fb.retain(&mut g, &keep);
+        assert_eq!(g, vec![0.0, -2.0, 0.0, 4.0]);
+        assert_eq!(fb.residual_norm_sq(), 1.0 + 0.25);
+        // Next step: residual folds back in.
+        let mut g2 = vec![0.0f32; 4];
+        fb.accumulate(&mut g2);
+        assert_eq!(g2, vec![1.0, 0.0, 0.5, 0.0]);
+        fb.retain(&mut g2, &[0, 1, 2, 3]);
+        assert_eq!(fb.residual_norm_sq(), 0.0);
+    }
+
+    #[test]
+    fn error_feedback_keep_all_is_identity() {
+        let mut fb = ErrorFeedback::new(3);
+        let mut g = vec![0.5f32, -1.5, 2.5];
+        let orig = g.clone();
+        fb.accumulate(&mut g);
+        fb.retain(&mut g, &[0, 1, 2]);
+        assert_eq!(g, orig);
+        assert_eq!(fb.residual_norm_sq(), 0.0);
+    }
+}

@@ -1,6 +1,7 @@
 //! Run configuration: which engine, dataset, testbed and trainer to use.
 
 use super::dataset::DatasetConfig;
+use crate::compress::{Codec, GradMode};
 use crate::util::value::Value;
 use crate::Result;
 use anyhow::{bail, ensure};
@@ -38,6 +39,15 @@ impl Engine {
     /// between epochs from observed hit rates and the ranking's marginal
     /// tail, clamped to `[min_hot, max_hot]` with hysteresis.
     pub const AdaptiveCache: Engine = Engine("adaptive-cache");
+    /// RapidGNN shipping quantized feature rows: every remote pull charges
+    /// the fabric the compressed payload of `EngineParams::codec` (int8 by
+    /// default) instead of full-precision f32 rows; in full mode the trainer
+    /// consumes the dequantized values, so accuracy effects are real.
+    pub const QuantPull: Engine = Engine("quant-pull");
+    /// RapidGNN with error-feedback gradient sparsification: each step only
+    /// the top (or random) `EngineParams::grad_k` fraction of gradient
+    /// coordinates is applied; the dropped mass carries forward as residual.
+    pub const GradTopk: Engine = Engine("grad-topk");
 
     /// The engines compared in the paper's Table 2. The registry may hold
     /// more — `EngineRegistry::engines()` is the full open set.
@@ -126,6 +136,21 @@ pub struct EngineParams {
     /// for this many controller evaluations (hysteresis against hit-rate
     /// flip-flop).
     pub hysteresis: u32,
+    /// Feature wire codec for remote pulls. `Codec::Default` resolves
+    /// per-strategy (`quant-pull` → int8, everything else → none); an
+    /// explicit `none` disables compression on any engine — the bit-exact
+    /// degeneration pin — while `f16`/`int8` enable it on any engine
+    /// (notably composing with `green-window`'s merged pulls).
+    pub codec: Codec,
+    /// Elements per int8 quantization block (8-byte header per block). The
+    /// default of 128 keeps header overhead ≤ 6% for d ≥ 100.
+    pub codec_block: u32,
+    /// `grad-topk`: coordinate selector for gradient sparsification.
+    pub grad_mode: GradMode,
+    /// `grad-topk`: fraction of gradient coordinates applied per step
+    /// (per parameter group, ≥ 1 coordinate when non-zero). 0 disables
+    /// sparsification entirely, degenerating the engine to `rapid`.
+    pub grad_k: f64,
 }
 
 impl Default for EngineParams {
@@ -140,6 +165,10 @@ impl Default for EngineParams {
             tail_utility: 0.01,
             hot_growth: 2.0,
             hysteresis: 2,
+            codec: Codec::Default,
+            codec_block: 128,
+            grad_mode: GradMode::TopK,
+            grad_k: 0.1,
         }
     }
 }
@@ -163,6 +192,11 @@ impl EngineParams {
             self.hot_growth.is_finite() && self.hot_growth > 1.0,
             "hot_growth must be a finite factor > 1"
         );
+        ensure!(self.codec_block >= 1, "codec_block must be >= 1");
+        ensure!(
+            self.grad_k.is_finite() && (0.0..=1.0).contains(&self.grad_k),
+            "grad_k must be a fraction in [0,1]"
+        );
         Ok(())
     }
 
@@ -176,7 +210,11 @@ impl EngineParams {
             .set("target_hit_rate", self.target_hit_rate)
             .set("tail_utility", self.tail_utility)
             .set("hot_growth", self.hot_growth)
-            .set("hysteresis", self.hysteresis);
+            .set("hysteresis", self.hysteresis)
+            .set("codec", self.codec.id())
+            .set("codec_block", self.codec_block)
+            .set("grad_mode", self.grad_mode.id())
+            .set("grad_k", self.grad_k);
         v
     }
 
@@ -208,6 +246,16 @@ impl EngineParams {
             tail_utility: opt_f64("tail_utility", d.tail_utility)?,
             hot_growth: opt_f64("hot_growth", d.hot_growth)?,
             hysteresis: opt_u32("hysteresis", d.hysteresis)?,
+            codec: match v.get("codec") {
+                Some(_) => v.req_str("codec")?.parse()?,
+                None => d.codec,
+            },
+            codec_block: opt_u32("codec_block", d.codec_block)?,
+            grad_mode: match v.get("grad_mode") {
+                Some(_) => v.req_str("grad_mode")?.parse()?,
+                None => d.grad_mode,
+            },
+            grad_k: opt_f64("grad_k", d.grad_k)?,
         })
     }
 }
@@ -1579,6 +1627,10 @@ mod tests {
             c.engine_params.tail_utility = 0.05;
             c.engine_params.hot_growth = 1.5;
             c.engine_params.hysteresis = 3;
+            c.engine_params.codec = Codec::Int8;
+            c.engine_params.codec_block = 64;
+            c.engine_params.grad_mode = GradMode::RandK;
+            c.engine_params.grad_k = 0.25;
             let back = RunConfig::from_value(&c.to_value()).unwrap();
             assert_eq!(c, back, "{}", e.id());
             back.validate().unwrap();
@@ -1611,6 +1663,39 @@ mod tests {
         c.engine_params.hot_growth = 2.0;
         c.engine_params.resize_period = 0; // 0 = controller disabled, legal
         c.validate().unwrap();
+        c.engine_params.codec_block = 0;
+        assert!(c.validate().is_err(), "codec_block must be >= 1");
+        c.engine_params.codec_block = 128;
+        c.engine_params.grad_k = 1.5;
+        assert!(c.validate().is_err(), "grad_k must be a fraction");
+        c.engine_params.grad_k = f64::NAN;
+        assert!(c.validate().is_err(), "grad_k must be finite");
+        c.engine_params.grad_k = 0.0; // 0 = sparsification off, legal
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn pre_compression_engine_params_still_parse() {
+        // Configs written before the codec knobs existed load with the
+        // compression defaults.
+        let mut v = Value::table();
+        v.set("resample_period", 5u32).set("fetch_window", 2u32);
+        let p = EngineParams::from_value(&v).unwrap();
+        let d = EngineParams::default();
+        assert_eq!(p.codec, Codec::Default);
+        assert_eq!(p.codec_block, d.codec_block);
+        assert_eq!(p.grad_mode, GradMode::TopK);
+        assert_eq!(p.grad_k, d.grad_k);
+    }
+
+    #[test]
+    fn bad_codec_and_grad_mode_strings_are_rejected() {
+        let mut v = EngineParams::default().to_value();
+        v.set("codec", "gzip");
+        assert!(EngineParams::from_value(&v).is_err());
+        let mut v = EngineParams::default().to_value();
+        v.set("grad_mode", "bottomk");
+        assert!(EngineParams::from_value(&v).is_err());
     }
 
     #[test]

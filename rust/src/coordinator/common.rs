@@ -109,7 +109,13 @@ impl RunContext {
         let which = strategy.partitioner();
         let part = Arc::new(partition(&ds.graph, cfg.num_workers, which, cfg.base_seed));
         let fabric = NetFabric::new(cfg.fabric.clone()).with_world_size(cfg.num_workers);
-        let kv = Arc::new(KvStore::new(&ds, part.clone(), fabric.clone()));
+        // The strategy's resolved wire codec (None for every engine unless
+        // compression is requested) — installed once, so every pull path
+        // charges compressed payloads without engine-specific branches.
+        let kv = Arc::new(
+            KvStore::new(&ds, part.clone(), fabric.clone())
+                .with_codec(strategy.feature_codec(&cfg.engine_params)),
+        );
         let shards: Vec<Vec<NodeId>> = (0..cfg.num_workers)
             .map(|w| {
                 ds.train_nodes

@@ -70,9 +70,10 @@ pub use strategy::{
 
 use crate::config::{ExecMode, RunConfig, TrainerBackend};
 use crate::energy::run_energy;
-use crate::metrics::{EpochReport, RunReport};
-use crate::trainer::{SageModel, TrainStep};
+use crate::metrics::{CompressionReport, EpochReport, RunReport};
+use crate::trainer::{GradCompressedSage, GradStats, SageModel, TrainStep};
 use crate::Result;
+use anyhow::bail;
 use std::sync::{Arc, Mutex};
 
 /// The full-mode model, shared across all worker actors on the virtual
@@ -137,6 +138,7 @@ fn run_with_overrides(
     let cfg = &ctx.cfg;
     let mut setup_time = 0.0f64;
     let mut epochs: Vec<EpochReport> = Vec::new();
+    let mut grad_stats: Option<GradStats> = None;
 
     match cfg.exec_mode {
         ExecMode::Trace if cfg.fabric.contention => {
@@ -171,9 +173,10 @@ fn run_with_overrides(
                 None => build_trainer(ctx)?,
             };
             let model: SharedTrainer = Arc::new(Mutex::new(trainer));
-            let (st, reps) = pipeline::run_cluster(ctx, Some(model))?;
+            let (st, reps) = pipeline::run_cluster(ctx, Some(model.clone()))?;
             setup_time = st;
             epochs = reps;
+            grad_stats = model.lock().unwrap().grad_stats();
         }
     }
 
@@ -196,6 +199,7 @@ fn run_with_overrides(
         cpu_energy_j: 0.0,
         gpu_energy_j: 0.0,
         links: Vec::new(),
+        compression: None,
     };
     // Contended runs surface per-physical-link telemetry (accumulated over
     // the run's epochs by the link network); empty otherwise, which keeps
@@ -214,24 +218,66 @@ fn run_with_overrides(
             peak_backlog_bytes: u.peak_backlog_bytes,
         })
         .collect();
+    // Compression telemetry: present only when a wire codec is installed or a
+    // gradient sparsifier ran, so uncompressed reports — and the committed
+    // golden trace — serialize byte-identically.
+    if ctx.kv.codec().is_some() || grad_stats.is_some() {
+        let tally = ctx.kv.compression_tally();
+        report.compression = Some(CompressionReport {
+            codec: ctx.kv.codec().map_or("none", |c| c.id()).to_string(),
+            uncompressed_bytes: tally.raw_bytes,
+            compressed_bytes: tally.wire_bytes,
+            bytes_saved: tally.raw_bytes.saturating_sub(tally.wire_bytes),
+            effective_compression_ratio: if tally.wire_bytes > 0 {
+                tally.raw_bytes as f64 / tally.wire_bytes as f64
+            } else {
+                1.0
+            },
+            quant_mse: if tally.elems > 0 {
+                tally.sq_err / tally.elems as f64
+            } else {
+                0.0
+            },
+            grad_elems_total: grad_stats.map_or(0, |g| g.elems_total),
+            grad_elems_sent: grad_stats.map_or(0, |g| g.elems_sent),
+        });
+    }
     let energy = run_energy(&report, &cfg.power);
     report.cpu_energy_j = energy.cpu.total_j;
     report.gpu_energy_j = energy.gpu.total_j;
     Ok(report)
 }
 
-/// Instantiate the configured train-step backend.
+/// Instantiate the configured train-step backend, honoring the strategy's
+/// gradient-compression request (`grad-topk`'s error-feedback sparsifier).
 pub fn build_trainer(ctx: &RunContext) -> Result<Box<dyn TrainStep>> {
     let cfg = &ctx.cfg;
+    let spec = ctx.strategy.grad_compression(&cfg.engine_params);
     match cfg.backend {
-        TrainerBackend::Host => Ok(Box::new(SageModel::new(
-            cfg.dataset.feature_dim as usize,
-            cfg.hidden_dim as usize,
-            cfg.dataset.num_classes as usize,
-            cfg.num_layers(),
-            cfg.base_seed,
-        ))),
-        TrainerBackend::Pjrt => crate::runtime::build_pjrt_trainer(ctx),
+        TrainerBackend::Host => {
+            let model = SageModel::new(
+                cfg.dataset.feature_dim as usize,
+                cfg.hidden_dim as usize,
+                cfg.dataset.num_classes as usize,
+                cfg.num_layers(),
+                cfg.base_seed,
+            );
+            Ok(match spec {
+                Some(gc) => {
+                    Box::new(GradCompressedSage::new(model, gc.mode, gc.k, cfg.base_seed))
+                }
+                None => Box::new(model),
+            })
+        }
+        TrainerBackend::Pjrt => {
+            if spec.is_some() {
+                bail!(
+                    "gradient compression (grad_k > 0) requires the host backend: \
+                     the AOT-compiled PJRT artifact applies dense updates"
+                );
+            }
+            crate::runtime::build_pjrt_trainer(ctx)
+        }
     }
 }
 

@@ -486,6 +486,10 @@ mod tests {
         assert_cluster_matches_sequential(Engine::FastSample, 1e-12);
         assert_cluster_matches_sequential(Engine::GreenWindow, 1e-9);
         assert_cluster_matches_sequential(Engine::AdaptiveCache, 1e-12);
+        // The compression engines ride rapid's pipeline-scheduled path; the
+        // compressed payload charge is identical on both runtimes.
+        assert_cluster_matches_sequential(Engine::QuantPull, 1e-12);
+        assert_cluster_matches_sequential(Engine::GradTopk, 1e-12);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! The communication-compression engine family: RapidGNN's data movement
+//! with compressed payloads.
+//!
+//! Both engines delegate every scheduling decision (precompute, hot-set
+//! cache, prefetch window, epoch bookkeeping) to [`RapidStrategy`] and
+//! override only the compression hooks:
+//!
+//! - **`quant-pull`** resolves the `Codec::Default` sentinel to **int8**, so
+//!   every remote feature row is charged at its quantized wire size (1
+//!   byte/element + an 8-byte header per `codec_block` elements) and, in
+//!   full mode, the trainer consumes the dequantized reconstruction. With an
+//!   explicit `codec = "none"` the engine is bit-exact `rapid` — the same
+//!   degeneration pin as `adaptive-cache`'s `resize_period = 0`.
+//! - **`grad-topk`** requests error-feedback gradient sparsification: each
+//!   step only the top (or seeded-random) `grad_k` fraction of gradient
+//!   coordinates per parameter group is applied; the dropped mass carries
+//!   forward as residual. `grad_k = 0` degenerates to `rapid`.
+//!
+//! Because the codec hook is resolved by the *trait default* for every other
+//! engine, an explicit `codec = "f16"`/`"int8"` also composes with
+//! `green-window`'s merged pulls — the windowed RPC simply charges the
+//! compressed payload for its row total.
+
+use super::rapid::RapidStrategy;
+use crate::compress::{BlockCodec, Codec};
+use crate::config::{EngineParams, RunConfig};
+use crate::coordinator::common::RunContext;
+use crate::coordinator::strategy::{
+    resolve_codec, BatchPlan, EpochFinish, EpochTotals, GradCompression, PipelineOutcome,
+    StrategySetup, StrategyState, TrainingStrategy,
+};
+use crate::metrics::{CommStats, PhaseTimes};
+use crate::partition::Partitioner;
+use crate::sampler::khop::Fanout;
+use crate::{Result, WorkerId};
+
+/// RapidGNN shipping quantized feature rows (int8 by default).
+pub struct QuantPullStrategy {
+    inner: RapidStrategy,
+}
+
+/// Registry constructor for `quant-pull`.
+pub fn quant_pull_ctor(_cfg: &RunConfig) -> Box<dyn TrainingStrategy> {
+    Box::new(QuantPullStrategy { inner: RapidStrategy })
+}
+
+impl TrainingStrategy for QuantPullStrategy {
+    fn id(&self) -> &'static str {
+        "quant-pull"
+    }
+
+    fn name(&self) -> &'static str {
+        "QuantPull"
+    }
+
+    fn feature_codec(&self, params: &EngineParams) -> Option<BlockCodec> {
+        resolve_codec(params, Codec::Int8)
+    }
+
+    fn partitioner(&self) -> Partitioner {
+        self.inner.partitioner()
+    }
+
+    fn fanouts(&self, cfg: &RunConfig) -> Vec<Fanout> {
+        self.inner.fanouts(cfg)
+    }
+
+    fn queue_depth(&self, cfg: &RunConfig) -> u32 {
+        self.inner.queue_depth(cfg)
+    }
+
+    fn schedule_epoch(&self, cfg: &RunConfig, epoch: u32) -> u32 {
+        self.inner.schedule_epoch(cfg, epoch)
+    }
+
+    fn setup(&self, ctx: &RunContext, worker: WorkerId) -> Result<StrategySetup> {
+        self.inner.setup(ctx, worker)
+    }
+
+    fn plan_epoch<'a>(
+        &self,
+        ctx: &'a RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        comm: &mut CommStats,
+    ) -> Result<Box<dyn BatchPlan + 'a>> {
+        self.inner.plan_epoch(ctx, state, worker, epoch, comm)
+    }
+
+    fn finish_epoch(
+        &self,
+        ctx: &RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        outcome: &PipelineOutcome,
+        totals: &EpochTotals,
+        phases: &mut PhaseTimes,
+        comm: &mut CommStats,
+    ) -> Result<EpochFinish> {
+        self.inner
+            .finish_epoch(ctx, state, worker, epoch, outcome, totals, phases, comm)
+    }
+}
+
+/// RapidGNN with error-feedback gradient sparsification.
+pub struct GradTopkStrategy {
+    inner: RapidStrategy,
+}
+
+/// Registry constructor for `grad-topk`.
+pub fn grad_topk_ctor(_cfg: &RunConfig) -> Box<dyn TrainingStrategy> {
+    Box::new(GradTopkStrategy { inner: RapidStrategy })
+}
+
+impl TrainingStrategy for GradTopkStrategy {
+    fn id(&self) -> &'static str {
+        "grad-topk"
+    }
+
+    fn name(&self) -> &'static str {
+        "GradTopK"
+    }
+
+    fn grad_compression(&self, params: &EngineParams) -> Option<GradCompression> {
+        if params.grad_k > 0.0 {
+            Some(GradCompression { mode: params.grad_mode, k: params.grad_k })
+        } else {
+            None
+        }
+    }
+
+    fn partitioner(&self) -> Partitioner {
+        self.inner.partitioner()
+    }
+
+    fn fanouts(&self, cfg: &RunConfig) -> Vec<Fanout> {
+        self.inner.fanouts(cfg)
+    }
+
+    fn queue_depth(&self, cfg: &RunConfig) -> u32 {
+        self.inner.queue_depth(cfg)
+    }
+
+    fn schedule_epoch(&self, cfg: &RunConfig, epoch: u32) -> u32 {
+        self.inner.schedule_epoch(cfg, epoch)
+    }
+
+    fn setup(&self, ctx: &RunContext, worker: WorkerId) -> Result<StrategySetup> {
+        self.inner.setup(ctx, worker)
+    }
+
+    fn plan_epoch<'a>(
+        &self,
+        ctx: &'a RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        comm: &mut CommStats,
+    ) -> Result<Box<dyn BatchPlan + 'a>> {
+        self.inner.plan_epoch(ctx, state, worker, epoch, comm)
+    }
+
+    fn finish_epoch(
+        &self,
+        ctx: &RunContext,
+        state: &mut StrategyState,
+        worker: WorkerId,
+        epoch: u32,
+        outcome: &PipelineOutcome,
+        totals: &EpochTotals,
+        phases: &mut PhaseTimes,
+        comm: &mut CommStats,
+    ) -> Result<EpochFinish> {
+        self.inner
+            .finish_epoch(ctx, state, worker, epoch, outcome, totals, phases, comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{GradMode, WireCodec};
+
+    #[test]
+    fn quant_pull_resolves_default_codec_to_int8() {
+        let s = quant_pull_ctor(&RunConfig::default());
+        let mut p = EngineParams::default();
+        let codec = s.feature_codec(&p).expect("default codec is int8");
+        assert_eq!(codec.kind, WireCodec::Int8);
+        assert_eq!(codec.block, p.codec_block as usize);
+        // explicit none disables — the degeneration pin
+        p.codec = Codec::None;
+        assert!(s.feature_codec(&p).is_none());
+        // explicit f16 overrides the engine default
+        p.codec = Codec::F16;
+        assert_eq!(s.feature_codec(&p).unwrap().kind, WireCodec::F16);
+    }
+
+    #[test]
+    fn other_engines_resolve_default_codec_to_none() {
+        let reg = crate::coordinator::EngineRegistry::global();
+        let p = EngineParams::default();
+        for id in ["rapid", "dgl-metis", "green-window", "grad-topk"] {
+            let s = reg.create_by_id(id, &RunConfig::default()).unwrap();
+            assert!(s.feature_codec(&p).is_none(), "{id} must default to uncompressed");
+        }
+        // ...but an explicit codec composes with any engine
+        let mut p = EngineParams::default();
+        p.codec = Codec::Int8;
+        p.codec_block = 64;
+        let gw = reg.create_by_id("green-window", &RunConfig::default()).unwrap();
+        let codec = gw.feature_codec(&p).unwrap();
+        assert_eq!(codec.kind, WireCodec::Int8);
+        assert_eq!(codec.block, 64);
+    }
+
+    #[test]
+    fn grad_topk_requests_sparsification_unless_disabled() {
+        let s = grad_topk_ctor(&RunConfig::default());
+        let mut p = EngineParams::default();
+        let spec = s.grad_compression(&p).expect("default grad_k is 0.1");
+        assert_eq!(spec.mode, GradMode::TopK);
+        assert_eq!(spec.k, 0.1);
+        p.grad_mode = GradMode::RandK;
+        p.grad_k = 0.5;
+        let spec = s.grad_compression(&p).unwrap();
+        assert_eq!(spec.mode, GradMode::RandK);
+        assert_eq!(spec.k, 0.5);
+        p.grad_k = 0.0;
+        assert!(s.grad_compression(&p).is_none(), "grad_k = 0 degenerates to rapid");
+        // quant-pull and rapid never request it
+        let q = quant_pull_ctor(&RunConfig::default());
+        assert!(q.grad_compression(&EngineParams::default()).is_none());
+    }
+}

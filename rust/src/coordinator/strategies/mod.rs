@@ -12,12 +12,16 @@
 //! - [`adaptive_cache`] — RapidGNN with a per-epoch hot-cache controller:
 //!   `n_hot` resized between epochs from observed hit rates, clamped with
 //!   hysteresis.
+//! - [`compress`] — the communication-compression family (`quant-pull`,
+//!   `grad-topk`): RapidGNN's schedule and cache, shipping quantized feature
+//!   rows and/or error-fed sparse gradients.
 //!
 //! All but the first two are registry-only engines: no coordinator file
 //! outside this directory knows they exist.
 
 pub mod adaptive_cache;
 pub mod baseline;
+pub mod compress;
 pub mod fast_sample;
 pub mod green_window;
 pub mod rapid;

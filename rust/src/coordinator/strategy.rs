@@ -41,7 +41,8 @@
 //!    survive the TOML round-trip.
 
 use super::common::RunContext;
-use crate::config::{Engine, RunConfig};
+use crate::compress::{BlockCodec, Codec, GradMode, WireCodec};
+use crate::config::{Engine, EngineParams, RunConfig};
 use crate::metrics::{CacheStats, CommStats, PhaseTimes};
 use crate::partition::Partitioner;
 use crate::prefetch::StagedBatch;
@@ -107,6 +108,31 @@ pub struct EpochTotals {
     pub m_max: u64,
 }
 
+/// A strategy's resolved gradient-compression request (see
+/// [`TrainingStrategy::grad_compression`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GradCompression {
+    /// Coordinate selector.
+    pub mode: GradMode,
+    /// Fraction of gradient coordinates applied per step, in (0, 1].
+    pub k: f64,
+}
+
+/// Resolve `params.codec` against a strategy's natural default: the
+/// `Codec::Default` sentinel becomes `fallback`, then `none` maps to no
+/// codec and `f16`/`int8` to a [`BlockCodec`] with `params.codec_block`.
+pub fn resolve_codec(params: &EngineParams, fallback: Codec) -> Option<BlockCodec> {
+    let kind = match params.codec {
+        Codec::Default => fallback,
+        explicit => explicit,
+    };
+    match kind {
+        Codec::Default | Codec::None => None,
+        Codec::F16 => Some(BlockCodec::new(WireCodec::F16, params.codec_block)),
+        Codec::Int8 => Some(BlockCodec::new(WireCodec::Int8, params.codec_block)),
+    }
+}
+
 /// A strategy's epoch-boundary verdict: the reported time and memory.
 pub struct EpochFinish {
     /// Simulated epoch wall time `t_e`.
@@ -145,6 +171,24 @@ pub trait TrainingStrategy: Send + Sync {
     /// Prefetch-queue depth `Q` for the bounded-queue pipeline (0 = fully
     /// serial, the reactive on-demand behaviour).
     fn queue_depth(&self, cfg: &RunConfig) -> u32;
+
+    /// Feature wire codec for this run, installed into the kvstore once at
+    /// context build. The default resolves the `Codec::Default` sentinel to
+    /// *no* codec, so every pre-compression engine stays bit-exact; an
+    /// explicit `f16`/`int8` in the config enables compression on any engine
+    /// (notably composing with `green-window`'s merged pulls), and an
+    /// explicit `none` always disables it. `quant-pull` overrides the
+    /// fallback to int8.
+    fn feature_codec(&self, params: &EngineParams) -> Option<BlockCodec> {
+        resolve_codec(params, Codec::None)
+    }
+
+    /// Gradient-sparsification request for full-mode training; `None` (the
+    /// default) keeps dense SGD. `grad-topk` overrides this to
+    /// `params.grad_mode` at `params.grad_k` when `grad_k > 0`.
+    fn grad_compression(&self, _params: &EngineParams) -> Option<GradCompression> {
+        None
+    }
 
     /// The epoch whose *schedule* training epoch `epoch` executes. Identity
     /// for every engine that samples fresh batches per epoch; a replaying
@@ -252,6 +296,16 @@ impl EngineRegistry {
                 display_name: "AdaptiveCache",
                 ctor: super::strategies::adaptive_cache::ctor,
             },
+            EngineEntry {
+                id: "quant-pull",
+                display_name: "QuantPull",
+                ctor: super::strategies::compress::quant_pull_ctor,
+            },
+            EngineEntry {
+                id: "grad-topk",
+                display_name: "GradTopK",
+                ctor: super::strategies::compress::grad_topk_ctor,
+            },
         ] {
             reg.register(entry).expect("builtin engine ids are unique");
         }
@@ -316,7 +370,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn builtin_registry_holds_all_seven_engines() {
+    fn builtin_registry_holds_all_nine_engines() {
         let reg = EngineRegistry::global();
         let ids: Vec<_> = reg.ids().collect();
         assert_eq!(
@@ -328,7 +382,9 @@ mod tests {
                 "dist-gcn",
                 "fast-sample",
                 "green-window",
-                "adaptive-cache"
+                "adaptive-cache",
+                "quant-pull",
+                "grad-topk"
             ]
         );
         for id in ids {

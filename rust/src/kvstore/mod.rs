@@ -12,12 +12,13 @@
 //! metadata-only (counts and charges are exact, no row copies), while full
 //! runs gather real rows.
 
+use crate::compress::BlockCodec;
 use crate::graph::Dataset;
 use crate::metrics::CommStats;
 use crate::net::NetFabric;
 use crate::partition::Partition;
 use crate::{NodeId, WorkerId};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Result of a pull operation.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -32,6 +33,25 @@ pub struct Pull {
     pub rpcs: u64,
 }
 
+/// Running totals of the codec path, accumulated across every pull on the
+/// store. Deliberately *not* part of [`CommStats`]: the per-epoch serialized
+/// key set stays byte-stable; the coordinator snapshots this into the
+/// run-level `RunReport::compression` telemetry instead.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CompressTally {
+    /// Payload bytes the same pulls would have moved uncompressed
+    /// (`remote_rows × 4d`, RPC envelopes excluded from both sides).
+    pub raw_bytes: u64,
+    /// Compressed payload bytes actually charged (rows + codec block
+    /// headers; RPC envelopes excluded).
+    pub wire_bytes: u64,
+    /// Summed squared quantization error over round-tripped elements
+    /// (only accumulates in full mode, where rows are materialized).
+    pub sq_err: f64,
+    /// Elements round-tripped through the codec.
+    pub elems: u64,
+}
+
 /// Sharded feature store.
 pub struct KvStore {
     part: Arc<Partition>,
@@ -41,6 +61,12 @@ pub struct KvStore {
     rank: Vec<u32>,
     /// Per-partition feature rows (row-major); empty vecs in trace mode.
     shards: Vec<Vec<f32>>,
+    /// Wire codec for remote rows; `None` = full-precision f32 (the legacy
+    /// charge path, bit-exact).
+    codec: Option<BlockCodec>,
+    /// Codec accounting (see [`CompressTally`]); a plain mutex because pulls
+    /// may run concurrently from prefetcher threads.
+    tally: Mutex<CompressTally>,
 }
 
 impl KvStore {
@@ -69,7 +95,33 @@ impl KvStore {
         } else {
             vec![Vec::new(); part.num_parts as usize]
         };
-        KvStore { part, fabric, feature_dim: d, rank, shards }
+        KvStore {
+            part,
+            fabric,
+            feature_dim: d,
+            rank,
+            shards,
+            codec: None,
+            tally: Mutex::new(CompressTally::default()),
+        }
+    }
+
+    /// Install a wire codec: remote pulls charge the compressed payload and
+    /// (in full mode) gather codec-round-tripped rows. `None` is the default
+    /// full-precision path.
+    pub fn with_codec(mut self, codec: Option<BlockCodec>) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    /// The wire codec installed on this store, if any.
+    pub fn codec(&self) -> Option<BlockCodec> {
+        self.codec
+    }
+
+    /// Snapshot of the codec accounting accumulated since construction.
+    pub fn compression_tally(&self) -> CompressTally {
+        *self.tally.lock().unwrap()
     }
 
     /// Feature dimensionality.
@@ -132,6 +184,7 @@ impl KvStore {
                 remote_rows += 1;
             }
         }
+        let mut sq_err = 0.0f64;
         if let Some(buf) = out.as_deref_mut() {
             buf.clear();
             buf.reserve(ids.len() * self.feature_dim);
@@ -140,6 +193,15 @@ impl KvStore {
                 let r = self.rank[v as usize] as usize;
                 let d = self.feature_dim;
                 buf.extend_from_slice(&self.shards[p][r * d..(r + 1) * d]);
+                if let Some(codec) = self.codec {
+                    // Remote rows cross the wire, so the requester only ever
+                    // sees the dequantized reconstruction; local rows never
+                    // leave the shard and stay exact.
+                    if p as WorkerId != requester {
+                        let n = buf.len();
+                        sq_err += codec.round_trip(&mut buf[n - d..]);
+                    }
+                }
             }
         }
         let dsts: Vec<(WorkerId, u64)> = per_dst
@@ -148,7 +210,24 @@ impl KvStore {
             .filter(|&(_, &r)| r > 0)
             .map(|(p, &r)| (p as WorkerId, r))
             .collect();
-        let charge = self.fabric.charge_fanout_at(requester, &dsts, row_bytes, epoch);
+        let charge = match self.codec {
+            None => self.fabric.charge_fanout_at(requester, &dsts, row_bytes, epoch),
+            Some(codec) => {
+                let comp_row = codec.row_payload_bytes(self.feature_dim);
+                let per_dst_payload: Vec<(WorkerId, u64, u64)> =
+                    dsts.iter().map(|&(p, r)| (p, r, r * comp_row)).collect();
+                let charge =
+                    self.fabric.charge_fanout_payload_at(requester, &per_dst_payload, epoch);
+                if remote_rows > 0 {
+                    let mut t = self.tally.lock().unwrap();
+                    t.raw_bytes += remote_rows * row_bytes;
+                    t.wire_bytes += remote_rows * comp_row;
+                    t.sq_err += sq_err;
+                    t.elems += remote_rows * self.feature_dim as u64;
+                }
+                charge
+            }
+        };
         Pull {
             time: charge.time,
             bytes: charge.bytes,
@@ -309,5 +388,75 @@ mod tests {
     fn trace_mode_has_no_values() {
         let (_, _, kv) = setup(false);
         assert!(!kv.has_values());
+    }
+
+    fn setup_codec(
+        with_features: bool,
+        codec: Option<BlockCodec>,
+    ) -> (Dataset, Arc<Partition>, KvStore) {
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), with_features);
+        let part = Arc::new(metis_like(&ds.graph, 2, 0));
+        let kv = KvStore::new(&ds, part.clone(), NetFabric::new(FabricConfig::default()))
+            .with_codec(codec);
+        (ds, part, kv)
+    }
+
+    #[test]
+    fn codec_charges_compressed_payload_with_invariant_rows() {
+        use crate::compress::WireCodec;
+        let (_, part, plain_kv) = setup(false);
+        let codec = BlockCodec::new(WireCodec::Int8, 128);
+        let (_, _, quant_kv) = setup_codec(false, Some(codec));
+        let remotes: Vec<u32> = part.local_nodes[1].iter().take(50).copied().collect();
+        let mut s_plain = CommStats::default();
+        let mut s_quant = CommStats::default();
+        let plain = plain_kv.sync_pull(0, &remotes, None, &mut s_plain);
+        let quant = quant_kv.sync_pull(0, &remotes, None, &mut s_quant);
+        assert_eq!(quant.remote_rows, plain.remote_rows, "rows codec-invariant");
+        assert_eq!(quant.rpcs, plain.rpcs);
+        let d = plain_kv.feature_dim();
+        assert_eq!(plain.bytes, 50 * 4 * d as u64 + 64);
+        assert_eq!(quant.bytes, 50 * codec.row_payload_bytes(d) + 64);
+        assert!(quant.bytes < plain.bytes);
+        assert!(quant.time < plain.time, "less wire time for the same rows");
+        let t = quant_kv.compression_tally();
+        assert_eq!(t.raw_bytes, 50 * 4 * d as u64);
+        assert_eq!(t.wire_bytes, 50 * codec.row_payload_bytes(d));
+        assert_eq!(t.sq_err, 0.0, "trace mode round-trips nothing");
+        assert_eq!(plain_kv.compression_tally(), CompressTally::default());
+    }
+
+    #[test]
+    fn codec_round_trips_remote_rows_and_keeps_local_rows_exact() {
+        use crate::compress::WireCodec;
+        let codec = BlockCodec::new(WireCodec::Int8, 32);
+        let (ds, part, kv) = setup_codec(true, Some(codec));
+        let local = part.local_nodes[0][0];
+        let remote = part.local_nodes[1][0];
+        let ids = [local, remote];
+        let mut out = Vec::new();
+        let mut stats = CommStats::default();
+        kv.sync_pull(0, &ids, Some(&mut out), &mut stats);
+        let d = kv.feature_dim();
+        assert_eq!(&out[..d], ds.feature_row(local), "local row stays exact");
+        let got_remote = &out[d..2 * d];
+        let mut expect = ds.feature_row(remote).to_vec();
+        let se = codec.round_trip(&mut expect);
+        assert_eq!(got_remote, &expect[..], "remote row is the dequantized reconstruction");
+        let t = kv.compression_tally();
+        assert_eq!(t.elems, d as u64);
+        assert!((t.sq_err - se).abs() < 1e-12);
+        // The reconstruction error is small but (generically) non-zero.
+        assert!(t.sq_err >= 0.0 && t.sq_err.is_finite());
+    }
+
+    #[test]
+    fn no_codec_store_reports_empty_tally() {
+        let (_, part, kv) = setup(false);
+        let remotes: Vec<u32> = part.local_nodes[1].iter().take(5).copied().collect();
+        let mut stats = CommStats::default();
+        kv.sync_pull(0, &remotes, None, &mut stats);
+        assert_eq!(kv.codec(), None);
+        assert_eq!(kv.compression_tally(), CompressTally::default());
     }
 }

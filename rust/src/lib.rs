@@ -27,6 +27,7 @@
 //! paper-reproduction results.
 
 pub mod cache;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

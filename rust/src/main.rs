@@ -99,6 +99,13 @@ COMMON FLAGS
   --tail-utility F  adaptive-cache: shrink when the hot set's marginal
                     quarter serves under this fraction of remote accesses
   --hot-growth F / --hysteresis N      resize factor / flip-flop damping
+  --codec C         default | none | f16 | int8 — feature wire codec
+                    (quant-pull defaults to int8; every other engine to none;
+                    an explicit f16/int8 composes with any engine)
+  --codec-block N   int8 quantization block size in elements (default 128)
+  --grad-k F        grad-topk: fraction of gradient coordinates applied per
+                    step, in (0,1]; 0 disables (exactly `rapid`)
+  --grad-mode M     topk | randk — gradient coordinate selector
   --json PATH       write the run report as JSON"
     );
 }
@@ -273,6 +280,18 @@ fn config_from_flags(flags: &Flags) -> Result<RunConfig> {
     if let Some(v) = flags.get("hysteresis") {
         cfg.engine_params.hysteresis = v.parse()?;
     }
+    if let Some(v) = flags.get("codec") {
+        cfg.engine_params.codec = v.parse()?;
+    }
+    if let Some(v) = flags.get("codec-block") {
+        cfg.engine_params.codec_block = v.parse()?;
+    }
+    if let Some(v) = flags.get("grad-k") {
+        cfg.engine_params.grad_k = v.parse()?;
+    }
+    if let Some(v) = flags.get("grad-mode") {
+        cfg.engine_params.grad_mode = v.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -393,6 +412,19 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         if links.len() > 12 {
             println!("({} more links in the JSON report)", links.len() - 12);
         }
+    }
+    if let Some(c) = &report.compression {
+        println!(
+            "compression: codec={} | {} -> {} ({:.2}x, {} saved) | quant MSE {:.3e} | grads {}/{} coords",
+            c.codec,
+            fmt_bytes(c.uncompressed_bytes as f64),
+            fmt_bytes(c.compressed_bytes as f64),
+            c.effective_compression_ratio,
+            fmt_bytes(c.bytes_saved as f64),
+            c.quant_mse,
+            c.grad_elems_sent,
+            c.grad_elems_total,
+        );
     }
     if let Some(p) = flags.get("json") {
         std::fs::write(p, report.to_json())?;
@@ -677,6 +709,10 @@ mod tests {
             ("tail-utility", "0.02"),
             ("hot-growth", "1.5"),
             ("hysteresis", "3"),
+            ("codec", "f16"),
+            ("codec-block", "64"),
+            ("grad-k", "0.25"),
+            ("grad-mode", "randk"),
         ]);
         let cfg = config_from_flags(&f).unwrap();
         assert_eq!(cfg.dataset.name, "products-sim");
@@ -698,6 +734,18 @@ mod tests {
         assert!((cfg.engine_params.tail_utility - 0.02).abs() < 1e-12);
         assert!((cfg.engine_params.hot_growth - 1.5).abs() < 1e-12);
         assert_eq!(cfg.engine_params.hysteresis, 3);
+        assert_eq!(cfg.engine_params.codec, rapidgnn::compress::Codec::F16);
+        assert_eq!(cfg.engine_params.codec_block, 64);
+        assert!((cfg.engine_params.grad_k - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.engine_params.grad_mode, rapidgnn::compress::GradMode::RandK);
+    }
+
+    #[test]
+    fn compression_flags_reject_bad_values() {
+        assert!(config_from_flags(&flags(&[("codec", "gzip")])).is_err());
+        assert!(config_from_flags(&flags(&[("codec-block", "0")])).is_err());
+        assert!(config_from_flags(&flags(&[("grad-k", "1.5")])).is_err());
+        assert!(config_from_flags(&flags(&[("grad-mode", "topj")])).is_err());
     }
 
     #[test]

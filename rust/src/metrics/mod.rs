@@ -229,6 +229,47 @@ impl LinkReport {
     }
 }
 
+/// Whole-run communication-compression telemetry. Present only when a wire
+/// codec or gradient sparsifier actually ran; omitted from serialization
+/// otherwise, so uncompressed reports — including the golden trace fixture —
+/// stay byte-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompressionReport {
+    /// Wire codec label (`f16` / `int8`; `none` when only gradients compress).
+    pub codec: String,
+    /// Raw f32 bytes the compressed remote rows would have moved.
+    pub uncompressed_bytes: u64,
+    /// Payload bytes actually charged for those rows (block headers included).
+    pub compressed_bytes: u64,
+    /// `uncompressed_bytes - compressed_bytes` (saturating at 0).
+    pub bytes_saved: u64,
+    /// `uncompressed_bytes / compressed_bytes`; 1.0 when nothing compressed.
+    pub effective_compression_ratio: f64,
+    /// Mean squared quantization error per feature element (0 in trace mode,
+    /// where rows are never materialized).
+    pub quant_mse: f64,
+    /// Gradient coordinates produced by backward passes (full mode).
+    pub grad_elems_total: u64,
+    /// Gradient coordinates applied after sparsification.
+    pub grad_elems_sent: u64,
+}
+
+impl CompressionReport {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("codec", self.codec.as_str())
+            .set("uncompressed_bytes", self.uncompressed_bytes)
+            .set("compressed_bytes", self.compressed_bytes)
+            .set("bytes_saved", self.bytes_saved)
+            .set("effective_compression_ratio", self.effective_compression_ratio)
+            .set("quant_mse", self.quant_mse)
+            .set("grad_elems_total", self.grad_elems_total)
+            .set("grad_elems_sent", self.grad_elems_sent);
+        v
+    }
+}
+
 /// Whole-run summary aggregated across workers and epochs.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunReport {
@@ -250,6 +291,10 @@ pub struct RunReport {
     /// omitted from the serialized report — otherwise, so default-mode
     /// traces stay byte-identical).
     pub links: Vec<LinkReport>,
+    /// Communication-compression telemetry (`None` unless a wire codec or
+    /// gradient sparsifier ran; omitted from serialization so uncompressed
+    /// traces stay byte-identical).
+    pub compression: Option<CompressionReport>,
 }
 
 impl RunReport {
@@ -391,6 +436,9 @@ impl RunReport {
             let links: Vec<Value> = self.links.iter().map(LinkReport::to_value).collect();
             v.set("links", links);
         }
+        if let Some(c) = &self.compression {
+            v.set("compression", c.to_value());
+        }
         v
     }
 
@@ -489,6 +537,36 @@ mod tests {
         };
         let json = with.to_value().to_json_pretty();
         assert!(json.contains("cache_plan") && json.contains("resize_events"), "{json}");
+    }
+
+    #[test]
+    fn compression_is_omitted_unless_present() {
+        // Byte-stability contract: an uncompressed run's report must
+        // serialize to exactly the pre-CompressionReport shape.
+        let without = report_with(vec![EpochReport::default()]);
+        assert!(!without.to_json().contains("compression"));
+        let with = RunReport {
+            compression: Some(CompressionReport {
+                codec: "int8".to_string(),
+                uncompressed_bytes: 4000,
+                compressed_bytes: 1080,
+                bytes_saved: 2920,
+                effective_compression_ratio: 4000.0 / 1080.0,
+                quant_mse: 1e-6,
+                grad_elems_total: 100,
+                grad_elems_sent: 10,
+            }),
+            ..Default::default()
+        };
+        let json = with.to_json();
+        assert!(
+            json.contains("compression")
+                && json.contains("effective_compression_ratio")
+                && json.contains("\"codec\""),
+            "{json}"
+        );
+        let v = Value::from_json(&json).unwrap();
+        assert_eq!(v, with.to_value());
     }
 
     #[test]

@@ -190,7 +190,25 @@ impl NetFabric {
         row_bytes: u64,
         epoch: u32,
     ) -> Charge {
-        let bytes = rows * row_bytes + 64; // 64B header
+        // Uncompressed payload: same `rows * row_bytes + 64` as ever.
+        self.charge_rpc_payload_at(src, dst, rows, rows * row_bytes, epoch)
+    }
+
+    /// Payload-granular [`Self::charge_rpc_at`]: `payload_bytes` is the wire
+    /// payload (compressed rows + codec block headers), decoupled from the
+    /// row count, which still prices the per-row serialization overhead. The
+    /// row-granular entry points delegate here with `payload = rows ×
+    /// row_bytes`, so the legacy path is bit-identical; the kvstore's codec
+    /// path is the only caller passing anything smaller.
+    pub fn charge_rpc_payload_at(
+        &self,
+        src: WorkerId,
+        dst: WorkerId,
+        rows: u64,
+        payload_bytes: u64,
+        epoch: u32,
+    ) -> Charge {
+        let bytes = payload_bytes + 64; // 64B RPC envelope
         let mut st = self.state.lock().unwrap();
         let link = match st.link_models.get(&(src, dst)) {
             Some(&m) => m,
@@ -291,6 +309,29 @@ impl NetFabric {
                 continue;
             }
             let c = self.charge_rpc_at(src, dst, rows, row_bytes, epoch);
+            max_time = max_time.max(c.time);
+            total_bytes += c.bytes;
+        }
+        Charge { time: max_time, bytes: total_bytes }
+    }
+
+    /// Payload-granular [`Self::charge_fanout_at`]: each destination carries
+    /// its own `(rows, payload_bytes)` pair (the codec path's per-shard
+    /// compressed sizes). Same critical-path semantics: max time over
+    /// destinations, bytes summed, zero-row destinations skipped.
+    pub fn charge_fanout_payload_at(
+        &self,
+        src: WorkerId,
+        per_dst: &[(WorkerId, u64, u64)],
+        epoch: u32,
+    ) -> Charge {
+        let mut max_time = 0f64;
+        let mut total_bytes = 0u64;
+        for &(dst, rows, payload_bytes) in per_dst {
+            if rows == 0 {
+                continue;
+            }
+            let c = self.charge_rpc_payload_at(src, dst, rows, payload_bytes, epoch);
             max_time = max_time.max(c.time);
             total_bytes += c.bytes;
         }
@@ -573,6 +614,50 @@ mod tests {
             per_link_expected.max(global_expected),
             per_link_expected + global_expected
         );
+    }
+
+    #[test]
+    fn payload_charge_with_full_payload_is_bit_identical() {
+        // The row-granular entry point delegates to the payload one, so
+        // charging rows×row_bytes explicitly must produce the same charge,
+        // counters, and claims — the codec-off degeneration pin at the
+        // fabric level.
+        let mut cfg = FabricConfig::default();
+        cfg.contention = true;
+        cfg.loss_rate = 0.5;
+        let a = NetFabric::new(cfg.clone()).with_world_size(4);
+        let b = NetFabric::new(cfg).with_world_size(4);
+        for i in 0..6u64 {
+            let ca = a.charge_rpc_at(0, 1, 10 + i, 400, 0);
+            let cb = b.charge_rpc_payload_at(0, 1, 10 + i, (10 + i) * 400, 0);
+            assert_eq!(ca, cb);
+        }
+        assert_eq!(a.link_stats(), b.link_stats());
+        assert_eq!(a.take_route_claims(), b.take_route_claims());
+    }
+
+    #[test]
+    fn payload_charge_prices_compressed_bytes_but_full_rows() {
+        let f = fabric();
+        let full = f.charge_rpc_payload_at(0, 1, 100, 100 * 400, 0);
+        let compressed = f.charge_rpc_payload_at(0, 1, 100, 100 * 108, 0);
+        assert_eq!(full.bytes, 100 * 400 + 64);
+        assert_eq!(compressed.bytes, 100 * 108 + 64);
+        // Same rows → same latency + per-row overhead; only the wire term
+        // shrinks.
+        let bw = f.config().bandwidth_bytes_per_sec;
+        let expect = (full.bytes - compressed.bytes) as f64 / bw;
+        assert!((full.time - compressed.time - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fanout_payload_matches_per_rpc_payload_charges() {
+        let f = fabric();
+        let c = f.charge_fanout_payload_at(0, &[(1, 10, 1080), (2, 0, 999), (3, 7, 756)], 0);
+        assert_eq!(c.bytes, (1080 + 64) + (756 + 64), "zero-row dst skipped");
+        assert_eq!(f.link_stats().len(), 2);
+        let single = fabric().charge_rpc_payload_at(0, 1, 10, 1080, 0);
+        assert!((c.time - single.time).abs() < 1e-15, "max over dsts");
     }
 
     #[test]

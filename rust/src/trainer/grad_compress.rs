@@ -1,0 +1,209 @@
+//! Error-feedback gradient sparsification around the host SAGE backend.
+//!
+//! Classic EF-SGD (Stich et al.): each step the carried residual is folded
+//! into the fresh gradient, only the top-k (or a seeded random-k) fraction of
+//! coordinates per parameter group is applied, and the dropped mass becomes
+//! the next residual. Selection runs independently per parameter group
+//! (`w_self`, `w_nbr`, `bias` of every layer) so no group is starved by
+//! another's magnitude scale.
+//!
+//! Determinism: top-k is total-ordered (|g| desc, index asc) and random-k
+//! draws from an [`Rng`] seeded by `base_seed`, the step counter, and the
+//! group index — the cluster event loop steps workers in virtual-time order,
+//! so the sequence of `step` calls (and hence every mask) is identical across
+//! `RAPIDGNN_THREADS` settings.
+
+use super::sage::{SageModel, StepOutput};
+use super::tensor::Mat;
+use super::{GradStats, TrainStep};
+use crate::compress::{keep_count, rand_k_indices, top_k_indices, ErrorFeedback, GradMode};
+use crate::sampler::seed::Rng;
+use crate::sampler::SampledBatch;
+
+/// Residual accumulators for one SAGE layer's three parameter groups.
+struct LayerFeedback {
+    w_self: ErrorFeedback,
+    w_nbr: ErrorFeedback,
+    bias: ErrorFeedback,
+}
+
+/// [`SageModel`] with error-feedback gradient sparsification between
+/// backward and update.
+pub struct GradCompressedSage {
+    model: SageModel,
+    mode: GradMode,
+    k: f64,
+    seed: u64,
+    step: u64,
+    feedback: Vec<LayerFeedback>,
+    stats: GradStats,
+}
+
+impl GradCompressedSage {
+    /// Wrap `model`, keeping a `k` fraction of coordinates per group per step.
+    pub fn new(model: SageModel, mode: GradMode, k: f64, seed: u64) -> GradCompressedSage {
+        let feedback = model
+            .layers
+            .iter()
+            .map(|l| LayerFeedback {
+                w_self: ErrorFeedback::new(l.w_self.data.len()),
+                w_nbr: ErrorFeedback::new(l.w_nbr.data.len()),
+                bias: ErrorFeedback::new(l.bias.len()),
+            })
+            .collect();
+        GradCompressedSage { model, mode, k, seed, step: 0, feedback, stats: GradStats::default() }
+    }
+
+    /// The wrapped model (tests compare parameters against a dense run).
+    pub fn model(&self) -> &SageModel {
+        &self.model
+    }
+
+    /// Total squared residual mass currently carried (telemetry / tests).
+    pub fn residual_norm_sq(&self) -> f64 {
+        self.feedback
+            .iter()
+            .map(|f| {
+                f.w_self.residual_norm_sq() + f.w_nbr.residual_norm_sq() + f.bias.residual_norm_sq()
+            })
+            .sum()
+    }
+}
+
+/// Accumulate → select on the accumulated values → retain, counting elements.
+fn sparsify(
+    ef: &mut ErrorFeedback,
+    grad: &mut [f32],
+    mode: GradMode,
+    k: f64,
+    group_seed: u64,
+    stats: &mut GradStats,
+) {
+    ef.accumulate(grad);
+    let keep = keep_count(grad.len(), k);
+    let idx = match mode {
+        GradMode::TopK => top_k_indices(grad, keep),
+        GradMode::RandK => rand_k_indices(grad.len(), keep, &mut Rng::new(group_seed)),
+    };
+    stats.elems_total += grad.len() as u64;
+    stats.elems_sent += idx.len() as u64;
+    ef.retain(grad, &idx);
+}
+
+impl TrainStep for GradCompressedSage {
+    fn step(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16], lr: f32) -> StepOutput {
+        let (out, mut grads) = self.model.forward_backward(x0, batch, labels);
+        let step_seed = self.seed ^ self.step.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        for (l, (g, fb)) in grads.iter_mut().zip(self.feedback.iter_mut()).enumerate() {
+            let base = step_seed ^ ((l as u64 + 1) << 32);
+            let (mode, k) = (self.mode, self.k);
+            sparsify(&mut fb.w_self, &mut g.w_self.data, mode, k, base ^ 1, &mut self.stats);
+            sparsify(&mut fb.w_nbr, &mut g.w_nbr.data, mode, k, base ^ 2, &mut self.stats);
+            sparsify(&mut fb.bias, &mut g.bias, mode, k, base ^ 3, &mut self.stats);
+        }
+        self.model.apply_grads(&grads, lr);
+        self.step += 1;
+        out
+    }
+
+    fn eval(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16]) -> StepOutput {
+        self.model.evaluate(x0, batch, labels)
+    }
+
+    fn grad_stats(&self) -> Option<GradStats> {
+        Some(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset};
+    use crate::graph::build_dataset;
+    use crate::sampler::{sample_blocks, Fanout};
+
+    fn tiny_batch() -> (crate::graph::Dataset, SampledBatch, Mat, Vec<u16>) {
+        let ds = build_dataset(&DatasetConfig::preset(DatasetPreset::Tiny, 1.0), true);
+        let seeds: Vec<u32> = ds.train_nodes.iter().take(16).copied().collect();
+        let batch = sample_blocks(&ds.graph, &seeds, &[Fanout::Sample(4), Fanout::Sample(3)], 9);
+        let d = ds.config.feature_dim as usize;
+        let mut x0 = Mat::zeros(batch.node_layers[0].len(), d);
+        for (i, &v) in batch.node_layers[0].iter().enumerate() {
+            x0.row_mut(i).copy_from_slice(ds.feature_row(v));
+        }
+        let labels: Vec<u16> = batch.seeds().iter().map(|&s| ds.labels[s as usize]).collect();
+        (ds, batch, x0, labels)
+    }
+
+    fn fresh_model(ds: &crate::graph::Dataset) -> SageModel {
+        SageModel::new(ds.config.feature_dim as usize, 8, ds.config.num_classes as usize, 2, 1)
+    }
+
+    #[test]
+    fn keep_all_is_bit_identical_to_dense_sgd() {
+        // k = 1 keeps every coordinate: residuals stay zero and the wrapped
+        // model's trajectory is the dense one, bit for bit.
+        let (ds, batch, x0, labels) = tiny_batch();
+        let mut dense = fresh_model(&ds);
+        let mut wrapped = GradCompressedSage::new(fresh_model(&ds), GradMode::TopK, 1.0, 7);
+        for _ in 0..5 {
+            let a = dense.train_step(&x0, &batch, &labels, 0.1);
+            let b = wrapped.step(&x0, &batch, &labels, 0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        }
+        for (dl, wl) in dense.layers.iter().zip(&wrapped.model().layers) {
+            assert_eq!(dl.w_self.data, wl.w_self.data);
+            assert_eq!(dl.w_nbr.data, wl.w_nbr.data);
+            assert_eq!(dl.bias, wl.bias);
+        }
+        assert_eq!(wrapped.residual_norm_sq(), 0.0);
+        let s = wrapped.grad_stats().unwrap();
+        assert_eq!(s.elems_sent, s.elems_total);
+    }
+
+    #[test]
+    fn topk_ten_percent_still_trains() {
+        let (ds, batch, x0, labels) = tiny_batch();
+        let mut wrapped = GradCompressedSage::new(fresh_model(&ds), GradMode::TopK, 0.1, 7);
+        let first = wrapped.step(&x0, &batch, &labels, 0.1).loss;
+        let mut last = first;
+        for _ in 0..40 {
+            last = wrapped.step(&x0, &batch, &labels, 0.1).loss;
+        }
+        assert!(last < first * 0.7, "EF top-k loss {first} -> {last}");
+        assert!(wrapped.residual_norm_sq() > 0.0, "dropped mass must be carried");
+        let s = wrapped.grad_stats().unwrap();
+        assert!(s.elems_sent < s.elems_total, "{s:?}");
+        // ~10% kept, padded up by per-group ceil(len·k) and the ≥1 floor.
+        let ratio = s.elems_sent as f64 / s.elems_total as f64;
+        assert!(ratio > 0.05 && ratio < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn randk_is_seed_deterministic() {
+        let (ds, batch, x0, labels) = tiny_batch();
+        let mut a = GradCompressedSage::new(fresh_model(&ds), GradMode::RandK, 0.2, 42);
+        let mut b = GradCompressedSage::new(fresh_model(&ds), GradMode::RandK, 0.2, 42);
+        for _ in 0..4 {
+            let la = a.step(&x0, &batch, &labels, 0.1).loss;
+            let lb = b.step(&x0, &batch, &labels, 0.1).loss;
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        for (al, bl) in a.model().layers.iter().zip(&b.model().layers) {
+            assert_eq!(al.w_self.data, bl.w_self.data);
+        }
+        // A different seed picks different masks (parameters diverge).
+        let mut c = GradCompressedSage::new(fresh_model(&ds), GradMode::RandK, 0.2, 43);
+        for _ in 0..4 {
+            c.step(&x0, &batch, &labels, 0.1);
+        }
+        assert_ne!(a.model().layers[0].w_self.data, c.model().layers[0].w_self.data);
+    }
+
+    #[test]
+    fn dense_backend_reports_no_grad_stats() {
+        let (ds, _, _, _) = tiny_batch();
+        let dense: Box<dyn TrainStep> = Box::new(fresh_model(&ds));
+        assert!(dense.grad_stats().is_none());
+    }
+}

@@ -9,14 +9,26 @@
 //! Both implement [`TrainStep`] so engines are backend-agnostic, and the
 //! integration tests assert they produce matching losses on the same batches.
 
+pub mod grad_compress;
 pub mod sage;
 pub mod tensor;
 
+pub use grad_compress::GradCompressedSage;
 pub use sage::{SageModel, StepOutput};
 pub use tensor::Mat;
 
 use crate::graph::Dataset;
 use crate::sampler::SampledBatch;
+
+/// Gradient-compression telemetry: cumulative coordinate counts before and
+/// after sparsification over a backend's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GradStats {
+    /// Gradient coordinates produced by backward passes.
+    pub elems_total: u64,
+    /// Coordinates actually applied (the sparse "wire" volume).
+    pub elems_sent: u64,
+}
 
 /// A train-step backend.
 pub trait TrainStep {
@@ -26,6 +38,12 @@ pub trait TrainStep {
 
     /// Evaluate without updating.
     fn eval(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16]) -> StepOutput;
+
+    /// Gradient-compression telemetry; `None` (the default) for dense
+    /// backends.
+    fn grad_stats(&self) -> Option<GradStats> {
+        None
+    }
 }
 
 impl TrainStep for SageModel {

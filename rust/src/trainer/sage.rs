@@ -118,14 +118,21 @@ impl SageModel {
         lr: f32,
     ) -> StepOutput {
         let (out, grads) = self.forward_backward(x0, batch, labels);
-        for (layer, g) in self.layers.iter_mut().zip(&grads) {
+        self.apply_grads(&grads, lr);
+        out
+    }
+
+    /// Apply per-layer gradients with plain SGD (`p ← p − lr·g`). Split out
+    /// of [`Self::train_step`] so gradient-compressing backends can edit the
+    /// gradients between backward and update.
+    pub fn apply_grads(&mut self, grads: &[SageLayerGrad], lr: f32) {
+        for (layer, g) in self.layers.iter_mut().zip(grads) {
             layer.w_self.sgd(&g.w_self, lr);
             layer.w_nbr.sgd(&g.w_nbr, lr);
             for (b, &gb) in layer.bias.iter_mut().zip(&g.bias) {
                 *b -= lr * gb;
             }
         }
-        out
     }
 
     /// Forward + backward; returns step output and per-layer gradients.

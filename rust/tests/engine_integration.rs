@@ -74,7 +74,15 @@ fn rapid_minimizes_remote_rows_across_the_registry() {
         .find(|(e, _)| *e == Engine::Rapid)
         .expect("rapid registered")
         .1;
-    let rapid_equivalent = [Engine::Rapid, Engine::FastSample, Engine::AdaptiveCache];
+    // quant-pull and grad-topk compress bytes (and gradients), never rows —
+    // their remote_rows match rapid's exactly.
+    let rapid_equivalent = [
+        Engine::Rapid,
+        Engine::FastSample,
+        Engine::AdaptiveCache,
+        Engine::QuantPull,
+        Engine::GradTopk,
+    ];
     for (engine, rows) in &rows_by_engine {
         assert!(
             rapid_rows <= *rows,
