@@ -97,6 +97,17 @@ impl CacheBuffer {
     pub fn device_bytes(&self) -> u64 {
         (self.rows.len() * 4 + self.index.len() * 16) as u64
     }
+
+    /// The cached node ids in row order — exactly the ranked hot-id list the
+    /// buffer was built from ([`Self::new`] assigns row indices in input
+    /// order). Checkpoints record this so a restore rebuilds the identical
+    /// buffer, hash-map iteration order notwithstanding.
+    pub fn ids_by_row(&self) -> Vec<NodeId> {
+        let mut pairs: Vec<(u32, NodeId)> =
+            self.index.iter().map(|(&v, &i)| (i, v)).collect();
+        pairs.sort_unstable();
+        pairs.into_iter().map(|(_, v)| v).collect()
+    }
 }
 
 /// The double-buffered cache: steady `C_s` + secondary `C_sec`.
@@ -309,6 +320,23 @@ mod tests {
     #[should_panic]
     fn buffer_rejects_wrong_row_shape() {
         CacheBuffer::new(&[1, 2], vec![0.0; 5], 3);
+    }
+
+    #[test]
+    fn ids_by_row_recovers_ranked_insertion_order() {
+        // Deliberately non-sorted input: the accessor must return the exact
+        // construction order, not id order or hash-iteration order.
+        let nodes = [42u32, 7, 99, 3, 58];
+        let buf = CacheBuffer::new(&nodes, Vec::new(), 16);
+        assert_eq!(buf.ids_by_row(), nodes.to_vec());
+        // Rebuilding from the recovered list yields identical row lookups.
+        let rows: Vec<f32> = (0..nodes.len() * 2).map(|x| x as f32).collect();
+        let full = CacheBuffer::new(&nodes, rows.clone(), 2);
+        let rebuilt = CacheBuffer::new(&full.ids_by_row(), rows, 2);
+        for &v in &nodes {
+            assert_eq!(full.row(v), rebuilt.row(v));
+        }
+        assert!(CacheBuffer::default().ids_by_row().is_empty());
     }
 
     #[test]

@@ -349,6 +349,18 @@ impl ErrorFeedback {
     pub fn residual_norm_sq(&self) -> f64 {
         self.residual.iter().map(|&r| (r as f64).powi(2)).sum()
     }
+
+    /// The carried residual (checkpoint export).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Replace the carried residual (checkpoint restore). The length must
+    /// match the group this accumulator was built for.
+    pub fn set_residual(&mut self, r: &[f32]) {
+        assert_eq!(r.len(), self.residual.len(), "residual length mismatch");
+        self.residual.copy_from_slice(r);
+    }
 }
 
 #[cfg(test)]

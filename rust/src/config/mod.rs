@@ -11,8 +11,8 @@ mod run;
 
 pub use dataset::{DatasetConfig, DatasetPreset};
 pub use run::{
-    Engine, EngineParams, ExecMode, FabricConfig, LinkKey, LinkModel, PowerConfig, RouteHop,
-    RunConfig, SpeedPhase, Topology, TrainerBackend,
+    Engine, EngineParams, ExecMode, FabricConfig, FailureEvent, FailurePlan, LinkKey, LinkModel,
+    PowerConfig, RouteHop, RunConfig, SpeedPhase, Topology, TrainerBackend,
 };
 
 use crate::util::value::Value;

@@ -1006,6 +1006,177 @@ impl PowerConfig {
     }
 }
 
+/// One deterministic elasticity event, applied at an epoch boundary.
+///
+/// `at_epoch` names the boundary *entering* that epoch: the event is applied
+/// after epoch `at_epoch - 1` finishes and before epoch `at_epoch` starts,
+/// so valid boundaries are the interior ones, `1..epochs`. Events heal
+/// entirely within the boundary (the recovery work is priced through the
+/// fabric models and reported in `RunReport.recovery`), which is what makes
+/// any failure schedule replay the failure-free training timeline bit-exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureEvent {
+    /// The host serving `worker` departs; a performance-equivalent standby
+    /// adopts the logical worker id, pulling the shard's feature rows and the
+    /// warm hot-cache rows from a donor peer.
+    WorkerLeave { worker: u32, at_epoch: u32 },
+    /// A replacement host joins as `worker`; shard + cache state move to it
+    /// (same movement price as a leave — joins model host replacement).
+    WorkerJoin { worker: u32, at_epoch: u32 },
+    /// The `a`↔`b` link is down at this boundary: recovery flows between the
+    /// pair detour through a third alive worker (training traffic is assumed
+    /// to ride redundant paths; see `sim/README.md`).
+    LinkDown { a: u32, b: u32, at_epoch: u32 },
+    /// The `a`↔`b` link is restored.
+    LinkUp { a: u32, b: u32, at_epoch: u32 },
+    /// Coordinator crash at this boundary; the run restarts from the last
+    /// checkpoint at or before it and the re-executed span is charged as
+    /// `lost_work_time` (deterministic replay — epochs are not duplicated).
+    CrashRestart { at_epoch: u32 },
+}
+
+impl FailureEvent {
+    /// The boundary this event fires at.
+    pub fn at_epoch(&self) -> u32 {
+        match *self {
+            FailureEvent::WorkerLeave { at_epoch, .. }
+            | FailureEvent::WorkerJoin { at_epoch, .. }
+            | FailureEvent::LinkDown { at_epoch, .. }
+            | FailureEvent::LinkUp { at_epoch, .. }
+            | FailureEvent::CrashRestart { at_epoch } => at_epoch,
+        }
+    }
+
+    /// Compact spec-string form (`leave:1@2`, `linkdown:0-1@3`, `crash@2`).
+    pub fn encode(&self) -> String {
+        match *self {
+            FailureEvent::WorkerLeave { worker, at_epoch } => format!("leave:{worker}@{at_epoch}"),
+            FailureEvent::WorkerJoin { worker, at_epoch } => format!("join:{worker}@{at_epoch}"),
+            FailureEvent::LinkDown { a, b, at_epoch } => format!("linkdown:{a}-{b}@{at_epoch}"),
+            FailureEvent::LinkUp { a, b, at_epoch } => format!("linkup:{a}-{b}@{at_epoch}"),
+            FailureEvent::CrashRestart { at_epoch } => format!("crash@{at_epoch}"),
+        }
+    }
+}
+
+/// A deterministic failure schedule: an ordered list of [`FailureEvent`]s.
+///
+/// Serialized as one compact comma-separated spec string (the TOML subset has
+/// no arrays of tables, the same reason `FabricConfig` flattens its speed
+/// phases): `"leave:1@2,join:1@3,linkdown:0-1@1,linkup:0-1@2,crash@3"`.
+/// The empty string is the empty plan — and the `failures` key is omitted
+/// from serialized configs entirely, keeping pre-failure configs byte-stable.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FailurePlan {
+    /// Events in spec order; a boundary's events apply in this order.
+    pub events: Vec<FailureEvent>,
+}
+
+impl FailurePlan {
+    /// Parse a spec string (see type docs). Whitespace around commas is
+    /// tolerated; the empty string parses to the empty plan.
+    pub fn parse(spec: &str) -> Result<FailurePlan> {
+        let mut events = Vec::new();
+        for raw in spec.split(',') {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let Some((head, at)) = tok.rsplit_once('@') else {
+                bail!("failure event '{tok}': missing '@epoch'");
+            };
+            let at_epoch: u32 = at
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("failure event '{tok}': bad epoch '{at}'"))?;
+            let parse_worker = |s: &str| -> Result<u32> {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("failure event '{tok}': bad worker '{s}'"))
+            };
+            let parse_pair = |s: &str| -> Result<(u32, u32)> {
+                let Some((a, b)) = s.split_once('-') else {
+                    bail!("failure event '{tok}': expected 'a-b' link endpoints");
+                };
+                Ok((parse_worker(a)?, parse_worker(b)?))
+            };
+            let ev = match head.trim().split_once(':') {
+                None if head.trim() == "crash" => FailureEvent::CrashRestart { at_epoch },
+                Some(("leave", w)) => {
+                    FailureEvent::WorkerLeave { worker: parse_worker(w)?, at_epoch }
+                }
+                Some(("join", w)) => FailureEvent::WorkerJoin { worker: parse_worker(w)?, at_epoch },
+                Some(("linkdown", p)) => {
+                    let (a, b) = parse_pair(p)?;
+                    FailureEvent::LinkDown { a, b, at_epoch }
+                }
+                Some(("linkup", p)) => {
+                    let (a, b) = parse_pair(p)?;
+                    FailureEvent::LinkUp { a, b, at_epoch }
+                }
+                _ => bail!(
+                    "failure event '{tok}': unknown kind (leave:W@E | join:W@E | \
+                     linkdown:A-B@E | linkup:A-B@E | crash@E)"
+                ),
+            };
+            events.push(ev);
+        }
+        Ok(FailurePlan { events })
+    }
+
+    /// Re-encode to the canonical spec string.
+    pub fn encode(&self) -> String {
+        self.events.iter().map(FailureEvent::encode).collect::<Vec<_>>().join(",")
+    }
+
+    /// True when no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events firing at the boundary entering `epoch`, in spec order.
+    pub fn events_at(&self, epoch: u32) -> impl Iterator<Item = &FailureEvent> {
+        self.events.iter().filter(move |e| e.at_epoch() == epoch)
+    }
+
+    /// Check the plan against the run shape.
+    pub fn validate(&self, num_workers: u32, epochs: u32) -> Result<()> {
+        for ev in &self.events {
+            let at = ev.at_epoch();
+            ensure!(
+                at >= 1 && at < epochs,
+                "failure event '{}' must land on an interior epoch boundary (1..{epochs})",
+                ev.encode()
+            );
+            let check_worker = |w: u32| -> Result<()> {
+                ensure!(
+                    w < num_workers,
+                    "failure event '{}' names worker {w} >= num_workers {num_workers}",
+                    ev.encode()
+                );
+                Ok(())
+            };
+            match *ev {
+                FailureEvent::WorkerLeave { worker, .. }
+                | FailureEvent::WorkerJoin { worker, .. } => {
+                    check_worker(worker)?;
+                    ensure!(
+                        num_workers >= 2,
+                        "worker leave/join needs >= 2 workers (a donor must stay alive)"
+                    );
+                }
+                FailureEvent::LinkDown { a, b, .. } | FailureEvent::LinkUp { a, b, .. } => {
+                    check_worker(a)?;
+                    check_worker(b)?;
+                    ensure!(a != b, "failure event '{}' links a worker to itself", ev.encode());
+                }
+                FailureEvent::CrashRestart { .. } => {}
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Everything needed to reproduce a training run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -1050,6 +1221,15 @@ pub struct RunConfig {
     /// Directory for precomputed metadata blocks (SSD streaming). Empty =
     /// a per-run temp dir.
     pub metadata_dir: String,
+    /// Failure schedule as a compact spec string ([`FailurePlan::parse`]).
+    /// Empty = no failures; the key is omitted from serialized configs.
+    pub failures: String,
+    /// Write a checkpoint every K epoch boundaries (0 = never; the key is
+    /// omitted from serialized configs when 0).
+    pub checkpoint_every: u32,
+    /// Directory for checkpoints. Empty = a per-run temp dir; the key is
+    /// omitted from serialized configs when empty.
+    pub checkpoint_dir: String,
 }
 
 impl Default for RunConfig {
@@ -1073,6 +1253,9 @@ impl Default for RunConfig {
             engine_params: EngineParams::default(),
             gcn_neighbor_cap: 64,
             metadata_dir: String::new(),
+            failures: String::new(),
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
         }
     }
 }
@@ -1127,7 +1310,19 @@ impl RunConfig {
                 self.num_workers
             );
         }
+        self.failure_plan()?.validate(self.num_workers, self.epochs)?;
         Ok(())
+    }
+
+    /// The parsed failure schedule (empty plan when `failures` is empty).
+    pub fn failure_plan(&self) -> Result<FailurePlan> {
+        FailurePlan::parse(&self.failures)
+    }
+
+    /// True when this run needs the recovery layer (failure events scheduled
+    /// or checkpoints requested) and must take the cluster execution path.
+    pub fn has_recovery(&self) -> bool {
+        !self.failures.is_empty() || self.checkpoint_every > 0
     }
 
     /// Number of GNN layers implied by the fanout.
@@ -1156,6 +1351,17 @@ impl RunConfig {
             .set("fabric", self.fabric.to_value())
             .set("power", self.power.to_value())
             .set("engine_params", self.engine_params.to_value());
+        // Recovery knobs are emitted only when set, so configs written before
+        // the failure layer existed serialize byte-identically.
+        if !self.failures.is_empty() {
+            v.set("failures", self.failures.as_str());
+        }
+        if self.checkpoint_every > 0 {
+            v.set("checkpoint_every", self.checkpoint_every);
+        }
+        if !self.checkpoint_dir.is_empty() {
+            v.set("checkpoint_dir", self.checkpoint_dir.as_str());
+        }
         v
     }
 
@@ -1184,6 +1390,19 @@ impl RunConfig {
             },
             gcn_neighbor_cap: v.req_u32("gcn_neighbor_cap")?,
             metadata_dir: v.req_str("metadata_dir")?.to_string(),
+            // Optional so pre-failure-layer config files still load.
+            failures: match v.get("failures") {
+                Some(_) => v.req_str("failures")?.to_string(),
+                None => String::new(),
+            },
+            checkpoint_every: match v.get("checkpoint_every") {
+                Some(_) => v.req_u32("checkpoint_every")?,
+                None => 0,
+            },
+            checkpoint_dir: match v.get("checkpoint_dir") {
+                Some(_) => v.req_str("checkpoint_dir")?.to_string(),
+                None => String::new(),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1739,5 +1958,97 @@ mod tests {
         let mut c = RunConfig::default();
         c.num_workers = 0; // invalid
         assert!(RunConfig::from_value(&c.to_value()).is_err());
+    }
+
+    #[test]
+    fn failure_plan_spec_round_trip() {
+        let spec = "leave:1@2,join:1@3,linkdown:0-1@1,linkup:0-1@2,crash@3";
+        let plan = FailurePlan::parse(spec).unwrap();
+        assert_eq!(plan.events.len(), 5);
+        assert_eq!(plan.encode(), spec);
+        assert_eq!(
+            plan.events[0],
+            FailureEvent::WorkerLeave { worker: 1, at_epoch: 2 }
+        );
+        assert_eq!(plan.events[2], FailureEvent::LinkDown { a: 0, b: 1, at_epoch: 1 });
+        assert_eq!(plan.events[4], FailureEvent::CrashRestart { at_epoch: 3 });
+        assert_eq!(plan.events_at(2).count(), 2);
+        // whitespace tolerated, empty string is the empty plan
+        let ws = FailurePlan::parse(" leave:0@1 , crash@1 ").unwrap();
+        assert_eq!(ws.events.len(), 2);
+        assert!(FailurePlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn failure_plan_rejects_malformed_specs() {
+        for bad in [
+            "leave:1",        // missing @epoch
+            "leave@2",        // missing worker
+            "leave:x@2",      // bad worker
+            "linkdown:0@2",   // missing endpoint pair
+            "explode:1@2",    // unknown kind
+            "crash:1@2",      // crash takes no worker
+            "leave:1@x",      // bad epoch
+        ] {
+            assert!(FailurePlan::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn failure_plan_validates_against_run_shape() {
+        let plan = FailurePlan::parse("leave:1@2").unwrap();
+        plan.validate(2, 4).unwrap();
+        assert!(plan.validate(1, 4).is_err(), "worker 1 out of range / no donor");
+        assert!(plan.validate(2, 2).is_err(), "boundary 2 not interior for 2 epochs");
+        let link = FailurePlan::parse("linkdown:0-0@1").unwrap();
+        assert!(link.validate(4, 4).is_err(), "self-link rejected");
+        let crash = FailurePlan::parse("crash@0").unwrap();
+        assert!(crash.validate(4, 4).is_err(), "boundary 0 is not interior");
+    }
+
+    #[test]
+    fn recovery_knobs_survive_value_round_trip() {
+        let mut c = RunConfig::default();
+        c.epochs = 4;
+        c.failures = "leave:1@2,join:1@3".to_string();
+        c.checkpoint_every = 1;
+        c.checkpoint_dir = "/tmp/ckpt".to_string();
+        let back = RunConfig::from_value(&c.to_value()).unwrap();
+        assert_eq!(c, back);
+        // TOML file form too
+        let text = c.to_value().to_toml().unwrap();
+        let again = RunConfig::from_value(&Value::from_toml(&text).unwrap()).unwrap();
+        assert_eq!(c, again);
+    }
+
+    #[test]
+    fn no_failures_config_serializes_byte_identically_to_pre_failure_layer() {
+        // The three recovery keys must be absent at their defaults, so a
+        // config written by a pre-failure-layer build is byte-identical.
+        let c = RunConfig::default();
+        let text = c.to_value().to_toml().unwrap();
+        for key in ["failures", "checkpoint_every", "checkpoint_dir"] {
+            assert!(!text.contains(key), "default config must not emit '{key}':\n{text}");
+        }
+        // And a hand-stripped table (what an old build would have written)
+        // parses to exactly the defaults.
+        let back = RunConfig::from_value(&Value::from_toml(&text).unwrap()).unwrap();
+        assert_eq!(back.failures, "");
+        assert_eq!(back.checkpoint_every, 0);
+        assert_eq!(back.checkpoint_dir, "");
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn validate_catches_bad_failure_plans_in_config() {
+        let mut c = RunConfig::default(); // 2 workers, 2 epochs
+        c.failures = "leave:5@1".to_string();
+        assert!(c.validate().is_err(), "worker out of range");
+        c.failures = "leave:1@1".to_string();
+        c.validate().unwrap();
+        c.failures = "leave:1@2".to_string();
+        assert!(c.validate().is_err(), "boundary must be interior");
+        c.failures = "not a plan".to_string();
+        assert!(c.validate().is_err(), "unparseable spec");
     }
 }

@@ -53,11 +53,13 @@
 
 mod common;
 mod pipeline;
+pub mod recovery;
 pub mod strategies;
 pub mod strategy;
 
 pub use common::{CostParams, RunContext};
 pub use pipeline::{run_cluster, run_worker};
+pub use recovery::{resume_run, Checkpoint};
 pub use strategies::adaptive_cache::AdaptiveCacheStrategy;
 pub use strategies::baseline::{DglStrategy, DistGcnStrategy};
 pub use strategies::fast_sample::FastSampleStrategy;
@@ -70,7 +72,7 @@ pub use strategy::{
 
 use crate::config::{ExecMode, RunConfig, TrainerBackend};
 use crate::energy::run_energy;
-use crate::metrics::{CompressionReport, EpochReport, RunReport};
+use crate::metrics::{CompressionReport, EpochReport, RecoveryReport, RunReport};
 use crate::trainer::{GradCompressedSage, GradStats, SageModel, TrainStep};
 use crate::Result;
 use anyhow::bail;
@@ -136,6 +138,14 @@ fn run_with_overrides(
     trainer_override: Option<Box<dyn TrainStep>>,
 ) -> Result<RunReport> {
     let cfg = &ctx.cfg;
+    if cfg.has_recovery() {
+        // Failure plans and checkpoint writes need epoch boundaries driven
+        // one at a time — the recovery driver interleaves them with the
+        // cluster runtime and reports the extra work separately.
+        let (setup_time, epochs, rec, grad_stats) =
+            recovery::run_with_failures(ctx, trainer_override)?;
+        return assemble_report(ctx, setup_time, epochs, grad_stats, Some(rec));
+    }
     let mut setup_time = 0.0f64;
     let mut epochs: Vec<EpochReport> = Vec::new();
     let mut grad_stats: Option<GradStats> = None;
@@ -180,6 +190,20 @@ fn run_with_overrides(
         }
     }
 
+    assemble_report(ctx, setup_time, epochs, grad_stats, None)
+}
+
+/// Aggregate epoch reports plus the fabric/compression/energy telemetry
+/// into the final [`RunReport`]. Shared by the normal path, the failure
+/// driver, and checkpoint resume so all three serialize identically.
+pub(crate) fn assemble_report(
+    ctx: &RunContext,
+    setup_time: f64,
+    epochs: Vec<EpochReport>,
+    grad_stats: Option<GradStats>,
+    recovery: Option<RecoveryReport>,
+) -> Result<RunReport> {
+    let cfg = &ctx.cfg;
     // End-to-end time: workers run concurrently, so the run takes the max
     // over workers of their summed epoch time.
     let mut per_worker_total = vec![0.0f64; cfg.num_workers as usize];
@@ -200,6 +224,7 @@ fn run_with_overrides(
         gpu_energy_j: 0.0,
         links: Vec::new(),
         compression: None,
+        recovery,
     };
     // Contended runs surface per-physical-link telemetry (accumulated over
     // the run's epochs by the link network); empty otherwise, which keeps

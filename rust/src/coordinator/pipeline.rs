@@ -318,13 +318,21 @@ pub fn run_cluster(
     ctx: &RunContext,
     trainer: Option<SharedTrainer>,
 ) -> Result<(f64, Vec<EpochReport>)> {
+    let (setup_time, mut states) = setup_cluster(ctx)?;
+    let cfg = &ctx.cfg;
+    let mut reports = Vec::with_capacity((cfg.num_workers * cfg.epochs) as usize);
+    for epoch in 0..cfg.epochs {
+        reports.extend(run_cluster_epoch(ctx, trainer.clone(), &mut states, epoch)?);
+    }
+    Ok((setup_time, reports))
+}
+
+/// One-time per-worker strategy setup for the cluster path. Returns the max
+/// setup time and the per-worker states. Split out of [`run_cluster`] so the
+/// recovery driver can substitute checkpoint-restored states.
+pub(super) fn setup_cluster(ctx: &RunContext) -> Result<(f64, Vec<StrategyState>)> {
     let strategy = &*ctx.strategy;
     let cfg = &ctx.cfg;
-    let full = cfg.exec_mode == ExecMode::Full;
-    let contention = cfg.fabric.contention;
-    let q = strategy.queue_depth(cfg);
-
-    // One-time setup per worker (setup time reported separately).
     let mut setup_time = 0.0f64;
     let mut states: Vec<StrategyState> = Vec::with_capacity(cfg.num_workers as usize);
     for w in 0..cfg.num_workers {
@@ -332,15 +340,34 @@ pub fn run_cluster(
         setup_time = setup_time.max(s.setup_time);
         states.push(s.state);
     }
-    if contention {
+    if cfg.fabric.contention {
         // Setup pulls (offline precompute, initial cache builds) keep their
         // linear pricing — they are one-time background work, not epoch
         // traffic. Discard any claims they recorded.
         drop(ctx.fabric.take_route_claims());
     }
+    Ok((setup_time, states))
+}
 
-    let mut reports = Vec::with_capacity((cfg.num_workers * cfg.epochs) as usize);
-    for epoch in 0..cfg.epochs {
+/// Run one epoch for all workers on the shared virtual clock — the body of
+/// [`run_cluster`]'s epoch loop. A fresh [`ClusterSim`] per epoch means the
+/// within-epoch virtual timeline is independent of earlier epochs, which is
+/// what lets a checkpoint-resumed run replay the remaining epochs
+/// bit-exactly. Exposed to the recovery driver, which interleaves
+/// failure-plan boundaries and checkpoint writes between calls.
+pub(super) fn run_cluster_epoch(
+    ctx: &RunContext,
+    trainer: Option<SharedTrainer>,
+    states: &mut [StrategyState],
+    epoch: u32,
+) -> Result<Vec<EpochReport>> {
+    let strategy = &*ctx.strategy;
+    let cfg = &ctx.cfg;
+    let full = cfg.exec_mode == ExecMode::Full;
+    let contention = cfg.fabric.contention;
+    let q = strategy.queue_depth(cfg);
+    let mut reports = Vec::with_capacity(cfg.num_workers as usize);
+    {
         let mut sim = ClusterSim::new();
         if contention {
             sim = sim.with_network(crate::net::ContentionNet::new(&ctx.fabric));
@@ -407,7 +434,7 @@ pub fn run_cluster(
             drop(ctx.fabric.take_route_claims());
         }
     }
-    Ok((setup_time, reports))
+    Ok(reports)
 }
 
 #[cfg(test)]

@@ -1,0 +1,690 @@
+//! Elastic fault tolerance: deterministic failure plans, epoch-boundary
+//! checkpoints, and crash-restart resume.
+//!
+//! # Model
+//!
+//! Failures land on epoch *boundaries* and heal entirely within them
+//! (`FailureEvent` docs in [`crate::config`]). The training timeline —
+//! schedules, caches, RPC counters, SGD steps — replays the failure-free
+//! run bit-exactly; the *only* observables are:
+//!
+//! - a [`RecoveryReport`] block on the run report (movement rows/bytes,
+//!   detoured bytes, recovery seconds, lost-work seconds), and
+//! - in contended runs, the recovery flows' per-link utilization.
+//!
+//! Recovery traffic is priced through the *pure* link models
+//! ([`crate::config::FabricConfig::rpc_time_on_link`]), never through
+//! `NetFabric::charge_rpc`: charging would advance the global RPC counter
+//! and shift the deterministic loss/retry cadences, which would change the
+//! training timeline — exactly what the model forbids.
+//!
+//! # Checkpoints
+//!
+//! With `checkpoint_every = k`, a [`Checkpoint`] is written at every
+//! boundary `e` with `e % k == 0` (after that boundary's failure events
+//! apply). It captures everything a fresh process needs to replay the
+//! remaining epochs bit-exactly: the config, the epoch reports so far, each
+//! worker's strategy snapshot, the trainer weights/optimizer state (full
+//! mode), the fabric's RPC/link counters and utilization telemetry, the
+//! codec tally, and the accumulated recovery telemetry. [`resume_run`]
+//! rebuilds the run from one and produces a [`RunReport`] byte-identical
+//! to the uninterrupted run's.
+
+use crate::config::{ExecMode, FailureEvent, FailurePlan, LinkKey, RunConfig};
+use crate::coordinator::common::RunContext;
+use crate::coordinator::pipeline::{run_cluster_epoch, setup_cluster};
+use crate::coordinator::strategy::StrategyState;
+use crate::coordinator::{assemble_report, build_trainer, SharedTrainer};
+use crate::kvstore::CompressTally;
+use crate::metrics::{EpochReport, RecoveryReport, RunReport};
+use crate::net::{LinkStats, LinkUtilization};
+use crate::trainer::{GradStats, TrainStep};
+use crate::util::value::Value;
+use crate::{Result, WorkerId};
+use anyhow::{anyhow, bail, ensure};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Everything a fresh process needs to continue a run from an epoch
+/// boundary. Serialized as JSON via [`Value`].
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// The full run config; resume rebuilds the context from it.
+    pub config: RunConfig,
+    /// First epoch the resumed run executes. The boundary *entering* it
+    /// (failure events and this checkpoint's write) is already accounted.
+    pub next_epoch: u32,
+    /// One-time setup cost of the original run.
+    pub setup_time: f64,
+    /// Per-worker epoch reports for epochs `0..next_epoch`.
+    pub epochs: Vec<EpochReport>,
+    /// Per-worker strategy snapshots (`TrainingStrategy::checkpoint_state`),
+    /// indexed by worker id.
+    pub strategy: Vec<Value>,
+    /// Trainer weights/optimizer state (`TrainStep::save_state`); `None` in
+    /// trace mode or for backends that cannot checkpoint.
+    pub trainer: Option<Value>,
+    /// Global RPC sequence counter (drives loss/retry cadence).
+    pub rpc_counter: u64,
+    /// Per-pair RPC counters.
+    pub links: Vec<((WorkerId, WorkerId), LinkStats)>,
+    /// Per-physical-link utilization telemetry (contended runs; empty
+    /// otherwise).
+    pub util: Vec<(LinkKey, LinkUtilization)>,
+    /// Codec compression tally.
+    pub tally: CompressTally,
+    /// Recovery telemetry accumulated so far (includes this checkpoint's
+    /// own write).
+    pub recovery: RecoveryReport,
+}
+
+fn link_key_to_value(k: &LinkKey) -> Value {
+    let mut v = Value::table();
+    match *k {
+        LinkKey::HostUp(w) => v.set("kind", "host-up").set("w", w),
+        LinkKey::HostDown(w) => v.set("kind", "host-down").set("w", w),
+        LinkKey::RackUp(r) => v.set("kind", "rack-up").set("r", r),
+        LinkKey::RackDown(r) => v.set("kind", "rack-down").set("r", r),
+        LinkKey::RingSeg { from, to } => {
+            v.set("kind", "ring").set("from", from).set("to", to)
+        }
+        LinkKey::EdgeUp { pod, spine } => {
+            v.set("kind", "edge-up").set("pod", pod).set("spine", spine)
+        }
+        LinkKey::EdgeDown { pod, spine } => {
+            v.set("kind", "edge-down").set("pod", pod).set("spine", spine)
+        }
+        LinkKey::Local { group, a, b } => {
+            v.set("kind", "dfly-local").set("group", group).set("a", a).set("b", b)
+        }
+        LinkKey::Global { from, to } => {
+            v.set("kind", "dfly-global").set("from", from).set("to", to)
+        }
+    };
+    v
+}
+
+fn link_key_from_value(v: &Value) -> Result<LinkKey> {
+    Ok(match v.req_str("kind")? {
+        "host-up" => LinkKey::HostUp(v.req_u32("w")?),
+        "host-down" => LinkKey::HostDown(v.req_u32("w")?),
+        "rack-up" => LinkKey::RackUp(v.req_u32("r")?),
+        "rack-down" => LinkKey::RackDown(v.req_u32("r")?),
+        "ring" => LinkKey::RingSeg { from: v.req_u32("from")?, to: v.req_u32("to")? },
+        "edge-up" => LinkKey::EdgeUp { pod: v.req_u32("pod")?, spine: v.req_u32("spine")? },
+        "edge-down" => LinkKey::EdgeDown { pod: v.req_u32("pod")?, spine: v.req_u32("spine")? },
+        "dfly-local" => LinkKey::Local {
+            group: v.req_u32("group")?,
+            a: v.req_u32("a")?,
+            b: v.req_u32("b")?,
+        },
+        "dfly-global" => LinkKey::Global { from: v.req_u32("from")?, to: v.req_u32("to")? },
+        other => bail!("checkpoint: unknown link kind '{other}'"),
+    })
+}
+
+impl Checkpoint {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("config", self.config.to_value())
+            .set("next_epoch", self.next_epoch)
+            .set("setup_time", self.setup_time)
+            .set("epochs", self.epochs.iter().map(EpochReport::to_value).collect::<Vec<_>>())
+            .set("strategy", self.strategy.clone())
+            .set("rpc_counter", self.rpc_counter)
+            .set("recovery", self.recovery.to_value());
+        if let Some(t) = &self.trainer {
+            v.set("trainer", t.clone());
+        }
+        let links: Vec<Value> = self
+            .links
+            .iter()
+            .map(|&((src, dst), s)| {
+                let mut lv = Value::table();
+                lv.set("src", src)
+                    .set("dst", dst)
+                    .set("rpcs", s.rpcs)
+                    .set("bytes", s.bytes)
+                    .set("time", s.time)
+                    .set("retries", s.retries);
+                lv
+            })
+            .collect();
+        v.set("links", links);
+        let util: Vec<Value> = self
+            .util
+            .iter()
+            .map(|(k, u)| {
+                let mut uv = link_key_to_value(k);
+                uv.set("capacity_bytes_per_sec", u.capacity_bytes_per_sec)
+                    .set("busy_sec", u.busy_sec)
+                    .set("served_bytes", u.served_bytes)
+                    .set("flows", u.flows)
+                    .set("peak_flows", u.peak_flows)
+                    .set("peak_backlog_bytes", u.peak_backlog_bytes);
+                uv
+            })
+            .collect();
+        v.set("util", util);
+        let mut tv = Value::table();
+        tv.set("raw_bytes", self.tally.raw_bytes)
+            .set("wire_bytes", self.tally.wire_bytes)
+            .set("sq_err", self.tally.sq_err)
+            .set("elems", self.tally.elems);
+        v.set("tally", tv);
+        v
+    }
+
+    /// Parse back from [`to_value`](Self::to_value)'s table.
+    pub fn from_value(v: &Value) -> Result<Checkpoint> {
+        let arr = |key: &str| -> Result<&[Value]> {
+            match v.get(key) {
+                Some(Value::Arr(items)) => Ok(items),
+                _ => bail!("checkpoint: missing array '{key}'"),
+            }
+        };
+        let mut epochs = Vec::new();
+        for e in arr("epochs")? {
+            epochs.push(EpochReport::from_value(e)?);
+        }
+        let mut links = Vec::new();
+        for l in arr("links")? {
+            links.push((
+                (l.req_u32("src")?, l.req_u32("dst")?),
+                LinkStats {
+                    rpcs: l.req_u64("rpcs")?,
+                    bytes: l.req_u64("bytes")?,
+                    time: l.req_f64("time")?,
+                    retries: l.req_u64("retries")?,
+                },
+            ));
+        }
+        let mut util = Vec::new();
+        for u in arr("util")? {
+            util.push((
+                link_key_from_value(u)?,
+                LinkUtilization {
+                    capacity_bytes_per_sec: u.req_f64("capacity_bytes_per_sec")?,
+                    busy_sec: u.req_f64("busy_sec")?,
+                    served_bytes: u.req_f64("served_bytes")?,
+                    flows: u.req_u64("flows")?,
+                    peak_flows: u32::try_from(u.req_u64("peak_flows")?)?,
+                    peak_backlog_bytes: u.req_f64("peak_backlog_bytes")?,
+                },
+            ));
+        }
+        let t = v.req_table("tally")?;
+        Ok(Checkpoint {
+            config: RunConfig::from_value(v.req_table("config")?)?,
+            next_epoch: v.req_u32("next_epoch")?,
+            setup_time: v.req_f64("setup_time")?,
+            epochs,
+            strategy: arr("strategy")?.to_vec(),
+            trainer: v.get("trainer").cloned(),
+            rpc_counter: v.req_u64("rpc_counter")?,
+            links,
+            util,
+            tally: CompressTally {
+                raw_bytes: t.req_u64("raw_bytes")?,
+                wire_bytes: t.req_u64("wire_bytes")?,
+                sq_err: t.req_f64("sq_err")?,
+                elems: t.req_u64("elems")?,
+            },
+            recovery: RecoveryReport::from_value(v.req_table("recovery")?)?,
+        })
+    }
+
+    /// Write as pretty JSON, creating parent directories.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_value().to_json_pretty())?;
+        Ok(())
+    }
+
+    /// Load from a JSON file written by [`write`](Self::write).
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("checkpoint '{}': {e}", path.display()))?;
+        Checkpoint::from_value(&Value::from_json(&text)?)
+    }
+}
+
+/// Where the driver writes the checkpoint for the boundary entering
+/// `epoch`: `cfg.checkpoint_dir` when set, else a `checkpoints/` dir next
+/// to the run's schedule metadata (ephemeral for temp-dir runs — enough
+/// for crash-rollback pricing, set an explicit dir to actually resume).
+pub fn checkpoint_path(ctx: &RunContext, epoch: u32) -> PathBuf {
+    let dir = if ctx.cfg.checkpoint_dir.is_empty() {
+        ctx.metadata_path.join("checkpoints")
+    } else {
+        PathBuf::from(&ctx.cfg.checkpoint_dir)
+    };
+    dir.join(format!("checkpoint-{epoch}.json"))
+}
+
+/// Normalized (undirected) link endpoints for the downed-link set.
+fn norm(a: WorkerId, b: WorkerId) -> (WorkerId, WorkerId) {
+    (a.min(b), a.max(b))
+}
+
+/// The stateful boundary driver shared by fresh failure runs and resumed
+/// runs: executes epochs one at a time through the cluster runtime and
+/// interleaves failure events and checkpoint writes at the boundaries.
+struct Driver<'a> {
+    ctx: &'a RunContext,
+    plan: FailurePlan,
+    trainer: Option<SharedTrainer>,
+    setup_time: f64,
+    reports: Vec<EpochReport>,
+    rec: RecoveryReport,
+    /// Currently-downed links, as normalized endpoint pairs.
+    down: BTreeSet<(WorkerId, WorkerId)>,
+}
+
+impl Driver<'_> {
+    /// Run epochs `start..epochs`, processing the boundary entering each
+    /// epoch after `start` (the boundary entering `start` itself is either
+    /// epoch 0 — no boundary — or was processed before the checkpoint this
+    /// run resumed from was written).
+    fn drive(&mut self, states: &mut [StrategyState], start: u32) -> Result<()> {
+        for epoch in start..self.ctx.cfg.epochs {
+            if epoch > start {
+                self.boundary(states, epoch)?;
+            }
+            let reps = run_cluster_epoch(self.ctx, self.trainer.clone(), states, epoch)?;
+            self.reports.extend(reps);
+        }
+        Ok(())
+    }
+
+    /// The boundary entering `epoch`: apply its failure events in spec
+    /// order, then write the checkpoint if one is due (the snapshot counts
+    /// its own write, so resumed runs reproduce the counter exactly).
+    fn boundary(&mut self, states: &[StrategyState], epoch: u32) -> Result<()> {
+        let events: Vec<FailureEvent> = self.plan.events_at(epoch).copied().collect();
+        for ev in events {
+            self.apply(states, ev, epoch);
+        }
+        let every = self.ctx.cfg.checkpoint_every;
+        if every > 0 && epoch % every == 0 {
+            self.rec.checkpoints_written += 1;
+            let ckpt = self.snapshot(states, epoch)?;
+            ckpt.write(&checkpoint_path(self.ctx, epoch))?;
+        }
+        Ok(())
+    }
+
+    fn apply(&mut self, states: &[StrategyState], ev: FailureEvent, epoch: u32) {
+        self.rec.events += 1;
+        match ev {
+            FailureEvent::WorkerLeave { worker, .. } => {
+                self.rec.worker_leaves += 1;
+                self.move_shard(states, worker);
+            }
+            FailureEvent::WorkerJoin { worker, .. } => {
+                self.rec.worker_joins += 1;
+                self.move_shard(states, worker);
+            }
+            FailureEvent::LinkDown { a, b, .. } => {
+                self.rec.link_downs += 1;
+                self.down.insert(norm(a, b));
+            }
+            FailureEvent::LinkUp { a, b, .. } => {
+                self.rec.link_ups += 1;
+                self.down.remove(&norm(a, b));
+            }
+            FailureEvent::CrashRestart { .. } => {
+                self.rec.crash_restarts += 1;
+                // Roll back to the last checkpoint boundary strictly before
+                // this one (a checkpoint due *at* this boundary is written
+                // after its events, so it doesn't exist yet); with none, the
+                // whole prefix restarts. Replay is deterministic, so the
+                // epochs are not re-executed here — the re-done span is
+                // charged as lost wall-clock: the max over workers of their
+                // rolled-back epoch time.
+                let every = self.ctx.cfg.checkpoint_every;
+                let rollback = if every > 0 { (epoch - 1) / every * every } else { 0 };
+                let mut lost = vec![0.0f64; self.ctx.cfg.num_workers as usize];
+                for r in &self.reports {
+                    if r.epoch >= rollback && r.epoch < epoch {
+                        lost[r.worker as usize] += r.epoch_time;
+                    }
+                }
+                self.rec.lost_work_time += lost.iter().cloned().fold(0.0, f64::max);
+            }
+        }
+    }
+
+    /// Price the shard + warm-cache move a membership change triggers: the
+    /// adopting host pulls the departing worker's partition rows and its
+    /// hot-cache rows from the smallest surviving peer.
+    fn move_shard(&mut self, states: &[StrategyState], worker: WorkerId) {
+        let ctx = self.ctx;
+        let owned = ctx.part.owner.iter().filter(|&&o| o == worker).count() as u64;
+        let cached = ctx.strategy.cache_rows(&states[worker as usize], worker);
+        let rows = owned + cached;
+        let bytes = rows * ctx.kv.feature_dim() as u64 * 4;
+        let donor = (0..ctx.cfg.num_workers)
+            .find(|&w| w != worker)
+            .expect("plan validation requires >= 2 workers for leave/join");
+        self.rec.moved_rows += rows;
+        self.rec.moved_bytes += bytes;
+        self.price_flow(donor, worker, bytes, rows);
+    }
+
+    /// Price a recovery flow through the pure link models (never through
+    /// `charge_rpc` — see module docs). Flows between endpoints of a downed
+    /// link detour through the smallest third worker, two hops.
+    fn price_flow(&mut self, src: WorkerId, dst: WorkerId, bytes: u64, rows: u64) {
+        let fc = self.ctx.fabric.config();
+        let world = self.ctx.fabric.world_size();
+        let wire = bytes + 64; // same 64B RPC envelope the fabric charges
+        if self.down.contains(&norm(src, dst)) {
+            let via = (0..world).find(|&w| w != src && w != dst).unwrap_or(src);
+            self.rec.rerouted_bytes += bytes;
+            self.rec.recovery_time += fc.rpc_time_on_link(src, via, world, wire, rows)
+                + fc.rpc_time_on_link(via, dst, world, wire, rows);
+            self.feed_links(src, via, bytes);
+            self.feed_links(via, dst, bytes);
+        } else {
+            self.rec.recovery_time += fc.rpc_time_on_link(src, dst, world, wire, rows);
+            self.feed_links(src, dst, bytes);
+        }
+    }
+
+    /// Surface a recovery flow in the contended per-link telemetry so
+    /// `RunReport.links` accounts for recovery traffic. One uncontended
+    /// store-and-forward pass per hop; no-op outside contention mode.
+    fn feed_links(&mut self, src: WorkerId, dst: WorkerId, bytes: u64) {
+        if !self.ctx.cfg.fabric.contention {
+            return;
+        }
+        let fc = self.ctx.fabric.config();
+        let world = self.ctx.fabric.world_size();
+        let entries: Vec<(LinkKey, LinkUtilization)> = fc
+            .route(src, dst, world)
+            .into_iter()
+            .map(|hop| {
+                (
+                    hop.link,
+                    LinkUtilization {
+                        capacity_bytes_per_sec: hop.bandwidth_bytes_per_sec,
+                        busy_sec: bytes as f64 / hop.bandwidth_bytes_per_sec,
+                        served_bytes: bytes as f64,
+                        flows: 1,
+                        peak_flows: 1,
+                        peak_backlog_bytes: bytes as f64,
+                    },
+                )
+            })
+            .collect();
+        self.ctx.fabric.record_link_utilization(entries);
+    }
+
+    /// Snapshot the full run state at the boundary entering `next_epoch`.
+    fn snapshot(&self, states: &[StrategyState], next_epoch: u32) -> Result<Checkpoint> {
+        let ctx = self.ctx;
+        let mut strategy = Vec::with_capacity(states.len());
+        for (w, st) in states.iter().enumerate() {
+            strategy.push(ctx.strategy.checkpoint_state(ctx, st, w as WorkerId)?);
+        }
+        let trainer = match &self.trainer {
+            Some(t) => t.lock().unwrap().save_state(),
+            None => None,
+        };
+        let (rpc_counter, links) = ctx.fabric.export_counters();
+        Ok(Checkpoint {
+            config: ctx.cfg.clone(),
+            next_epoch,
+            setup_time: self.setup_time,
+            epochs: self.reports.clone(),
+            strategy,
+            trainer,
+            rpc_counter,
+            links,
+            util: ctx.fabric.link_utilization(),
+            tally: ctx.kv.compression_tally(),
+            recovery: self.rec.clone(),
+        })
+    }
+}
+
+/// Execute a run with a failure plan and/or periodic checkpoints: the
+/// cluster runtime driven one epoch at a time, boundaries interleaved.
+/// Returns `(setup_time, epoch_reports, recovery, grad_stats)`.
+pub(crate) fn run_with_failures(
+    ctx: &RunContext,
+    trainer_override: Option<Box<dyn TrainStep>>,
+) -> Result<(f64, Vec<EpochReport>, RecoveryReport, Option<GradStats>)> {
+    let cfg = &ctx.cfg;
+    let plan = cfg.failure_plan()?;
+    plan.validate(cfg.num_workers, cfg.epochs)?;
+    let trainer: Option<SharedTrainer> = match cfg.exec_mode {
+        ExecMode::Full => {
+            let t = match trainer_override {
+                Some(t) => t,
+                None => build_trainer(ctx)?,
+            };
+            Some(Arc::new(Mutex::new(t)))
+        }
+        ExecMode::Trace => None,
+    };
+    let (setup_time, mut states) = setup_cluster(ctx)?;
+    let mut d = Driver {
+        ctx,
+        plan,
+        trainer,
+        setup_time,
+        reports: Vec::new(),
+        rec: RecoveryReport::default(),
+        down: BTreeSet::new(),
+    };
+    d.drive(&mut states, 0)?;
+    let grad = d.trainer.as_ref().and_then(|t| t.lock().unwrap().grad_stats());
+    Ok((d.setup_time, d.reports, d.rec, grad))
+}
+
+/// Resume a run from a checkpoint file and run it to completion. The
+/// resulting [`RunReport`] serializes byte-identically to the
+/// uninterrupted run's.
+pub fn resume_run(path: &Path) -> Result<RunReport> {
+    resume_from(Checkpoint::load(path)?)
+}
+
+/// [`resume_run`] on an already-loaded checkpoint.
+pub fn resume_from(ckpt: Checkpoint) -> Result<RunReport> {
+    let cfg = ckpt.config.clone();
+    ensure!(
+        ckpt.next_epoch < cfg.epochs,
+        "checkpoint resumes at epoch {} but the run has {} epochs",
+        ckpt.next_epoch,
+        cfg.epochs
+    );
+    ensure!(
+        ckpt.strategy.len() == cfg.num_workers as usize,
+        "checkpoint has {} worker snapshots for {} workers",
+        ckpt.strategy.len(),
+        cfg.num_workers
+    );
+    let ctx = RunContext::build(&cfg)?;
+    // Restore the fabric's RPC/link counters (loss/retry cadence position)
+    // and the codec tally so the resumed report matches bit-exactly.
+    ctx.fabric.import_counters(ckpt.rpc_counter, &ckpt.links);
+    ctx.fabric.record_link_utilization(ckpt.util.clone());
+    ctx.kv.import_compression_tally(ckpt.tally);
+    // Rebuild each worker's strategy state from its snapshot. Restoration
+    // re-enumerates schedule metadata and re-materializes cache rows
+    // without charging the fabric — the original run already paid.
+    let mut states: Vec<StrategyState> = Vec::with_capacity(ckpt.strategy.len());
+    for (w, snap) in ckpt.strategy.iter().enumerate() {
+        let s = ctx.strategy.restore_setup(&ctx, w as WorkerId, ckpt.next_epoch, snap)?;
+        states.push(s.state);
+    }
+    if cfg.fabric.contention {
+        drop(ctx.fabric.take_route_claims());
+    }
+    let trainer: Option<SharedTrainer> = match cfg.exec_mode {
+        ExecMode::Full => {
+            let tv = ckpt.trainer.as_ref().ok_or_else(|| {
+                anyhow!("checkpoint has no trainer state; cannot resume a full-mode run")
+            })?;
+            let mut t = build_trainer(&ctx)?;
+            t.load_state(tv)?;
+            Some(Arc::new(Mutex::new(t)))
+        }
+        ExecMode::Trace => None,
+    };
+    let plan = cfg.failure_plan()?;
+    // The downed-link set at checkpoint time is a pure fold of the plan
+    // over boundaries up to and including the checkpoint's (its boundary's
+    // events applied before the write), so it isn't stored.
+    let mut down = BTreeSet::new();
+    for b in 1..=ckpt.next_epoch {
+        for ev in plan.events_at(b) {
+            match *ev {
+                FailureEvent::LinkDown { a, b: other, .. } => {
+                    down.insert(norm(a, other));
+                }
+                FailureEvent::LinkUp { a, b: other, .. } => {
+                    down.remove(&norm(a, other));
+                }
+                _ => {}
+            }
+        }
+    }
+    let start = ckpt.next_epoch;
+    let mut d = Driver {
+        ctx: &ctx,
+        plan,
+        trainer,
+        setup_time: ckpt.setup_time,
+        reports: ckpt.epochs,
+        rec: ckpt.recovery,
+        down,
+    };
+    d.drive(&mut states, start)?;
+    let grad = d.trainer.as_ref().and_then(|t| t.lock().unwrap().grad_stats());
+    let (setup_time, reports, rec) = (d.setup_time, d.reports, d.rec);
+    assemble_report(&ctx, setup_time, reports, grad, Some(rec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, DatasetPreset, Engine};
+    use crate::util::tempdir::TempDir;
+
+    fn cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = Engine::Rapid;
+        c.epochs = 3;
+        c.n_hot = 300;
+        c
+    }
+
+    #[test]
+    fn checkpoint_json_round_trip_is_bit_exact() {
+        let ckpt = Checkpoint {
+            config: cfg(),
+            next_epoch: 2,
+            setup_time: 1.25,
+            epochs: Vec::new(),
+            strategy: vec![Value::table(), Value::table()],
+            trainer: None,
+            rpc_counter: 17,
+            links: vec![((0, 1), LinkStats { rpcs: 3, bytes: 4096, time: 0.5, retries: 1 })],
+            util: vec![(
+                LinkKey::RingSeg { from: 0, to: 1 },
+                LinkUtilization {
+                    capacity_bytes_per_sec: 1e9,
+                    busy_sec: 0.25,
+                    served_bytes: 2048.0,
+                    flows: 2,
+                    peak_flows: 1,
+                    peak_backlog_bytes: 1024.0,
+                },
+            )],
+            tally: CompressTally { raw_bytes: 100, wire_bytes: 30, sq_err: 0.5, elems: 25 },
+            recovery: RecoveryReport { events: 2, link_downs: 1, ..Default::default() },
+        };
+        let json = ckpt.to_value().to_json_pretty();
+        let back = Checkpoint::from_value(&Value::from_json(&json).unwrap()).unwrap();
+        assert_eq!(json, back.to_value().to_json_pretty());
+        assert_eq!(back.next_epoch, 2);
+        assert_eq!(back.links[0].1.bytes, 4096);
+        assert_eq!(back.util[0].0, LinkKey::RingSeg { from: 0, to: 1 });
+        assert_eq!(back.recovery.link_downs, 1);
+    }
+
+    #[test]
+    fn failure_run_reports_recovery_and_replays_the_timeline() {
+        let mut c = cfg();
+        c.failures = "linkdown:0-1@1,leave:1@1,linkup:0-1@2,crash@2".into();
+        c.checkpoint_every = 1;
+        let report = crate::coordinator::run(&c).unwrap();
+        let rec = report.recovery.as_ref().expect("failure run reports recovery");
+        assert_eq!(rec.events, 4);
+        assert_eq!(rec.worker_leaves, 1);
+        assert_eq!(rec.link_downs, 1);
+        assert_eq!(rec.link_ups, 1);
+        assert_eq!(rec.crash_restarts, 1);
+        assert_eq!(rec.checkpoints_written, 2, "boundaries 1 and 2");
+        assert!(rec.moved_rows > 0 && rec.moved_bytes > 0);
+        assert!(rec.rerouted_bytes > 0, "move at boundary 1 crosses the downed 0-1 link");
+        assert!(rec.recovery_time > 0.0);
+        assert!(rec.lost_work_time > 0.0, "crash at 2 rolls back to the boundary-1 checkpoint");
+
+        // The training timeline is untouched: per-(worker, epoch) counters
+        // equal the failure-free run's.
+        let clean = crate::coordinator::run(&cfg()).unwrap();
+        assert!(clean.recovery.is_none());
+        let key = |e: &EpochReport| (e.worker, e.epoch);
+        let mut a = report.epochs.clone();
+        let mut b = clean.epochs.clone();
+        a.sort_by_key(key);
+        b.sort_by_key(key);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(key(x), key(y));
+            assert_eq!(x.comm.remote_rows, y.comm.remote_rows);
+            assert_eq!(x.cache.hits, y.cache.hits);
+            assert_eq!(x.steps, y.steps);
+        }
+    }
+
+    #[test]
+    fn resume_reproduces_the_uninterrupted_report_bit_exactly() {
+        let dir = TempDir::new("ckpt").unwrap();
+        let mut c = cfg();
+        c.checkpoint_every = 1;
+        c.checkpoint_dir = dir.path().to_str().unwrap().to_string();
+        let full = crate::coordinator::run(&c).unwrap();
+        // Simulate a kill after the boundary-1 checkpoint landed: resume
+        // from it in a fresh context and compare the serialized reports.
+        let resumed = resume_run(&dir.path().join("checkpoint-1.json")).unwrap();
+        assert_eq!(full.to_value().to_json_pretty(), resumed.to_value().to_json_pretty());
+    }
+
+    #[test]
+    fn resume_past_the_last_epoch_is_rejected() {
+        let ckpt = Checkpoint {
+            config: cfg(),
+            next_epoch: 3,
+            setup_time: 0.0,
+            epochs: Vec::new(),
+            strategy: vec![Value::table(), Value::table()],
+            trainer: None,
+            rpc_counter: 0,
+            links: Vec::new(),
+            util: Vec::new(),
+            tally: CompressTally::default(),
+            recovery: RecoveryReport::default(),
+        };
+        assert!(resume_from(ckpt).is_err());
+    }
+}

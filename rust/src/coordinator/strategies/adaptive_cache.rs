@@ -42,8 +42,8 @@
 //! ```
 
 use super::rapid::{
-    finish_cached_epoch_with, plan_rapid_epoch, precompute_epochs_n, stream_ranked_top,
-    CacheRebuild, RapidState,
+    checkpoint_rapid_state, finish_cached_epoch_with, plan_rapid_epoch, precompute_epochs_n,
+    restore_rapid_state, stream_ranked_top, CacheRebuild, RapidState,
 };
 use crate::cache::tail_mass_fraction;
 use crate::config::{EngineParams, RunConfig};
@@ -53,6 +53,7 @@ use crate::coordinator::strategy::{
     TrainingStrategy,
 };
 use crate::metrics::{CacheReport, CommStats, PhaseTimes};
+use crate::util::value::Value;
 use crate::{NodeId, Result, WorkerId};
 
 /// The deterministic resize policy: thresholds and clamps, copied out of
@@ -280,6 +281,57 @@ impl TrainingStrategy for AdaptiveCacheStrategy {
         });
         Ok(finish)
     }
+
+    fn checkpoint_state(
+        &self,
+        _ctx: &RunContext,
+        state: &StrategyState,
+        _worker: WorkerId,
+    ) -> Result<Value> {
+        let st = state.downcast_ref::<AdaptiveState>().expect("adaptive-cache worker state");
+        // The rapid-family snapshot (steady hot list) plus the controller's
+        // full evolution state — resumed runs must make the same resize
+        // decisions the uninterrupted run would, hysteresis included.
+        let mut v = checkpoint_rapid_state(&st.inner);
+        let mut ctrl = Value::table();
+        ctrl.set("n_hot", st.ctrl.n_hot);
+        ctrl.set("last_dir", st.ctrl.last_dir as i64);
+        ctrl.set("cooldown", st.ctrl.cooldown);
+        ctrl.set("resizes", st.ctrl.resizes);
+        v.set("ctrl", ctrl);
+        Ok(v)
+    }
+
+    fn restore_setup(
+        &self,
+        ctx: &RunContext,
+        worker: WorkerId,
+        next_epoch: u32,
+        snapshot: &Value,
+    ) -> Result<StrategySetup> {
+        let hot = snapshot.req_u32_array("hot")?;
+        let epochs: Vec<u32> = (next_epoch..ctx.cfg.epochs).collect();
+        let inner = restore_rapid_state(ctx, worker, &epochs, &hot)?;
+        let c = snapshot.req_table("ctrl")?;
+        let ctrl = CtrlState {
+            n_hot: u32::try_from(c.req_u64("n_hot")?)?,
+            last_dir: i8::try_from(c.req_i64("last_dir")?)?,
+            cooldown: u32::try_from(c.req_u64("cooldown")?)?,
+            resizes: u32::try_from(c.req_u64("resizes")?)?,
+        };
+        Ok(StrategySetup {
+            setup_time: 0.0,
+            state: Box::new(AdaptiveState { inner, ctrl }),
+        })
+    }
+
+    fn cache_rows(&self, state: &StrategyState, _worker: WorkerId) -> u64 {
+        state
+            .downcast_ref::<AdaptiveState>()
+            .expect("adaptive-cache worker state")
+            .inner
+            .cache_rows()
+    }
 }
 
 #[cfg(test)]
@@ -480,6 +532,32 @@ mod tests {
             Some(v) => std::env::set_var("RAPIDGNN_THREADS", v),
             None => std::env::remove_var("RAPIDGNN_THREADS"),
         }
+    }
+
+    #[test]
+    fn checkpoint_round_trips_controller_and_cache_state() {
+        let c = cfg(64, 4);
+        let ctx = crate::coordinator::common::RunContext::build(&c).unwrap();
+        let strat = ctor(&c);
+        let mut setup = strat.setup(&ctx, 0).unwrap();
+        // Evolve the controller so the snapshot carries non-trivial state —
+        // a resumed run must replay hysteresis, not restart it.
+        let evolved = CtrlState { n_hot: 128, last_dir: 1, cooldown: 2, resizes: 3 };
+        setup.state.downcast_mut::<AdaptiveState>().unwrap().ctrl = evolved;
+        let snap = strat.checkpoint_state(&ctx, &setup.state, 0).unwrap();
+        let snap = crate::util::value::Value::from_json(&snap.to_json()).unwrap();
+
+        let ctx2 = crate::coordinator::common::RunContext::build(&c).unwrap();
+        let restored = strat.restore_setup(&ctx2, 0, 1, &snap).unwrap();
+        assert_eq!(restored.setup_time, 0.0);
+        let orig = setup.state.downcast_ref::<AdaptiveState>().unwrap();
+        let re = restored.state.downcast_ref::<AdaptiveState>().unwrap();
+        assert_eq!(re.ctrl, evolved);
+        assert_eq!(
+            re.inner.cache.lock().unwrap().steady().ids_by_row(),
+            orig.inner.cache.lock().unwrap().steady().ids_by_row()
+        );
+        assert_eq!(strat.cache_rows(&restored.state, 0), orig.inner.cache_rows());
     }
 
     #[test]

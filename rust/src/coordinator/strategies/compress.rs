@@ -32,6 +32,7 @@ use crate::coordinator::strategy::{
 use crate::metrics::{CommStats, PhaseTimes};
 use crate::partition::Partitioner;
 use crate::sampler::khop::Fanout;
+use crate::util::value::Value;
 use crate::{Result, WorkerId};
 
 /// RapidGNN shipping quantized feature rows (int8 by default).
@@ -101,6 +102,29 @@ impl TrainingStrategy for QuantPullStrategy {
     ) -> Result<EpochFinish> {
         self.inner
             .finish_epoch(ctx, state, worker, epoch, outcome, totals, phases, comm)
+    }
+
+    fn checkpoint_state(
+        &self,
+        ctx: &RunContext,
+        state: &StrategyState,
+        worker: WorkerId,
+    ) -> Result<Value> {
+        self.inner.checkpoint_state(ctx, state, worker)
+    }
+
+    fn restore_setup(
+        &self,
+        ctx: &RunContext,
+        worker: WorkerId,
+        next_epoch: u32,
+        snapshot: &Value,
+    ) -> Result<StrategySetup> {
+        self.inner.restore_setup(ctx, worker, next_epoch, snapshot)
+    }
+
+    fn cache_rows(&self, state: &StrategyState, worker: WorkerId) -> u64 {
+        self.inner.cache_rows(state, worker)
     }
 }
 
@@ -175,6 +199,29 @@ impl TrainingStrategy for GradTopkStrategy {
     ) -> Result<EpochFinish> {
         self.inner
             .finish_epoch(ctx, state, worker, epoch, outcome, totals, phases, comm)
+    }
+
+    fn checkpoint_state(
+        &self,
+        ctx: &RunContext,
+        state: &StrategyState,
+        worker: WorkerId,
+    ) -> Result<Value> {
+        self.inner.checkpoint_state(ctx, state, worker)
+    }
+
+    fn restore_setup(
+        &self,
+        ctx: &RunContext,
+        worker: WorkerId,
+        next_epoch: u32,
+        snapshot: &Value,
+    ) -> Result<StrategySetup> {
+        self.inner.restore_setup(ctx, worker, next_epoch, snapshot)
+    }
+
+    fn cache_rows(&self, state: &StrategyState, worker: WorkerId) -> u64 {
+        self.inner.cache_rows(state, worker)
     }
 }
 

@@ -20,7 +20,10 @@
 //! `rapid` strategy through `plan_cached_epoch`/`finish_cached_epoch`; this
 //! file only maps epochs onto period-start schedules.
 
-use super::rapid::{finish_cached_epoch, plan_cached_epoch, precompute_epochs, RapidState};
+use super::rapid::{
+    checkpoint_rapid_state, finish_cached_epoch, plan_cached_epoch, precompute_epochs,
+    restore_rapid_state, RapidState,
+};
 use crate::config::RunConfig;
 use crate::coordinator::common::RunContext;
 use crate::coordinator::strategy::{
@@ -28,6 +31,7 @@ use crate::coordinator::strategy::{
     TrainingStrategy,
 };
 use crate::metrics::{CommStats, PhaseTimes};
+use crate::util::value::Value;
 use crate::{Result, WorkerId};
 
 /// Periodic re-sampling engine.
@@ -105,6 +109,44 @@ impl TrainingStrategy for FastSampleStrategy {
             None
         };
         finish_cached_epoch(ctx, state, worker, epoch, rebuild, outcome, totals, phases, comm)
+    }
+
+    fn checkpoint_state(
+        &self,
+        _ctx: &RunContext,
+        state: &StrategyState,
+        _worker: WorkerId,
+    ) -> Result<Value> {
+        let st = state.downcast_ref::<RapidState>().expect("rapid-family worker state");
+        Ok(checkpoint_rapid_state(st))
+    }
+
+    fn restore_setup(
+        &self,
+        ctx: &RunContext,
+        worker: WorkerId,
+        next_epoch: u32,
+        snapshot: &Value,
+    ) -> Result<StrategySetup> {
+        let hot = snapshot.req_u32_array("hot")?;
+        // Resumed epochs replay period-start schedules, so only those files
+        // need re-enumerating: the start of next_epoch's period plus every
+        // later period start.
+        let mut starts: Vec<u32> = vec![self.sched_epoch(next_epoch)];
+        starts.extend(
+            (0..ctx.cfg.epochs)
+                .step_by(self.period as usize)
+                .filter(|&s| s > next_epoch),
+        );
+        let st = restore_rapid_state(ctx, worker, &starts, &hot)?;
+        Ok(StrategySetup { setup_time: 0.0, state: Box::new(st) })
+    }
+
+    fn cache_rows(&self, state: &StrategyState, _worker: WorkerId) -> u64 {
+        state
+            .downcast_ref::<RapidState>()
+            .expect("rapid-family worker state")
+            .cache_rows()
     }
 }
 
@@ -195,6 +237,35 @@ mod tests {
         let report = crate::coordinator::run(&c).unwrap();
         assert_eq!(report.loss_curve().len(), 3);
         assert!(report.loss_curve().iter().all(|&(_, l)| l.is_finite()));
+    }
+
+    #[test]
+    fn restore_reenumerates_exactly_the_replayed_period_starts() {
+        use crate::coordinator::strategy::TrainingStrategy;
+        use crate::storage::EpochReader;
+        // period 2 over 6 epochs → schedules at 0, 2, 4. Resuming at epoch 3
+        // replays epoch 2's schedule and later needs epoch 4's.
+        let c = cfg(2, 6);
+        let ctx = RunContext::build(&c).unwrap();
+        let strat = super::ctor(&c);
+        let setup = strat.setup(&ctx, 0).unwrap();
+        let snap = strat.checkpoint_state(&ctx, &setup.state, 0).unwrap();
+        let snap = crate::util::value::Value::from_json(&snap.to_json()).unwrap();
+
+        let ctx2 = RunContext::build(&c).unwrap();
+        let restored = strat.restore_setup(&ctx2, 0, 3, &snap).unwrap();
+        assert_eq!(restored.setup_time, 0.0);
+        for s in [2u32, 4] {
+            assert!(EpochReader::open(&ctx2.metadata_path, 0, s).is_ok(), "period start {s}");
+        }
+        assert!(EpochReader::open(&ctx2.metadata_path, 0, 0).is_err(), "epoch 0 not replayed");
+        let orig = setup.state.downcast_ref::<super::RapidState>().unwrap();
+        let re = restored.state.downcast_ref::<super::RapidState>().unwrap();
+        assert_eq!(
+            re.cache.lock().unwrap().steady().ids_by_row(),
+            orig.cache.lock().unwrap().steady().ids_by_row()
+        );
+        assert_eq!(strat.cache_rows(&restored.state, 0), orig.cache_rows());
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::sampler::schedule::{rank_order, tally_remote_threads};
 use crate::sampler::{enumerate_epoch, remote_frequency, BatchMeta};
 use crate::storage::{write_epoch, EpochReader};
 use crate::util::parallel::available_threads;
+use crate::util::value::Value;
 use crate::{NodeId, Result, WorkerId};
 use std::sync::{Arc, Mutex};
 
@@ -46,6 +47,70 @@ pub struct RapidSetup {
 pub(crate) struct RapidState {
     pub(crate) cache: Arc<Mutex<DoubleBufferCache>>,
     pub(crate) setup_comm: CommStats,
+}
+
+impl RapidState {
+    /// Rows held by the steady cache — the warm state a membership change
+    /// would have to ship alongside the shard.
+    pub(crate) fn cache_rows(&self) -> u64 {
+        self.cache.lock().unwrap().steady().len() as u64
+    }
+}
+
+/// Serialize a rapid-family worker state for a checkpoint: the steady
+/// cache's ranked hot-id list. `C_sec` is not recorded — checkpoints are
+/// written after the boundary swap, so the steady buffer *is* the cache that
+/// serves the next epoch, and the resumed run's own `finish_epoch` stages
+/// the following rebuild exactly as the uninterrupted run would. The setup
+/// pull isn't recorded either: it only merges into epoch 0's report, which a
+/// restore never replays.
+pub(crate) fn checkpoint_rapid_state(st: &RapidState) -> Value {
+    let mut v = Value::table();
+    v.set("hot", &st.cache.lock().unwrap().steady().ids_by_row()[..]);
+    v
+}
+
+/// Rebuild a rapid-family worker state from a checkpoint without charging
+/// the fabric: re-enumerate the listed epochs' schedule metadata to disk
+/// (derived-seed deterministic, so the files match the originals byte for
+/// byte) and re-install the checkpointed steady cache via a non-charging
+/// [`crate::kvstore::KvStore::peek_rows`] gather. Fabric counters and the
+/// compression tally are restored from the checkpoint directly, so the
+/// resumed run's telemetry lines up with the uninterrupted run's.
+pub(crate) fn restore_rapid_state(
+    ctx: &RunContext,
+    worker: WorkerId,
+    reenumerate: &[u32],
+    hot: &[NodeId],
+) -> Result<RapidState> {
+    let cfg = &ctx.cfg;
+    let fanouts = ctx.fanouts();
+    for &epoch in reenumerate {
+        let sched = enumerate_epoch(
+            &ctx.ds.graph,
+            &ctx.part,
+            &ctx.shards[worker as usize],
+            &fanouts,
+            cfg.batch_size,
+            cfg.base_seed,
+            worker,
+            epoch,
+        );
+        write_epoch(&ctx.metadata_path, &sched)?;
+    }
+    let rows = if cfg.exec_mode == ExecMode::Full {
+        ctx.kv.peek_rows(worker, hot)
+    } else {
+        Vec::new()
+    };
+    let mut cache = DoubleBufferCache::default();
+    cache.install_steady(CacheBuffer::new(hot, rows, ctx.kv.feature_dim()));
+    Ok(RapidState {
+        cache: Arc::new(Mutex::new(cache)),
+        // The initial VectorPull only merges into epoch 0, which a resumed
+        // run never replays; zero keeps the restored state chargeless.
+        setup_comm: CommStats::default(),
+    })
 }
 
 /// Precompute all epochs to disk and build the initial steady cache (the
@@ -455,6 +520,41 @@ impl TrainingStrategy for RapidStrategy {
         };
         finish_cached_epoch(ctx, state, worker, epoch, rebuild, outcome, totals, phases, comm)
     }
+
+    fn checkpoint_state(
+        &self,
+        _ctx: &RunContext,
+        state: &StrategyState,
+        _worker: WorkerId,
+    ) -> Result<Value> {
+        let st = state.downcast_ref::<RapidState>().expect("rapid-family worker state");
+        Ok(checkpoint_rapid_state(st))
+    }
+
+    fn restore_setup(
+        &self,
+        ctx: &RunContext,
+        worker: WorkerId,
+        next_epoch: u32,
+        snapshot: &Value,
+    ) -> Result<StrategySetup> {
+        let hot = snapshot.req_u32_array("hot")?;
+        // The resumed epochs stream their own schedule files, and each
+        // finish_epoch streams the next epoch's for the C_sec rebuild — the
+        // resumed range covers both.
+        let epochs: Vec<u32> = (next_epoch..ctx.cfg.epochs).collect();
+        let st = restore_rapid_state(ctx, worker, &epochs, &hot)?;
+        // Setup time was paid (and reported) by the interrupted run; the
+        // orchestrator carries it over from the checkpoint.
+        Ok(StrategySetup { setup_time: 0.0, state: Box::new(st) })
+    }
+
+    fn cache_rows(&self, state: &StrategyState, _worker: WorkerId) -> u64 {
+        state
+            .downcast_ref::<RapidState>()
+            .expect("rapid-family worker state")
+            .cache_rows()
+    }
 }
 
 /// Streamed frequency ranking, exposed for the Fig-3 bench and `tune`.
@@ -576,6 +676,47 @@ mod tests {
                 r.device_bytes,
                 bound + slack
             );
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_rebuilds_the_exact_steady_cache() {
+        let mut c = RunConfig::default();
+        c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+        c.engine = Engine::Rapid;
+        c.epochs = 3;
+        c.n_hot = 300;
+        c.exec_mode = ExecMode::Full;
+        let ctx = RunContext::build(&c).unwrap();
+        let strat = RapidStrategy;
+        let setup = strat.setup(&ctx, 0).unwrap();
+        let snap = strat.checkpoint_state(&ctx, &setup.state, 0).unwrap();
+        // Round-trip through JSON like the on-disk checkpoint does.
+        let snap = Value::from_json(&snap.to_json()).unwrap();
+
+        // Fresh context: new tmp metadata dir, fresh kv shards.
+        let ctx2 = RunContext::build(&c).unwrap();
+        let restored = strat.restore_setup(&ctx2, 0, 1, &snap).unwrap();
+        assert_eq!(restored.setup_time, 0.0, "restore charges no setup time");
+
+        let orig = setup.state.downcast_ref::<RapidState>().unwrap();
+        let re = restored.state.downcast_ref::<RapidState>().unwrap();
+        let orig_ids = orig.cache.lock().unwrap().steady().ids_by_row();
+        assert!(!orig_ids.is_empty());
+        assert_eq!(re.cache.lock().unwrap().steady().ids_by_row(), orig_ids);
+        for &v in orig_ids.iter().take(16) {
+            assert_eq!(
+                orig.cache.lock().unwrap().steady().row(v).map(<[f32]>::to_vec),
+                re.cache.lock().unwrap().steady().row(v).map(<[f32]>::to_vec),
+                "row {v}"
+            );
+        }
+        assert_eq!(strat.cache_rows(&restored.state, 0), orig.cache_rows());
+        assert_eq!(re.setup_comm, CommStats::default(), "no setup traffic on restore");
+        // Re-enumerated metadata serves every resumed epoch (and the C_sec
+        // rebuild reads).
+        for e in 1..3 {
+            assert!(EpochReader::open(&ctx2.metadata_path, 0, e).is_ok(), "epoch {e}");
         }
     }
 

@@ -47,6 +47,7 @@ use crate::metrics::{CacheStats, CommStats, PhaseTimes};
 use crate::partition::Partitioner;
 use crate::prefetch::StagedBatch;
 use crate::sampler::khop::Fanout;
+use crate::util::value::Value;
 use crate::{Result, WorkerId};
 use anyhow::bail;
 use std::any::Any;
@@ -229,6 +230,44 @@ pub trait TrainingStrategy: Send + Sync {
         phases: &mut PhaseTimes,
         comm: &mut CommStats,
     ) -> Result<EpochFinish>;
+
+    /// Serialize this worker's strategy state for a checkpoint. The default
+    /// (an empty table) is correct for stateless on-demand engines whose
+    /// per-epoch state is recomputed from the config and schedule position;
+    /// cache-carrying engines override it to record their steady hot set
+    /// (and any controller state) so a restore rebuilds the exact cache.
+    fn checkpoint_state(
+        &self,
+        _ctx: &RunContext,
+        _state: &StrategyState,
+        _worker: WorkerId,
+    ) -> Result<Value> {
+        Ok(Value::table())
+    }
+
+    /// Rebuild per-worker state from a checkpoint written at the boundary
+    /// entering `next_epoch`. The default delegates to [`Self::setup`],
+    /// correct for stateless engines (their setup is free and chargeless);
+    /// cache-carrying engines override to re-enumerate schedule metadata and
+    /// rebuild the checkpointed steady cache *without* re-charging the
+    /// fabric, so the resumed run's counters match the interrupted run's.
+    fn restore_setup(
+        &self,
+        ctx: &RunContext,
+        worker: WorkerId,
+        _next_epoch: u32,
+        _snapshot: &Value,
+    ) -> Result<StrategySetup> {
+        self.setup(ctx, worker)
+    }
+
+    /// Rows this worker's warm cache contributes to a membership-change data
+    /// move (shard adoption ships the partition's feature rows plus the hot
+    /// set, so recovery pricing needs the cache size). 0 for cache-less
+    /// engines.
+    fn cache_rows(&self, _state: &StrategyState, _worker: WorkerId) -> u64 {
+        0
+    }
 }
 
 /// Constructor for a registered engine. Takes the run config so an engine

@@ -163,6 +163,37 @@ impl KvStore {
         (self.shards[p as usize].len() * 4) as u64
     }
 
+    /// Gather rows for `ids` (in order) *without* charging the fabric or the
+    /// codec tally. Checkpoint restore rebuilds caches through this so the
+    /// deterministic per-link RPC counters (which drive loss-retry cadence)
+    /// stay exactly where the imported checkpoint left them; the movement is
+    /// priced analytically by the recovery layer instead. Remote rows still
+    /// pass through the wire codec, so the restored cache holds the same
+    /// dequantized bytes a charged pull would have produced. Requires
+    /// materialized features ([`Self::has_values`]).
+    pub fn peek_rows(&self, requester: WorkerId, ids: &[NodeId]) -> Vec<f32> {
+        let d = self.feature_dim;
+        let mut out = Vec::with_capacity(ids.len() * d);
+        for &v in ids {
+            let p = self.part.owner_of(v) as usize;
+            let r = self.rank[v as usize] as usize;
+            out.extend_from_slice(&self.shards[p][r * d..(r + 1) * d]);
+            if let Some(codec) = self.codec {
+                if p as WorkerId != requester {
+                    let n = out.len();
+                    codec.round_trip(&mut out[n - d..]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Overwrite the codec tally (checkpoint restore; the tally is cumulative
+    /// run-level state, so a resumed run imports the snapshot it saved).
+    pub fn import_compression_tally(&self, t: CompressTally) {
+        *self.tally.lock().unwrap() = t;
+    }
+
     /// Internal: group `ids` by owner, charge the fabric for the remote
     /// portion, and optionally gather rows (in `ids` order) into `out`.
     /// `epoch` resolves transient speed phases on the charge.
@@ -329,6 +360,33 @@ mod tests {
         for (i, &v) in ids.iter().enumerate() {
             assert_eq!(&out[i * d..(i + 1) * d], ds.feature_row(v));
         }
+    }
+
+    #[test]
+    fn peek_rows_matches_pull_output_and_charges_nothing() {
+        use crate::compress::WireCodec;
+        let codec = BlockCodec::new(WireCodec::Int8, 32);
+        let (_, part, kv) = setup_codec(true, Some(codec));
+        let ids: Vec<u32> = part.local_nodes[1].iter().take(8).copied().collect();
+        let mut pulled = Vec::new();
+        let mut stats = CommStats::default();
+        kv.vector_pull(0, &ids, Some(&mut pulled), &mut stats);
+        let tally_after_pull = kv.compression_tally();
+        let peeked = kv.peek_rows(0, &ids);
+        assert_eq!(peeked, pulled, "peek must see the same (dequantized) bytes");
+        assert_eq!(
+            kv.compression_tally(),
+            tally_after_pull,
+            "peek must not touch the codec tally"
+        );
+    }
+
+    #[test]
+    fn compression_tally_import_round_trips() {
+        let (_, _, kv) = setup(false);
+        let t = CompressTally { raw_bytes: 10, wire_bytes: 4, sq_err: 0.5, elems: 3 };
+        kv.import_compression_tally(t);
+        assert_eq!(kv.compression_tally(), t);
     }
 
     #[test]

@@ -106,6 +106,13 @@ COMMON FLAGS
   --grad-k F        grad-topk: fraction of gradient coordinates applied per
                     step, in (0,1]; 0 disables (exactly `rapid`)
   --grad-mode M     topk | randk — gradient coordinate selector
+  --failures SPEC   deterministic failure plan, comma-separated events at
+                    epoch boundaries: leave:W@E | join:W@E | linkdown:A-B@E
+                    | linkup:A-B@E | crash@E (e.g. \"leave:1@2,crash@3\")
+  --checkpoint-every K   write a checkpoint every K epoch boundaries
+  --checkpoint-dir P     where checkpoints go (default: run metadata dir)
+  --restore PATH    resume a run from a checkpoint file (ignores the other
+                    config flags — the checkpoint carries the config)
   --json PATH       write the run report as JSON"
     );
 }
@@ -292,29 +299,43 @@ fn config_from_flags(flags: &Flags) -> Result<RunConfig> {
     if let Some(v) = flags.get("grad-mode") {
         cfg.engine_params.grad_mode = v.parse()?;
     }
+    if let Some(v) = flags.get("failures") {
+        cfg.failures = v.clone();
+    }
+    if let Some(v) = flags.get("checkpoint-every") {
+        cfg.checkpoint_every = v.parse()?;
+    }
+    if let Some(v) = flags.get("checkpoint-dir") {
+        cfg.checkpoint_dir = v.clone();
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn cmd_train(flags: &Flags) -> Result<()> {
-    let cfg = config_from_flags(flags)?;
-    if let Some(p) = flags.get("save-config") {
-        save_run_config(&cfg, std::path::Path::new(p))?;
-        println!("wrote {p}");
-        return Ok(());
-    }
-    println!(
-        "train: {} on {} | P={} batch={} epochs={} n_hot={} Q={} mode={:?}",
-        cfg.engine.name(),
-        cfg.dataset.name,
-        cfg.num_workers,
-        cfg.batch_size,
-        cfg.epochs,
-        cfg.n_hot,
-        cfg.prefetch_q,
-        cfg.exec_mode,
-    );
-    let report = coordinator::run(&cfg)?;
+    let report = if let Some(p) = flags.get("restore") {
+        println!("restore: resuming from checkpoint {p}");
+        coordinator::resume_run(std::path::Path::new(p))?
+    } else {
+        let cfg = config_from_flags(flags)?;
+        if let Some(p) = flags.get("save-config") {
+            save_run_config(&cfg, std::path::Path::new(p))?;
+            println!("wrote {p}");
+            return Ok(());
+        }
+        println!(
+            "train: {} on {} | P={} batch={} epochs={} n_hot={} Q={} mode={:?}",
+            cfg.engine.name(),
+            cfg.dataset.name,
+            cfg.num_workers,
+            cfg.batch_size,
+            cfg.epochs,
+            cfg.n_hot,
+            cfg.prefetch_q,
+            cfg.exec_mode,
+        );
+        coordinator::run(&cfg)?
+    };
     let mut t = Table::new(
         &format!("{} / {}", report.engine, report.dataset),
         &["epoch", "time", "fetch", "compute", "MB moved", "hit rate", "loss", "acc"],
@@ -424,6 +445,23 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             c.quant_mse,
             c.grad_elems_sent,
             c.grad_elems_total,
+        );
+    }
+    if let Some(r) = &report.recovery {
+        println!(
+            "recovery: {} events ({} leave, {} join, {} down, {} up, {} crash) | {} checkpoints | {} rows / {} moved ({} detoured) | {} moving, {} lost to rollbacks",
+            r.events,
+            r.worker_leaves,
+            r.worker_joins,
+            r.link_downs,
+            r.link_ups,
+            r.crash_restarts,
+            r.checkpoints_written,
+            r.moved_rows,
+            fmt_bytes(r.moved_bytes as f64),
+            fmt_bytes(r.rerouted_bytes as f64),
+            fmt_secs(r.recovery_time),
+            fmt_secs(r.lost_work_time),
         );
     }
     if let Some(p) = flags.get("json") {
@@ -738,6 +776,24 @@ mod tests {
         assert_eq!(cfg.engine_params.codec_block, 64);
         assert!((cfg.engine_params.grad_k - 0.25).abs() < 1e-12);
         assert_eq!(cfg.engine_params.grad_mode, rapidgnn::compress::GradMode::RandK);
+    }
+
+    #[test]
+    fn failure_flags_parse_and_validate() {
+        let cfg = config_from_flags(&flags(&[
+            ("failures", "leave:1@2,crash@3"),
+            ("checkpoint-every", "2"),
+            ("checkpoint-dir", "/tmp/ckpts"),
+            ("epochs", "4"),
+        ]))
+        .unwrap();
+        assert_eq!(cfg.failures, "leave:1@2,crash@3");
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert_eq!(cfg.checkpoint_dir, "/tmp/ckpts");
+        assert!(cfg.has_recovery());
+        // a malformed or out-of-range plan is rejected at validate time
+        assert!(config_from_flags(&flags(&[("failures", "explode@1")])).is_err());
+        assert!(config_from_flags(&flags(&[("failures", "leave:1@99")])).is_err());
     }
 
     #[test]

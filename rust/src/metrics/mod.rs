@@ -5,6 +5,7 @@
 //! bytes moved, cache hit rates, memory, and energy.
 
 use crate::util::value::Value;
+use crate::Result;
 use std::collections::BTreeMap;
 
 /// Communication counters (monotonic over a run).
@@ -94,6 +95,17 @@ impl CacheReport {
             .set("resize_events", self.resize_events);
         v
     }
+
+    /// Parse a table produced by [`Self::to_value`].
+    pub fn from_value(v: &Value) -> Result<CacheReport> {
+        Ok(CacheReport {
+            n_hot: u32::try_from(v.req_u64("n_hot")?)?,
+            hits: v.req_u64("hits")?,
+            misses: v.req_u64("misses")?,
+            hit_rate: v.req_f64("hit_rate")?,
+            resize_events: u32::try_from(v.req_u64("resize_events")?)?,
+        })
+    }
 }
 
 /// Wall/simulated time spent per pipeline phase (seconds).
@@ -180,6 +192,45 @@ impl EpochReport {
             v.set("cache_plan", cp.to_value());
         }
         v
+    }
+
+    /// Parse a table produced by [`Self::to_value`] — checkpoints store the
+    /// already-reported epoch prefix this way so a resumed run's final
+    /// report equals the uninterrupted run's.
+    pub fn from_value(v: &Value) -> Result<EpochReport> {
+        Ok(EpochReport {
+            epoch: u32::try_from(v.req_u64("epoch")?)?,
+            worker: u32::try_from(v.req_u64("worker")?)?,
+            steps: u32::try_from(v.req_u64("steps")?)?,
+            epoch_time: v.req_f64("epoch_time")?,
+            phases: PhaseTimes {
+                sample: v.req_f64("sample_s")?,
+                fetch: v.req_f64("fetch_s")?,
+                assemble: v.req_f64("assemble_s")?,
+                compute: v.req_f64("compute_s")?,
+                idle: v.req_f64("idle_s")?,
+            },
+            comm: CommStats {
+                vector_pulls: v.req_u64("vector_pulls")?,
+                sync_pulls: v.req_u64("sync_pulls")?,
+                remote_rows: v.req_u64("remote_rows")?,
+                vector_rows: v.req_u64("vector_rows")?,
+                bytes: v.req_u64("bytes")?,
+                net_time: v.req_f64("net_time")?,
+            },
+            cache: CacheStats {
+                lookups: v.req_u64("cache_lookups")?,
+                hits: v.req_u64("cache_hits")?,
+            },
+            cache_plan: match v.get("cache_plan") {
+                Some(cp) => Some(CacheReport::from_value(cp)?),
+                None => None,
+            },
+            mean_loss: v.req_f64("mean_loss")?,
+            train_acc: v.req_f64("train_acc")?,
+            device_bytes: v.req_u64("device_bytes")?,
+            host_bytes: v.req_u64("host_bytes")?,
+        })
     }
 }
 
@@ -270,6 +321,80 @@ impl CompressionReport {
     }
 }
 
+/// Whole-run elasticity/fault-recovery telemetry. Present only when the run
+/// executed a failure plan or wrote checkpoints; omitted from serialization
+/// otherwise, so failure-free reports — including the golden trace fixture —
+/// stay byte-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryReport {
+    /// Failure-plan events applied over the run.
+    pub events: u32,
+    /// Worker departures (shard handed to a standby).
+    pub worker_leaves: u32,
+    /// Worker (re)joins.
+    pub worker_joins: u32,
+    /// Links taken down.
+    pub link_downs: u32,
+    /// Links restored.
+    pub link_ups: u32,
+    /// Crash-restart events (rollback to the last checkpoint).
+    pub crash_restarts: u32,
+    /// Checkpoints written at epoch boundaries.
+    pub checkpoints_written: u32,
+    /// Feature rows shipped by membership-change data moves (shard + warm
+    /// cache of the departing/adopting worker).
+    pub moved_rows: u64,
+    /// Bytes shipped by those moves.
+    pub moved_bytes: u64,
+    /// Recovery-flow bytes that took a detour around a downed link.
+    pub rerouted_bytes: u64,
+    /// Simulated seconds spent moving recovery data (priced through the
+    /// fabric's link models; kept out of `total_time`, which stays
+    /// epoch-only).
+    pub recovery_time: f64,
+    /// Simulated training seconds re-executed after crash rollbacks (max
+    /// over workers of the rolled-back epochs' times).
+    pub lost_work_time: f64,
+}
+
+impl RecoveryReport {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("events", self.events)
+            .set("worker_leaves", self.worker_leaves)
+            .set("worker_joins", self.worker_joins)
+            .set("link_downs", self.link_downs)
+            .set("link_ups", self.link_ups)
+            .set("crash_restarts", self.crash_restarts)
+            .set("checkpoints_written", self.checkpoints_written)
+            .set("moved_rows", self.moved_rows)
+            .set("moved_bytes", self.moved_bytes)
+            .set("rerouted_bytes", self.rerouted_bytes)
+            .set("recovery_time", self.recovery_time)
+            .set("lost_work_time", self.lost_work_time);
+        v
+    }
+
+    /// Parse back from [`to_value`](Self::to_value)'s table (checkpoint load).
+    pub fn from_value(v: &Value) -> Result<RecoveryReport> {
+        Ok(RecoveryReport {
+            events: v.req_u32("events")?,
+            worker_leaves: v.req_u32("worker_leaves")?,
+            worker_joins: v.req_u32("worker_joins")?,
+            link_downs: v.req_u32("link_downs")?,
+            link_ups: v.req_u32("link_ups")?,
+            crash_restarts: v.req_u32("crash_restarts")?,
+            checkpoints_written: v.req_u32("checkpoints_written")?,
+            moved_rows: v.req_u64("moved_rows")?,
+            moved_bytes: v.req_u64("moved_bytes")?,
+            rerouted_bytes: v.req_u64("rerouted_bytes")?,
+            recovery_time: v.req_f64("recovery_time")?,
+            lost_work_time: v.req_f64("lost_work_time")?,
+        })
+    }
+}
+
 /// Whole-run summary aggregated across workers and epochs.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunReport {
@@ -295,6 +420,10 @@ pub struct RunReport {
     /// gradient sparsifier ran; omitted from serialization so uncompressed
     /// traces stay byte-identical).
     pub compression: Option<CompressionReport>,
+    /// Elasticity/fault-recovery telemetry (`None` unless the run executed a
+    /// failure plan or wrote checkpoints; omitted from serialization so
+    /// failure-free traces stay byte-identical).
+    pub recovery: Option<RecoveryReport>,
 }
 
 impl RunReport {
@@ -439,6 +568,9 @@ impl RunReport {
         if let Some(c) = &self.compression {
             v.set("compression", c.to_value());
         }
+        if let Some(r) = &self.recovery {
+            v.set("recovery", r.to_value());
+        }
         v
     }
 
@@ -567,6 +699,85 @@ mod tests {
         );
         let v = Value::from_json(&json).unwrap();
         assert_eq!(v, with.to_value());
+    }
+
+    #[test]
+    fn recovery_is_omitted_unless_present() {
+        // Byte-stability contract: a failure-free run's report must
+        // serialize to exactly the pre-RecoveryReport shape.
+        let without = report_with(vec![EpochReport::default()]);
+        assert!(!without.to_json().contains("recovery"));
+        let with = RunReport {
+            recovery: Some(RecoveryReport {
+                events: 3,
+                worker_leaves: 1,
+                worker_joins: 1,
+                link_downs: 0,
+                link_ups: 0,
+                crash_restarts: 1,
+                checkpoints_written: 2,
+                moved_rows: 5_000,
+                moved_bytes: 2_000_000,
+                rerouted_bytes: 0,
+                recovery_time: 0.25,
+                lost_work_time: 1.5,
+            }),
+            ..Default::default()
+        };
+        let json = with.to_json();
+        assert!(
+            json.contains("recovery")
+                && json.contains("lost_work_time")
+                && json.contains("moved_bytes"),
+            "{json}"
+        );
+        let v = Value::from_json(&json).unwrap();
+        assert_eq!(v, with.to_value());
+    }
+
+    #[test]
+    fn epoch_report_value_round_trip() {
+        // Checkpoints persist already-reported epochs through to_value /
+        // from_value; every field must survive, including the optional
+        // adaptive telemetry and NaN trace-mode losses (NaN ↔ JSON null).
+        let full = EpochReport {
+            epoch: 3,
+            worker: 1,
+            steps: 17,
+            epoch_time: 2.5,
+            phases: PhaseTimes { sample: 0.1, fetch: 0.2, assemble: 0.3, compute: 0.4, idle: 0.5 },
+            comm: CommStats {
+                vector_pulls: 2,
+                sync_pulls: 9,
+                remote_rows: 1_000,
+                vector_rows: 600,
+                bytes: 400_000,
+                net_time: 0.7,
+            },
+            cache: CacheStats { lookups: 50, hits: 40 },
+            cache_plan: Some(CacheReport {
+                n_hot: 256,
+                hits: 40,
+                misses: 10,
+                hit_rate: 0.8,
+                resize_events: 1,
+            }),
+            mean_loss: 1.25,
+            train_acc: 0.5,
+            device_bytes: 123,
+            host_bytes: 456,
+        };
+        let back =
+            EpochReport::from_value(&Value::from_json(&full.to_value().to_json()).unwrap())
+                .unwrap();
+        assert_eq!(back, full);
+
+        let trace = EpochReport { mean_loss: f64::NAN, train_acc: f64::NAN, ..Default::default() };
+        let back =
+            EpochReport::from_value(&Value::from_json(&trace.to_value().to_json()).unwrap())
+                .unwrap();
+        assert!(back.mean_loss.is_nan() && back.train_acc.is_nan());
+        assert!(back.cache_plan.is_none());
     }
 
     #[test]

@@ -405,6 +405,28 @@ impl NetFabric {
         st.claims.clear();
         st.util.clear();
     }
+
+    /// Export the deterministic RPC counters for a checkpoint: the global
+    /// RPC sequence number plus every per-link entry, sorted by link key.
+    /// These drive the loss-retry cadence (`rpcs % loss_every`,
+    /// `rpc_counter % fail_every`), so a resumed run must start from the
+    /// exact counts the interrupted run had — a fresh fabric's zeros would
+    /// shift every subsequent retry decision.
+    pub fn export_counters(&self) -> (u64, Vec<((WorkerId, WorkerId), LinkStats)>) {
+        let st = self.state.lock().unwrap();
+        let mut links: Vec<_> = st.links.iter().map(|(&k, &s)| (k, s)).collect();
+        links.sort_by_key(|&(k, _)| k);
+        (st.rpc_counter, links)
+    }
+
+    /// Restore counters exported by [`Self::export_counters`] into this
+    /// (fresh) fabric. Claims/utilization telemetry start empty, as they do
+    /// at every epoch boundary.
+    pub fn import_counters(&self, rpc_counter: u64, links: &[((WorkerId, WorkerId), LinkStats)]) {
+        let mut st = self.state.lock().unwrap();
+        st.rpc_counter = rpc_counter;
+        st.links = links.iter().copied().collect();
+    }
 }
 
 #[cfg(test)]
@@ -414,6 +436,34 @@ mod tests {
 
     fn fabric() -> NetFabric {
         NetFabric::new(FabricConfig::default())
+    }
+
+    #[test]
+    fn counter_export_import_preserves_retry_cadence() {
+        // An uninterrupted lossy fabric vs. one that is snapshotted after 5
+        // RPCs and resumed on a fresh fabric: the remaining RPCs must see
+        // the identical per-RPC retry decisions and costs.
+        let mut cfg = FabricConfig::default();
+        cfg.loss_rate = 0.25;
+        let uninterrupted = NetFabric::new(cfg.clone());
+        let mut full = Vec::new();
+        for _ in 0..12 {
+            full.push(uninterrupted.charge_rpc(0, 1, 10, 400));
+        }
+        let first = NetFabric::new(cfg.clone());
+        for i in 0..5 {
+            let c = first.charge_rpc(0, 1, 10, 400);
+            assert_eq!(c, full[i], "prefix rpc {i}");
+        }
+        let (rpc_counter, links) = first.export_counters();
+        let resumed = NetFabric::new(cfg);
+        resumed.import_counters(rpc_counter, &links);
+        for (i, expect) in full.iter().enumerate().skip(5) {
+            let c = resumed.charge_rpc(0, 1, 10, 400);
+            assert_eq!(&c, expect, "resumed rpc {i}");
+        }
+        assert_eq!(resumed.total_retries(), uninterrupted.total_retries());
+        assert_eq!(resumed.export_counters(), uninterrupted.export_counters());
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub use tensor::Mat;
 
 use crate::graph::Dataset;
 use crate::sampler::SampledBatch;
+use crate::util::value::Value;
+use crate::Result;
 
 /// Gradient-compression telemetry: cumulative coordinate counts before and
 /// after sparsification over a backend's lifetime.
@@ -44,6 +46,19 @@ pub trait TrainStep {
     fn grad_stats(&self) -> Option<GradStats> {
         None
     }
+
+    /// Serialize the backend's full training state for a checkpoint, or
+    /// `None` (the default) when the backend cannot be checkpointed (e.g.
+    /// PJRT device state lives outside the host).
+    fn save_state(&self) -> Option<Value> {
+        None
+    }
+
+    /// Restore state produced by [`Self::save_state`]. The default errors:
+    /// a backend that returns `Some` from `save_state` must override this.
+    fn load_state(&mut self, _v: &Value) -> Result<()> {
+        anyhow::bail!("this train-step backend does not support checkpoint restore")
+    }
 }
 
 impl TrainStep for SageModel {
@@ -53,6 +68,14 @@ impl TrainStep for SageModel {
 
     fn eval(&mut self, x0: &Mat, batch: &SampledBatch, labels: &[u16]) -> StepOutput {
         self.evaluate(x0, batch, labels)
+    }
+
+    fn save_state(&self) -> Option<Value> {
+        Some(self.export_state())
+    }
+
+    fn load_state(&mut self, v: &Value) -> Result<()> {
+        self.import_state(v)
     }
 }
 

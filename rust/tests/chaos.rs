@@ -1,0 +1,312 @@
+//! Chaos-conformance suite: elastic fault-tolerance under deterministic,
+//! seeded failure schedules.
+//!
+//! The failure model's contract (see `sim/README.md`): failures land on
+//! epoch boundaries and heal entirely within them through *priced* recovery
+//! work, so the training timeline — schedules, caches, communication
+//! counters, SGD trajectory — replays the failure-free run exactly. These
+//! tests drive randomly generated failure plans (via `proptest_lite`, so
+//! every case reproduces from its seed) across engines × topologies ×
+//! contention modes and pin:
+//!
+//! 1. **Timeline invariance** — any epoch-boundary failure schedule leaves
+//!    per-(worker, epoch) communication counters (and, in full mode, the
+//!    loss/accuracy curves) identical to the failure-free run.
+//! 2. **Kill–restore exactness** — checkpoint → kill → resume produces a
+//!    run report byte-identical to the uninterrupted run, across engines
+//!    with real checkpoint state (caches, controllers, residuals, codec
+//!    tallies) and both exec modes.
+//! 3. **Thread-count independence** — chaos runs and resumed runs render
+//!    byte-identical reports at `RAPIDGNN_THREADS ∈ {1, 2, 8}`.
+
+use rapidgnn::config::{
+    DatasetConfig, DatasetPreset, Engine, FailureEvent, FailurePlan, RunConfig, Topology,
+};
+use rapidgnn::coordinator::{self, resume_run};
+use rapidgnn::metrics::EpochReport;
+use rapidgnn::sampler::seed::Rng;
+use rapidgnn::util::proptest_lite::{forall, gen};
+use rapidgnn::util::tempdir::TempDir;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+const WORKERS: u32 = 3;
+const EPOCHS: u32 = 4;
+
+/// One test mutates the process-global `RAPIDGNN_THREADS`; serialize all
+/// run-rendering tests against it (same idiom as the golden-trace suite).
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn base_cfg(engine: Engine, topology: Topology, contention: bool) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+    c.engine = engine;
+    c.num_workers = WORKERS;
+    c.epochs = EPOCHS;
+    c.n_hot = 300;
+    c.fabric.topology = topology;
+    c.fabric.contention = contention;
+    c
+}
+
+/// A random failure schedule: 1–4 events on interior boundaries, all five
+/// event kinds, self-links excluded. Deterministic in the driving `Rng`.
+fn random_plan(rng: &mut Rng) -> FailurePlan {
+    let n = gen::usize_in(rng, 1, 4);
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        let at_epoch = gen::usize_in(rng, 1, (EPOCHS - 1) as usize) as u32;
+        let ev = match rng.below(5) {
+            0 => FailureEvent::WorkerLeave { worker: rng.below(WORKERS), at_epoch },
+            1 => FailureEvent::WorkerJoin { worker: rng.below(WORKERS), at_epoch },
+            kind @ (2 | 3) => {
+                let a = rng.below(WORKERS);
+                let b = (a + 1 + rng.below(WORKERS - 1)) % WORKERS;
+                if kind == 2 {
+                    FailureEvent::LinkDown { a, b, at_epoch }
+                } else {
+                    FailureEvent::LinkUp { a, b, at_epoch }
+                }
+            }
+            _ => FailureEvent::CrashRestart { at_epoch },
+        };
+        events.push(ev);
+    }
+    FailurePlan { events }
+}
+
+/// Per-(worker, epoch) reports in a path-independent order.
+fn sorted(mut epochs: Vec<EpochReport>) -> Vec<EpochReport> {
+    epochs.sort_by_key(|e| (e.worker, e.epoch));
+    epochs
+}
+
+/// Compare the schedule-derived counters of two runs. Virtual times are
+/// deliberately excluded: the failure-free reference may run on the
+/// trace-mode per-worker path while chaos runs use the cluster runtime,
+/// and only communication counts are pinned across those paths (the same
+/// contract the Fig-6 conformance test uses).
+fn assert_same_timeline(tag: &str, a: &[EpochReport], b: &[EpochReport]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{tag}: {} vs {} epoch reports", a.len(), b.len()));
+    }
+    for (x, y) in a.iter().zip(b) {
+        let ctx = format!("{tag} worker {} epoch {}", x.worker, x.epoch);
+        if (x.worker, x.epoch) != (y.worker, y.epoch) {
+            return Err(format!("{ctx}: misaligned against ({}, {})", y.worker, y.epoch));
+        }
+        if x.steps != y.steps {
+            return Err(format!("{ctx}: steps {} != {}", x.steps, y.steps));
+        }
+        if x.comm.remote_rows != y.comm.remote_rows {
+            return Err(format!(
+                "{ctx}: remote_rows {} != {}",
+                x.comm.remote_rows, y.comm.remote_rows
+            ));
+        }
+        if x.comm.vector_rows != y.comm.vector_rows {
+            return Err(format!(
+                "{ctx}: vector_rows {} != {}",
+                x.comm.vector_rows, y.comm.vector_rows
+            ));
+        }
+        if x.comm.bytes != y.comm.bytes {
+            return Err(format!("{ctx}: bytes {} != {}", x.comm.bytes, y.comm.bytes));
+        }
+        if x.cache.lookups != y.cache.lookups || x.cache.hits != y.cache.hits {
+            return Err(format!(
+                "{ctx}: cache {}/{} != {}/{}",
+                x.cache.hits, x.cache.lookups, y.cache.hits, y.cache.lookups
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn timeline_is_failure_invariant_across_engines_and_topologies() {
+    let _guard = env_lock();
+    let engines = [Engine::Rapid, Engine::DglMetis, Engine::AdaptiveCache];
+    let topologies =
+        [Topology::Ring, Topology::TwoTier { racks: 2, oversubscription: 4.0 }];
+    for (ei, &engine) in engines.iter().enumerate() {
+        for (ti, &topology) in topologies.iter().enumerate() {
+            let clean = coordinator::run(&base_cfg(engine, topology, false)).unwrap();
+            assert!(clean.recovery.is_none(), "failure-free run must omit recovery");
+            let reference = sorted(clean.epochs);
+            // 8 seeded schedules per cell; failures deterministic per seed.
+            let seed = 0xC4A0_5000 + (ei * 10 + ti) as u64;
+            forall(seed, 8, random_plan, |plan| {
+                let mut cfg = base_cfg(engine, topology, false);
+                cfg.failures = plan.encode();
+                cfg.checkpoint_every = 2;
+                let report = coordinator::run(&cfg).map_err(|e| e.to_string())?;
+                let rec = report
+                    .recovery
+                    .as_ref()
+                    .ok_or("chaos run must report recovery telemetry")?;
+                if rec.events != plan.events.len() as u32 {
+                    return Err(format!(
+                        "{} events applied for a {}-event plan",
+                        rec.events,
+                        plan.events.len()
+                    ));
+                }
+                assert_same_timeline(engine.id(), &sorted(report.epochs), &reference)
+            });
+        }
+    }
+}
+
+#[test]
+fn full_mode_model_trajectory_is_failure_invariant() {
+    let _guard = env_lock();
+    for engine in [Engine::Rapid, Engine::GradTopk] {
+        let mut clean_cfg = base_cfg(engine, Topology::Flat, false);
+        clean_cfg.exec_mode = rapidgnn::config::ExecMode::Full;
+        clean_cfg.batch_size = 64;
+        clean_cfg.epochs = 3;
+        let clean = coordinator::run(&clean_cfg).unwrap();
+
+        let mut cfg = clean_cfg.clone();
+        cfg.failures = "linkdown:0-1@1,leave:1@1,crash@2,linkup:0-1@2,join:2@2".into();
+        cfg.checkpoint_every = 1;
+        let chaos = coordinator::run(&cfg).unwrap();
+
+        // Full mode always runs on the cluster runtime, so the SGD
+        // trajectory must be bit-identical — not merely close.
+        assert_eq!(clean.loss_curve(), chaos.loss_curve(), "{}", engine.id());
+        assert_eq!(clean.accuracy_curve(), chaos.accuracy_curve(), "{}", engine.id());
+        assert_eq!(clean.total_remote_rows(), chaos.total_remote_rows(), "{}", engine.id());
+        let rec = chaos.recovery.unwrap();
+        assert_eq!(rec.events, 5);
+        assert!(rec.moved_rows > 0);
+        assert!(rec.rerouted_bytes > 0, "boundary-1 move crosses the downed 0-1 link");
+        assert!(rec.lost_work_time > 0.0);
+    }
+}
+
+/// Cells for the kill–restore matrix: every engine family with real
+/// checkpoint state, both exec modes, a contended cell included.
+fn restore_cells() -> Vec<RunConfig> {
+    let trace = |e: Engine, t: Topology, cont: bool| base_cfg(e, t, cont);
+    let full = |e: Engine| {
+        let mut c = base_cfg(e, Topology::Flat, false);
+        c.exec_mode = rapidgnn::config::ExecMode::Full;
+        c.batch_size = 64;
+        c.epochs = 3;
+        c
+    };
+    vec![
+        trace(Engine::Rapid, Topology::Ring, false),
+        trace(Engine::FastSample, Topology::Flat, false),
+        trace(
+            Engine::AdaptiveCache,
+            Topology::TwoTier { racks: 2, oversubscription: 4.0 },
+            true,
+        ),
+        full(Engine::Rapid),
+        full(Engine::GradTopk),
+        full(Engine::QuantPull),
+    ]
+}
+
+#[test]
+fn checkpoint_kill_restore_is_bit_exact() {
+    let _guard = env_lock();
+    for mut cfg in restore_cells() {
+        let dir = TempDir::new("chaos-ckpt").unwrap();
+        cfg.checkpoint_every = 1;
+        cfg.checkpoint_dir = dir.path().to_str().unwrap().to_string();
+        cfg.failures = "leave:1@1,crash@2".into();
+        let tag = format!("{} ({:?})", cfg.engine.id(), cfg.exec_mode);
+        let uninterrupted = coordinator::run(&cfg).unwrap().to_json();
+        // Kill after each checkpoint boundary in turn; every resume must
+        // reproduce the uninterrupted report byte-for-byte (epoch reports,
+        // recovery block, link telemetry, compression tally, energy).
+        for boundary in 1..cfg.epochs {
+            let resumed = resume_run(&dir.path().join(format!("checkpoint-{boundary}.json")))
+                .unwrap()
+                .to_json();
+            assert_eq!(uninterrupted, resumed, "{tag}: resume from boundary {boundary}");
+        }
+    }
+}
+
+#[test]
+fn recovery_traffic_surfaces_in_contended_link_telemetry() {
+    let _guard = env_lock();
+    let cfg = base_cfg(Engine::Rapid, Topology::TwoTier { racks: 2, oversubscription: 4.0 }, true);
+    let clean = coordinator::run(&cfg).unwrap();
+    let mut chaos_cfg = cfg.clone();
+    chaos_cfg.failures = "leave:1@2".into();
+    let chaos = coordinator::run(&chaos_cfg).unwrap();
+    // Same training timeline (both on the contended cluster path)...
+    assert_same_timeline("contended", &sorted(chaos.epochs.clone()), &sorted(clean.epochs.clone()))
+        .unwrap();
+    // ...but the shard + cache move shows up as extra served bytes on links.
+    let served = |r: &rapidgnn::metrics::RunReport| -> f64 {
+        r.links.iter().map(|l| l.served_bytes).sum()
+    };
+    let moved = chaos.recovery.as_ref().unwrap().moved_bytes;
+    assert!(moved > 0);
+    assert!(
+        served(&chaos) > served(&clean),
+        "recovery flows must appear in link telemetry: {} !> {}",
+        served(&chaos),
+        served(&clean)
+    );
+}
+
+#[test]
+fn chaos_and_resume_are_byte_stable_across_thread_counts() {
+    let _guard = env_lock();
+    let prev = std::env::var("RAPIDGNN_THREADS").ok();
+    let dir = TempDir::new("chaos-threads").unwrap();
+    let render = || {
+        let mut cfg = base_cfg(
+            Engine::AdaptiveCache,
+            Topology::TwoTier { racks: 2, oversubscription: 4.0 },
+            true,
+        );
+        cfg.failures = "linkdown:0-1@1,leave:1@1,linkup:0-1@2,crash@3,join:2@3".into();
+        cfg.checkpoint_every = 2;
+        cfg.checkpoint_dir = dir.path().to_str().unwrap().to_string();
+        coordinator::run(&cfg).unwrap().to_json()
+    };
+    std::env::set_var("RAPIDGNN_THREADS", "1");
+    let serial = render();
+    let resumed_serial = resume_run(&dir.path().join("checkpoint-2.json")).unwrap().to_json();
+    assert_eq!(serial, resumed_serial, "threads=1 resume");
+    for threads in ["2", "8"] {
+        std::env::set_var("RAPIDGNN_THREADS", threads);
+        assert_eq!(serial, render(), "threads={threads} changed the chaos report");
+        let resumed = resume_run(&dir.path().join("checkpoint-2.json")).unwrap().to_json();
+        assert_eq!(serial, resumed, "threads={threads} changed the resumed report");
+    }
+    match prev {
+        Some(v) => std::env::set_var("RAPIDGNN_THREADS", v),
+        None => std::env::remove_var("RAPIDGNN_THREADS"),
+    }
+}
+
+#[test]
+fn failure_plan_spec_round_trips_through_the_generator() {
+    // The seeded generator's plans survive encode → parse → encode (the
+    // same path `--failures` takes through RunConfig serialization).
+    forall(0xC4A0_5FFF, 32, random_plan, |plan| {
+        let spec = plan.encode();
+        let back = FailurePlan::parse(&spec).map_err(|e| e.to_string())?;
+        if back != *plan {
+            return Err(format!("parse({spec}) != original"));
+        }
+        if back.encode() != spec {
+            return Err(format!("re-encode of '{spec}' drifted to '{}'", back.encode()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,119 @@
+//! Tier-1 versions of the figure-bench acceptance gates.
+//!
+//! The Fig-5b adaptive-vs-static gate and the Fig-9b grad-topk convergence
+//! gate originally lived only in `cargo bench` binaries, so a regression
+//! could land and sit unnoticed until the next bench sweep. These tests
+//! re-run both gates at 0.05× dataset scale (one preset per gate) so they
+//! ride in `cargo test` on every push. The bench binaries keep the full
+//! paper-scale sweeps; thresholds here are identical.
+
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, ExecMode, RunConfig};
+use rapidgnn::coordinator;
+
+/// Fig-5 setup at test scale: products-sim trace run, 2 workers (the
+/// paper's Fig-5 machine count), one batch size.
+fn fig5_cfg(engine: Engine, n_hot: u32) -> RunConfig {
+    RunConfig {
+        dataset: DatasetConfig::preset(DatasetPreset::ProductsSim, 0.05),
+        engine,
+        num_workers: 2,
+        batch_size: 256,
+        epochs: 6,
+        n_hot,
+        ..Default::default()
+    }
+}
+
+/// Fig-5b gate: the adaptive controller, started at the sweep's
+/// second-smallest static size, must climb to within 5 points of the best
+/// static cell's hit rate without ever leaving its `[min_hot, max_hot]`
+/// envelope; started oversized with a shrink-only policy, capacity must be
+/// monotonically released inside the clamps.
+#[test]
+fn fig5_adaptive_controller_matches_best_static_cell() {
+    let sizes = [256u32, 512, 1024, 2048];
+    let max_hot = *sizes.last().unwrap();
+    let best_static = sizes
+        .iter()
+        .map(|&n| coordinator::run(&fig5_cfg(Engine::Rapid, n)).unwrap().cache_hit_rate())
+        .fold(0.0, f64::max);
+
+    let adaptive = |start: u32, target: f64, tail: f64| {
+        let mut cfg = fig5_cfg(Engine::AdaptiveCache, start);
+        cfg.epochs = 8; // headroom for the size trajectory to settle
+        cfg.engine_params.resize_period = 1;
+        cfg.engine_params.min_hot = 64;
+        cfg.engine_params.max_hot = max_hot;
+        cfg.engine_params.target_hit_rate = target;
+        cfg.engine_params.tail_utility = tail;
+        cfg.engine_params.hot_growth = 2.0;
+        coordinator::run(&cfg).unwrap()
+    };
+
+    // Grow cell: undersized start, growth-only controller.
+    let grow = adaptive(sizes[1], 1.0, 0.0);
+    assert!(
+        grow.peak_n_hot() <= max_hot,
+        "adaptive exceeded max_hot ({} > {max_hot})",
+        grow.peak_n_hot()
+    );
+    assert!(
+        grow.final_epoch_hit_rate() >= best_static - 0.05,
+        "adaptive steady-state hit {:.3} below best static {:.3} - 5%",
+        grow.final_epoch_hit_rate(),
+        best_static
+    );
+
+    // Shrink cell: oversized start, shrink-only controller.
+    let shrink = adaptive(max_hot, 0.0, 0.02);
+    let mut prev = u32::MAX;
+    for (e, cp) in shrink.cache_timeline().filter(|(e, _)| e.worker == 0) {
+        assert!(cp.n_hot <= prev, "epoch {}: shrink-only run grew", e.epoch);
+        assert!(cp.n_hot >= 64 && cp.n_hot <= max_hot, "clamps violated");
+        prev = cp.n_hot;
+    }
+}
+
+/// Fig-9 setup at test scale: full-exec host training, identical model init
+/// and seed stream per pair so the gap isolates the optimizer-step change.
+fn fig9_cfg(engine: Engine) -> RunConfig {
+    let mut ds = DatasetConfig::preset(DatasetPreset::ProductsSim, 0.05);
+    ds.train_fraction = 0.5;
+    RunConfig {
+        dataset: ds,
+        engine,
+        exec_mode: ExecMode::Full,
+        num_workers: 2,
+        batch_size: 128,
+        fanout: vec![5, 10],
+        epochs: 6,
+        n_hot: 1_000,
+        learning_rate: 0.08,
+        ..Default::default()
+    }
+}
+
+/// Fig-9b gate: error-fed top-k gradient sparsification at the default
+/// k = 10% must land its final loss within 2% relative of the dense run,
+/// and must surface gradient-compression telemetry in the report.
+#[test]
+fn fig9_grad_topk_final_loss_stays_within_two_percent_of_dense() {
+    let dense = coordinator::run(&fig9_cfg(Engine::Rapid)).unwrap();
+    let sparse = coordinator::run(&fig9_cfg(Engine::GradTopk)).unwrap();
+    let fd = dense.loss_curve().last().unwrap().1;
+    let fs = sparse.loss_curve().last().unwrap().1;
+    assert!(fd.is_finite() && fd > 0.0, "dense run produced no usable loss ({fd})");
+    let rel = (fs - fd).abs() / fd;
+    assert!(
+        rel < 0.02,
+        "grad-topk final loss {fs:.4} strays {:.2}% from dense {fd:.4} (gate: < 2%)",
+        rel * 100.0
+    );
+    let comp = sparse.compression.as_ref().expect("grad-topk must report gradient telemetry");
+    assert!(comp.grad_elems_total > 0);
+    assert!(
+        comp.grad_elems_sent < comp.grad_elems_total,
+        "sparsifier sent every coordinate — top-k never engaged"
+    );
+    assert!(dense.compression.is_none(), "dense rapid run must not report compression");
+}
