@@ -14,7 +14,7 @@
 use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, ExecMode, RunConfig, TrainerBackend};
 use rapidgnn::coordinator;
 use rapidgnn::util::bench::{fmt_bytes, fmt_secs};
-use std::time::Instant;
+use rapidgnn::util::wallclock::Stopwatch;
 
 fn main() -> rapidgnn::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -49,9 +49,9 @@ fn main() -> rapidgnn::Result<()> {
         cfg.epochs
     );
 
-    let wall = Instant::now();
+    let wall = Stopwatch::start();
     let report = coordinator::run(&cfg)?;
-    let wall = wall.elapsed().as_secs_f64();
+    let wall = wall.elapsed_sec();
 
     println!("\n  epoch |   loss | train acc | sim time | cache hit");
     println!("  ------+--------+-----------+----------+----------");

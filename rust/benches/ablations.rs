@@ -43,7 +43,7 @@ fn main() -> rapidgnn::Result<()> {
     let freq_nodes = top_hot(&sched.batches, cfg.n_hot);
     // degree-ranked remote nodes
     let mut remote: Vec<NodeId> = {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         sched
             .batches
             .iter()

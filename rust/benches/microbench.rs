@@ -82,6 +82,7 @@ fn main() -> rapidgnn::Result<()> {
     // --- MPMC ring ---
     let (_, _, per) = time_until(0.5, || {
         let (tx, rx) = rapidgnn::util::mpmc::bounded::<u64>(16);
+        #[allow(clippy::disallowed_methods)] // bench measures the raw ring, one ad-hoc producer
         let h = std::thread::spawn(move || {
             for i in 0..10_000u64 {
                 tx.send(i).unwrap();

@@ -1,0 +1,628 @@
+//! `rapidgnn-lint` — the repo's determinism & contract linter (xtask).
+//!
+//! Every headline claim this reproduction makes (byte-stable golden traces,
+//! bit-exact chaos/kill-restore replay, `RAPIDGNN_THREADS`-invariant
+//! reports) rests on invariants that clippy cannot express. This binary
+//! enforces them at lint time, before a test ever runs:
+//!
+//! | rule id                  | contract                                                      |
+//! |--------------------------|---------------------------------------------------------------|
+//! | `priced-recovery`        | `coordinator/recovery.rs` never calls a `charge_*` fabric     |
+//! |                          | method — recovery is priced through the pure link model and   |
+//! |                          | must not mutate RPC counters (retry cadence would shift).     |
+//! | `unordered-collections`  | no std hash-map/-set identifiers outside `util/fasthash.rs`   |
+//! |                          | (the sanctioned deterministic-hasher alias `IdHashMap`) —     |
+//! |                          | hash iteration order must never feed serde/telemetry paths.   |
+//! | `wall-clock`             | `Instant`/`SystemTime` only inside the allowlisted wall-clock |
+//! |                          | modules (`util/wallclock.rs`, `util/bench.rs`,                |
+//! |                          | `util/tempdir.rs`) — virtual time everywhere else.            |
+//! | `thread-spawn`           | no direct `thread::spawn` / `thread::Builder` outside        |
+//! |                          | `src/util/` — fan-out goes through `util::parallel`'s         |
+//! |                          | deterministic helpers or `util::mpmc` actors.                 |
+//! | `unordered-float-reduce` | no float `.sum()`/`.fold()` over a `par_*` result outside     |
+//! |                          | `util/parallel.rs`, and no `rayon` — unordered float          |
+//! |                          | reduction is thread-count-dependent.                          |
+//! | `module-docs`            | every `src/**.rs` file starts with `//!` module docs.         |
+//!
+//! Approved exceptions carry an inline marker the linter recognizes:
+//!
+//! ```text
+//! // lint:allow(<rule-id>): <justification>        -- this line + the next
+//! // lint:allow-file(<rule-id>): <justification>   -- the whole file
+//! ```
+//!
+//! A marker without a `: justification` tail is itself a violation
+//! (`marker-justification`), as is a marker naming an unknown rule.
+//!
+//! Scanning is token/line-level over a comment- and string-stripped view of
+//! each file (no `syn`; the container is offline), so identifiers inside
+//! comments, doc examples, and string literals never trip a rule. Multi-line
+//! evasion of the same-line `unordered-float-reduce` heuristic is possible;
+//! review guards the gap — the rule exists to catch the common spelling.
+//!
+//! Usage: `cargo run --bin rapidgnn-lint -- lint [--root DIR]`. Without
+//! `--root` the crate's own tree is scanned (`src/`, `tests/`, `benches/`
+//! and the repo-level `examples/`); `--root` points at an alternate tree
+//! with the same sub-layout (the seeded-violation fixtures under
+//! `tests/fixtures/lint/` use this). Exit status: 0 clean, 1 violations,
+//! 2 usage error. `tests/lint.rs` shells this binary, so contract drift
+//! fails `cargo test` locally as well as in CI.
+
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Which scan root a file came from; rules scope themselves by kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RootKind {
+    Src,
+    Tests,
+    Benches,
+    Examples,
+}
+
+/// All rule identifiers, in report order. `marker-justification` is the
+/// meta-rule for malformed allow markers.
+const RULE_IDS: [&str; 7] = [
+    "priced-recovery",
+    "unordered-collections",
+    "wall-clock",
+    "thread-spawn",
+    "unordered-float-reduce",
+    "module-docs",
+    "marker-justification",
+];
+
+/// Files (paths relative to their scan root, `/`-separated) where the
+/// wall-clock rule does not apply: these *are* the wall-clock modules.
+const WALL_CLOCK_ALLOWED: [&str; 3] =
+    ["util/wallclock.rs", "util/bench.rs", "util/tempdir.rs"];
+
+/// The sanctioned home of the deterministic-hasher map alias.
+const COLLECTIONS_ALLOWED: [&str; 1] = ["util/fasthash.rs"];
+
+/// One reported violation.
+struct Violation {
+    path: PathBuf,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            // `lint` is the (only) subcommand; tolerate its absence.
+            "lint" => {}
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => root = Some(PathBuf::from(p)),
+                    None => usage_error("--root requires a directory argument"),
+                }
+            }
+            "--help" | "-h" => {
+                println!(
+                    "rapidgnn-lint: determinism & contract linter\n\
+                     usage: rapidgnn-lint [lint] [--root DIR]\n\
+                     rules: {}",
+                    RULE_IDS.join(", ")
+                );
+                return;
+            }
+            other => usage_error(&format!("unknown argument '{other}'")),
+        }
+        i += 1;
+    }
+
+    let roots: Vec<(RootKind, PathBuf)> = match root {
+        Some(r) => vec![
+            (RootKind::Src, r.join("src")),
+            (RootKind::Tests, r.join("tests")),
+            (RootKind::Benches, r.join("benches")),
+            (RootKind::Examples, r.join("examples")),
+        ],
+        None => {
+            let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            vec![
+                (RootKind::Src, manifest.join("src")),
+                (RootKind::Tests, manifest.join("tests")),
+                (RootKind::Benches, manifest.join("benches")),
+                (RootKind::Examples, manifest.join("../examples")),
+            ]
+        }
+    };
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut scanned = 0usize;
+    for (kind, dir) in &roots {
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs_files(dir, &mut files);
+        files.sort();
+        for f in files {
+            let rel = rel_slash_path(&f, dir);
+            match std::fs::read_to_string(&f) {
+                Ok(text) => {
+                    scanned += 1;
+                    lint_file(*kind, &f, &rel, &text, &mut violations);
+                }
+                Err(e) => violations.push(Violation {
+                    path: f,
+                    line: 0,
+                    rule: "module-docs",
+                    msg: format!("unreadable source file: {e}"),
+                }),
+            }
+        }
+    }
+
+    for v in &violations {
+        println!("{}:{}: [{}] {}", v.path.display(), v.line, v.rule, v.msg);
+    }
+    println!(
+        "rapidgnn-lint: {} file(s) scanned, {} violation(s)",
+        scanned,
+        violations.len()
+    );
+    if !violations.is_empty() {
+        std::process::exit(1);
+    }
+}
+
+fn usage_error(msg: &str) -> ! {
+    eprintln!("rapidgnn-lint: {msg} (try --help)");
+    std::process::exit(2);
+}
+
+/// Recursively gather `.rs` files, skipping build output, vendored crates,
+/// test fixtures (they contain seeded violations on purpose), and dotdirs.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "target" || name == "vendor" || name == "fixtures" || name.starts_with('.')
+            {
+                continue;
+            }
+            collect_rs_files(&path, out);
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// `path` relative to `root`, `/`-separated (rule scoping is textual).
+fn rel_slash_path(path: &Path, root: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Per-file allow state parsed from `lint:allow` markers.
+#[derive(Default)]
+struct Allows {
+    /// Rules allowed for the entire file.
+    file: BTreeSet<&'static str>,
+    /// (rule, line) pairs allowed by a line marker (the marker's own line
+    /// and the one after it).
+    lines: BTreeSet<(&'static str, usize)>,
+}
+
+impl Allows {
+    fn permits(&self, rule: &'static str, line: usize) -> bool {
+        self.file.contains(rule) || self.lines.contains(&(rule, line))
+    }
+}
+
+/// Parse `lint:allow(...)` / `lint:allow-file(...)` markers from the raw
+/// source. Malformed markers are violations, not silent no-ops.
+fn parse_markers(path: &Path, raw_lines: &[&str], violations: &mut Vec<Violation>) -> Allows {
+    let mut allows = Allows::default();
+    for (idx, line) in raw_lines.iter().enumerate() {
+        let lineno = idx + 1;
+        for (needle, file_scope) in [("lint:allow-file(", true), ("lint:allow(", false)] {
+            let Some(at) = line.find(needle) else { continue };
+            let rest = &line[at + needle.len()..];
+            let Some(close) = rest.find(')') else {
+                violations.push(Violation {
+                    path: path.to_path_buf(),
+                    line: lineno,
+                    rule: "marker-justification",
+                    msg: "unterminated lint:allow marker (missing ')')".into(),
+                });
+                continue;
+            };
+            let rule_name = rest[..close].trim();
+            // Only rule-shaped names ([a-z-]+) are marker candidates; other
+            // spellings (e.g. the `<rule-id>` placeholder in docs) are prose.
+            if rule_name.is_empty()
+                || !rule_name.bytes().all(|b| b.is_ascii_lowercase() || b == b'-')
+            {
+                continue;
+            }
+            let Some(rule) = RULE_IDS.iter().find(|r| **r == rule_name).copied() else {
+                violations.push(Violation {
+                    path: path.to_path_buf(),
+                    line: lineno,
+                    rule: "marker-justification",
+                    msg: format!(
+                        "lint:allow names unknown rule '{rule_name}' (known: {})",
+                        RULE_IDS.join(", ")
+                    ),
+                });
+                continue;
+            };
+            // Justification: a `:` after the `)` with non-empty text.
+            let tail = rest[close + 1..].trim_start();
+            let justified =
+                tail.strip_prefix(':').map(str::trim).is_some_and(|t| !t.is_empty());
+            if !justified {
+                violations.push(Violation {
+                    path: path.to_path_buf(),
+                    line: lineno,
+                    rule: "marker-justification",
+                    msg: format!(
+                        "lint:allow({rule}) needs a justification: `lint:allow({rule}): why`"
+                    ),
+                });
+                continue;
+            }
+            if file_scope {
+                allows.file.insert(rule);
+            } else {
+                allows.lines.insert((rule, lineno));
+                allows.lines.insert((rule, lineno + 1));
+            }
+        }
+    }
+    allows
+}
+
+/// Lint one file: build the comment/string-stripped code view, parse allow
+/// markers, then apply every rule in scope.
+fn lint_file(
+    kind: RootKind,
+    path: &Path,
+    rel: &str,
+    text: &str,
+    violations: &mut Vec<Violation>,
+) {
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let allows = parse_markers(path, &raw_lines, violations);
+    let code = strip_comments_and_strings(text);
+    let code_lines: Vec<&str> = code.lines().collect();
+
+    let mut report = |rule: &'static str, line: usize, msg: String| {
+        if !allows.permits(rule, line) {
+            violations.push(Violation { path: path.to_path_buf(), line, rule, msg });
+        }
+    };
+
+    // -- module-docs: src files must open with `//!`. --------------------
+    if kind == RootKind::Src {
+        let first = raw_lines.iter().map(|l| l.trim()).find(|l| !l.is_empty());
+        if !matches!(first, Some(l) if l.starts_with("//!")) {
+            report(
+                "module-docs",
+                1,
+                "source file must start with `//!` module documentation".into(),
+            );
+        }
+    }
+
+    // -- priced-recovery: no fabric charge calls in the recovery engine. --
+    if kind == RootKind::Src && rel == "coordinator/recovery.rs" {
+        for (idx, line) in code_lines.iter().enumerate() {
+            for ident in idents(line) {
+                if ident.starts_with("charge_") {
+                    report(
+                        "priced-recovery",
+                        idx + 1,
+                        format!(
+                            "recovery must price via the pure link model \
+                             (`rpc_time_on_link`), not `{ident}` — charging \
+                             mutates the fabric's RPC/retry counters"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- unordered-collections ------------------------------------------
+    if !COLLECTIONS_ALLOWED.contains(&rel) {
+        for (idx, line) in code_lines.iter().enumerate() {
+            for ident in idents(line) {
+                if ident == "HashMap" || ident == "HashSet" {
+                    report(
+                        "unordered-collections",
+                        idx + 1,
+                        format!(
+                            "`{ident}` iteration order is nondeterministic; use \
+                             `BTreeMap`/`BTreeSet`, sort at the boundary, or the \
+                             `IdHashMap` alias from util::fasthash (or annotate \
+                             `// lint:allow(unordered-collections): why`)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- wall-clock (src/tests/examples; benches measure by definition). --
+    if matches!(kind, RootKind::Src | RootKind::Tests | RootKind::Examples)
+        && !(kind == RootKind::Src && WALL_CLOCK_ALLOWED.contains(&rel))
+    {
+        for (idx, line) in code_lines.iter().enumerate() {
+            for ident in idents(line) {
+                if ident == "Instant" || ident == "SystemTime" {
+                    report(
+                        "wall-clock",
+                        idx + 1,
+                        format!(
+                            "`{ident}` outside the wall-clock modules breaks \
+                             virtual-time determinism; use \
+                             `util::wallclock::Stopwatch` (full-mode timing) or \
+                             the `util::bench` harness"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- thread-spawn (src outside util/, plus integration tests). -------
+    let spawn_scoped = match kind {
+        RootKind::Src => !rel.starts_with("util/"),
+        RootKind::Tests => true,
+        RootKind::Benches | RootKind::Examples => false,
+    };
+    if spawn_scoped {
+        for (idx, line) in code_lines.iter().enumerate() {
+            for needle in ["thread::spawn", "thread::Builder"] {
+                if contains_token_seq(line, needle) {
+                    report(
+                        "thread-spawn",
+                        idx + 1,
+                        format!(
+                            "direct `{needle}` outside `util/`; use \
+                             `util::parallel`'s deterministic map/reduce or a \
+                             `util::mpmc` actor (or annotate \
+                             `// lint:allow(thread-spawn): why`)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- unordered-float-reduce (src outside util/parallel.rs). ----------
+    if kind == RootKind::Src && rel != "util/parallel.rs" {
+        for (idx, line) in code_lines.iter().enumerate() {
+            let has_par = idents(line).iter().any(|i| i.starts_with("par_"));
+            let has_reduce = line.contains(".sum(")
+                || line.contains(".sum::")
+                || line.contains(".fold(");
+            if has_par && has_reduce {
+                report(
+                    "unordered-float-reduce",
+                    idx + 1,
+                    "reducing a parallel result in-line is order-sensitive for \
+                     floats; reduce inside util::parallel's deterministic \
+                     helpers or sort first"
+                        .into(),
+                );
+            }
+            if idents(line).iter().any(|i| i == "rayon") {
+                report(
+                    "unordered-float-reduce",
+                    idx + 1,
+                    "rayon's work-stealing reductions are \
+                     nondeterministically ordered; use util::parallel"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+/// Identifiers ([A-Za-z_][A-Za-z0-9_]*) on one code-view line.
+fn idents(line: &str) -> Vec<&str> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if is_ident_start(bytes[i]) {
+            let start = i;
+            while i < bytes.len() && is_ident_char(bytes[i]) {
+                i += 1;
+            }
+            out.push(&line[start..i]);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whether `line` contains `needle` (an `ident::ident` sequence) at
+/// identifier boundaries — `std::thread::spawn` matches `thread::spawn`,
+/// `xthread::spawned` matches neither.
+fn contains_token_seq(line: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(at) = line[from..].find(needle) {
+        let start = from + at;
+        let end = start + needle.len();
+        let pre_ok = start == 0 || !is_ident_char(line.as_bytes()[start - 1]);
+        let post_ok = end >= line.len() || !is_ident_char(line.as_bytes()[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Blank out comments, string literals, and char literals, preserving line
+/// structure (stripped bytes become spaces). Handles nested block comments,
+/// escapes, raw strings (`r"…"`, `r#"…"#`, `br#"…"#`), and distinguishes
+/// lifetimes from char literals well enough for identifier scanning.
+fn strip_comments_and_strings(text: &str) -> String {
+    let b = text.as_bytes();
+    let mut out = String::with_capacity(text.len());
+    let mut i = 0;
+
+    // Append a blanked byte (newlines survive so line numbers align).
+    fn blank(out: &mut String, byte: u8) {
+        out.push(if byte == b'\n' { '\n' } else { ' ' });
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            while i < b.len() && b[i] != b'\n' {
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1;
+            blank(&mut out, b[i]);
+            blank(&mut out, b[i + 1]);
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: r"…", r#"…"#, br"…", br#"…"# (only when `r`/`b` is not
+        // the tail of a longer identifier).
+        if (c == b'r' || c == b'b') && (i == 0 || !is_ident_char(b[i - 1])) {
+            let mut j = i;
+            if b[j] == b'b' && j + 1 < b.len() && b[j + 1] == b'r' {
+                j += 1;
+            }
+            if b[j] == b'r' {
+                let mut k = j + 1;
+                let mut hashes = 0;
+                while k < b.len() && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < b.len() && b[k] == b'"' {
+                    // Blank the prefix and scan for `"` + `hashes` hashes.
+                    while i <= k {
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                    'raw: while i < b.len() {
+                        if b[i] == b'"' {
+                            let mut h = 0;
+                            while h < hashes && i + 1 + h < b.len() && b[i + 1 + h] == b'#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                for _ in 0..=hashes {
+                                    blank(&mut out, b[i]);
+                                    i += 1;
+                                }
+                                break 'raw;
+                            }
+                        }
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // Plain string literal.
+        if c == b'"' {
+            blank(&mut out, c);
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                let done = b[i] == b'"';
+                blank(&mut out, b[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: `'x'` / `'\n'` are literals; `'static`
+        // (no closing quote within the escape-free two-char window) is a
+        // lifetime and passes through.
+        if c == b'\'' {
+            let is_char_lit = i + 1 < b.len()
+                && (b[i + 1] == b'\\' || (i + 2 < b.len() && b[i + 2] == b'\''));
+            if is_char_lit {
+                blank(&mut out, c);
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        blank(&mut out, b[i]);
+                        blank(&mut out, b[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    let done = b[i] == b'\'';
+                    blank(&mut out, b[i]);
+                    i += 1;
+                    if done {
+                        break;
+                    }
+                }
+                continue;
+            }
+        }
+        out.push(c as char);
+        i += 1;
+    }
+    out
+}

@@ -34,8 +34,8 @@ use crate::sampler::BatchMeta;
 use crate::sim::{pipeline_schedule, ClusterSim, PipelineStep, WorkerActor};
 use crate::trainer::{batch_labels, feature_mat, TrainStep};
 use crate::util::mpmc;
+use crate::util::wallclock::Stopwatch;
 use crate::{Result, WorkerId};
-use std::time::Instant;
 
 /// Per-epoch consume-side accumulators.
 #[derive(Default)]
@@ -93,7 +93,7 @@ fn consume_staged(
     acc.m_max = acc.m_max.max(n_input as u64);
     let assemble = slow * ctx.costs.assemble_time(n_input, d);
     let compute = if full {
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         let out = full_train_step(
             ctx,
             worker,
@@ -105,7 +105,7 @@ fn consume_staged(
         acc.loss_sum += out.0;
         acc.correct += out.1 as u64;
         acc.total += out.2 as u64;
-        t0.elapsed().as_secs_f64()
+        sw.elapsed_sec()
     } else {
         slow * ctx.compute_time(n_input, staged.meta.seeds.len())
     };

@@ -26,6 +26,10 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-reproduction results.
 
+// Zero unsafe blocks exist in this tree (audited PR 8); keep it that way —
+// determinism auditing (Miri/TSan jobs, rapidgnn-lint) assumes safe Rust.
+#![forbid(unsafe_code)]
+
 pub mod cache;
 pub mod compress;
 pub mod config;

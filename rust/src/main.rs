@@ -15,6 +15,8 @@
 //! Flag parsing is hand-rolled (this build environment has no clap); every
 //! flag has the form `--name value`.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Context};
 use rapidgnn::config::{
     load_run_config, save_run_config, DatasetConfig, DatasetPreset, Engine, RunConfig, Topology,
@@ -24,7 +26,7 @@ use rapidgnn::graph::{build_dataset, degree_stats};
 use rapidgnn::partition::{partition_quality, Partitioner};
 use rapidgnn::util::bench::{fmt_bytes, fmt_secs, Table};
 use rapidgnn::Result;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -117,7 +119,7 @@ COMMON FLAGS
     );
 }
 
-type Flags = HashMap<String, String>;
+type Flags = BTreeMap<String, String>;
 
 /// Flags that may appear bare (no value ⇒ "true"), e.g. `--contention`.
 const BOOL_FLAGS: [&str; 1] = ["contention"];
@@ -340,12 +342,11 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         &format!("{} / {}", report.engine, report.dataset),
         &["epoch", "time", "fetch", "compute", "MB moved", "hit rate", "loss", "acc"],
     );
-    let mut by_epoch: HashMap<u32, Vec<&rapidgnn::metrics::EpochReport>> = HashMap::new();
+    let mut by_epoch: BTreeMap<u32, Vec<&rapidgnn::metrics::EpochReport>> = BTreeMap::new();
     for e in &report.epochs {
         by_epoch.entry(e.epoch).or_default().push(e);
     }
-    let mut epochs: Vec<u32> = by_epoch.keys().copied().collect();
-    epochs.sort_unstable();
+    let epochs: Vec<u32> = by_epoch.keys().copied().collect();
     for &ep in &epochs {
         let group = &by_epoch[&ep];
         let n = group.len() as f64;

@@ -234,11 +234,90 @@ impl ContentionNet {
         }
     }
 
+    /// Debug-build invariant sweep — the runtime half of the determinism
+    /// contracts (see `src/sim/README.md` § Determinism contracts), and the
+    /// tripwires the Miri/TSan CI jobs exercise. Compiled out of release
+    /// builds; called after every state transition.
+    ///
+    /// Checks, per link: non-negative finite backlog bounded by its peak,
+    /// and byte conservation `served ≤ capacity × busy (+ drain-residual
+    /// slack)` — equivalently the ISSUE's `Σ busy ≥ bytes / bandwidth`.
+    /// Per flow: non-negative remaining service, and a positive finite
+    /// processor-sharing rate while transmitting. Globally: each link's
+    /// cached `active` count equals a fresh recount over in-flight flows.
+    #[cfg(debug_assertions)]
+    fn debug_invariants(&self) {
+        let mut active = vec![0u32; self.links.len()];
+        for f in &self.flows {
+            debug_assert!(
+                f.remaining.is_finite() && f.remaining >= 0.0,
+                "flow {}->{} seq {} has invalid remaining {}",
+                f.src,
+                f.dst,
+                f.seq,
+                f.remaining
+            );
+            if f.done || !f.transmitting {
+                continue;
+            }
+            debug_assert!(
+                f.rate.is_finite() && f.rate > 0.0,
+                "transmitting flow {}->{} seq {} has rate {}",
+                f.src,
+                f.dst,
+                f.seq,
+                f.rate
+            );
+            for &li in &f.route {
+                active[li] += 1;
+            }
+        }
+        for (l, &a) in self.links.iter().zip(&active) {
+            debug_assert_eq!(l.active, a, "link {:?}: active-count drift", l.key);
+            debug_assert!(l.peak_flows >= a, "link {:?}: peak below current", l.key);
+            debug_assert!(
+                l.backlog_bytes.is_finite() && l.backlog_bytes >= 0.0,
+                "link {:?}: negative/non-finite backlog {}",
+                l.key,
+                l.backlog_bytes
+            );
+            debug_assert!(
+                l.peak_backlog_bytes + 1e-6 >= l.backlog_bytes,
+                "link {:?}: backlog {} above recorded peak {}",
+                l.key,
+                l.backlog_bytes,
+                l.peak_backlog_bytes
+            );
+            // Drain credits each flow's sub-epsilon residual as served
+            // without busy time; bound that slack per historical flow.
+            let slack = l.flows as f64 * (EPS_BYTES + 2.0 * l.capacity * EPS_SEC) + 1.0;
+            debug_assert!(
+                l.served_bytes <= l.capacity * l.busy_sec * (1.0 + 1e-9) + slack,
+                "link {:?}: served {} exceeds capacity {} x busy {} + slack {}",
+                l.key,
+                l.served_bytes,
+                l.capacity,
+                l.busy_sec,
+                slack
+            );
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn debug_invariants(&self) {}
+
     /// Register one stage's flows at virtual instant `now` (≥ the last event
     /// time). The stage completes — and is returned by [`Self::advance`] —
     /// once every flow drains.
     pub fn begin_stage(&mut self, now: f64, worker: u32, local_cost: f64, specs: Vec<FlowSpec>) {
         debug_assert!(!specs.is_empty(), "flow-less stages schedule directly");
+        // Event-time monotonicity: the clamp below keeps release builds
+        // safe, but a caller handing us the past is a scheduler bug.
+        debug_assert!(
+            now >= self.now - 1e-9 * self.now.abs().max(1.0),
+            "stage registered in the past: {now} < {}",
+            self.now
+        );
         self.integrate_to(now.max(self.now));
         let stage = self.stages.len();
         self.stages.push(Stage { worker, local_cost, outstanding: specs.len() as u32 });
@@ -265,6 +344,7 @@ impl ContentionNet {
         }
         self.activate_due();
         self.recompute_rates();
+        self.debug_invariants();
     }
 
     /// Earliest pending network event: a latent flow's activation or the
@@ -294,6 +374,11 @@ impl ContentionNet {
     /// times), start newly due ones, and re-share the links. Returns every
     /// stage whose last flow drained at `t` as `(worker, local_cost)`.
     pub fn advance(&mut self, t: f64) -> Vec<(u32, f64)> {
+        debug_assert!(
+            t >= self.now - 1e-9 * self.now.abs().max(1.0),
+            "advance into the past: {t} < {}",
+            self.now
+        );
         self.integrate_to(t.max(self.now));
         let now = self.now;
         let mut drained: Vec<usize> = (0..self.flows.len())
@@ -336,12 +421,14 @@ impl ContentionNet {
         }
         self.activate_due();
         self.recompute_rates();
+        self.debug_invariants();
         finished
     }
 
     /// Commit per-link telemetry to the owning fabric. Call when the epoch's
     /// simulation has quiesced; all flows must have drained.
     pub fn finalize(self) {
+        self.debug_invariants();
         debug_assert!(self.flows.iter().all(|f| f.done), "undrained flows at finalize");
         debug_assert!(self.stages.iter().all(|s| s.outstanding == 0));
         let ContentionNet { fabric, links, .. } = self;

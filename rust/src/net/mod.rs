@@ -30,7 +30,7 @@ pub use contention::ContentionNet;
 
 use crate::config::{FabricConfig, LinkKey, LinkModel};
 use crate::WorkerId;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::sync::Mutex;
 
@@ -109,7 +109,10 @@ pub struct LinkStats {
 /// its link accounting commit atomically.
 #[derive(Debug, Default)]
 struct FabricState {
-    links: HashMap<(WorkerId, WorkerId), LinkStats>,
+    // BTreeMap (not a hash map): snapshots iterate these directly into
+    // telemetry, and ordered iteration makes that deterministic by
+    // construction rather than by sort-at-boundary discipline.
+    links: BTreeMap<(WorkerId, WorkerId), LinkStats>,
     rpc_counter: u64,
     /// Route claims recorded since the last [`NetFabric::take_route_claims`]
     /// (only populated when `cfg.contention` is on).
@@ -120,7 +123,7 @@ struct FabricState {
     /// from the full route, which would otherwise be rebuilt per RPC on the
     /// charge hot path. Valid for the fabric's lifetime (config-immutable),
     /// so `reset` keeps it.
-    link_models: HashMap<(WorkerId, WorkerId), LinkModel>,
+    link_models: BTreeMap<(WorkerId, WorkerId), LinkModel>,
 }
 
 /// Shared simulated fabric. Cloneable handle; counters are global.

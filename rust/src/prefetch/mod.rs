@@ -144,6 +144,7 @@ impl Prefetcher {
     /// Spawn a prefetcher over a batch-metadata source (typically a
     /// streaming [`crate::storage::EpochReader`] iterator). Stages into a
     /// bounded queue of depth `q`.
+    #[allow(clippy::disallowed_methods)] // the paper's background prefetcher is this one thread
     pub fn spawn(
         kv: Arc<KvStore>,
         cache: Arc<Mutex<DoubleBufferCache>>,
@@ -153,6 +154,10 @@ impl Prefetcher {
         materialize: bool,
     ) -> Self {
         let (tx, rx) = bounded::<StagedBatch>(q.max(1) as usize);
+        // The rolling prefetcher (paper §3.3) is the one sanctioned long-lived
+        // worker thread outside util; `Prefetcher::join` drains it
+        // deterministically before any telemetry is read.
+        // lint:allow(thread-spawn): the paper-mandated background prefetcher thread
         let handle = std::thread::Builder::new()
             .name(format!("prefetcher-w{worker}"))
             .spawn(move || {

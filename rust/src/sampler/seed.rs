@@ -109,7 +109,7 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::collections::HashSet;
+    use std::collections::BTreeSet;
 
     #[test]
     fn derive_seed_deterministic() {
@@ -119,7 +119,7 @@ mod tests {
     #[test]
     fn derive_seed_distinct_tuples_distinct_seeds() {
         // Proposition 3.1(b): distinct (w,e,i) tuples → distinct streams.
-        let mut seen = HashSet::new();
+        let mut seen = BTreeSet::new();
         for w in 0..8 {
             for e in 0..32 {
                 for i in 0..64 {
@@ -193,7 +193,7 @@ mod tests {
     #[test]
     fn mix64_is_bijective_on_sample() {
         // injectivity spot-check over a dense range
-        let mut seen = HashSet::new();
+        let mut seen = BTreeSet::new();
         for i in 0..100_000u64 {
             assert!(seen.insert(mix64(i)));
         }

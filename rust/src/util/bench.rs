@@ -4,6 +4,7 @@
 use std::time::Instant;
 
 /// Measure `f`'s wall time over `reps` repetitions; returns (mean, min) secs.
+#[allow(clippy::disallowed_methods)] // bench harness: wall-clock reads are the point here
 pub fn time_reps<F: FnMut()>(reps: u32, mut f: F) -> (f64, f64) {
     assert!(reps >= 1);
     let mut total = 0.0;
@@ -20,6 +21,7 @@ pub fn time_reps<F: FnMut()>(reps: u32, mut f: F) -> (f64, f64) {
 
 /// Throughput-style measurement: run `f` until `min_time` seconds elapse,
 /// return (iterations, elapsed, per-iter seconds).
+#[allow(clippy::disallowed_methods)] // bench harness: wall-clock reads are the point here
 pub fn time_until<F: FnMut()>(min_time: f64, mut f: F) -> (u64, f64, f64) {
     let t0 = Instant::now();
     let mut iters = 0u64;

@@ -6,7 +6,6 @@
 //! multiply-xor of the Fibonacci constant — the splitmix64 tail) keeps full
 //! avalanche on 32-bit keys at ~1 ns/hash.
 
-use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
 /// Hasher specialized for one `write_u32`/`write_u64` call.
@@ -41,8 +40,13 @@ impl Hasher for IdHasher {
     }
 }
 
-/// `HashMap` with the id hasher.
-pub type IdHashMap<K, V> = HashMap<K, V, BuildHasherDefault<IdHasher>>;
+/// `HashMap` with the id hasher — the one sanctioned std-hash-map spelling
+/// in the tree. Contract (enforced by `rapidgnn-lint` and clippy's
+/// disallowed-types list): use it for lookup-only hot paths; its iteration
+/// order is deterministic per-build but unsorted, so it must never feed a
+/// serde/telemetry boundary without an intervening sort.
+#[allow(clippy::disallowed_types)] // the deterministic-hasher alias lives here by contract
+pub type IdHashMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<IdHasher>>;
 
 #[cfg(test)]
 mod tests {
@@ -69,7 +73,7 @@ mod tests {
             v.hash(&mut hh);
             hh.finish()
         };
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for i in 0..100_000u32 {
             assert!(seen.insert(h(i)), "collision at {i}");
         }

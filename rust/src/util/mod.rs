@@ -15,6 +15,8 @@
 //!   `rust/benches/*` binary.
 //! - [`proptest_lite`] — randomized property-test driver with failure-case
 //!   reporting.
+//! - [`wallclock`] — the sanctioned wall-clock doorway ([`wallclock::Stopwatch`]);
+//!   every other module is virtual-time only (enforced by `rapidgnn-lint`).
 
 pub mod bench;
 pub mod bench_support;
@@ -24,3 +26,4 @@ pub mod parallel;
 pub mod proptest_lite;
 pub mod tempdir;
 pub mod value;
+pub mod wallclock;

@@ -13,6 +13,7 @@ pub struct TempDir {
 
 impl TempDir {
     /// Create a fresh unique directory under the system temp dir.
+    #[allow(clippy::disallowed_methods)] // wall-clock uniqueness for leaked-dir hygiene only
     pub fn new(prefix: &str) -> std::io::Result<TempDir> {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(

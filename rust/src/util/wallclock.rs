@@ -1,0 +1,49 @@
+//! The sanctioned wall-clock module (§Determinism contracts).
+//!
+//! Simulated runs live entirely on `sim::cluster`'s virtual clock; the only
+//! places allowed to read the host's wall clock are this module, the bench
+//! harness ([`crate::util::bench`]), and tempdir uniqueness
+//! ([`crate::util::tempdir`]). Everything else is rejected by
+//! `rapidgnn-lint`'s `wall-clock` rule and clippy's disallowed-methods
+//! list, because a stray `Instant::now()` in a priced path silently turns
+//! a byte-stable virtual-time report into a host-load-dependent one.
+//!
+//! [`Stopwatch`] is the narrow doorway: full (real-execution) mode uses it
+//! to measure compute wall time that is *reported* but never fed back into
+//! scheduling, pricing, or any serialized ordering decision. Keep it that
+//! way — a measurement may describe a run, it must not steer one.
+
+use std::time::Instant;
+
+/// A started wall-clock timer; read with [`Stopwatch::elapsed_sec`].
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    #[allow(clippy::disallowed_methods)] // this module IS the wall-clock allowlist
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_sec(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotone_nonnegative() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_sec();
+        let b = sw.elapsed_sec();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+}

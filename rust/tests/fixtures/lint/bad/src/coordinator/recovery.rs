@@ -1,0 +1,8 @@
+//! Fixture: seeded `priced-recovery` violation — recovery must never call a
+//! mutating `charge_*` fabric method. (Not compiled; scanned by tests/lint.rs.)
+
+pub fn recover_shard(fabric: &mut Fabric) {
+    // The doc-comment spelling of charge_rpc above must NOT fire; this call must:
+    fabric.charge_rpc(0, 1, 4096);
+    fabric.charge_fanout(0, &[1, 2], 4096);
+}

@@ -1,0 +1,3 @@
+// Fixture: seeded `module-docs` violation — a plain comment is not `//!` docs.
+
+pub fn undocumented() {}

@@ -1,0 +1,7 @@
+//! Fixture: seeded `unordered-float-reduce` violations.
+
+pub fn total_loss(shards: Vec<Vec<f64>>) -> f64 {
+    par_map_threads(shards, 4, |s| s.iter().sum::<f64>()).iter().sum()
+}
+
+use rayon::prelude::*;

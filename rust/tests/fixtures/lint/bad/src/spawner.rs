@@ -1,0 +1,7 @@
+//! Fixture: seeded `thread-spawn` violation.
+
+pub fn fan_out() {
+    let h = std::thread::spawn(|| 42);
+    let b = std::thread::Builder::new().name("w".into());
+    let _ = (h, b);
+}

@@ -1,0 +1,7 @@
+//! Fixture: seeded `unordered-collections` violation.
+
+use std::collections::HashMap;
+
+pub fn tally() -> HashMap<u32, u64> {
+    HashMap::new()
+}

@@ -1,0 +1,8 @@
+//! Fixture: markers that are malformed (no justification) or name an
+//! unknown rule must themselves be violations, never silent no-ops.
+
+// lint:allow(thread-spawn)
+pub fn unjustified() {}
+
+// lint:allow(no-such-rule): the rule name is a typo
+pub fn unknown_rule() {}

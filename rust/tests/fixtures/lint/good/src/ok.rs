@@ -1,0 +1,19 @@
+//! Fixture: every forbidden pattern below carries a well-formed allow
+//! marker, so this tree must scan clean (exercised by tests/lint.rs).
+// lint:allow-file(wall-clock): fixture demonstrating the file-scope marker form
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+// lint:allow(unordered-collections): fixture demonstrating the line-scope marker form
+pub fn tally() -> std::collections::HashMap<u32, u64> {
+    // the marker covers its own line and the next; re-annotate further uses
+    std::collections::BTreeMap::new().into_iter().collect()
+}
+
+pub fn spawn_worker() {
+    // lint:allow(thread-spawn): fixture demonstrating a same-line-plus-next marker
+    let h = std::thread::spawn(|| 7);
+    let _ = h;
+}

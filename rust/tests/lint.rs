@@ -1,0 +1,71 @@
+//! Tier-1 harness for `rapidgnn-lint`: shells the xtask binary so contract
+//! drift fails plain `cargo test`, and pins each rule class against the
+//! seeded-violation fixtures under `tests/fixtures/lint/`.
+
+use std::process::Command;
+
+/// Run the lint binary with `args`; returns (exit-ok, stdout).
+fn run_lint(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_rapidgnn-lint"))
+        .args(args)
+        .output()
+        .expect("spawn rapidgnn-lint");
+    let mut text = String::from_utf8_lossy(&out.stdout).into_owned();
+    text.push_str(&String::from_utf8_lossy(&out.stderr));
+    (out.status.success(), text)
+}
+
+fn fixture_root(name: &str) -> String {
+    format!("{}/tests/fixtures/lint/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn repo_at_head_is_clean() {
+    let (ok, out) = run_lint(&["lint"]);
+    assert!(ok, "determinism contracts violated at HEAD:\n{out}");
+    assert!(out.contains("0 violation(s)"), "unexpected summary:\n{out}");
+}
+
+#[test]
+fn every_rule_class_fires_on_its_seeded_fixture() {
+    let root = fixture_root("bad");
+    let (ok, out) = run_lint(&["lint", "--root", &root]);
+    assert!(!ok, "seeded violations must fail the scan:\n{out}");
+    for rule in [
+        "priced-recovery",
+        "unordered-collections",
+        "wall-clock",
+        "thread-spawn",
+        "unordered-float-reduce",
+        "module-docs",
+    ] {
+        assert!(out.contains(&format!("[{rule}]")), "rule {rule} did not fire:\n{out}");
+    }
+    // The doc-comment mention of charge_rpc in the fixture must not fire:
+    // only the two real calls do.
+    let recovery_hits =
+        out.lines().filter(|l| l.contains("[priced-recovery]")).count();
+    assert_eq!(recovery_hits, 2, "comment text must not trip priced-recovery:\n{out}");
+}
+
+#[test]
+fn well_formed_markers_suppress_their_rule() {
+    let root = fixture_root("good");
+    let (ok, out) = run_lint(&["lint", "--root", &root]);
+    assert!(ok, "annotated exceptions must pass:\n{out}");
+}
+
+#[test]
+fn malformed_markers_are_violations() {
+    let root = fixture_root("badmarker");
+    let (ok, out) = run_lint(&["lint", "--root", &root]);
+    assert!(!ok, "marker without justification must fail:\n{out}");
+    let hits = out.lines().filter(|l| l.contains("[marker-justification]")).count();
+    assert_eq!(hits, 2, "expected the unjustified and unknown-rule markers:\n{out}");
+}
+
+#[test]
+fn unknown_arguments_are_usage_errors() {
+    let (ok, out) = run_lint(&["lint", "--frobnicate"]);
+    assert!(!ok, "unknown flags must not silently pass:\n{out}");
+}

@@ -230,9 +230,9 @@ fn prop_top_hot_is_optimal_prefix() {
             if hot.len() > *k as usize {
                 return Err("over-selected".into());
             }
-            let table: std::collections::HashMap<u32, u32> = freq.iter().copied().collect();
+            let table: std::collections::BTreeMap<u32, u32> = freq.iter().copied().collect();
             let min_in = hot.iter().map(|v| table[v]).min().unwrap_or(0);
-            let hotset: std::collections::HashSet<u32> = hot.iter().copied().collect();
+            let hotset: std::collections::BTreeSet<u32> = hot.iter().copied().collect();
             for &(v, c) in &freq {
                 if !hotset.contains(&v) && c > min_in {
                     return Err(format!("node {v} freq {c} beats selected min {min_in}"));
