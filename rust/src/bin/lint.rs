@@ -23,6 +23,9 @@
 //! |                          | `util/parallel.rs`, and no `rayon` — unordered float          |
 //! |                          | reduction is thread-count-dependent.                          |
 //! | `module-docs`            | every `src/**.rs` file starts with `//!` module docs.         |
+//! | `trace-sink`             | no `println!`/`eprintln!` (or `print!`/`eprint!`) inside      |
+//! |                          | `src/trace/` and `src/tui/` — observability code returns      |
+//! |                          | strings/records; only the CLI layer owns stdout.              |
 //!
 //! Approved exceptions carry an inline marker the linter recognizes:
 //!
@@ -64,13 +67,14 @@ enum RootKind {
 
 /// All rule identifiers, in report order. `marker-justification` is the
 /// meta-rule for malformed allow markers.
-const RULE_IDS: [&str; 7] = [
+const RULE_IDS: [&str; 8] = [
     "priced-recovery",
     "unordered-collections",
     "wall-clock",
     "thread-spawn",
     "unordered-float-reduce",
     "module-docs",
+    "trace-sink",
     "marker-justification",
 ];
 
@@ -404,6 +408,25 @@ fn lint_file(
                              `util::parallel`'s deterministic map/reduce or a \
                              `util::mpmc` actor (or annotate \
                              `// lint:allow(thread-spawn): why`)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- trace-sink: observability modules never print. -------------------
+    if kind == RootKind::Src && (rel.starts_with("trace/") || rel.starts_with("tui/")) {
+        for (idx, line) in code_lines.iter().enumerate() {
+            for ident in idents(line) {
+                if matches!(ident, "println" | "eprintln" | "print" | "eprint") {
+                    report(
+                        "trace-sink",
+                        idx + 1,
+                        format!(
+                            "`{ident}!` inside src/{rel}: trace and tui code \
+                             returns strings/records and never owns stdout — \
+                             print from the CLI layer (`main.rs`) instead"
                         ),
                     );
                 }

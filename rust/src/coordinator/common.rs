@@ -84,6 +84,10 @@ pub struct RunContext {
     pub costs: CostParams,
     /// Directory for streamed metadata blocks (the paper's SSD).
     pub metadata_path: PathBuf,
+    /// Virtual-time trace sink (`--trace-out` / `RunBuilder::with_trace`).
+    /// `None` by default — tracing is strictly observational, and with no
+    /// sink installed the run takes the exact pre-trace code paths.
+    pub trace: Option<crate::trace::TraceHandle>,
     /// Owns the temp dir when the config didn't name one.
     _tmp: Option<Arc<TempDir>>,
 }
@@ -143,6 +147,7 @@ impl RunContext {
             compute: ComputeModel::default(),
             costs: CostParams::default(),
             metadata_path,
+            trace: None,
             _tmp: tmp,
         })
     }

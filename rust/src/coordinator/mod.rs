@@ -90,13 +90,14 @@ pub struct RunBuilder {
     cfg: RunConfig,
     strategy: Option<Box<dyn TrainingStrategy>>,
     trainer: Option<Box<dyn TrainStep>>,
+    trace: Option<crate::trace::TraceHandle>,
 }
 
 impl RunBuilder {
     /// Start from a run config (the strategy resolves from the registry via
     /// `cfg.engine` unless overridden).
     pub fn new(cfg: RunConfig) -> RunBuilder {
-        RunBuilder { cfg, strategy: None, trainer: None }
+        RunBuilder { cfg, strategy: None, trainer: None, trace: None }
     }
 
     /// Drive the run with an explicit strategy instead of the registry's
@@ -113,12 +114,20 @@ impl RunBuilder {
         self
     }
 
+    /// Install a virtual-time trace sink (`--trace-out`). Strictly
+    /// observational: the run's report is byte-identical with or without it.
+    pub fn with_trace(mut self, trace: crate::trace::TraceHandle) -> RunBuilder {
+        self.trace = Some(trace);
+        self
+    }
+
     /// Execute the run and aggregate the report.
     pub fn run(self) -> Result<RunReport> {
-        let ctx = match self.strategy {
+        let mut ctx = match self.strategy {
             Some(s) => RunContext::build_with_strategy(&self.cfg, Arc::from(s))?,
             None => RunContext::build(&self.cfg)?,
         };
+        ctx.trace = self.trace;
         run_with_overrides(&ctx, self.trainer)
     }
 }

@@ -200,8 +200,20 @@ pub fn run_worker(
             ctx, &mut state, worker, epoch, &outcome, &totals, &mut phases, &mut comm,
         )?;
         reports.push(make_report(epoch, worker, full, &totals, &acc, finish, phases, comm));
+        emit_epoch_trace(ctx, worker, epoch, reports.last().expect("just pushed"));
     }
     Ok((setup.setup_time, reports))
+}
+
+/// Journal one finished (worker, epoch) as an `epoch` trace record, stamped
+/// at the epoch's closing virtual time. The fields embed the full
+/// [`EpochReport`] so `top --trace` can replay a dashboard without the JSON
+/// report. No-op without an installed sink — and strictly observational with
+/// one (nothing reads the journal back during the run).
+fn emit_epoch_trace(ctx: &RunContext, worker: WorkerId, epoch: u32, report: &EpochReport) {
+    if let Some(trace) = &ctx.trace {
+        trace.event(worker, epoch, report.epoch_time, "epoch", report.to_value());
+    }
 }
 
 /// One worker's (epoch, plan) as a [`WorkerActor`] for the event-driven
@@ -370,7 +382,14 @@ pub(super) fn run_cluster_epoch(
     {
         let mut sim = ClusterSim::new();
         if contention {
-            sim = sim.with_network(crate::net::ContentionNet::new(&ctx.fabric));
+            let mut net = crate::net::ContentionNet::new(&ctx.fabric);
+            if let Some(trace) = &ctx.trace {
+                net = net.with_tracer(trace.clone(), epoch);
+            }
+            sim = sim.with_network(net);
+        }
+        if let Some(trace) = &ctx.trace {
+            sim = sim.with_tracer(trace.clone(), epoch);
         }
         for w in 0..cfg.num_workers {
             let mut comm = CommStats::default();
@@ -427,6 +446,7 @@ pub(super) fn run_cluster_epoch(
             )?;
             reports
                 .push(make_report(epoch, worker, full, &totals, &actor.acc, finish, phases, comm));
+            emit_epoch_trace(ctx, worker, epoch, reports.last().expect("just pushed"));
         }
         if contention {
             // `finish_epoch` background pulls (C_sec rebuilds) are priced

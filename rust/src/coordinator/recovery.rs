@@ -318,24 +318,41 @@ impl Driver<'_> {
         Ok(())
     }
 
+    /// Journal one boundary failure event as a `recovery` trace record.
+    /// Boundary events carry no intra-epoch virtual time, so `t = 0.0`.
+    fn trace_recovery(&self, worker: WorkerId, epoch: u32, event: &str, mut fields: Value) {
+        if let Some(trace) = &self.ctx.trace {
+            fields.set("event", event);
+            trace.event(worker, epoch, 0.0, "recovery", fields);
+        }
+    }
+
     fn apply(&mut self, states: &[StrategyState], ev: FailureEvent, epoch: u32) {
         self.rec.events += 1;
         match ev {
             FailureEvent::WorkerLeave { worker, .. } => {
                 self.rec.worker_leaves += 1;
+                self.trace_recovery(worker, epoch, "worker-leave", Value::table());
                 self.move_shard(states, worker);
             }
             FailureEvent::WorkerJoin { worker, .. } => {
                 self.rec.worker_joins += 1;
+                self.trace_recovery(worker, epoch, "worker-join", Value::table());
                 self.move_shard(states, worker);
             }
             FailureEvent::LinkDown { a, b, .. } => {
                 self.rec.link_downs += 1;
                 self.down.insert(norm(a, b));
+                let mut fields = Value::table();
+                fields.set("peer", a.max(b));
+                self.trace_recovery(a.min(b), epoch, "link-down", fields);
             }
             FailureEvent::LinkUp { a, b, .. } => {
                 self.rec.link_ups += 1;
                 self.down.remove(&norm(a, b));
+                let mut fields = Value::table();
+                fields.set("peer", a.max(b));
+                self.trace_recovery(a.min(b), epoch, "link-up", fields);
             }
             FailureEvent::CrashRestart { .. } => {
                 self.rec.crash_restarts += 1;
@@ -354,7 +371,12 @@ impl Driver<'_> {
                         lost[r.worker as usize] += r.epoch_time;
                     }
                 }
-                self.rec.lost_work_time += lost.iter().cloned().fold(0.0, f64::max);
+                let lost_max = lost.iter().cloned().fold(0.0, f64::max);
+                self.rec.lost_work_time += lost_max;
+                let mut fields = Value::table();
+                fields.set("rollback_to", rollback);
+                fields.set("lost_sec", lost_max);
+                self.trace_recovery(0, epoch, "crash-restart", fields);
             }
         }
     }

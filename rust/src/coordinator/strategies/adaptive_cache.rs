@@ -251,8 +251,19 @@ impl TrainingStrategy for AdaptiveCacheStrategy {
             };
             let (top, total, rank_time) = stream_ranked_top(ctx, worker, next, k_max)?;
             if fires {
+                let before = st.ctrl.n_hot;
                 let tail = tail_mass_fraction(&top, total, st.ctrl.n_hot);
                 self.controller.decide(&mut st.ctrl, stats.hit_rate(), tail);
+                if st.ctrl.n_hot != before {
+                    if let Some(trace) = &ctx.trace {
+                        let mut fields = crate::util::value::Value::table();
+                        fields.set("from", before);
+                        fields.set("to", st.ctrl.n_hot);
+                        fields.set("hit_rate", stats.hit_rate());
+                        fields.set("tail", tail);
+                        trace.event(worker, next, 0.0, "cache-resize", fields);
+                    }
+                }
             }
             let k = (st.ctrl.n_hot as usize).min(top.len());
             let hot: Vec<NodeId> = top[..k].iter().map(|&(v, _)| v).collect();

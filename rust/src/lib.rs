@@ -45,7 +45,9 @@ pub mod runtime;
 pub mod sampler;
 pub mod sim;
 pub mod storage;
+pub mod trace;
 pub mod trainer;
+pub mod tui;
 pub mod util;
 
 /// Node identifier within a graph (global id space).

@@ -6,6 +6,8 @@
 //! rapidgnn compare [--dataset products-sim] [--batch-size 1000] ...
 //! rapidgnn partition-stats [--dataset tiny] [--workers 4]
 //! rapidgnn tune    [--dataset tiny]
+//! rapidgnn top     [--report run.json | --trace trace.jsonl | <run flags>]
+//! rapidgnn bench-diff [--results DIR] [--baselines DIR] [--tolerance F]
 //! rapidgnn info
 //! ```
 //!
@@ -13,7 +15,10 @@
 //! them); `compare` iterates the whole registry.
 //!
 //! Flag parsing is hand-rolled (this build environment has no clap); every
-//! flag has the form `--name value`.
+//! flag has the form `--name value`. The single source of truth for the
+//! flag surface is [`FLAG_DOCS`]: `help` renders it, and `dispatch` rejects
+//! any flag the invoked command's scopes don't list — a handler cannot read
+//! a flag that isn't documented there.
 
 #![forbid(unsafe_code)]
 
@@ -42,19 +47,166 @@ fn dispatch(args: &[String]) -> Result<()> {
         return Ok(());
     };
     let flags = parse_flags(&args[1..])?;
+    let scopes: Option<&[&str]> = match cmd.as_str() {
+        "train" => Some(&["common", "train"][..]),
+        "compare" | "partition-stats" | "tune" => Some(&["common"][..]),
+        "top" => Some(&["common", "top"][..]),
+        "bench-diff" => Some(&["bench-diff"][..]),
+        "info" => Some(&[][..]),
+        _ => None, // help / unknown command — handled below
+    };
+    if let Some(scopes) = scopes {
+        check_flags(scopes, &flags)?;
+    }
     match cmd.as_str() {
         "train" => cmd_train(&flags),
         "compare" => cmd_compare(&flags),
         "partition-stats" => cmd_partition_stats(&flags),
         "tune" => cmd_tune(&flags),
+        "top" => cmd_top(&flags),
+        "bench-diff" => cmd_bench_diff(&flags),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (train|compare|partition-stats|tune|info)"),
+        other => bail!(
+            "unknown command '{other}' \
+             (train|compare|partition-stats|tune|top|bench-diff|info)"
+        ),
     }
 }
+
+/// Bare flag key of a [`FLAG_DOCS`] syntax column (`"--codec C"` → `codec`).
+fn flag_key(syntax: &str) -> &str {
+    syntax.trim_start_matches("--").split(' ').next().unwrap_or("")
+}
+
+/// Reject any provided flag the invoked command's scopes don't document.
+fn check_flags(scopes: &[&str], flags: &Flags) -> Result<()> {
+    for key in flags.keys() {
+        let known = FLAG_DOCS
+            .iter()
+            .any(|(scope, syntax, _)| scopes.contains(scope) && flag_key(syntax) == key);
+        if !known {
+            bail!("unknown flag --{key} for this command (see `rapidgnn help`)");
+        }
+    }
+    Ok(())
+}
+
+/// Every `--flag` the CLI understands, one row per flag:
+/// `(command scope, syntax, help)`. Embedded newlines in the help continue
+/// on an aligned line. This table is the single source of truth for the
+/// flag surface: `print_usage` renders it, `check_flags` rejects flags a
+/// command's scopes don't list, and the `flag_docs_*` tests pin it against
+/// the keys the handlers actually read.
+const FLAG_DOCS: &[(&str, &str, &str)] = &[
+    ("common", "--config PATH", "load a TOML run config (other flags override it)"),
+    ("common", "--dataset NAME", "tiny | reddit-sim | products-sim | papers-sim"),
+    ("common", "--scale F", "dataset node-count scale factor (default 1.0)"),
+    ("common", "--engine NAME", "any registered engine id (see ENGINES above)"),
+    ("common", "--workers P", "number of workers / partitions"),
+    ("common", "--batch-size N", "seeds per mini-batch"),
+    ("common", "--epochs E", "training epochs"),
+    ("common", "--n-hot H", "hot-set cache size"),
+    ("common", "--q Q", "prefetch window depth"),
+    ("common", "--fanout A,B", "per-layer fan-outs (innermost first)"),
+    ("common", "--exec MODE", "trace | full"),
+    ("common", "--backend B", "host | pjrt (full mode)"),
+    ("common", "--seed S", "base seed s0"),
+    ("common", "--topology T", "flat | two-tier | ring | star | fat-tree | dragonfly"),
+    (
+        "common",
+        "--contention [B]",
+        "shared-link queueing instead of the linear RPC price\n\
+         (bare flag = true; emits per-link utilization telemetry)",
+    ),
+    ("common", "--racks N", "two-tier rack count (default 2)"),
+    ("common", "--oversubscription F", "two-tier spine oversubscription (default 4)"),
+    ("common", "--hub W", "star hub worker (default 0)"),
+    ("common", "--fat-k K", "fat-tree pod count (default 4)"),
+    ("common", "--groups G", "dragonfly group count (default 2)"),
+    ("common", "--routers R", "dragonfly routers per group (default 2)"),
+    (
+        "common",
+        "--resample-period K",
+        "fast-sample: re-enumerate the schedule every K epochs",
+    ),
+    ("common", "--fetch-window W", "green-window: batches merged per windowed fetch"),
+    (
+        "common",
+        "--resize-period K",
+        "adaptive-cache: evaluate the resize controller every K\n\
+         epoch boundaries (0 = never, which is exactly `rapid`)",
+    ),
+    ("common", "--min-hot N", "adaptive-cache n_hot lower clamp"),
+    ("common", "--max-hot N", "adaptive-cache n_hot upper clamp"),
+    ("common", "--target-hit-rate F", "adaptive-cache: grow below this hit rate"),
+    (
+        "common",
+        "--tail-utility F",
+        "adaptive-cache: shrink when the hot set's marginal\n\
+         quarter serves under this fraction of remote accesses",
+    ),
+    ("common", "--hot-growth F", "adaptive-cache resize factor"),
+    ("common", "--hysteresis N", "adaptive-cache flip-flop damping"),
+    (
+        "common",
+        "--codec C",
+        "default | none | f16 | int8 — feature wire codec\n\
+         (quant-pull defaults to int8; every other engine to none;\n\
+         an explicit f16/int8 composes with any engine)",
+    ),
+    ("common", "--codec-block N", "int8 quantization block size in elements (default 128)"),
+    (
+        "common",
+        "--grad-k F",
+        "grad-topk: fraction of gradient coordinates applied per\n\
+         step, in (0,1]; 0 disables (exactly `rapid`)",
+    ),
+    ("common", "--grad-mode M", "topk | randk — gradient coordinate selector"),
+    (
+        "common",
+        "--failures SPEC",
+        "deterministic failure plan, comma-separated events at\n\
+         epoch boundaries: leave:W@E | join:W@E | linkdown:A-B@E\n\
+         | linkup:A-B@E | crash@E (e.g. \"leave:1@2,crash@3\")",
+    ),
+    ("common", "--checkpoint-every K", "write a checkpoint every K epoch boundaries"),
+    ("common", "--checkpoint-dir P", "where checkpoints go (default: run metadata dir)"),
+    ("train", "--save-config PATH", "write the effective config to a TOML file and exit"),
+    (
+        "train",
+        "--restore PATH",
+        "resume a run from a checkpoint file (ignores the other\n\
+         config flags — the checkpoint carries the config)",
+    ),
+    (
+        "train",
+        "--trace-out PATH",
+        "write the virtual-time trace journal as JSONL\n\
+         (replayable offline via `rapidgnn top --trace PATH`)",
+    ),
+    ("train", "--json PATH", "write the run report as JSON"),
+    ("top", "--report PATH", "render the dashboard from a RunReport JSON (offline)"),
+    ("top", "--trace PATH", "replay the dashboard from a trace JSONL (offline)"),
+    ("top", "--width N", "dashboard frame width in columns (default 100)"),
+    (
+        "bench-diff",
+        "--results DIR",
+        "fresh bench artifacts (fig4.json, table2.json;\n\
+         default bench_results)",
+    ),
+    (
+        "bench-diff",
+        "--baselines DIR",
+        "committed BENCH_fig4.json / BENCH_table2.json\n\
+         (default: current directory)",
+    ),
+    ("bench-diff", "--tolerance F", "relative tolerance band (default 0.15)"),
+    ("bench-diff", "--out PATH", "write the diff summary as JSON"),
+];
 
 fn print_usage() {
     let engines = EngineRegistry::global().ids().collect::<Vec<_>>().join(" | ");
@@ -68,55 +220,31 @@ COMMANDS
   compare           run every registered engine, print Table-2-style speedups
   partition-stats   partition quality for a dataset (METIS-like vs random)
   tune              recommend n_hot from the access-frequency distribution
+  top               dashboard for a run (live replay, --report, or --trace)
+  bench-diff        gate fresh bench artifacts against committed baselines
   info              artifact + platform diagnostics
 
-COMMON FLAGS
-  --config PATH     load a TOML run config (other flags override it)
-  --save-config P   write the effective config to a TOML file and exit
-  --dataset NAME    tiny | reddit-sim | products-sim | papers-sim
-  --scale F         dataset node-count scale factor (default 1.0)
-  --engine NAME     {engines}
-  --workers P       number of workers / partitions
-  --batch-size N    seeds per mini-batch
-  --epochs E        training epochs
-  --n-hot H         hot-set cache size
-  --q Q             prefetch window depth
-  --fanout A,B      per-layer fan-outs (innermost first)
-  --exec MODE       trace | full
-  --backend B       host | pjrt (full mode)
-  --seed S          base seed s0
-  --topology T      flat | two-tier | ring | star | fat-tree | dragonfly
-  --contention [B]  shared-link queueing instead of the linear RPC price
-                    (bare flag = true; emits per-link utilization telemetry)
-  --racks N / --oversubscription F     two-tier knobs (defaults 2 / 4)
-  --hub W           star hub worker (default 0)
-  --fat-k K         fat-tree pod count (default 4)
-  --groups G / --routers R             dragonfly knobs (defaults 2 / 2)
-  --resample-period K   fast-sample: re-enumerate the schedule every K epochs
-  --fetch-window W  green-window: batches merged per windowed fetch
-  --resize-period K adaptive-cache: evaluate the resize controller every K
-                    epoch boundaries (0 = never, which is exactly `rapid`)
-  --min-hot N / --max-hot N            adaptive-cache n_hot clamps
-  --target-hit-rate F                  adaptive-cache: grow below this rate
-  --tail-utility F  adaptive-cache: shrink when the hot set's marginal
-                    quarter serves under this fraction of remote accesses
-  --hot-growth F / --hysteresis N      resize factor / flip-flop damping
-  --codec C         default | none | f16 | int8 — feature wire codec
-                    (quant-pull defaults to int8; every other engine to none;
-                    an explicit f16/int8 composes with any engine)
-  --codec-block N   int8 quantization block size in elements (default 128)
-  --grad-k F        grad-topk: fraction of gradient coordinates applied per
-                    step, in (0,1]; 0 disables (exactly `rapid`)
-  --grad-mode M     topk | randk — gradient coordinate selector
-  --failures SPEC   deterministic failure plan, comma-separated events at
-                    epoch boundaries: leave:W@E | join:W@E | linkdown:A-B@E
-                    | linkup:A-B@E | crash@E (e.g. \"leave:1@2,crash@3\")
-  --checkpoint-every K   write a checkpoint every K epoch boundaries
-  --checkpoint-dir P     where checkpoints go (default: run metadata dir)
-  --restore PATH    resume a run from a checkpoint file (ignores the other
-                    config flags — the checkpoint carries the config)
-  --json PATH       write the run report as JSON"
+ENGINES
+  {engines}"
     );
+    for (scope, title) in [
+        ("common", "COMMON FLAGS (train / compare / partition-stats / tune / top)"),
+        ("train", "TRAIN FLAGS"),
+        ("top", "TOP FLAGS"),
+        ("bench-diff", "BENCH-DIFF FLAGS"),
+    ] {
+        println!("\n{title}");
+        for (s, syntax, help) in FLAG_DOCS {
+            if *s != scope {
+                continue;
+            }
+            let mut lines = help.split('\n');
+            println!("  {syntax:<21}{}", lines.next().unwrap_or(""));
+            for cont in lines {
+                println!("  {:<21}{}", "", cont.trim_start());
+            }
+        }
+    }
 }
 
 type Flags = BTreeMap<String, String>;
@@ -316,6 +444,9 @@ fn config_from_flags(flags: &Flags) -> Result<RunConfig> {
 
 fn cmd_train(flags: &Flags) -> Result<()> {
     let report = if let Some(p) = flags.get("restore") {
+        if flags.contains_key("trace-out") {
+            bail!("--trace-out does not compose with --restore (resume replays without a sink)");
+        }
         println!("restore: resuming from checkpoint {p}");
         coordinator::resume_run(std::path::Path::new(p))?
     } else {
@@ -336,7 +467,19 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             cfg.prefetch_q,
             cfg.exec_mode,
         );
-        coordinator::run(&cfg)?
+        if let Some(tp) = flags.get("trace-out") {
+            let trace = rapidgnn::trace::TraceHandle::new();
+            let report = coordinator::RunBuilder::new(cfg).with_trace(trace.clone()).run()?;
+            trace.write_jsonl(std::path::Path::new(tp))?;
+            let dropped = trace.dropped();
+            println!("trace journal written to {tp} ({} records)", trace.len());
+            if dropped > 0 {
+                println!("(ring capacity exceeded: {dropped} oldest records dropped)");
+            }
+            report
+        } else {
+            coordinator::run(&cfg)?
+        }
     };
     let mut t = Table::new(
         &format!("{} / {}", report.engine, report.dataset),
@@ -585,6 +728,132 @@ fn cmd_tune(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// `rapidgnn top` — render the observability dashboard. Three sources:
+/// `--report run.json` (offline, from a RunReport), `--trace trace.jsonl`
+/// (offline, from a `--trace-out` journal), or run flags (executes the run
+/// on the virtual clock, then replays it frame by frame — workers share no
+/// real-time epoch barrier, so "live" is replay-on-completion by design).
+/// On a terminal the replay animates in place with ANSI styling; piped
+/// output gets one plain final frame (what the CI smoke job asserts on).
+fn cmd_top(flags: &Flags) -> Result<()> {
+    use rapidgnn::metrics::RunReport;
+    use rapidgnn::tui::App;
+    use rapidgnn::util::value::Value;
+    let width: usize = flags.get("width").map_or(Ok(100), |s| s.parse())?;
+    let app = if let Some(p) = flags.get("report") {
+        let v = Value::from_json(&std::fs::read_to_string(p)?)?;
+        App::from_report(RunReport::from_value(&v)?)
+    } else if let Some(p) = flags.get("trace") {
+        let records = rapidgnn::trace::parse_jsonl(&std::fs::read_to_string(p)?)?;
+        App::from_trace_records(&records)?
+    } else {
+        let cfg = config_from_flags(flags)?;
+        App::from_report(coordinator::run(&cfg)?)
+    };
+    render_dashboard(&app, width)
+}
+
+/// Render an [`rapidgnn::tui::App`]: animated epoch-by-epoch ANSI replay on
+/// a terminal, a single plain final frame otherwise.
+fn render_dashboard(app: &rapidgnn::tui::App, width: usize) -> Result<()> {
+    use std::io::{IsTerminal, Write};
+    let stdout = std::io::stdout();
+    if stdout.is_terminal() {
+        if let Some(last) = app.last_epoch() {
+            for epoch in 0..=last {
+                let frame = app.through_epoch(epoch).render(width);
+                // clear + home, then the styled frame
+                let mut out = stdout.lock();
+                write!(out, "\x1b[2J\x1b[H{}\r\n", frame.render_ansi())?;
+                out.flush()?;
+                std::thread::sleep(std::time::Duration::from_millis(120));
+            }
+            return Ok(());
+        }
+    }
+    println!("{}", app.render(width).render_plain());
+    Ok(())
+}
+
+/// `rapidgnn bench-diff` — gate fresh bench artifacts against the committed
+/// `BENCH_*.json` baselines. Exit status: 0 within the tolerance band (or
+/// bootstrap — no baseline committed yet), nonzero on any breach.
+fn cmd_bench_diff(flags: &Flags) -> Result<()> {
+    use rapidgnn::metrics::baseline::{diff_tables, DiffSummary, DEFAULT_TOLERANCE};
+    use rapidgnn::util::value::Value;
+    let results = flags.get("results").map_or("bench_results", String::as_str);
+    let baselines = flags.get("baselines").map_or(".", String::as_str);
+    let tolerance: f64 = flags.get("tolerance").map_or(Ok(DEFAULT_TOLERANCE), |s| s.parse())?;
+    let mut summary = DiffSummary::new(tolerance);
+    let mut compared = 0usize;
+    for table in ["fig4", "table2"] {
+        let base_path = std::path::Path::new(baselines).join(format!("BENCH_{table}.json"));
+        let fresh_path = std::path::Path::new(results).join(format!("{table}.json"));
+        if !base_path.is_file() {
+            println!(
+                "bench-diff: no baseline {} — skipping {table} (bootstrap)",
+                base_path.display()
+            );
+            continue;
+        }
+        if !fresh_path.is_file() {
+            bail!(
+                "bench-diff: baseline {} exists but fresh artifact {} is missing",
+                base_path.display(),
+                fresh_path.display()
+            );
+        }
+        let base = Value::from_json(&std::fs::read_to_string(&base_path)?)?;
+        let fresh = Value::from_json(&std::fs::read_to_string(&fresh_path)?)?;
+        diff_tables(&mut summary, table, &base, &fresh)?;
+        compared += 1;
+    }
+    if compared == 0 {
+        println!("bench-diff: nothing compared (no baselines committed yet)");
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("Bench baseline diff (tolerance ±{:.0}%)", tolerance * 100.0),
+        &["table", "cell", "metric", "baseline", "fresh", "delta", "status"],
+    );
+    for e in &summary.entries {
+        let sign = if e.fresh >= e.baseline { "+" } else { "-" };
+        t.row(&[
+            e.table.clone(),
+            e.cell.clone(),
+            e.metric.clone(),
+            format!("{:.6}", e.baseline),
+            format!("{:.6}", e.fresh),
+            format!("{sign}{:.1}%", e.rel * 100.0),
+            if e.breach { "BREACH" } else { "ok" }.into(),
+        ]);
+    }
+    t.print();
+    for c in &summary.missing_cells {
+        println!("missing cell (regression): {c}");
+    }
+    for c in &summary.new_cells {
+        println!("new cell (no baseline yet): {c}");
+    }
+    if let Some(p) = flags.get("out") {
+        std::fs::write(p, summary.to_value().to_json_pretty())?;
+        println!("diff summary written to {p}");
+    }
+    if summary.breached() {
+        bail!(
+            "bench-diff: {} breach(es) outside the ±{:.0}% band",
+            summary.breaches().count() + summary.missing_cells.len(),
+            tolerance * 100.0
+        );
+    }
+    println!(
+        "bench-diff: {} metric(s) within the ±{:.0}% band",
+        summary.entries.len(),
+        tolerance * 100.0
+    );
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     println!("RapidGNN {} — three-layer rust+JAX+Pallas reproduction", env!("CARGO_PKG_VERSION"));
     let dir = rapidgnn::runtime::artifacts_dir();
@@ -630,6 +899,46 @@ mod tests {
 
     fn flags(pairs: &[(&str, &str)]) -> Flags {
         pairs.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn flag_docs_cover_every_handled_flag() {
+        // Every flag key the command handlers read, by hand — update this
+        // list and FLAG_DOCS together when adding a flag.
+        const HANDLED: &[&str] = &[
+            // config_from_flags
+            "config", "dataset", "scale", "engine", "workers", "batch-size", "epochs",
+            "n-hot", "q", "fanout", "exec", "backend", "seed", "topology", "racks",
+            "oversubscription", "hub", "fat-k", "groups", "routers", "contention",
+            "resample-period", "fetch-window", "resize-period", "min-hot", "max-hot",
+            "target-hit-rate", "tail-utility", "hot-growth", "hysteresis", "codec",
+            "codec-block", "grad-k", "grad-mode", "failures", "checkpoint-every",
+            "checkpoint-dir",
+            // cmd_train
+            "save-config", "restore", "trace-out", "json",
+            // cmd_top
+            "report", "trace", "width",
+            // cmd_bench_diff
+            "results", "baselines", "tolerance", "out",
+        ];
+        let documented: std::collections::BTreeSet<&str> =
+            FLAG_DOCS.iter().map(|(_, syntax, _)| flag_key(syntax)).collect();
+        for key in HANDLED {
+            assert!(documented.contains(key), "--{key} is handled but missing from FLAG_DOCS");
+        }
+        for key in &documented {
+            assert!(HANDLED.contains(key), "--{key} is documented but no handler reads it");
+        }
+        assert_eq!(documented.len(), FLAG_DOCS.len(), "duplicate flag keys in FLAG_DOCS");
+    }
+
+    #[test]
+    fn check_flags_rejects_out_of_scope_flags() {
+        let bench = flags(&[("results", "bench_results")]);
+        assert!(check_flags(&["common", "train"], &bench).is_err());
+        assert!(check_flags(&["bench-diff"], &bench).is_ok());
+        assert!(check_flags(&["common"], &flags(&[("epochs", "2")])).is_ok());
+        assert!(check_flags(&[], &flags(&[("epochs", "2")])).is_err());
     }
 
     #[test]

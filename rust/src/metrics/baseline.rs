@@ -1,0 +1,329 @@
+//! Bench-baseline regression diffing (`rapidgnn bench-diff`).
+//!
+//! Compares a fresh bench artifact (`bench_results/fig4.json`, `table2.json`)
+//! against the baselines committed at the repo root (`BENCH_fig4.json`,
+//! `BENCH_table2.json`) cell by cell. A cell's identity is the set of
+//! descriptor keys it carries (dataset / engine / batch / ...); every other
+//! numeric field is a metric checked against a symmetric relative tolerance
+//! band. Baseline cells missing from the fresh results are regressions;
+//! fresh cells absent from the baseline are informational (new coverage) and
+//! get picked up when the main-branch job refreshes the baselines.
+
+use crate::util::value::Value;
+use crate::Result;
+use anyhow::bail;
+
+/// Default relative tolerance band. The simulator is deterministic, so this
+/// absorbs intentional model retuning smaller than a headline regression,
+/// not run-to-run noise.
+pub const DEFAULT_TOLERANCE: f64 = 0.15;
+
+/// Keys that identify a cell rather than measure it.
+const ID_KEYS: [&str; 9] =
+    ["batch", "batch_size", "cell", "codec", "dataset", "engine", "mode", "topology", "workers"];
+
+/// One compared metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffEntry {
+    /// Table name (`fig4`, `table2`).
+    pub table: String,
+    /// Cell identity string (`dataset=tiny batch=32`).
+    pub cell: String,
+    /// Metric field name.
+    pub metric: String,
+    /// Committed baseline value.
+    pub baseline: f64,
+    /// Fresh value (NaN when the metric vanished from the fresh cell).
+    pub fresh: f64,
+    /// Symmetric relative delta `|fresh - baseline| / max(|baseline|, eps)`.
+    pub rel: f64,
+    /// True when `rel` exceeds the tolerance band.
+    pub breach: bool,
+}
+
+/// Whole-comparison outcome across one or more tables.
+#[derive(Debug, Clone)]
+pub struct DiffSummary {
+    /// Tolerance band the entries were judged against.
+    pub tolerance: f64,
+    /// Every compared metric, in deterministic (table, cell, metric) order.
+    pub entries: Vec<DiffEntry>,
+    /// Baseline cells with no matching fresh cell — always a regression.
+    pub missing_cells: Vec<String>,
+    /// Fresh cells with no matching baseline cell — informational.
+    pub new_cells: Vec<String>,
+}
+
+impl DiffSummary {
+    /// Empty summary with the given tolerance.
+    pub fn new(tolerance: f64) -> DiffSummary {
+        DiffSummary {
+            tolerance,
+            entries: Vec::new(),
+            missing_cells: Vec::new(),
+            new_cells: Vec::new(),
+        }
+    }
+
+    /// True when any metric breached or any baseline cell disappeared.
+    pub fn breached(&self) -> bool {
+        !self.missing_cells.is_empty() || self.entries.iter().any(|e| e.breach)
+    }
+
+    /// The breaching entries only.
+    pub fn breaches(&self) -> impl Iterator<Item = &DiffEntry> + '_ {
+        self.entries.iter().filter(|e| e.breach)
+    }
+
+    /// Serialize for the diff artifact.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("tolerance", self.tolerance)
+            .set("breached", self.breached())
+            .set(
+                "missing_cells",
+                self.missing_cells.iter().map(|c| Value::Str(c.clone())).collect::<Vec<_>>(),
+            )
+            .set(
+                "new_cells",
+                self.new_cells.iter().map(|c| Value::Str(c.clone())).collect::<Vec<_>>(),
+            );
+        let entries: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut t = Value::table();
+                t.set("table", e.table.as_str())
+                    .set("cell", e.cell.as_str())
+                    .set("metric", e.metric.as_str())
+                    .set("baseline", e.baseline)
+                    .set("fresh", e.fresh)
+                    .set("rel", e.rel)
+                    .set("breach", e.breach);
+                t
+            })
+            .collect();
+        v.set("entries", entries);
+        v
+    }
+}
+
+/// A cell's identity: its descriptor keys rendered `key=value`, space-joined
+/// in the fixed [`ID_KEYS`] order.
+fn cell_id(cell: &Value) -> String {
+    let mut parts = Vec::new();
+    for key in ID_KEYS {
+        if let Some(v) = cell.get(key) {
+            let rendered = match v {
+                Value::Str(s) => s.clone(),
+                other => other.to_json(),
+            };
+            parts.push(format!("{key}={rendered}"));
+        }
+    }
+    if parts.is_empty() {
+        "(anonymous cell)".to_string()
+    } else {
+        parts.join(" ")
+    }
+}
+
+/// The cell list under a bench artifact root (array of tables, or one table).
+fn cells(root: &Value) -> Result<Vec<&Value>> {
+    match root {
+        Value::Arr(items) => {
+            for item in items {
+                if !matches!(item, Value::Table(_)) {
+                    bail!("bench artifact cell is not a table: {item:?}");
+                }
+            }
+            Ok(items.iter().collect())
+        }
+        Value::Table(_) => Ok(vec![root]),
+        other => bail!("bench artifact root is neither array nor table: {other:?}"),
+    }
+}
+
+/// Numeric metric fields of a cell (identity keys excluded), in the table's
+/// deterministic key order.
+fn metric_fields(cell: &Value) -> Vec<(String, f64)> {
+    let Value::Table(map) = cell else { return Vec::new() };
+    map.iter()
+        .filter(|(k, _)| !ID_KEYS.contains(&k.as_str()))
+        .filter_map(|(k, v)| match v {
+            Value::Int(i) => Some((k.clone(), *i as f64)),
+            Value::Float(f) => Some((k.clone(), *f)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Symmetric relative delta; equal values (including NaN == NaN) read 0.
+fn relative_delta(baseline: f64, fresh: f64) -> f64 {
+    if baseline == fresh || (baseline.is_nan() && fresh.is_nan()) {
+        0.0
+    } else if fresh.is_nan() || baseline.is_nan() {
+        f64::INFINITY
+    } else {
+        (fresh - baseline).abs() / baseline.abs().max(1e-12)
+    }
+}
+
+/// Diff one table pair into `summary`. Cells are matched by identity; within
+/// a matched pair every baseline metric is compared (metrics that vanished
+/// from the fresh cell breach with `fresh = NaN`).
+pub fn diff_tables(
+    summary: &mut DiffSummary,
+    table: &str,
+    baseline: &Value,
+    fresh: &Value,
+) -> Result<()> {
+    let base_cells = cells(baseline)?;
+    let fresh_cells = cells(fresh)?;
+    let fresh_by_id: Vec<(String, &Value)> =
+        fresh_cells.iter().map(|c| (cell_id(c), *c)).collect();
+    let mut matched: Vec<bool> = vec![false; fresh_by_id.len()];
+    for bcell in base_cells {
+        let id = cell_id(bcell);
+        let found = fresh_by_id.iter().position(|(fid, _)| *fid == id);
+        let Some(idx) = found else {
+            summary.missing_cells.push(format!("{table}: {id}"));
+            continue;
+        };
+        matched[idx] = true;
+        let fcell = fresh_by_id[idx].1;
+        for (metric, bval) in metric_fields(bcell) {
+            let fval = match fcell.get(&metric) {
+                Some(Value::Int(i)) => *i as f64,
+                Some(Value::Float(f)) => *f,
+                _ => f64::NAN,
+            };
+            let rel = relative_delta(bval, fval);
+            summary.entries.push(DiffEntry {
+                table: table.to_string(),
+                cell: id.clone(),
+                metric,
+                baseline: bval,
+                fresh: fval,
+                rel,
+                breach: rel > summary.tolerance,
+            });
+        }
+    }
+    for (i, (id, _)) in fresh_by_id.iter().enumerate() {
+        if !matched[i] {
+            summary.new_cells.push(format!("{table}: {id}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(dataset: &str, batch: i64, metric: &str, v: f64) -> Value {
+        let mut c = Value::table();
+        c.set("dataset", dataset).set("batch", batch).set(metric, v);
+        c
+    }
+
+    fn table(cells: Vec<Value>) -> Value {
+        Value::Arr(cells)
+    }
+
+    #[test]
+    fn within_band_passes_and_outside_breaches() {
+        let base = table(vec![cell("tiny", 32, "bytes", 100.0)]);
+        let ok = table(vec![cell("tiny", 32, "bytes", 110.0)]);
+        let bad = table(vec![cell("tiny", 32, "bytes", 130.0)]);
+
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "fig4", &base, &ok).unwrap();
+        assert!(!s.breached(), "{:?}", s.entries);
+        assert_eq!(s.entries.len(), 1);
+        assert!((s.entries[0].rel - 0.1).abs() < 1e-12);
+
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "fig4", &base, &bad).unwrap();
+        assert!(s.breached());
+        assert_eq!(s.breaches().count(), 1);
+    }
+
+    #[test]
+    fn missing_baseline_cell_is_a_regression() {
+        let base = table(vec![cell("tiny", 32, "bytes", 100.0), cell("tiny", 64, "bytes", 1.0)]);
+        let fresh = table(vec![cell("tiny", 32, "bytes", 100.0)]);
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "fig4", &base, &fresh).unwrap();
+        assert!(s.breached());
+        assert_eq!(s.missing_cells, vec!["fig4: batch=64 dataset=tiny"]);
+    }
+
+    #[test]
+    fn new_fresh_cells_are_informational() {
+        let base = table(vec![cell("tiny", 32, "bytes", 100.0)]);
+        let fresh = table(vec![cell("tiny", 32, "bytes", 100.0), cell("tiny", 64, "bytes", 1.0)]);
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "fig4", &base, &fresh).unwrap();
+        assert!(!s.breached());
+        assert_eq!(s.new_cells, vec!["fig4: batch=64 dataset=tiny"]);
+    }
+
+    #[test]
+    fn identity_uses_descriptor_keys_not_metrics() {
+        // Same descriptors, different metric value: one cell, compared.
+        let mut a = Value::table();
+        a.set("dataset", "tiny").set("engine", "rapid").set("speedup", 2.0);
+        let mut b = Value::table();
+        b.set("dataset", "tiny").set("engine", "rapid").set("speedup", 4.0);
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "table2", &table(vec![a]), &table(vec![b])).unwrap();
+        assert_eq!(s.entries.len(), 1);
+        assert!(s.entries[0].breach);
+        assert_eq!(s.entries[0].cell, "dataset=tiny engine=rapid");
+    }
+
+    #[test]
+    fn vanished_metric_breaches_with_nan_fresh() {
+        let base = table(vec![cell("tiny", 32, "bytes", 100.0)]);
+        let mut stripped = Value::table();
+        stripped.set("dataset", "tiny").set("batch", 32i64);
+        let fresh = table(vec![stripped]);
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "fig4", &base, &fresh).unwrap();
+        assert!(s.breached());
+        assert!(s.entries[0].fresh.is_nan());
+    }
+
+    #[test]
+    fn zero_baseline_and_equal_values_are_stable() {
+        let base = table(vec![cell("tiny", 32, "zero", 0.0)]);
+        let fresh = table(vec![cell("tiny", 32, "zero", 0.0)]);
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "fig4", &base, &fresh).unwrap();
+        assert!(!s.breached());
+        assert_eq!(s.entries[0].rel, 0.0);
+    }
+
+    #[test]
+    fn summary_serializes_round_trippable_json() {
+        let base = table(vec![cell("tiny", 32, "bytes", 100.0)]);
+        let fresh = table(vec![cell("tiny", 32, "bytes", 200.0)]);
+        let mut s = DiffSummary::new(0.15);
+        diff_tables(&mut s, "fig4", &base, &fresh).unwrap();
+        let json = s.to_value().to_json_pretty();
+        let back = Value::from_json(&json).unwrap();
+        assert!(back.req_bool("breached").unwrap());
+        assert!((back.req_f64("tolerance").unwrap() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_roots_error() {
+        let mut s = DiffSummary::new(0.15);
+        assert!(diff_tables(&mut s, "t", &Value::Int(3), &Value::table()).is_err());
+        assert!(
+            diff_tables(&mut s, "t", &table(vec![Value::Int(1)]), &Value::table()).is_err()
+        );
+    }
+}

@@ -8,6 +8,8 @@ use crate::util::value::Value;
 use crate::Result;
 use std::collections::BTreeMap;
 
+pub mod baseline;
+
 /// Communication counters (monotonic over a run).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
@@ -278,6 +280,21 @@ impl LinkReport {
             .set("utilization", self.utilization());
         v
     }
+
+    /// Parse a table produced by [`Self::to_value`]. The derived
+    /// `utilization` key is ignored — it is recomputed from the stored
+    /// counters, so a report round-trip cannot drift it.
+    pub fn from_value(v: &Value) -> Result<LinkReport> {
+        Ok(LinkReport {
+            link: v.req_str("link")?.to_string(),
+            capacity_bytes_per_sec: v.req_f64("capacity_bytes_per_sec")?,
+            busy_sec: v.req_f64("busy_sec")?,
+            served_bytes: v.req_f64("served_bytes")?,
+            flows: v.req_u64("flows")?,
+            peak_flows: u32::try_from(v.req_u64("peak_flows")?)?,
+            peak_backlog_bytes: v.req_f64("peak_backlog_bytes")?,
+        })
+    }
 }
 
 /// Whole-run communication-compression telemetry. Present only when a wire
@@ -318,6 +335,20 @@ impl CompressionReport {
             .set("grad_elems_total", self.grad_elems_total)
             .set("grad_elems_sent", self.grad_elems_sent);
         v
+    }
+
+    /// Parse a table produced by [`Self::to_value`].
+    pub fn from_value(v: &Value) -> Result<CompressionReport> {
+        Ok(CompressionReport {
+            codec: v.req_str("codec")?.to_string(),
+            uncompressed_bytes: v.req_u64("uncompressed_bytes")?,
+            compressed_bytes: v.req_u64("compressed_bytes")?,
+            bytes_saved: v.req_u64("bytes_saved")?,
+            effective_compression_ratio: v.req_f64("effective_compression_ratio")?,
+            quant_mse: v.req_f64("quant_mse")?,
+            grad_elems_total: v.req_u64("grad_elems_total")?,
+            grad_elems_sent: v.req_u64("grad_elems_sent")?,
+        })
     }
 }
 
@@ -578,6 +609,45 @@ impl RunReport {
     pub fn to_json(&self) -> String {
         self.to_value().to_json_pretty()
     }
+
+    /// Parse a tree produced by [`Self::to_value`] (the `top --report`
+    /// offline path). Optional sections parse back to their absent forms, so
+    /// `from_value(to_value(r)) == r` for every report shape.
+    pub fn from_value(v: &Value) -> Result<RunReport> {
+        let epochs = match v.get("epochs") {
+            Some(Value::Arr(items)) => {
+                items.iter().map(EpochReport::from_value).collect::<Result<Vec<_>>>()?
+            }
+            other => anyhow::bail!("key 'epochs': expected array, got {other:?}"),
+        };
+        let links = match v.get("links") {
+            Some(Value::Arr(items)) => {
+                items.iter().map(LinkReport::from_value).collect::<Result<Vec<_>>>()?
+            }
+            Some(other) => anyhow::bail!("key 'links': expected array, got {other:?}"),
+            None => Vec::new(),
+        };
+        Ok(RunReport {
+            engine: v.req_str("engine")?.to_string(),
+            dataset: v.req_str("dataset")?.to_string(),
+            num_workers: v.req_u32("num_workers")?,
+            batch_size: v.req_u32("batch_size")?,
+            epochs,
+            total_time: v.req_f64("total_time")?,
+            setup_time: v.req_f64("setup_time")?,
+            cpu_energy_j: v.req_f64("cpu_energy_j")?,
+            gpu_energy_j: v.req_f64("gpu_energy_j")?,
+            links,
+            compression: match v.get("compression") {
+                Some(c) => Some(CompressionReport::from_value(c)?),
+                None => None,
+            },
+            recovery: match v.get("recovery") {
+                Some(r) => Some(RecoveryReport::from_value(r)?),
+                None => None,
+            },
+        })
+    }
 }
 
 #[cfg(test)]
@@ -632,6 +702,74 @@ mod tests {
             ..Default::default()
         }]);
         assert!(r.loss_curve().is_empty());
+    }
+
+    #[test]
+    fn run_report_round_trips_minimal_shape() {
+        let r = RunReport {
+            engine: "rapid".to_string(),
+            dataset: "tiny".to_string(),
+            num_workers: 2,
+            batch_size: 32,
+            epochs: vec![EpochReport { epoch: 0, worker: 1, steps: 3, ..Default::default() }],
+            total_time: 1.5,
+            setup_time: 0.25,
+            cpu_energy_j: 10.0,
+            gpu_energy_j: 20.0,
+            ..Default::default()
+        };
+        let back = RunReport::from_value(&r.to_value()).unwrap();
+        assert_eq!(back, r);
+        assert!(back.links.is_empty());
+        assert!(back.compression.is_none() && back.recovery.is_none());
+    }
+
+    #[test]
+    fn run_report_round_trips_every_optional_section() {
+        let r = RunReport {
+            engine: "quant-pull".to_string(),
+            dataset: "tiny".to_string(),
+            num_workers: 1,
+            batch_size: 16,
+            epochs: vec![EpochReport {
+                epoch: 0,
+                cache_plan: Some(CacheReport {
+                    n_hot: 64,
+                    hits: 10,
+                    misses: 2,
+                    hit_rate: 10.0 / 12.0,
+                    resize_events: 1,
+                }),
+                ..Default::default()
+            }],
+            links: vec![LinkReport {
+                link: "host-up:0".to_string(),
+                capacity_bytes_per_sec: 1e9,
+                busy_sec: 0.5,
+                served_bytes: 1e6,
+                flows: 7,
+                peak_flows: 3,
+                peak_backlog_bytes: 4096.0,
+            }],
+            compression: Some(CompressionReport {
+                codec: "int8".to_string(),
+                uncompressed_bytes: 4000,
+                compressed_bytes: 1100,
+                bytes_saved: 2900,
+                effective_compression_ratio: 4000.0 / 1100.0,
+                quant_mse: 1e-4,
+                grad_elems_total: 100,
+                grad_elems_sent: 10,
+            }),
+            recovery: Some(RecoveryReport { events: 2, moved_rows: 5, ..Default::default() }),
+            ..Default::default()
+        };
+        let back = RunReport::from_value(&r.to_value()).unwrap();
+        assert_eq!(back, r);
+        // And through actual JSON bytes (the top --report path).
+        let json = r.to_json();
+        let back2 = RunReport::from_value(&Value::from_json(&json).unwrap()).unwrap();
+        assert_eq!(back2, r);
     }
 
     #[test]

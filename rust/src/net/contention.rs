@@ -35,6 +35,7 @@
 
 use super::{FlowSpec, LinkUtilization, NetFabric};
 use crate::config::{FabricConfig, LinkKey};
+use crate::util::value::Value;
 use std::collections::BTreeMap;
 
 /// Residual service (bytes) below which a flow counts as drained — absorbs
@@ -115,6 +116,9 @@ pub struct ContentionNet {
     flows: Vec<Flow>,
     stages: Vec<Stage>,
     now: f64,
+    /// Optional trace sink + the epoch tag for its records. Strictly
+    /// observational: with `None` the model takes the exact pre-trace paths.
+    tracer: Option<(crate::trace::TraceHandle, u32)>,
 }
 
 impl ContentionNet {
@@ -130,7 +134,15 @@ impl ContentionNet {
             flows: Vec::new(),
             stages: Vec::new(),
             now: 0.0,
+            tracer: None,
         }
+    }
+
+    /// Attach a virtual-time trace sink; flow enqueues and drains journal as
+    /// `flow-enqueue` / `flow-drain` records tagged with `epoch`.
+    pub fn with_tracer(mut self, trace: crate::trace::TraceHandle, epoch: u32) -> Self {
+        self.tracer = Some((trace, epoch));
+        self
     }
 
     /// Link indices of the `(src, dst)` route, derived once per pair.
@@ -329,6 +341,14 @@ impl ContentionNet {
                 l.backlog_bytes += spec.service_bytes;
                 l.peak_backlog_bytes = l.peak_backlog_bytes.max(l.backlog_bytes);
             }
+            if let Some((trace, epoch)) = &self.tracer {
+                let mut fields = Value::table();
+                fields.set("src", spec.src);
+                fields.set("dst", spec.dst);
+                fields.set("bytes", spec.bytes);
+                fields.set("flow", spec.seq);
+                trace.event(worker, *epoch, self.now, "flow-enqueue", fields);
+            }
             self.flows.push(Flow {
                 stage,
                 route,
@@ -391,13 +411,13 @@ impl ContentionNet {
         let drained_any = !drained.is_empty();
         let mut finished = Vec::new();
         for fi in drained {
-            let (stage_idx, residual) = {
+            let (stage_idx, residual, src, dst, fseq) = {
                 let f = &mut self.flows[fi];
                 f.done = true;
                 f.transmitting = false;
                 let r = f.remaining;
                 f.remaining = 0.0;
-                (f.stage, r)
+                (f.stage, r, f.src, f.dst, f.seq)
             };
             for li_pos in 0..self.flows[fi].route.len() {
                 let li = self.flows[fi].route[li_pos];
@@ -409,8 +429,16 @@ impl ContentionNet {
             }
             let st = &mut self.stages[stage_idx];
             st.outstanding -= 1;
+            let stage_worker = st.worker;
             if st.outstanding == 0 {
                 finished.push((st.worker, st.local_cost));
+            }
+            if let Some((trace, epoch)) = &self.tracer {
+                let mut fields = Value::table();
+                fields.set("src", src);
+                fields.set("dst", dst);
+                fields.set("flow", fseq);
+                trace.event(stage_worker, *epoch, now, "flow-drain", fields);
             }
         }
         // Prune drained flows (relative order preserved → deterministic):

@@ -1,0 +1,334 @@
+//! Deterministic virtual-time trace journal.
+//!
+//! A [`TraceSink`] receives span/event records keyed by
+//! `(epoch, virtual_time, worker, seq)` — never wall-clock, so journals obey
+//! the same determinism contracts the lint xtask enforces on the simulator
+//! (see `sim/README.md`, "Determinism contracts" and "Observability").
+//! Emission sites: `sim::cluster` stage transitions, `net::contention` flow
+//! enqueue/drain, the adaptive-cache resize controller, the recovery driver,
+//! and per-(worker, epoch) report summaries from the worker pipeline.
+//!
+//! Records buffer per worker in bounded rings (drop-oldest, with a drop
+//! counter) inside a [`TraceJournal`]; the cloneable [`TraceHandle`] is the
+//! doorway the coordinator threads through `RunContext`. Export is JSONL —
+//! one compact JSON object per record, merged across workers in the global
+//! `(epoch, t, worker, seq)` order. Because `seq` is allocated per worker in
+//! that worker's own deterministic emission order, the merged byte stream is
+//! identical at any `RAPIDGNN_THREADS` setting: parallel trace-mode workers
+//! each write only their own ring, and the cluster/contention paths emit from
+//! the single-threaded event loop. Tracing is strictly observational — a
+//! sink never feeds back into scheduling, pricing, or training state.
+
+use crate::util::value::Value;
+use crate::Result;
+use anyhow::Context;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Default per-worker ring capacity (records). Generous for the simulated
+/// scales in this repo; overflow drops the oldest records and counts them.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// One journal entry. `seq` is allocated per worker, monotone in that
+/// worker's emission order, so `(epoch, t, worker, seq)` is a total order
+/// over a run's records that is independent of thread count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Epoch the record belongs to (the virtual clock restarts per epoch).
+    pub epoch: u32,
+    /// Virtual time within the epoch (seconds on the simulated clock).
+    pub t: f64,
+    /// Worker the record is attributed to.
+    pub worker: u32,
+    /// Per-worker emission sequence number (ties on `(epoch, t)`).
+    pub seq: u64,
+    /// Record kind: `epoch`, `stage-done`, `consume-done`, `flow-enqueue`,
+    /// `flow-drain`, `cache-resize`, `recovery`.
+    pub kind: String,
+    /// Kind-specific payload (always a table).
+    pub fields: Value,
+}
+
+impl TraceRecord {
+    /// Serialize to a [`Value`] table (keys emit alphabetically:
+    /// `epoch, fields, kind, seq, t, worker`).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("epoch", self.epoch)
+            .set("t", self.t)
+            .set("worker", self.worker)
+            .set("seq", self.seq)
+            .set("kind", self.kind.as_str())
+            .set("fields", self.fields.clone());
+        v
+    }
+
+    /// Parse a table produced by [`Self::to_value`] (JSONL replay).
+    pub fn from_value(v: &Value) -> Result<TraceRecord> {
+        Ok(TraceRecord {
+            epoch: v.req_u32("epoch")?,
+            t: v.req_f64("t")?,
+            worker: v.req_u32("worker")?,
+            seq: v.req_u64("seq")?,
+            kind: v.req_str("kind")?.to_string(),
+            fields: v.req_table("fields")?.clone(),
+        })
+    }
+
+    /// The global sort key (total order via `f64::total_cmp` on `t`).
+    fn sort_key(&self) -> (u32, f64, u32, u64) {
+        (self.epoch, self.t, self.worker, self.seq)
+    }
+}
+
+/// Anything that can absorb trace records. The simulator emits through this
+/// trait so tests can plug counting/filtering sinks without touching the
+/// journal; all output must flow through a sink (the `trace-sink` lint rule
+/// forbids direct console printing anywhere under `src/trace/`).
+pub trait TraceSink: Send + Sync {
+    /// Absorb one record. `t` is virtual time within `epoch`.
+    fn record(&self, worker: u32, epoch: u32, t: f64, kind: &str, fields: Value);
+}
+
+/// One worker's bounded record ring.
+#[derive(Debug, Default)]
+struct WorkerRing {
+    records: VecDeque<TraceRecord>,
+    /// Next per-worker sequence number (never reset, so ordering survives
+    /// drops).
+    next_seq: u64,
+    /// Records evicted by the capacity bound.
+    dropped: u64,
+}
+
+/// The concrete journal: per-worker bounded rings behind one mutex. The
+/// lock is held only for a push or a snapshot — emission sites are either
+/// the single-threaded event loop or per-worker threads touching disjoint
+/// rings, so contention is negligible and ordering never depends on lock
+/// acquisition order.
+#[derive(Debug)]
+pub struct TraceJournal {
+    capacity: usize,
+    rings: Mutex<BTreeMap<u32, WorkerRing>>,
+}
+
+impl TraceJournal {
+    /// Journal with the given per-worker ring capacity (min 1).
+    pub fn with_capacity(capacity: usize) -> TraceJournal {
+        TraceJournal { capacity: capacity.max(1), rings: Mutex::new(BTreeMap::new()) }
+    }
+}
+
+impl TraceSink for TraceJournal {
+    fn record(&self, worker: u32, epoch: u32, t: f64, kind: &str, fields: Value) {
+        let mut rings = self.rings.lock().expect("trace journal lock");
+        let ring = rings.entry(worker).or_default();
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        if ring.records.len() == self.capacity {
+            ring.records.pop_front();
+            ring.dropped += 1;
+        }
+        ring.records.push_back(TraceRecord {
+            epoch,
+            t,
+            worker,
+            seq,
+            kind: kind.to_string(),
+            fields,
+        });
+    }
+}
+
+/// Cloneable, shareable handle over a [`TraceJournal`]. This is what rides
+/// in `RunContext.trace` and what `--trace-out` exports from.
+#[derive(Debug, Clone)]
+pub struct TraceHandle(Arc<TraceJournal>);
+
+impl Default for TraceHandle {
+    fn default() -> Self {
+        TraceHandle::new()
+    }
+}
+
+impl TraceHandle {
+    /// Handle over a fresh journal with the default ring capacity.
+    pub fn new() -> TraceHandle {
+        TraceHandle(Arc::new(TraceJournal::with_capacity(DEFAULT_RING_CAPACITY)))
+    }
+
+    /// Handle over a fresh journal with an explicit per-worker capacity.
+    pub fn with_capacity(capacity: usize) -> TraceHandle {
+        TraceHandle(Arc::new(TraceJournal::with_capacity(capacity)))
+    }
+
+    /// Emit one record (delegates to [`TraceSink::record`]).
+    pub fn event(&self, worker: u32, epoch: u32, t: f64, kind: &str, fields: Value) {
+        self.0.record(worker, epoch, t, kind, fields);
+    }
+
+    /// Snapshot every buffered record, merged across workers into the global
+    /// deterministic order `(epoch, t, worker, seq)`.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        let rings = self.0.rings.lock().expect("trace journal lock");
+        let mut out: Vec<TraceRecord> = Vec::new();
+        for ring in rings.values() {
+            out.extend(ring.records.iter().cloned());
+        }
+        out.sort_by(|a, b| {
+            let (ae, at, aw, asq) = a.sort_key();
+            let (be, bt, bw, bsq) = b.sort_key();
+            ae.cmp(&be)
+                .then(at.total_cmp(&bt))
+                .then(aw.cmp(&bw))
+                .then(asq.cmp(&bsq))
+        });
+        out
+    }
+
+    /// Total buffered records across all rings.
+    pub fn len(&self) -> usize {
+        let rings = self.0.rings.lock().expect("trace journal lock");
+        rings.values().map(|r| r.records.len()).sum()
+    }
+
+    /// True when nothing has been recorded (or everything was dropped).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total records evicted by the per-worker capacity bound.
+    pub fn dropped(&self) -> u64 {
+        let rings = self.0.rings.lock().expect("trace journal lock");
+        rings.values().map(|r| r.dropped).sum()
+    }
+
+    /// Render the journal as JSONL: one compact JSON object per record in
+    /// the global order, each line terminated by `\n`. Byte-identical at
+    /// any `RAPIDGNN_THREADS` setting for the same run.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for rec in self.records() {
+            out.push_str(&rec.to_value().to_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write [`Self::to_jsonl`] to `path`.
+    pub fn write_jsonl(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("create trace dir {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("write trace journal {}", path.display()))
+    }
+}
+
+/// Parse a JSONL journal back into records (offline `top --trace` replay).
+/// Blank lines are skipped; records are re-sorted into the global order so
+/// hand-concatenated journals still replay deterministically.
+pub fn parse_jsonl(text: &str) -> Result<Vec<TraceRecord>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Value::from_json(line)
+            .with_context(|| format!("trace line {}: invalid JSON", i + 1))?;
+        out.push(
+            TraceRecord::from_value(&v)
+                .with_context(|| format!("trace line {}: invalid record", i + 1))?,
+        );
+    }
+    out.sort_by(|a, b| {
+        let (ae, at, aw, asq) = a.sort_key();
+        let (be, bt, bw, bsq) = b.sort_key();
+        ae.cmp(&be).then(at.total_cmp(&bt)).then(aw.cmp(&bw)).then(asq.cmp(&bsq))
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fields(k: &str, v: u64) -> Value {
+        let mut t = Value::table();
+        t.set(k, v);
+        t
+    }
+
+    #[test]
+    fn records_merge_in_global_order() {
+        let h = TraceHandle::new();
+        // Emit out of worker order with equal times to exercise every key.
+        h.event(1, 0, 2.0, "stage-done", Value::table());
+        h.event(0, 0, 2.0, "stage-done", Value::table());
+        h.event(0, 0, 1.0, "stage-done", Value::table());
+        h.event(1, 1, 0.5, "stage-done", Value::table());
+        h.event(0, 0, 2.0, "consume-done", Value::table());
+        let keys: Vec<(u32, f64, u32, u64)> =
+            h.records().iter().map(|r| (r.epoch, r.t, r.worker, r.seq)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (0, 1.0, 0, 1),
+                (0, 2.0, 0, 0),
+                (0, 2.0, 0, 2),
+                (0, 2.0, 1, 0),
+                (1, 0.5, 1, 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn bounded_ring_drops_oldest_and_counts() {
+        let h = TraceHandle::with_capacity(2);
+        for i in 0..5u64 {
+            h.event(0, 0, i as f64, "stage-done", fields("i", i));
+        }
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.dropped(), 3);
+        let recs = h.records();
+        // Oldest dropped; seq numbering survives the eviction.
+        assert_eq!(recs[0].seq, 3);
+        assert_eq!(recs[1].seq, 4);
+    }
+
+    #[test]
+    fn jsonl_round_trips_and_is_sorted() {
+        let h = TraceHandle::new();
+        h.event(1, 0, 0.25, "flow-drain", fields("bytes", 128));
+        h.event(0, 0, 0.5, "epoch", fields("steps", 3));
+        let text = h.to_jsonl();
+        assert_eq!(text.lines().count(), 2);
+        let parsed = parse_jsonl(&text).unwrap();
+        assert_eq!(parsed, h.records());
+        // Keys emit alphabetically from the Value table.
+        let first = text.lines().next().unwrap();
+        assert!(first.starts_with("{\"epoch\":"));
+        assert!(first.contains("\"kind\":\"flow-drain\""));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(parse_jsonl("not json\n").is_err());
+        assert!(parse_jsonl("{\"epoch\":0}\n").is_err());
+        assert!(parse_jsonl("\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn clones_share_one_journal() {
+        let h = TraceHandle::new();
+        let h2 = h.clone();
+        h2.event(0, 0, 0.0, "epoch", Value::table());
+        assert_eq!(h.len(), 1);
+        assert!(!h.is_empty());
+    }
+}

@@ -1,0 +1,251 @@
+//! Dashboard application state and layout.
+//!
+//! [`App`] owns the report being displayed and knows how to lay the widgets
+//! out into one content-sized [`Frame`]. It is constructed either from a
+//! finished [`RunReport`] (`top --report`, or live mode after the run
+//! completes) or replayed from a trace journal's per-(worker, epoch)
+//! `epoch` records (`top --trace`). Rendering is a pure function of the
+//! report — the CLI layer owns the terminal, the render loop never reads a
+//! clock, and nothing here prints.
+
+use crate::metrics::{EpochReport, RunReport};
+use crate::trace::TraceRecord;
+use crate::tui::frame::{Frame, Style};
+use crate::tui::widgets::{cache, counters, links, timeline};
+use crate::Result;
+
+/// Dashboard state: the report under display.
+#[derive(Debug, Clone)]
+pub struct App {
+    /// The run being rendered.
+    pub report: RunReport,
+}
+
+impl App {
+    /// Dashboard over a finished (or partially assembled) report.
+    pub fn from_report(report: RunReport) -> App {
+        App { report }
+    }
+
+    /// Rebuild a replay report from a journal's `epoch` records (other record
+    /// kinds are ignored here — they exist for machine analysis). Run-level
+    /// identity is not in the journal, so replay labels it as such.
+    pub fn from_trace_records(records: &[TraceRecord]) -> Result<App> {
+        let mut report = RunReport {
+            engine: "(trace replay)".to_string(),
+            dataset: "(trace replay)".to_string(),
+            ..Default::default()
+        };
+        for rec in records.iter().filter(|r| r.kind == "epoch") {
+            report.epochs.push(EpochReport::from_value(&rec.fields)?);
+        }
+        report.num_workers = report.epochs.iter().map(|e| e.worker + 1).max().unwrap_or(0);
+        // Total time = max over workers of their summed epoch times, the same
+        // convention the coordinator uses.
+        let mut per_worker = vec![0.0f64; report.num_workers as usize];
+        for e in &report.epochs {
+            per_worker[e.worker as usize] += e.epoch_time;
+        }
+        report.total_time = per_worker.iter().cloned().fold(0.0, f64::max);
+        Ok(App { report })
+    }
+
+    /// A copy restricted to epochs `<= upto` — the replay loop renders one
+    /// frame per epoch by truncating the full report.
+    pub fn through_epoch(&self, upto: u32) -> App {
+        let mut report = self.report.clone();
+        report.epochs.retain(|e| e.epoch <= upto);
+        App { report }
+    }
+
+    /// Highest epoch index present (None on an empty report).
+    pub fn last_epoch(&self) -> Option<u32> {
+        self.report.epochs.iter().map(|e| e.epoch).max()
+    }
+
+    /// Rows the full layout needs at the moment (content-sized).
+    fn height(&self) -> usize {
+        let r = &self.report;
+        let links_rows = if r.links.is_empty() { 2 } else { 1 + r.links.len() };
+        let workers = timeline::worker_totals(r).len();
+        let timeline_rows = if workers == 0 { 2 } else { 1 + workers };
+        // title + summary + blank, then panels separated by blank rows.
+        3 + links_rows + 1 + 2 + 1 + timeline_rows + 1 + 2
+    }
+
+    /// Render the full dashboard into a content-sized frame of `width`
+    /// columns.
+    pub fn render(&self, width: usize) -> Frame {
+        let r = &self.report;
+        let mut f = Frame::new(width, self.height());
+        let epochs = r.epochs.iter().map(|e| e.epoch).max().map_or(0, |e| e + 1);
+        f.text(
+            0,
+            0,
+            &format!(
+                "rapidgnn top — {} on {} ({} workers, {} epochs)",
+                r.engine, r.dataset, r.num_workers, epochs
+            ),
+            Style::Title,
+        );
+        f.text(
+            0,
+            1,
+            &format!(
+                "total {:.3}s  setup {:.3}s  cpu {:.1}J  gpu {:.1}J",
+                r.total_time, r.setup_time, r.cpu_energy_j, r.gpu_energy_j
+            ),
+            Style::Plain,
+        );
+        let mut y = 3;
+        y += links::render(&mut f, 0, y, &r.links) + 1;
+        y += cache::render(&mut f, 0, y, width, r) + 1;
+        y += timeline::render(&mut f, 0, y, r) + 1;
+        counters::render(&mut f, 0, y, r);
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{CacheStats, CompressionReport, LinkReport, RecoveryReport};
+    use crate::util::value::Value;
+
+    fn epoch(epoch: u32, worker: u32, time: f64, lookups: u64, hits: u64) -> EpochReport {
+        EpochReport {
+            epoch,
+            worker,
+            epoch_time: time,
+            cache: CacheStats { lookups, hits },
+            ..Default::default()
+        }
+    }
+
+    /// Fixture with every optional section present.
+    fn full_report() -> RunReport {
+        RunReport {
+            engine: "rapid".to_string(),
+            dataset: "tiny".to_string(),
+            num_workers: 2,
+            batch_size: 32,
+            epochs: vec![epoch(0, 0, 1.0, 10, 5), epoch(0, 1, 2.0, 10, 10)],
+            total_time: 2.0,
+            setup_time: 0.5,
+            cpu_energy_j: 1.0,
+            gpu_energy_j: 2.0,
+            links: vec![LinkReport {
+                link: "host-up:0".to_string(),
+                capacity_bytes_per_sec: 1000.0,
+                busy_sec: 2.0,
+                served_bytes: 1000.0,
+                flows: 4,
+                peak_flows: 2,
+                peak_backlog_bytes: 64.0,
+            }],
+            compression: Some(CompressionReport {
+                codec: "int8".to_string(),
+                effective_compression_ratio: 4.0,
+                ..Default::default()
+            }),
+            recovery: Some(RecoveryReport { events: 1, ..Default::default() }),
+        }
+    }
+
+    #[test]
+    fn snapshot_all_sections_absent() {
+        let report = RunReport {
+            engine: "rapid".to_string(),
+            dataset: "tiny".to_string(),
+            num_workers: 1,
+            epochs: vec![epoch(0, 0, 2.0, 0, 0)],
+            total_time: 2.0,
+            setup_time: 0.5,
+            ..Default::default()
+        };
+        let frame = App::from_report(report).render(60);
+        let expected = format!(
+            "rapidgnn top — rapid on tiny (1 workers, 1 epochs)\n\
+             total 2.000s  setup 0.500s  cpu 0.0J  gpu 0.0J\n\
+             \n\
+             links\n\
+             \x20 (no contention telemetry)\n\
+             \n\
+             cache hit-rate\n\
+             \x20 (no cache lookups)\n\
+             \n\
+             worker timelines\n\
+             \x20 w0   {}     2.000s\n\
+             \n\
+             compression: —\n\
+             recovery: —",
+            "=".repeat(24)
+        );
+        assert_eq!(frame.render_plain(), expected);
+    }
+
+    #[test]
+    fn full_report_renders_every_widget() {
+        let frame = App::from_report(full_report()).render(70);
+        let plain = frame.render_plain();
+        for needle in [
+            "rapidgnn top — rapid on tiny (2 workers, 1 epochs)",
+            "host-up:0",
+            "cache hit-rate",
+            "worker timelines",
+            "STRAGGLER",
+            "compression: int8 4.00x",
+            "recovery: 1 events",
+        ] {
+            assert!(plain.contains(needle), "missing {needle:?} in:\n{plain}");
+        }
+    }
+
+    #[test]
+    fn trace_replay_rebuilds_epochs() {
+        let full = full_report();
+        let records: Vec<TraceRecord> = full
+            .epochs
+            .iter()
+            .enumerate()
+            .map(|(i, e)| TraceRecord {
+                epoch: e.epoch,
+                t: e.epoch_time,
+                worker: e.worker,
+                seq: i as u64,
+                kind: "epoch".to_string(),
+                fields: e.to_value(),
+            })
+            .collect();
+        let app = App::from_trace_records(&records).unwrap();
+        assert_eq!(app.report.epochs, full.epochs);
+        assert_eq!(app.report.num_workers, 2);
+        assert!((app.report.total_time - 2.0).abs() < 1e-12);
+        assert_eq!(app.last_epoch(), Some(0));
+    }
+
+    #[test]
+    fn non_epoch_records_are_ignored() {
+        let rec = TraceRecord {
+            epoch: 0,
+            t: 0.0,
+            worker: 0,
+            seq: 0,
+            kind: "stage-done".to_string(),
+            fields: Value::table(),
+        };
+        let app = App::from_trace_records(&[rec]).unwrap();
+        assert!(app.report.epochs.is_empty());
+        assert_eq!(app.last_epoch(), None);
+    }
+
+    #[test]
+    fn through_epoch_truncates_for_replay() {
+        let mut report = full_report();
+        report.epochs.push(epoch(1, 0, 1.0, 5, 5));
+        let app = App::from_report(report);
+        let first = app.through_epoch(0);
+        assert!(first.report.epochs.iter().all(|e| e.epoch == 0));
+        assert_eq!(first.report.epochs.len(), 2);
+    }
+}

@@ -1,0 +1,154 @@
+//! Fixed-size character frame buffer with a tiny ANSI style palette.
+//!
+//! The dashboard never prints directly (the `trace-sink` lint rule forbids
+//! console output anywhere under `src/tui/`): widgets draw styled cells into
+//! a [`Frame`], and the frame renders to a `String` — [`Frame::render_plain`]
+//! for snapshot tests and piped output, [`Frame::render_ansi`] for live
+//! terminals. The caller (the CLI layer) owns the one place bytes reach
+//! stdout.
+
+/// Cell style. Maps to one ANSI SGR sequence in [`Frame::render_ansi`] and
+/// is invisible in [`Frame::render_plain`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Style {
+    /// Default foreground.
+    Plain,
+    /// Section titles (bold).
+    Title,
+    /// Gauge/bar fill (cyan).
+    Bar,
+    /// Saturated / straggler highlight (red).
+    Hot,
+    /// Caution highlight (yellow).
+    Warn,
+}
+
+impl Style {
+    /// The SGR escape that selects this style.
+    fn sgr(self) -> &'static str {
+        match self {
+            Style::Plain => "\x1b[0m",
+            Style::Title => "\x1b[1m",
+            Style::Bar => "\x1b[36m",
+            Style::Hot => "\x1b[31m",
+            Style::Warn => "\x1b[33m",
+        }
+    }
+}
+
+/// A `width × height` grid of styled characters. Writes outside the bounds
+/// are clipped, so widgets never need their own range checks.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// Columns.
+    pub width: usize,
+    /// Rows.
+    pub height: usize,
+    cells: Vec<(char, Style)>,
+}
+
+impl Frame {
+    /// Blank frame (spaces, [`Style::Plain`]).
+    pub fn new(width: usize, height: usize) -> Frame {
+        Frame { width, height, cells: vec![(' ', Style::Plain); width * height] }
+    }
+
+    /// Write one cell; out-of-bounds writes are ignored.
+    pub fn put(&mut self, x: usize, y: usize, ch: char, style: Style) {
+        if x < self.width && y < self.height {
+            self.cells[y * self.width + x] = (ch, style);
+        }
+    }
+
+    /// Write a string starting at `(x, y)`, clipped at the right edge.
+    pub fn text(&mut self, x: usize, y: usize, s: &str, style: Style) {
+        for (i, ch) in s.chars().enumerate() {
+            self.put(x + i, y, ch, style);
+        }
+    }
+
+    /// Repeat `ch` horizontally for `len` cells.
+    pub fn hline(&mut self, x: usize, y: usize, len: usize, ch: char, style: Style) {
+        for i in 0..len {
+            self.put(x + i, y, ch, style);
+        }
+    }
+
+    /// Render without styling: rows joined by `\n`, trailing spaces trimmed
+    /// per row (stable bytes for snapshot tests), no trailing newline.
+    pub fn render_plain(&self) -> String {
+        let mut out = String::new();
+        for y in 0..self.height {
+            if y > 0 {
+                out.push('\n');
+            }
+            let row: String =
+                self.cells[y * self.width..(y + 1) * self.width].iter().map(|c| c.0).collect();
+            out.push_str(row.trim_end());
+        }
+        out
+    }
+
+    /// Render with ANSI styling. Escape sequences are emitted only on style
+    /// changes, each row ends with a reset, rows join with `\r\n` (the live
+    /// loop redraws with the cursor parked at home).
+    pub fn render_ansi(&self) -> String {
+        let mut out = String::new();
+        for y in 0..self.height {
+            if y > 0 {
+                out.push_str("\r\n");
+            }
+            let mut current = Style::Plain;
+            for (ch, style) in &self.cells[y * self.width..(y + 1) * self.width] {
+                if *style != current {
+                    out.push_str(style.sgr());
+                    current = *style;
+                }
+                out.push(*ch);
+            }
+            if current != Style::Plain {
+                out.push_str(Style::Plain.sgr());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_and_text_clip_at_bounds() {
+        let mut f = Frame::new(4, 2);
+        f.text(2, 0, "abcd", Style::Plain); // clips to "ab"
+        f.put(0, 5, 'x', Style::Plain); // ignored
+        f.put(9, 0, 'x', Style::Plain); // ignored
+        assert_eq!(f.render_plain(), "  ab\n");
+    }
+
+    #[test]
+    fn plain_render_trims_trailing_spaces() {
+        let mut f = Frame::new(6, 2);
+        f.text(0, 0, "hi", Style::Title);
+        f.hline(0, 1, 3, '-', Style::Bar);
+        assert_eq!(f.render_plain(), "hi\n---");
+    }
+
+    #[test]
+    fn ansi_render_switches_styles_minimally() {
+        let mut f = Frame::new(3, 1);
+        f.put(0, 0, 'a', Style::Hot);
+        f.put(1, 0, 'b', Style::Hot);
+        f.put(2, 0, 'c', Style::Plain);
+        assert_eq!(f.render_ansi(), "\x1b[31mab\x1b[0mc");
+    }
+
+    #[test]
+    fn ansi_render_resets_at_row_end() {
+        let mut f = Frame::new(1, 2);
+        f.put(0, 0, 'a', Style::Bar);
+        f.put(0, 1, 'b', Style::Plain);
+        assert_eq!(f.render_ansi(), "\x1b[36ma\x1b[0m\r\nb");
+    }
+}

@@ -1,0 +1,19 @@
+//! `rapidgnn top` dashboard: a std-only ANSI terminal UI over run telemetry.
+//!
+//! No TUI crate exists in this offline environment, so the stack is
+//! homegrown and deliberately small, split the way a ratatui app would be:
+//! [`frame`] is the character buffer + style palette, [`widgets`] are pure
+//! data→cells panels (each with fixed-size frame snapshot tests), and
+//! [`app`] owns the state and layout. Nothing in this module touches the
+//! wall clock or prints — the render loop is driven by the CLI layer off
+//! *virtual-time* epoch boundaries (live mode replays the finished run's
+//! journal; the simulator's workers share no real-time epoch barrier to
+//! animate against), and the `trace-sink` lint rule keeps console output
+//! confined to that caller.
+
+pub mod app;
+pub mod frame;
+pub mod widgets;
+
+pub use app::App;
+pub use frame::{Frame, Style};

@@ -1,0 +1,82 @@
+//! Compression and recovery counter footer.
+//!
+//! Two rows summarizing the run-level optional telemetry sections: the
+//! compression codec with its effective ratio and saved bytes, and the
+//! recovery event/movement/lost-work counters. Sections a run never produced
+//! render as an em-dash placeholder, mirroring how the serialized report
+//! omits them entirely.
+
+use crate::metrics::RunReport;
+use crate::tui::frame::{Frame, Style};
+
+/// Draw the widget at `(x, y)`; returns rows used (always 2).
+pub fn render(f: &mut Frame, x: usize, y: usize, report: &RunReport) -> usize {
+    let comp = match &report.compression {
+        None => "compression: —".to_string(),
+        Some(c) => format!(
+            "compression: {} {:.2}x, saved {} B, grad {}/{}",
+            c.codec,
+            c.effective_compression_ratio,
+            c.bytes_saved,
+            c.grad_elems_sent,
+            c.grad_elems_total
+        ),
+    };
+    let rec = match &report.recovery {
+        None => "recovery: —".to_string(),
+        Some(r) => format!(
+            "recovery: {} events, {} ckpts, {} rows moved, lost {:.3}s",
+            r.events, r.checkpoints_written, r.moved_rows, r.lost_work_time
+        ),
+    };
+    let comp_style = if report.compression.is_some() { Style::Bar } else { Style::Plain };
+    let rec_style = if report.recovery.is_some() { Style::Warn } else { Style::Plain };
+    f.text(x, y, &comp, comp_style);
+    f.text(x, y + 1, &rec, rec_style);
+    2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{CompressionReport, RecoveryReport};
+
+    #[test]
+    fn snapshot_both_absent() {
+        let r = RunReport::default();
+        let mut f = Frame::new(40, 2);
+        assert_eq!(render(&mut f, 0, 0, &r), 2);
+        assert_eq!(f.render_plain(), "compression: —\nrecovery: —");
+    }
+
+    #[test]
+    fn snapshot_both_present() {
+        let r = RunReport {
+            compression: Some(CompressionReport {
+                codec: "int8".to_string(),
+                uncompressed_bytes: 4000,
+                compressed_bytes: 1000,
+                bytes_saved: 3000,
+                effective_compression_ratio: 4.0,
+                quant_mse: 0.0,
+                grad_elems_total: 100,
+                grad_elems_sent: 10,
+            }),
+            recovery: Some(RecoveryReport {
+                events: 3,
+                checkpoints_written: 2,
+                moved_rows: 42,
+                lost_work_time: 1.5,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut f = Frame::new(60, 2);
+        render(&mut f, 0, 0, &r);
+        assert_eq!(
+            f.render_plain(),
+            "compression: int8 4.00x, saved 3000 B, grad 10/100\n\
+             recovery: 3 events, 2 ckpts, 42 rows moved, lost 1.500s"
+        );
+    }
+}

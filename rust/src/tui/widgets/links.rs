@@ -1,0 +1,97 @@
+//! Per-link utilization heat bars.
+//!
+//! One row per [`LinkReport`]: the stable link label, a fixed-width bar
+//! filled proportionally to mean utilization, and the percentage. Bars at or
+//! above 90% render [`Style::Hot`], above 60% [`Style::Warn`], otherwise
+//! [`Style::Bar`]. With no contention telemetry the widget says so instead
+//! of rendering an empty table.
+
+use crate::metrics::LinkReport;
+use crate::tui::frame::{Frame, Style};
+
+/// Bar width in cells.
+pub const BAR_WIDTH: usize = 20;
+/// Label column width (longer labels are clipped).
+pub const LABEL_WIDTH: usize = 16;
+
+/// Draw the widget at `(x, y)`; returns the number of rows used.
+pub fn render(f: &mut Frame, x: usize, y: usize, links: &[LinkReport]) -> usize {
+    f.text(x, y, "links", Style::Title);
+    if links.is_empty() {
+        f.text(x, y + 1, "  (no contention telemetry)", Style::Plain);
+        return 2;
+    }
+    for (i, link) in links.iter().enumerate() {
+        let row = y + 1 + i;
+        let util = link.utilization().clamp(0.0, 1.0);
+        let fill = (util * BAR_WIDTH as f64).round() as usize;
+        let pct = (util * 100.0).round() as i64;
+        let style = if pct >= 90 {
+            Style::Hot
+        } else if pct > 60 {
+            Style::Warn
+        } else {
+            Style::Bar
+        };
+        let label: String = link.link.chars().take(LABEL_WIDTH).collect();
+        f.text(x + 2, row, &label, Style::Plain);
+        f.put(x + 2 + LABEL_WIDTH + 1, row, '[', Style::Plain);
+        f.hline(x + 2 + LABEL_WIDTH + 2, row, fill, '#', style);
+        f.hline(x + 2 + LABEL_WIDTH + 2 + fill, row, BAR_WIDTH - fill, '-', Style::Plain);
+        f.put(x + 2 + LABEL_WIDTH + 2 + BAR_WIDTH, row, ']', Style::Plain);
+        f.text(x + 2 + LABEL_WIDTH + 2 + BAR_WIDTH + 2, row, &format!("{pct:>3}%"), style);
+    }
+    1 + links.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link(label: &str, capacity: f64, busy: f64, served: f64) -> LinkReport {
+        LinkReport {
+            link: label.to_string(),
+            capacity_bytes_per_sec: capacity,
+            busy_sec: busy,
+            served_bytes: served,
+            flows: 1,
+            peak_flows: 1,
+            peak_backlog_bytes: 0.0,
+        }
+    }
+
+    #[test]
+    fn snapshot_half_and_full_utilization() {
+        let links = vec![
+            link("host-up:0", 1000.0, 2.0, 1000.0), // 50%
+            link("host-up:1", 1000.0, 1.0, 1000.0), // 100%
+        ];
+        let mut f = Frame::new(50, 3);
+        let rows = render(&mut f, 0, 0, &links);
+        assert_eq!(rows, 3);
+        assert_eq!(
+            f.render_plain(),
+            "links\n  host-up:0        [##########----------]  50%\n  \
+             host-up:1        [####################] 100%"
+        );
+    }
+
+    #[test]
+    fn snapshot_absent_telemetry() {
+        let mut f = Frame::new(40, 2);
+        let rows = render(&mut f, 0, 0, &[]);
+        assert_eq!(rows, 2);
+        assert_eq!(f.render_plain(), "links\n  (no contention telemetry)");
+    }
+
+    #[test]
+    fn long_labels_clip_and_idle_links_read_zero() {
+        let links = vec![link("a-very-long-link-label-indeed", 1000.0, 0.0, 0.0)];
+        let mut f = Frame::new(50, 2);
+        render(&mut f, 0, 0, &links);
+        let plain = f.render_plain();
+        assert!(plain.contains("a-very-long-link"), "clipped label missing:\n{plain}");
+        assert!(!plain.contains("label-indeed"), "label not clipped:\n{plain}");
+        assert!(plain.contains("[--------------------]   0%"), "idle bar wrong:\n{plain}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Dashboard widgets: each module draws one telemetry panel into a
+//! [`crate::tui::frame::Frame`] region and returns the rows it used, so the
+//! app layer can stack panels without hard-coded offsets. Widgets are pure
+//! functions of report data — no I/O, no wall-clock, no console output (the
+//! `trace-sink` lint rule enforces the last one).
+
+pub mod cache;
+pub mod counters;
+pub mod links;
+pub mod timeline;

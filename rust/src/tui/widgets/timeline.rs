@@ -1,0 +1,124 @@
+//! Per-worker epoch timelines with straggler highlighting.
+//!
+//! One row per worker: total simulated training time as a bar scaled to the
+//! slowest worker, the time itself, and a `STRAGGLER` tag (rendered
+//! [`Style::Hot`]) when a worker's total exceeds 1.2× the median — the same
+//! heuristic the paper uses to call out imbalance in its timeline plots.
+
+use crate::metrics::RunReport;
+use crate::tui::frame::{Frame, Style};
+
+/// Bar width in cells.
+pub const BAR_WIDTH: usize = 24;
+/// Straggler threshold as a multiple of the median worker total.
+pub const STRAGGLER_FACTOR: f64 = 1.2;
+
+/// Per-worker total epoch time, indexed by worker id (missing workers 0.0).
+pub fn worker_totals(report: &RunReport) -> Vec<f64> {
+    let workers = report.num_workers.max(
+        report.epochs.iter().map(|e| e.worker + 1).max().unwrap_or(0),
+    ) as usize;
+    let mut totals = vec![0.0f64; workers];
+    for e in &report.epochs {
+        totals[e.worker as usize] += e.epoch_time;
+    }
+    totals
+}
+
+/// Median of a non-empty slice (mean of the middle pair on even lengths).
+fn median(values: &[f64]) -> f64 {
+    let mut sorted = values.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len();
+    if n == 0 {
+        0.0
+    } else if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+/// Draw the widget at `(x, y)`; returns rows used.
+pub fn render(f: &mut Frame, x: usize, y: usize, report: &RunReport) -> usize {
+    f.text(x, y, "worker timelines", Style::Title);
+    let totals = worker_totals(report);
+    if totals.is_empty() {
+        f.text(x, y + 1, "  (no epochs reported)", Style::Plain);
+        return 2;
+    }
+    let max = totals.iter().cloned().fold(0.0, f64::max);
+    let med = median(&totals);
+    for (w, total) in totals.iter().enumerate() {
+        let row = y + 1 + w;
+        let fill = if max > 0.0 {
+            ((total / max) * BAR_WIDTH as f64).round() as usize
+        } else {
+            0
+        };
+        let straggler = med > 0.0 && *total > STRAGGLER_FACTOR * med;
+        let style = if straggler { Style::Hot } else { Style::Bar };
+        f.text(x + 2, row, &format!("w{w:<3}"), Style::Plain);
+        f.hline(x + 7, row, fill.min(BAR_WIDTH), '=', style);
+        f.text(x + 7 + BAR_WIDTH + 1, row, &format!("{total:>9.3}s"), Style::Plain);
+        if straggler {
+            f.text(x + 7 + BAR_WIDTH + 12, row, "STRAGGLER", Style::Hot);
+        }
+    }
+    1 + totals.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochReport;
+
+    fn epoch(epoch: u32, worker: u32, time: f64) -> EpochReport {
+        EpochReport { epoch, worker, epoch_time: time, ..Default::default() }
+    }
+
+    fn report(num_workers: u32, epochs: Vec<EpochReport>) -> RunReport {
+        RunReport { num_workers, epochs, ..Default::default() }
+    }
+
+    #[test]
+    fn totals_accumulate_per_worker() {
+        let r = report(3, vec![epoch(0, 0, 1.0), epoch(1, 0, 1.0), epoch(0, 2, 4.0)]);
+        assert_eq!(worker_totals(&r), vec![2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn snapshot_balanced_and_straggler() {
+        // Workers 0/1 at 1.0s, worker 2 at 2.0s: median 1.0, straggler fires.
+        let r = report(
+            3,
+            vec![epoch(0, 0, 1.0), epoch(0, 1, 1.0), epoch(0, 2, 2.0)],
+        );
+        let mut f = Frame::new(60, 4);
+        let rows = render(&mut f, 0, 0, &r);
+        assert_eq!(rows, 4);
+        assert_eq!(
+            f.render_plain(),
+            "worker timelines\n\
+             \x20 w0   ============                 1.000s\n\
+             \x20 w1   ============                 1.000s\n\
+             \x20 w2   ========================     2.000s STRAGGLER"
+        );
+    }
+
+    #[test]
+    fn snapshot_empty_report() {
+        let r = report(0, vec![]);
+        let mut f = Frame::new(40, 2);
+        assert_eq!(render(&mut f, 0, 0, &r), 2);
+        assert_eq!(f.render_plain(), "worker timelines\n  (no epochs reported)");
+    }
+
+    #[test]
+    fn all_equal_times_have_no_straggler() {
+        let r = report(2, vec![epoch(0, 0, 3.0), epoch(0, 1, 3.0)]);
+        let mut f = Frame::new(60, 3);
+        render(&mut f, 0, 0, &r);
+        assert!(!f.render_plain().contains("STRAGGLER"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Seeded trace-sink violation: observability code printing to stdout.
+
+pub fn flush_to_stdout(line: &str) {
+    println!("{line}");
+}

@@ -38,6 +38,7 @@ fn every_rule_class_fires_on_its_seeded_fixture() {
         "thread-spawn",
         "unordered-float-reduce",
         "module-docs",
+        "trace-sink",
     ] {
         assert!(out.contains(&format!("[{rule}]")), "rule {rule} did not fire:\n{out}");
     }

@@ -1,0 +1,153 @@
+//! Tier-1 contract suite for the virtual-time trace journal.
+//!
+//! Pins the two load-bearing guarantees from the observability design:
+//!
+//! 1. **Strictly observational** — attaching a `TraceSink` must not perturb a
+//!    single reported quantity. The traced run's `RunReport` JSON is compared
+//!    byte-for-byte against a sink-free run of the same config.
+//! 2. **Thread-count invariant** — the exported JSONL is byte-identical
+//!    across `RAPIDGNN_THREADS` ∈ {1, 2, 8}, because records are keyed by
+//!    virtual time `(epoch, t, worker, seq)` and never by wall-clock or
+//!    scheduling order.
+//!
+//! Plus coverage that every emission site actually journals: epoch summaries,
+//! cluster stage transitions, contention flow enqueue/drain, adaptive-cache
+//! resizes, and recovery boundary events.
+
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, RunConfig};
+use rapidgnn::coordinator;
+use rapidgnn::trace::{parse_jsonl, TraceHandle};
+use std::collections::BTreeSet;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// One test mutates the process-global `RAPIDGNN_THREADS`; serialize every
+/// trace-rendering test so a run never races the env mutation (cargo's
+/// default harness runs tests in parallel threads).
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Same shape as the golden-trace config: small enough to run in tests,
+/// big enough that every pipeline stage does real work.
+fn base_cfg(engine: Engine) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+    c.engine = engine;
+    c.epochs = 2;
+    c.n_hot = 300;
+    c
+}
+
+/// Run `cfg` with a fresh journal attached; returns (report JSON, journal).
+fn run_traced(cfg: &RunConfig) -> (String, TraceHandle) {
+    let trace = TraceHandle::new();
+    let report = coordinator::RunBuilder::new(cfg.clone())
+        .with_trace(trace.clone())
+        .run()
+        .expect("traced run");
+    (report.to_json(), trace)
+}
+
+fn kinds(trace: &TraceHandle) -> BTreeSet<String> {
+    trace.records().iter().map(|r| r.kind.clone()).collect()
+}
+
+#[test]
+fn tracing_is_strictly_observational() {
+    let _guard = env_lock();
+    let cfg = base_cfg(Engine::Rapid);
+    let plain = coordinator::run(&cfg).expect("plain run").to_json();
+    let (traced, trace) = run_traced(&cfg);
+    assert_eq!(plain, traced, "attaching a trace sink changed the RunReport");
+    assert!(!trace.is_empty(), "traced run journaled nothing");
+    assert!(kinds(&trace).contains("epoch"), "missing epoch summaries: {:?}", kinds(&trace));
+}
+
+#[test]
+fn trace_jsonl_is_byte_identical_across_thread_counts() {
+    let _guard = env_lock();
+    let cfg = base_cfg(Engine::Rapid);
+    let prev = std::env::var("RAPIDGNN_THREADS").ok();
+    std::env::set_var("RAPIDGNN_THREADS", "1");
+    let serial = run_traced(&cfg).1.to_jsonl();
+    for threads in ["2", "8"] {
+        std::env::set_var("RAPIDGNN_THREADS", threads);
+        let parallel = run_traced(&cfg).1.to_jsonl();
+        assert_eq!(serial, parallel, "threads={threads} changed the trace JSONL");
+    }
+    match prev {
+        Some(v) => std::env::set_var("RAPIDGNN_THREADS", v),
+        None => std::env::remove_var("RAPIDGNN_THREADS"),
+    }
+    assert!(!serial.is_empty());
+}
+
+#[test]
+fn contention_run_journals_stage_and_flow_events() {
+    let _guard = env_lock();
+    let mut cfg = base_cfg(Engine::Rapid);
+    cfg.fabric.contention = true;
+    let (_, trace) = run_traced(&cfg);
+    let got = kinds(&trace);
+    for kind in ["epoch", "stage-done", "consume-done", "flow-enqueue", "flow-drain"] {
+        assert!(got.contains(kind), "missing `{kind}` records; journaled kinds: {got:?}");
+    }
+}
+
+#[test]
+fn adaptive_cache_resizes_are_journaled() {
+    let _guard = env_lock();
+    // Deliberately undersized cache with aggressive growth targets: the same
+    // config the adaptive-cache unit tests use to guarantee the controller
+    // fires at least one grow decision.
+    let mut cfg = base_cfg(Engine::AdaptiveCache);
+    cfg.n_hot = 8;
+    cfg.epochs = 6;
+    cfg.engine_params.min_hot = 8;
+    cfg.engine_params.max_hot = 800;
+    cfg.engine_params.target_hit_rate = 0.99;
+    cfg.engine_params.tail_utility = 0.0;
+    let (_, trace) = run_traced(&cfg);
+    let resizes: Vec<_> =
+        trace.records().into_iter().filter(|r| r.kind == "cache-resize").collect();
+    assert!(!resizes.is_empty(), "undersized adaptive run journaled no cache-resize");
+    let first = &resizes[0];
+    let from = first.fields.req_u32("from").expect("from field");
+    let to = first.fields.req_u32("to").expect("to field");
+    assert!(to > from, "first resize of an undersized cache must grow ({from} -> {to})");
+}
+
+#[test]
+fn recovery_events_are_journaled() {
+    let _guard = env_lock();
+    let mut cfg = base_cfg(Engine::Rapid);
+    cfg.failures = "leave:1@1".into();
+    let (_, trace) = run_traced(&cfg);
+    let recs: Vec<_> = trace.records().into_iter().filter(|r| r.kind == "recovery").collect();
+    assert_eq!(recs.len(), 1, "one failure event, one recovery record");
+    assert_eq!(recs[0].worker, 1);
+    assert_eq!(recs[0].epoch, 1);
+    assert_eq!(recs[0].fields.req_str("event").expect("event field"), "worker-leave");
+}
+
+#[test]
+fn records_are_globally_sorted_and_round_trip_through_jsonl() {
+    let _guard = env_lock();
+    let mut cfg = base_cfg(Engine::Rapid);
+    cfg.fabric.contention = true;
+    let (_, trace) = run_traced(&cfg);
+    let records = trace.records();
+    for pair in records.windows(2) {
+        let a = (pair[0].epoch, pair[0].t, pair[0].worker, pair[0].seq);
+        let b = (pair[1].epoch, pair[1].t, pair[1].worker, pair[1].seq);
+        let ordered = a.0 < b.0
+            || (a.0 == b.0 && a.1 < b.1)
+            || (a.0 == b.0 && a.1 == b.1 && (a.2, a.3) <= (b.2, b.3));
+        assert!(ordered, "records out of (epoch, t, worker, seq) order: {a:?} then {b:?}");
+    }
+    let parsed = parse_jsonl(&trace.to_jsonl()).expect("parse our own JSONL");
+    assert_eq!(parsed, records, "JSONL round-trip must be lossless");
+}
