@@ -70,7 +70,7 @@ fn main() -> rapidgnn::Result<()> {
     let mut out = Vec::new();
     let mut stats = Default::default();
     let (_, _, per) = time_until(0.5, || {
-        kv.sync_pull(0, &ids, Some(&mut out), &mut stats);
+        kv.pull(rapidgnn::kvstore::PullRequest::sync(0, &ids), Some(&mut out), &mut stats);
     });
     let gb = (ids.len() * kv.feature_dim() * 4) as f64 / per / 1e9;
     t.row(&[

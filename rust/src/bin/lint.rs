@@ -26,6 +26,12 @@
 //! | `trace-sink`             | no `println!`/`eprintln!` (or `print!`/`eprint!`) inside      |
 //! |                          | `src/trace/` and `src/tui/` — observability code returns      |
 //! |                          | strings/records; only the CLI layer owns stdout.              |
+//! | `charge-ladder`          | no deprecated pre-`ChargeSpec` charge ladder (`charge_rpc*`,  |
+//! |                          | `charge_fanout*`) outside `net/mod.rs`, and no deprecated     |
+//! |                          | pull wrappers (`vector_pull*`, `sync_pull*`) outside          |
+//! |                          | `kvstore/mod.rs` — callers build a `ChargeSpec` /             |
+//! |                          | `PullRequest` and go through `Transport::charge` /            |
+//! |                          | `KvStore::pull`.                                              |
 //!
 //! Approved exceptions carry an inline marker the linter recognizes:
 //!
@@ -67,7 +73,7 @@ enum RootKind {
 
 /// All rule identifiers, in report order. `marker-justification` is the
 /// meta-rule for malformed allow markers.
-const RULE_IDS: [&str; 8] = [
+const RULE_IDS: [&str; 9] = [
     "priced-recovery",
     "unordered-collections",
     "wall-clock",
@@ -75,8 +81,24 @@ const RULE_IDS: [&str; 8] = [
     "unordered-float-reduce",
     "module-docs",
     "trace-sink",
+    "charge-ladder",
     "marker-justification",
 ];
+
+/// The deprecated pre-`ChargeSpec` fabric entry points, legal only inside
+/// their shim home `net/mod.rs`.
+const CHARGE_LADDER: [&str; 6] = [
+    "charge_rpc",
+    "charge_rpc_at",
+    "charge_rpc_payload_at",
+    "charge_fanout",
+    "charge_fanout_at",
+    "charge_fanout_payload_at",
+];
+
+/// The deprecated pre-`PullRequest` kvstore wrappers, legal only inside
+/// their shim home `kvstore/mod.rs`.
+const PULL_LADDER: [&str; 4] = ["vector_pull", "vector_pull_at", "sync_pull", "sync_pull_at"];
 
 /// Files (paths relative to their scan root, `/`-separated) where the
 /// wall-clock rule does not apply: these *are* the wall-clock modules.
@@ -430,6 +452,30 @@ fn lint_file(
                         ),
                     );
                 }
+            }
+        }
+    }
+
+    // -- charge-ladder: deprecated charge/pull wrappers stay in their shim
+    //    homes; everything else builds a ChargeSpec / PullRequest. ---------
+    for (idx, line) in code_lines.iter().enumerate() {
+        for ident in idents(line) {
+            let (banned, home, new_api) = if CHARGE_LADDER.contains(&ident) {
+                (true, "net/mod.rs", "`Transport::charge(ChargeSpec { .. })`")
+            } else if PULL_LADDER.contains(&ident) {
+                (true, "kvstore/mod.rs", "`KvStore::pull(PullRequest { .. })`")
+            } else {
+                (false, "", "")
+            };
+            if banned && !(kind == RootKind::Src && rel == home) {
+                report(
+                    "charge-ladder",
+                    idx + 1,
+                    format!(
+                        "deprecated wrapper `{ident}` outside its shim home \
+                         `src/{home}`; build the spec and call {new_api} instead"
+                    ),
+                );
             }
         }
     }

@@ -271,6 +271,12 @@ pub enum ExecMode {
     /// Full execution: feature rows are actually staged/copied and the model
     /// step really runs (host-rust or PJRT backend).
     Full,
+    /// Trace scheduling on the real shared-memory transport
+    /// (`net::ShmRings`): every remote pull actually moves the serialized
+    /// shard bytes between threads, measured in wall-clock, while the
+    /// modeled report stays byte-identical to `Trace`. Adds a
+    /// `CalibrationReport` (virtual-vs-wall-clock) to the run report.
+    Wallclock,
 }
 
 impl ExecMode {
@@ -279,6 +285,7 @@ impl ExecMode {
         match self {
             ExecMode::Trace => "trace",
             ExecMode::Full => "full",
+            ExecMode::Wallclock => "wallclock",
         }
     }
 }
@@ -289,7 +296,8 @@ impl FromStr for ExecMode {
         Ok(match s {
             "trace" => ExecMode::Trace,
             "full" => ExecMode::Full,
-            _ => bail!("unknown exec mode '{s}' (trace|full)"),
+            "wallclock" => ExecMode::Wallclock,
+            _ => bail!("unknown exec mode '{s}' (trace|full|wallclock)"),
         })
     }
 }

@@ -5,7 +5,7 @@ use super::strategy::{EngineRegistry, TrainingStrategy};
 use crate::config::{ExecMode, RunConfig};
 use crate::graph::{build_dataset, Dataset};
 use crate::kvstore::KvStore;
-use crate::net::NetFabric;
+use crate::net::{NetFabric, ShmRings};
 use crate::partition::{partition, Partition};
 use crate::sampler::khop::Fanout;
 use crate::sim::ComputeModel;
@@ -88,6 +88,11 @@ pub struct RunContext {
     /// `None` by default — tracing is strictly observational, and with no
     /// sink installed the run takes the exact pre-trace code paths.
     pub trace: Option<crate::trace::TraceHandle>,
+    /// Real shared-memory transport, installed on the KvStore only in
+    /// [`ExecMode::Wallclock`]. Held here so the coordinator can read the
+    /// measured (wall-clock) tallies into the calibration report after the
+    /// run; pricing still goes through `fabric`, so it never steers a run.
+    pub shm: Option<Arc<ShmRings>>,
     /// Owns the temp dir when the config didn't name one.
     _tmp: Option<Arc<TempDir>>,
 }
@@ -108,7 +113,9 @@ impl RunContext {
         strategy: Arc<dyn TrainingStrategy>,
     ) -> Result<RunContext> {
         cfg.validate()?;
-        let with_features = cfg.exec_mode == ExecMode::Full;
+        // Wallclock materializes features too: the real transport serves the
+        // serialized shard blobs, so there must be real bytes to move.
+        let with_features = matches!(cfg.exec_mode, ExecMode::Full | ExecMode::Wallclock);
         let ds = Arc::new(build_dataset(&cfg.dataset, with_features));
         let which = strategy.partitioner();
         let part = Arc::new(partition(&ds.graph, cfg.num_workers, which, cfg.base_seed));
@@ -116,10 +123,16 @@ impl RunContext {
         // The strategy's resolved wire codec (None for every engine unless
         // compression is requested) — installed once, so every pull path
         // charges compressed payloads without engine-specific branches.
-        let kv = Arc::new(
-            KvStore::new(&ds, part.clone(), fabric.clone())
-                .with_codec(strategy.feature_codec(&cfg.engine_params)),
-        );
+        let mut kv = KvStore::new(&ds, part.clone(), fabric.clone())
+            .with_codec(strategy.feature_codec(&cfg.engine_params));
+        let shm = if cfg.exec_mode == ExecMode::Wallclock {
+            let rings = Arc::new(ShmRings::new(fabric.clone(), kv.serialized_shards()));
+            kv = kv.with_transport(rings.clone());
+            Some(rings)
+        } else {
+            None
+        };
+        let kv = Arc::new(kv);
         let shards: Vec<Vec<NodeId>> = (0..cfg.num_workers)
             .map(|w| {
                 ds.train_nodes
@@ -148,6 +161,7 @@ impl RunContext {
             costs: CostParams::default(),
             metadata_path,
             trace: None,
+            shm,
             _tmp: tmp,
         })
     }

@@ -72,7 +72,11 @@ pub use strategy::{
 
 use crate::config::{ExecMode, RunConfig, TrainerBackend};
 use crate::energy::run_energy;
-use crate::metrics::{CompressionReport, EpochReport, RecoveryReport, RunReport};
+use crate::metrics::{
+    CalibrationEpoch, CalibrationLink, CalibrationReport, CompressionReport, EpochReport,
+    RecoveryReport, RunReport,
+};
+use crate::net::Transport;
 use crate::trainer::{GradCompressedSage, GradStats, SageModel, TrainStep};
 use crate::Result;
 use anyhow::bail;
@@ -160,7 +164,10 @@ fn run_with_overrides(
     let mut grad_stats: Option<GradStats> = None;
 
     match cfg.exec_mode {
-        ExecMode::Trace if cfg.fabric.contention => {
+        // Wallclock is trace scheduling on the real transport: same code
+        // paths, same modeled report; only the KvStore's transport backend
+        // (installed by RunContext::build) and the calibration section differ.
+        ExecMode::Trace | ExecMode::Wallclock if cfg.fabric.contention => {
             // Shared-link queueing needs every worker's transfers on one
             // virtual clock — contended trace runs go through the same
             // event-driven cluster runtime as full mode (no trainer).
@@ -168,7 +175,7 @@ fn run_with_overrides(
             setup_time = st;
             epochs = reps;
         }
-        ExecMode::Trace => {
+        ExecMode::Trace | ExecMode::Wallclock => {
             // Workers are independent in trace mode — run them in parallel.
             let results: Vec<Result<(f64, Vec<EpochReport>)>> = std::thread::scope(|s| {
                 let handles: Vec<_> = (0..cfg.num_workers)
@@ -234,6 +241,7 @@ pub(crate) fn assemble_report(
         links: Vec::new(),
         compression: None,
         recovery,
+        calibration: None,
     };
     // Contended runs surface per-physical-link telemetry (accumulated over
     // the run's epochs by the link network); empty otherwise, which keeps
@@ -274,6 +282,60 @@ pub(crate) fn assemble_report(
             },
             grad_elems_total: grad_stats.map_or(0, |g| g.elems_total),
             grad_elems_sent: grad_stats.map_or(0, |g| g.elems_sent),
+        });
+    }
+    // Wallclock runs attach the virtual-vs-wall-clock calibration measured
+    // by the real transport. Strictly additive: everything above (and the
+    // energy model below) is computed from the same modeled quantities a
+    // trace run reports.
+    if let Some(shm) = &ctx.shm {
+        use std::collections::BTreeMap;
+        let mut modeled_by_epoch: BTreeMap<u32, f64> = BTreeMap::new();
+        for e in &report.epochs {
+            *modeled_by_epoch.entry(e.epoch).or_insert(0.0) += e.comm.net_time;
+        }
+        let measured_by_epoch: BTreeMap<_, _> = shm.measured_epochs().into_iter().collect();
+        // Union of both key sets: setup-phase pulls are measured under
+        // epoch 0 even when no epoch-0 report row exists, and vice versa.
+        let mut epoch_keys: Vec<u32> =
+            modeled_by_epoch.keys().chain(measured_by_epoch.keys()).copied().collect();
+        epoch_keys.sort_unstable();
+        epoch_keys.dedup();
+        let cal_epochs: Vec<CalibrationEpoch> = epoch_keys
+            .into_iter()
+            .map(|epoch| {
+                let m = measured_by_epoch.get(&epoch).copied().unwrap_or_default();
+                CalibrationEpoch {
+                    epoch,
+                    modeled_net_sec: modeled_by_epoch.get(&epoch).copied().unwrap_or(0.0),
+                    measured_wall_sec: m.wall_sec,
+                    measured_bytes: m.payload_bytes,
+                    rpcs: m.rpcs,
+                }
+            })
+            .collect();
+        let measured_links: BTreeMap<_, _> = shm.measured_links().into_iter().collect();
+        let cal_links: Vec<CalibrationLink> = ctx
+            .fabric
+            .link_stats()
+            .into_iter()
+            .map(|((src, dst), s)| {
+                let m = measured_links.get(&(src, dst)).copied().unwrap_or_default();
+                CalibrationLink {
+                    link: format!("{src}->{dst}"),
+                    modeled_bytes: s.bytes,
+                    modeled_sec: s.time,
+                    measured_bytes: m.payload_bytes,
+                    measured_wall_sec: m.wall_sec,
+                    rpcs: m.rpcs,
+                }
+            })
+            .collect();
+        report.calibration = Some(CalibrationReport {
+            backend: shm.backend_id().to_string(),
+            run_wall_sec: shm.run_wall_sec(),
+            epochs: cal_epochs,
+            links: cal_links,
         });
     }
     let energy = run_energy(&report, &cfg.power);
@@ -389,6 +451,27 @@ mod tests {
         c.epochs = 2;
         let report = run(&c).unwrap();
         assert!(report.loss_curve().iter().all(|&(_, l)| l.is_finite()));
+    }
+
+    #[test]
+    fn wallclock_mode_reports_calibration_and_matches_trace_counters() {
+        let trace = run(&cfg(Engine::Rapid)).unwrap();
+        assert!(trace.calibration.is_none(), "trace runs stay calibration-free");
+        let mut c = cfg(Engine::Rapid);
+        c.exec_mode = ExecMode::Wallclock;
+        let wall = run(&c).unwrap();
+        let cal = wall.calibration.as_ref().expect("wallclock attaches calibration");
+        assert_eq!(cal.backend, "shm-rings");
+        assert!(cal.run_wall_sec > 0.0);
+        assert!(!cal.epochs.is_empty() && !cal.links.is_empty());
+        assert!(
+            cal.epochs.iter().map(|e| e.measured_bytes).sum::<u64>() > 0,
+            "the real transport moved bytes"
+        );
+        // Conformance: the real backend prices through the same fabric, so
+        // the modeled counters equal the simulated trace exactly.
+        assert_eq!(wall.total_remote_rows(), trace.total_remote_rows());
+        assert_eq!(wall.sync_remote_rows(), trace.sync_remote_rows());
     }
 
     #[test]

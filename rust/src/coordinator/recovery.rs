@@ -493,7 +493,9 @@ pub(crate) fn run_with_failures(
             };
             Some(Arc::new(Mutex::new(t)))
         }
-        ExecMode::Trace => None,
+        // Wallclock is trace scheduling on a real transport backend: no
+        // trainer, and the recovery driver is backend-agnostic.
+        ExecMode::Trace | ExecMode::Wallclock => None,
     };
     let (setup_time, mut states) = setup_cluster(ctx)?;
     let mut d = Driver {
@@ -558,7 +560,9 @@ pub fn resume_from(ckpt: Checkpoint) -> Result<RunReport> {
             t.load_state(tv)?;
             Some(Arc::new(Mutex::new(t)))
         }
-        ExecMode::Trace => None,
+        // Wallclock is trace scheduling on a real transport backend: no
+        // trainer, and the recovery driver is backend-agnostic.
+        ExecMode::Trace | ExecMode::Wallclock => None,
     };
     let plan = cfg.failure_plan()?;
     // The downed-link set at checkpoint time is a pure fold of the plan

@@ -22,6 +22,7 @@ use crate::coordinator::strategy::{
     BatchPlan, EpochFinish, EpochTotals, PipelineOutcome, StagedStep, StrategySetup,
     StrategyState, TrainingStrategy,
 };
+use crate::kvstore::PullRequest;
 use crate::metrics::{CacheStats, CommStats, PhaseTimes};
 use crate::partition::Partitioner;
 use crate::prefetch::StagedBatch;
@@ -68,16 +69,14 @@ impl BatchPlan for OnDemandPlan<'_> {
         // the critical path (local rows gather free of network).
         let mut features: Vec<f32> = Vec::new();
         let materialize = self.full && self.ctx.kv.has_values();
-        let pull = self.ctx.kv.sync_pull_at(
-            self.worker,
-            &meta.input_nodes,
+        let pull = self.ctx.kv.pull(
+            PullRequest::sync(self.worker, &meta.input_nodes).at(self.epoch),
             if materialize {
                 Some(&mut features)
             } else {
                 None
             },
             comm,
-            self.epoch,
         );
         phases.fetch += pull.time;
 

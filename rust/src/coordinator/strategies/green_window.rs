@@ -23,6 +23,7 @@ use crate::coordinator::strategy::{
     BatchPlan, EpochFinish, EpochTotals, PipelineOutcome, StagedStep, StrategySetup,
     StrategyState, TrainingStrategy,
 };
+use crate::kvstore::PullRequest;
 use crate::metrics::{CommStats, PhaseTimes};
 use crate::prefetch::StagedBatch;
 use crate::sampler::BatchMeta;
@@ -90,12 +91,10 @@ impl BatchPlan for WindowedPlan<'_> {
             .collect();
         let mut rows: Vec<f32> = Vec::new();
         let materialize = self.full && self.ctx.kv.has_values();
-        let pull = self.ctx.kv.sync_pull_at(
-            self.worker,
-            &all_ids,
+        let pull = self.ctx.kv.pull(
+            PullRequest::sync(self.worker, &all_ids).at(self.epoch),
             if materialize { Some(&mut rows) } else { None },
             comm,
-            self.epoch,
         );
         phases.fetch += pull.time;
 

@@ -21,6 +21,7 @@ use crate::coordinator::strategy::{
     BatchPlan, EpochFinish, EpochTotals, PipelineOutcome, StagedStep, StrategySetup,
     StrategyState, TrainingStrategy,
 };
+use crate::kvstore::PullRequest;
 use crate::metrics::CommStats;
 use crate::prefetch::stage_batch_at;
 use crate::sampler::schedule::{rank_order, tally_remote_threads};
@@ -187,9 +188,8 @@ pub(crate) fn precompute_epochs_n(
     let mut setup_comm = CommStats::default();
     let mut rows: Vec<f32> = Vec::new();
     let materialize = cfg.exec_mode == ExecMode::Full;
-    let pull = ctx.kv.vector_pull(
-        worker,
-        &hot,
+    let pull = ctx.kv.pull(
+        PullRequest::vector(worker, &hot),
         if materialize { Some(&mut rows) } else { None },
         &mut setup_comm,
     );
@@ -386,12 +386,10 @@ pub(crate) fn finish_cached_epoch_with(
     if let Some(rb) = rebuild {
         bg_time += rb.local_time;
         let mut rows: Vec<f32> = Vec::new();
-        let pull = ctx.kv.vector_pull_at(
-            worker,
-            &rb.hot,
+        let pull = ctx.kv.pull(
+            PullRequest::vector(worker, &rb.hot).at(epoch),
             if full { Some(&mut rows) } else { None },
             comm,
-            epoch,
         );
         bg_time += pull.time;
         st.cache

@@ -2,11 +2,19 @@
 //! graph partition, with RPC costs charged to the simulated [`crate::net`]
 //! fabric.
 //!
-//! Two pull primitives mirror the paper:
-//! - [`KvStore::vector_pull`] — one bulk, vectorized pull (cache builds;
+//! One pull entry point, [`KvStore::pull`], takes a [`PullRequest`] whose
+//! [`PullKind`] mirrors the paper's two primitives:
+//! - [`PullKind::Vector`] — one bulk, vectorized pull (cache builds;
 //!   Algorithm 1 line 4). Fans out to owner shards in parallel.
-//! - [`KvStore::sync_pull`] — the miss-set pull on (or near) the critical
-//!   path (Algorithm 1 line 14). Same transport, tracked separately.
+//! - [`PullKind::Sync`] — the miss-set pull on (or near) the critical
+//!   path (Algorithm 1 line 14). Same fabric, tracked separately.
+//!
+//! Every pull is priced through a pluggable [`Transport`] (default:
+//! [`Analytic`], the closed-form fabric model); wallclock execution swaps
+//! in [`crate::net::ShmRings`], which really moves the serialized shard
+//! bytes between threads while charging the identical analytic price — so
+//! row/byte counters stay conformant across backends. The legacy
+//! `{vector,sync}_pull{,_at}` names remain as deprecated one-PR shims.
 //!
 //! Feature values may or may not be materialized: the trace-mode benches run
 //! metadata-only (counts and charges are exact, no row copies), while full
@@ -15,7 +23,7 @@
 use crate::compress::BlockCodec;
 use crate::graph::Dataset;
 use crate::metrics::CommStats;
-use crate::net::NetFabric;
+use crate::net::{Analytic, ChargeSpec, NetFabric, Transport};
 use crate::partition::Partition;
 use crate::{NodeId, WorkerId};
 use std::sync::{Arc, Mutex};
@@ -31,6 +39,51 @@ pub struct Pull {
     pub remote_rows: u64,
     /// RPCs issued (one per touched remote shard).
     pub rpcs: u64,
+}
+
+/// Which of the paper's two pull primitives a [`PullRequest`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PullKind {
+    /// Bulk vectorized pull (cache construction; Algorithm 1 line 4).
+    /// Accounted under `CommStats::{vector_pulls, vector_rows}`.
+    Vector,
+    /// Miss-set pull on (or near) the critical path (Algorithm 1 line 14).
+    /// Accounted under `CommStats::sync_pulls`.
+    Sync,
+}
+
+/// One pull, fully described: who asks, for which nodes, in which epoch,
+/// and which accounting bucket it lands in. Replaces the four-way
+/// `{vector,sync}_pull{,_at}` method ladder the same way
+/// [`ChargeSpec`] replaced the fabric's `charge_*` ladder.
+#[derive(Debug, Clone, Copy)]
+pub struct PullRequest<'a> {
+    /// Worker issuing the pull (local rows cost nothing).
+    pub requester: WorkerId,
+    /// Node ids to fetch, gathered in this order when materializing.
+    pub ids: &'a [NodeId],
+    /// Training epoch, resolving transient speed phases on the charge.
+    pub epoch: u32,
+    /// Accounting bucket (vector vs sync).
+    pub kind: PullKind,
+}
+
+impl<'a> PullRequest<'a> {
+    /// Bulk vectorized pull at epoch 0 (chain [`Self::at`] for later epochs).
+    pub fn vector(requester: WorkerId, ids: &'a [NodeId]) -> Self {
+        PullRequest { requester, ids, epoch: 0, kind: PullKind::Vector }
+    }
+
+    /// Miss-set pull at epoch 0 (chain [`Self::at`] for later epochs).
+    pub fn sync(requester: WorkerId, ids: &'a [NodeId]) -> Self {
+        PullRequest { requester, ids, epoch: 0, kind: PullKind::Sync }
+    }
+
+    /// Resolve transient speed phases against `epoch`.
+    pub fn at(mut self, epoch: u32) -> Self {
+        self.epoch = epoch;
+        self
+    }
 }
 
 /// Running totals of the codec path, accumulated across every pull on the
@@ -56,6 +109,11 @@ pub struct CompressTally {
 pub struct KvStore {
     part: Arc<Partition>,
     fabric: NetFabric,
+    /// Pricing backend every pull's [`ChargeSpec`]s go through. Defaults to
+    /// [`Analytic`] over `fabric`; wallclock runs install
+    /// [`crate::net::ShmRings`] (which delegates pricing to the same fabric,
+    /// keeping counters backend-invariant).
+    transport: Arc<dyn Transport>,
     feature_dim: usize,
     /// `rank[v]` = row index of v within its owner's shard.
     rank: Vec<u32>,
@@ -97,6 +155,7 @@ impl KvStore {
         };
         KvStore {
             part,
+            transport: Arc::new(Analytic::new(fabric.clone())),
             fabric,
             feature_dim: d,
             rank,
@@ -112,6 +171,19 @@ impl KvStore {
     pub fn with_codec(mut self, codec: Option<BlockCodec>) -> Self {
         self.codec = codec;
         self
+    }
+
+    /// Swap the pricing backend (see the `transport` field). The backend
+    /// must price through the same fabric handle for counters to stay
+    /// conformant — both shipped backends do so by construction.
+    pub fn with_transport(mut self, transport: Arc<dyn Transport>) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// The transport backend pulls are priced through.
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
     }
 
     /// The wire codec installed on this store, if any.
@@ -161,6 +233,22 @@ impl KvStore {
     /// Bytes held by shard `p` (Fig-7 host-memory accounting).
     pub fn shard_bytes(&self, p: WorkerId) -> u64 {
         (self.shards[p as usize].len() * 4) as u64
+    }
+
+    /// Per-shard feature blobs as little-endian `f32` bytes — the backing
+    /// stores a real transport backend (e.g. [`crate::net::ShmRings`])
+    /// serves payload from. Empty blobs for trace-mode (value-free) shards.
+    pub fn serialized_shards(&self) -> Vec<Vec<u8>> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let mut blob = Vec::with_capacity(s.len() * 4);
+                for v in s {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+                blob
+            })
+            .collect()
     }
 
     /// Gather rows for `ids` (in order) *without* charging the fabric or the
@@ -241,24 +329,29 @@ impl KvStore {
             .filter(|&(_, &r)| r > 0)
             .map(|(p, &r)| (p as WorkerId, r))
             .collect();
-        let charge = match self.codec {
-            None => self.fabric.charge_fanout_at(requester, &dsts, row_bytes, epoch),
+        let specs: Vec<ChargeSpec> = match self.codec {
+            None => dsts
+                .iter()
+                .map(|&(p, r)| ChargeSpec::rows(requester, p, r, row_bytes).at(epoch))
+                .collect(),
             Some(codec) => {
                 let comp_row = codec.row_payload_bytes(self.feature_dim);
-                let per_dst_payload: Vec<(WorkerId, u64, u64)> =
-                    dsts.iter().map(|&(p, r)| (p, r, r * comp_row)).collect();
-                let charge =
-                    self.fabric.charge_fanout_payload_at(requester, &per_dst_payload, epoch);
-                if remote_rows > 0 {
-                    let mut t = self.tally.lock().unwrap();
-                    t.raw_bytes += remote_rows * row_bytes;
-                    t.wire_bytes += remote_rows * comp_row;
-                    t.sq_err += sq_err;
-                    t.elems += remote_rows * self.feature_dim as u64;
-                }
-                charge
+                dsts.iter()
+                    .map(|&(p, r)| ChargeSpec::payload(requester, p, r, r * comp_row).at(epoch))
+                    .collect()
             }
         };
+        let charge = self.transport.charge_many(&specs);
+        if let Some(codec) = self.codec {
+            if remote_rows > 0 {
+                let comp_row = codec.row_payload_bytes(self.feature_dim);
+                let mut t = self.tally.lock().unwrap();
+                t.raw_bytes += remote_rows * row_bytes;
+                t.wire_bytes += remote_rows * comp_row;
+                t.sq_err += sq_err;
+                t.elems += remote_rows * self.feature_dim as u64;
+            }
+        }
         Pull {
             time: charge.time,
             bytes: charge.bytes,
@@ -267,8 +360,33 @@ impl KvStore {
         }
     }
 
-    /// Bulk vectorized pull (cache construction). `ids` should be remote
-    /// nodes; local ids cost nothing on the fabric and are gathered free.
+    /// The single pull entry point: group `req.ids` by owner shard, charge
+    /// the remote portion through the [`Transport`], account into `stats`
+    /// under the request's [`PullKind`], and optionally gather rows (in
+    /// `req.ids` order) into `out`. Local ids cost nothing on the fabric and
+    /// are gathered free.
+    pub fn pull(
+        &self,
+        req: PullRequest<'_>,
+        out: Option<&mut Vec<f32>>,
+        stats: &mut CommStats,
+    ) -> Pull {
+        let p = self.pull_impl(req.requester, req.ids, out, req.epoch);
+        match req.kind {
+            PullKind::Vector => {
+                stats.vector_pulls += p.rpcs;
+                stats.vector_rows += p.remote_rows;
+            }
+            PullKind::Sync => stats.sync_pulls += p.rpcs,
+        }
+        stats.remote_rows += p.remote_rows;
+        stats.bytes += p.bytes;
+        stats.net_time += p.time;
+        p
+    }
+
+    /// Deprecated shim over [`Self::pull`] (one-PR migration window).
+    #[deprecated(note = "use pull(PullRequest::vector(requester, ids), out, stats)")]
     pub fn vector_pull(
         &self,
         requester: WorkerId,
@@ -276,11 +394,11 @@ impl KvStore {
         out: Option<&mut Vec<f32>>,
         stats: &mut CommStats,
     ) -> Pull {
-        self.vector_pull_at(requester, ids, out, stats, 0)
+        self.pull(PullRequest::vector(requester, ids), out, stats)
     }
 
-    /// Epoch-aware [`Self::vector_pull`]: transient speed phases resolve
-    /// against the requester's current training epoch.
+    /// Deprecated shim over [`Self::pull`] (one-PR migration window).
+    #[deprecated(note = "use pull(PullRequest::vector(requester, ids).at(epoch), out, stats)")]
     pub fn vector_pull_at(
         &self,
         requester: WorkerId,
@@ -289,16 +407,11 @@ impl KvStore {
         stats: &mut CommStats,
         epoch: u32,
     ) -> Pull {
-        let p = self.pull_impl(requester, ids, out, epoch);
-        stats.vector_pulls += p.rpcs;
-        stats.remote_rows += p.remote_rows;
-        stats.vector_rows += p.remote_rows;
-        stats.bytes += p.bytes;
-        stats.net_time += p.time;
-        p
+        self.pull(PullRequest::vector(requester, ids).at(epoch), out, stats)
     }
 
-    /// Miss-set pull (critical-path or prefetcher residual misses).
+    /// Deprecated shim over [`Self::pull`] (one-PR migration window).
+    #[deprecated(note = "use pull(PullRequest::sync(requester, ids), out, stats)")]
     pub fn sync_pull(
         &self,
         requester: WorkerId,
@@ -306,10 +419,11 @@ impl KvStore {
         out: Option<&mut Vec<f32>>,
         stats: &mut CommStats,
     ) -> Pull {
-        self.sync_pull_at(requester, ids, out, stats, 0)
+        self.pull(PullRequest::sync(requester, ids), out, stats)
     }
 
-    /// Epoch-aware [`Self::sync_pull`] (see [`Self::vector_pull_at`]).
+    /// Deprecated shim over [`Self::pull`] (one-PR migration window).
+    #[deprecated(note = "use pull(PullRequest::sync(requester, ids).at(epoch), out, stats)")]
     pub fn sync_pull_at(
         &self,
         requester: WorkerId,
@@ -318,12 +432,7 @@ impl KvStore {
         stats: &mut CommStats,
         epoch: u32,
     ) -> Pull {
-        let p = self.pull_impl(requester, ids, out, epoch);
-        stats.sync_pulls += p.rpcs;
-        stats.remote_rows += p.remote_rows;
-        stats.bytes += p.bytes;
-        stats.net_time += p.time;
-        p
+        self.pull(PullRequest::sync(requester, ids).at(epoch), out, stats)
     }
 }
 
@@ -355,7 +464,7 @@ mod tests {
         let ids = [9u32, 3, 500, 3];
         let mut out = Vec::new();
         let mut stats = CommStats::default();
-        kv.vector_pull(0, &ids, Some(&mut out), &mut stats);
+        kv.pull(PullRequest::vector(0, &ids), Some(&mut out), &mut stats);
         let d = kv.feature_dim();
         for (i, &v) in ids.iter().enumerate() {
             assert_eq!(&out[i * d..(i + 1) * d], ds.feature_row(v));
@@ -370,7 +479,7 @@ mod tests {
         let ids: Vec<u32> = part.local_nodes[1].iter().take(8).copied().collect();
         let mut pulled = Vec::new();
         let mut stats = CommStats::default();
-        kv.vector_pull(0, &ids, Some(&mut pulled), &mut stats);
+        kv.pull(PullRequest::vector(0, &ids), Some(&mut pulled), &mut stats);
         let tally_after_pull = kv.compression_tally();
         let peeked = kv.peek_rows(0, &ids);
         assert_eq!(peeked, pulled, "peek must see the same (dequantized) bytes");
@@ -394,7 +503,7 @@ mod tests {
         let (_, part, kv) = setup(false);
         let locals: Vec<u32> = part.local_nodes[0].iter().take(10).copied().collect();
         let mut stats = CommStats::default();
-        let p = kv.sync_pull(0, &locals, None, &mut stats);
+        let p = kv.pull(PullRequest::sync(0, &locals), None, &mut stats);
         assert_eq!(p.remote_rows, 0);
         assert_eq!(p.rpcs, 0);
         assert_eq!(p.time, 0.0);
@@ -406,7 +515,7 @@ mod tests {
         let (_, part, kv) = setup(false);
         let remotes: Vec<u32> = part.local_nodes[1].iter().take(10).copied().collect();
         let mut stats = CommStats::default();
-        let p = kv.sync_pull(0, &remotes, None, &mut stats);
+        let p = kv.pull(PullRequest::sync(0, &remotes), None, &mut stats);
         assert_eq!(p.remote_rows, 10);
         assert_eq!(p.rpcs, 1, "all on one shard → one RPC");
         assert!(p.time > 0.0);
@@ -419,8 +528,8 @@ mod tests {
         let (_, part, kv) = setup(false);
         let remotes: Vec<u32> = part.local_nodes[1].iter().take(5).copied().collect();
         let mut stats = CommStats::default();
-        kv.vector_pull(0, &remotes, None, &mut stats);
-        kv.sync_pull(0, &remotes, None, &mut stats);
+        kv.pull(PullRequest::vector(0, &remotes), None, &mut stats);
+        kv.pull(PullRequest::sync(0, &remotes), None, &mut stats);
         assert_eq!(stats.vector_pulls, 1);
         assert_eq!(stats.sync_pulls, 1);
         assert_eq!(stats.remote_rows, 10);
@@ -433,11 +542,11 @@ mod tests {
         let (_, part, kv) = setup(false);
         let remotes: Vec<u32> = part.local_nodes[1].iter().take(100).copied().collect();
         let mut s1 = CommStats::default();
-        let bulk = kv.vector_pull(0, &remotes, None, &mut s1);
+        let bulk = kv.pull(PullRequest::vector(0, &remotes), None, &mut s1);
         let mut s2 = CommStats::default();
         let mut per_node_time = 0.0;
         for &v in &remotes {
-            per_node_time += kv.sync_pull(0, &[v], None, &mut s2).time;
+            per_node_time += kv.pull(PullRequest::sync(0, &[v]), None, &mut s2).time;
         }
         assert!(per_node_time > 10.0 * bulk.time);
     }
@@ -468,8 +577,8 @@ mod tests {
         let remotes: Vec<u32> = part.local_nodes[1].iter().take(50).copied().collect();
         let mut s_plain = CommStats::default();
         let mut s_quant = CommStats::default();
-        let plain = plain_kv.sync_pull(0, &remotes, None, &mut s_plain);
-        let quant = quant_kv.sync_pull(0, &remotes, None, &mut s_quant);
+        let plain = plain_kv.pull(PullRequest::sync(0, &remotes), None, &mut s_plain);
+        let quant = quant_kv.pull(PullRequest::sync(0, &remotes), None, &mut s_quant);
         assert_eq!(quant.remote_rows, plain.remote_rows, "rows codec-invariant");
         assert_eq!(quant.rpcs, plain.rpcs);
         let d = plain_kv.feature_dim();
@@ -494,7 +603,7 @@ mod tests {
         let ids = [local, remote];
         let mut out = Vec::new();
         let mut stats = CommStats::default();
-        kv.sync_pull(0, &ids, Some(&mut out), &mut stats);
+        kv.pull(PullRequest::sync(0, &ids), Some(&mut out), &mut stats);
         let d = kv.feature_dim();
         assert_eq!(&out[..d], ds.feature_row(local), "local row stays exact");
         let got_remote = &out[d..2 * d];
@@ -513,8 +622,53 @@ mod tests {
         let (_, part, kv) = setup(false);
         let remotes: Vec<u32> = part.local_nodes[1].iter().take(5).copied().collect();
         let mut stats = CommStats::default();
-        kv.sync_pull(0, &remotes, None, &mut stats);
+        kv.pull(PullRequest::sync(0, &remotes), None, &mut stats);
         assert_eq!(kv.codec(), None);
         assert_eq!(kv.compression_tally(), CompressTally::default());
+    }
+
+    #[test]
+    fn serialized_shards_are_le_f32_rows() {
+        let (ds, part, kv) = setup(true);
+        let blobs = kv.serialized_shards();
+        assert_eq!(blobs.len(), part.num_parts as usize);
+        for (p, blob) in blobs.iter().enumerate() {
+            assert_eq!(blob.len() as u64, kv.shard_bytes(p as WorkerId));
+        }
+        // Shard 0's first row is its first local node's feature row.
+        let v0 = part.local_nodes[0][0];
+        let want = ds.feature_row(v0)[0].to_le_bytes();
+        assert_eq!(&blobs[0][..4], &want);
+    }
+
+    #[test]
+    fn trace_mode_serializes_empty_blobs() {
+        let (_, _, kv) = setup(false);
+        assert!(kv.serialized_shards().iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_pull_shims_delegate_to_pull_request() {
+        // One-PR migration window: the retired four-way pull ladder must be
+        // pure delegation — same Pull, same CommStats accounting.
+        let (_, part, old_kv) = setup(false);
+        let (_, _, new_kv) = setup(false);
+        let remotes: Vec<u32> = part.local_nodes[1].iter().take(5).copied().collect();
+        let mut s_old = CommStats::default();
+        let mut s_new = CommStats::default();
+        let a = old_kv.vector_pull(0, &remotes, None, &mut s_old);
+        let b = new_kv.pull(PullRequest::vector(0, &remotes), None, &mut s_new);
+        assert_eq!(a, b);
+        let a = old_kv.vector_pull_at(0, &remotes, None, &mut s_old, 2);
+        let b = new_kv.pull(PullRequest::vector(0, &remotes).at(2), None, &mut s_new);
+        assert_eq!(a, b);
+        let a = old_kv.sync_pull(0, &remotes, None, &mut s_old);
+        let b = new_kv.pull(PullRequest::sync(0, &remotes), None, &mut s_new);
+        assert_eq!(a, b);
+        let a = old_kv.sync_pull_at(0, &remotes, None, &mut s_old, 3);
+        let b = new_kv.pull(PullRequest::sync(0, &remotes).at(3), None, &mut s_new);
+        assert_eq!(a, b);
+        assert_eq!(s_old, s_new);
     }
 }

@@ -112,7 +112,7 @@ const FLAG_DOCS: &[(&str, &str, &str)] = &[
     ("common", "--n-hot H", "hot-set cache size"),
     ("common", "--q Q", "prefetch window depth"),
     ("common", "--fanout A,B", "per-layer fan-outs (innermost first)"),
-    ("common", "--exec MODE", "trace | full"),
+    ("common", "--exec MODE", "trace | full | wallclock"),
     ("common", "--backend B", "host | pjrt (full mode)"),
     ("common", "--seed S", "base seed s0"),
     ("common", "--topology T", "flat | two-tier | ring | star | fat-tree | dragonfly"),
@@ -606,6 +606,29 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             fmt_bytes(r.rerouted_bytes as f64),
             fmt_secs(r.recovery_time),
             fmt_secs(r.lost_work_time),
+        );
+    }
+    if let Some(cal) = &report.calibration {
+        let mut ct = Table::new(
+            &format!("Calibration (backend {}, virtual vs wall-clock)", cal.backend),
+            &["epoch", "modeled net", "measured wall", "measured bytes", "rpcs"],
+        );
+        for e in &cal.epochs {
+            ct.row(&[
+                e.epoch.to_string(),
+                fmt_secs(e.modeled_net_sec),
+                fmt_secs(e.measured_wall_sec),
+                fmt_bytes(e.measured_bytes as f64),
+                e.rpcs.to_string(),
+            ]);
+        }
+        ct.print();
+        println!(
+            "calibration: {} links | {} payload moved in {} wall ({} modeled net)",
+            cal.links.len(),
+            fmt_bytes(cal.epochs.iter().map(|e| e.measured_bytes).sum::<u64>() as f64),
+            fmt_secs(cal.run_wall_sec),
+            fmt_secs(cal.epochs.iter().map(|e| e.modeled_net_sec).sum::<f64>()),
         );
     }
     if let Some(p) = flags.get("json") {

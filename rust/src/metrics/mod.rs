@@ -426,6 +426,148 @@ impl RecoveryReport {
     }
 }
 
+/// One epoch's virtual-vs-wall-clock comparison from a wallclock run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CalibrationEpoch {
+    pub epoch: u32,
+    /// Simulated network seconds the analytic model charged this epoch
+    /// (summed across workers).
+    pub modeled_net_sec: f64,
+    /// Wall-clock seconds the real transport spent moving this epoch's
+    /// payload (summed across transfers; overlapping transfers from
+    /// concurrent workers each count their own duration).
+    pub measured_wall_sec: f64,
+    /// Payload bytes the real transport actually moved (RPC envelopes
+    /// excluded — the modeled byte counters include a 64 B envelope per RPC).
+    pub measured_bytes: u64,
+    /// Transfers the real transport served.
+    pub rpcs: u64,
+}
+
+impl CalibrationEpoch {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("epoch", self.epoch)
+            .set("modeled_net_sec", self.modeled_net_sec)
+            .set("measured_wall_sec", self.measured_wall_sec)
+            .set("measured_bytes", self.measured_bytes)
+            .set("rpcs", self.rpcs);
+        v
+    }
+
+    /// Parse a table produced by [`Self::to_value`].
+    pub fn from_value(v: &Value) -> Result<CalibrationEpoch> {
+        Ok(CalibrationEpoch {
+            epoch: v.req_u32("epoch")?,
+            modeled_net_sec: v.req_f64("modeled_net_sec")?,
+            measured_wall_sec: v.req_f64("measured_wall_sec")?,
+            measured_bytes: v.req_u64("measured_bytes")?,
+            rpcs: v.req_u64("rpcs")?,
+        })
+    }
+}
+
+/// One worker-pair link's modeled-vs-measured comparison from a wallclock
+/// run. `link` is the directed `src->dst` pair as charged (requester →
+/// owner); modeled quantities come from the fabric's per-link counters,
+/// measured ones from the real transport's tallies.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationLink {
+    /// Directed pair label, `"src->dst"`.
+    pub link: String,
+    /// Wire bytes the analytic model charged (payload + 64 B RPC envelopes).
+    pub modeled_bytes: u64,
+    /// Simulated seconds the analytic model charged.
+    pub modeled_sec: f64,
+    /// Payload bytes the real transport moved (no envelopes).
+    pub measured_bytes: u64,
+    /// Wall-clock seconds spent moving them.
+    pub measured_wall_sec: f64,
+    /// Transfers served on this pair.
+    pub rpcs: u64,
+}
+
+impl CalibrationLink {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("link", self.link.as_str())
+            .set("modeled_bytes", self.modeled_bytes)
+            .set("modeled_sec", self.modeled_sec)
+            .set("measured_bytes", self.measured_bytes)
+            .set("measured_wall_sec", self.measured_wall_sec)
+            .set("rpcs", self.rpcs);
+        v
+    }
+
+    /// Parse a table produced by [`Self::to_value`].
+    pub fn from_value(v: &Value) -> Result<CalibrationLink> {
+        Ok(CalibrationLink {
+            link: v.req_str("link")?.to_string(),
+            modeled_bytes: v.req_u64("modeled_bytes")?,
+            modeled_sec: v.req_f64("modeled_sec")?,
+            measured_bytes: v.req_u64("measured_bytes")?,
+            measured_wall_sec: v.req_f64("measured_wall_sec")?,
+            rpcs: v.req_u64("rpcs")?,
+        })
+    }
+}
+
+/// Virtual-vs-wall-clock calibration from a `--exec wallclock` run, where
+/// the real shared-memory transport moves every remote pull's payload while
+/// the analytic model prices it. Present only on wallclock runs; omitted
+/// from serialization otherwise, so trace/full reports — including the
+/// golden trace fixture — stay byte-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationReport {
+    /// Transport backend that produced the measurements (e.g. `shm-rings`).
+    pub backend: String,
+    /// Wall-clock seconds from transport construction to report assembly.
+    pub run_wall_sec: f64,
+    /// Per-epoch virtual-vs-wall-clock comparison.
+    pub epochs: Vec<CalibrationEpoch>,
+    /// Per-(requester→owner)-pair modeled-vs-measured comparison.
+    pub links: Vec<CalibrationLink>,
+}
+
+impl CalibrationReport {
+    /// Serialize to a [`Value`] table.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::table();
+        v.set("backend", self.backend.as_str()).set("run_wall_sec", self.run_wall_sec);
+        let epochs: Vec<Value> = self.epochs.iter().map(CalibrationEpoch::to_value).collect();
+        v.set("epochs", epochs);
+        let links: Vec<Value> = self.links.iter().map(CalibrationLink::to_value).collect();
+        v.set("links", links);
+        v
+    }
+
+    /// Parse a table produced by [`Self::to_value`].
+    pub fn from_value(v: &Value) -> Result<CalibrationReport> {
+        let epochs = match v.get("epochs") {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(CalibrationEpoch::from_value)
+                .collect::<Result<Vec<_>>>()?,
+            other => anyhow::bail!("key 'epochs': expected array, got {other:?}"),
+        };
+        let links = match v.get("links") {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(CalibrationLink::from_value)
+                .collect::<Result<Vec<_>>>()?,
+            other => anyhow::bail!("key 'links': expected array, got {other:?}"),
+        };
+        Ok(CalibrationReport {
+            backend: v.req_str("backend")?.to_string(),
+            run_wall_sec: v.req_f64("run_wall_sec")?,
+            epochs,
+            links,
+        })
+    }
+}
+
 /// Whole-run summary aggregated across workers and epochs.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunReport {
@@ -455,6 +597,10 @@ pub struct RunReport {
     /// failure plan or wrote checkpoints; omitted from serialization so
     /// failure-free traces stay byte-identical).
     pub recovery: Option<RecoveryReport>,
+    /// Virtual-vs-wall-clock calibration (`None` unless the run executed on
+    /// a real transport backend via `--exec wallclock`; omitted from
+    /// serialization so trace/full reports stay byte-identical).
+    pub calibration: Option<CalibrationReport>,
 }
 
 impl RunReport {
@@ -602,6 +748,9 @@ impl RunReport {
         if let Some(r) = &self.recovery {
             v.set("recovery", r.to_value());
         }
+        if let Some(c) = &self.calibration {
+            v.set("calibration", c.to_value());
+        }
         v
     }
 
@@ -644,6 +793,10 @@ impl RunReport {
             },
             recovery: match v.get("recovery") {
                 Some(r) => Some(RecoveryReport::from_value(r)?),
+                None => None,
+            },
+            calibration: match v.get("calibration") {
+                Some(c) => Some(CalibrationReport::from_value(c)?),
                 None => None,
             },
         })
@@ -762,6 +915,25 @@ mod tests {
                 grad_elems_sent: 10,
             }),
             recovery: Some(RecoveryReport { events: 2, moved_rows: 5, ..Default::default() }),
+            calibration: Some(CalibrationReport {
+                backend: "shm-rings".to_string(),
+                run_wall_sec: 0.125,
+                epochs: vec![CalibrationEpoch {
+                    epoch: 0,
+                    modeled_net_sec: 0.5,
+                    measured_wall_sec: 0.01,
+                    measured_bytes: 40_000,
+                    rpcs: 8,
+                }],
+                links: vec![CalibrationLink {
+                    link: "0->1".to_string(),
+                    modeled_bytes: 40_512,
+                    modeled_sec: 0.5,
+                    measured_bytes: 40_000,
+                    measured_wall_sec: 0.01,
+                    rpcs: 8,
+                }],
+            }),
             ..Default::default()
         };
         let back = RunReport::from_value(&r.to_value()).unwrap();
@@ -871,6 +1043,35 @@ mod tests {
         );
         let v = Value::from_json(&json).unwrap();
         assert_eq!(v, with.to_value());
+    }
+
+    #[test]
+    fn calibration_is_omitted_unless_present() {
+        // Byte-stability contract: a trace/full run's report must serialize
+        // to exactly the pre-CalibrationReport shape.
+        let without = report_with(vec![EpochReport::default()]);
+        assert!(!without.to_json().contains("calibration"));
+        let with = RunReport {
+            calibration: Some(CalibrationReport {
+                backend: "shm-rings".to_string(),
+                run_wall_sec: 1.0,
+                epochs: vec![CalibrationEpoch { epoch: 1, rpcs: 3, ..Default::default() }],
+                links: vec![CalibrationLink { link: "1->0".to_string(), ..Default::default() }],
+            }),
+            ..Default::default()
+        };
+        let json = with.to_json();
+        assert!(
+            json.contains("calibration")
+                && json.contains("measured_wall_sec")
+                && json.contains("modeled_net_sec")
+                && json.contains("\"backend\""),
+            "{json}"
+        );
+        let v = Value::from_json(&json).unwrap();
+        assert_eq!(v, with.to_value());
+        let back = RunReport::from_value(&v).unwrap();
+        assert_eq!(back, with);
     }
 
     #[test]

@@ -25,8 +25,10 @@
 //! charges (counter ticks from two RPCs, then both account their links).
 
 pub mod contention;
+pub mod transport;
 
 pub use contention::ContentionNet;
+pub use transport::{Analytic, ChargeSpec, ShmRings, Transport};
 
 use crate::config::{FabricConfig, LinkKey, LinkModel};
 use crate::WorkerId;
@@ -175,42 +177,17 @@ impl NetFabric {
         self.world
     }
 
-    /// Charge one RPC from `src` to `dst` carrying `rows` feature rows of
-    /// `row_bytes` each. Returns the simulated cost.
-    pub fn charge_rpc(&self, src: WorkerId, dst: WorkerId, rows: u64, row_bytes: u64) -> Charge {
-        self.charge_rpc_at(src, dst, rows, row_bytes, 0)
-    }
-
-    /// Epoch-aware [`Self::charge_rpc`]: transient speed phases
-    /// ([`FabricConfig::worker_speed_phases`]) resolve against the
-    /// requester's current `epoch`. With no phases configured this is
-    /// bit-identical to the epoch-0 charge.
-    pub fn charge_rpc_at(
-        &self,
-        src: WorkerId,
-        dst: WorkerId,
-        rows: u64,
-        row_bytes: u64,
-        epoch: u32,
-    ) -> Charge {
-        // Uncompressed payload: same `rows * row_bytes + 64` as ever.
-        self.charge_rpc_payload_at(src, dst, rows, rows * row_bytes, epoch)
-    }
-
-    /// Payload-granular [`Self::charge_rpc_at`]: `payload_bytes` is the wire
-    /// payload (compressed rows + codec block headers), decoupled from the
-    /// row count, which still prices the per-row serialization overhead. The
-    /// row-granular entry points delegate here with `payload = rows ×
-    /// row_bytes`, so the legacy path is bit-identical; the kvstore's codec
-    /// path is the only caller passing anything smaller.
-    pub fn charge_rpc_payload_at(
-        &self,
-        src: WorkerId,
-        dst: WorkerId,
-        rows: u64,
-        payload_bytes: u64,
-        epoch: u32,
-    ) -> Charge {
+    /// Charge one transfer described by a [`ChargeSpec`] — the single real
+    /// pricing entry point (the deprecated `charge_*` ladder and both
+    /// [`transport::Transport`] backends all funnel through here).
+    /// `spec.payload_bytes` is the wire payload (compressed rows + codec
+    /// block headers on the codec path, `rows × row_bytes` otherwise),
+    /// decoupled from the row count, which still prices the per-row
+    /// serialization overhead; `spec.epoch` resolves transient speed phases
+    /// ([`FabricConfig::worker_speed_phases`]) against the requester's
+    /// current epoch.
+    pub fn charge(&self, spec: ChargeSpec) -> Charge {
+        let ChargeSpec { src, dst, rows, payload_bytes, epoch } = spec;
         let bytes = payload_bytes + 64; // 64B RPC envelope
         let mut st = self.state.lock().unwrap();
         let link = match st.link_models.get(&(src, dst)) {
@@ -287,17 +264,72 @@ impl NetFabric {
 
     /// Charge a vectorized pull that fans out to several owner shards at
     /// once: per-destination RPCs run in parallel, so the *critical-path*
-    /// cost is the max over destinations while counters record every link.
+    /// cost is the max over specs while counters record every link.
+    /// Zero-row specs are skipped (an empty destination never reaches the
+    /// wire).
+    pub fn charge_many(&self, specs: &[ChargeSpec]) -> Charge {
+        let mut max_time = 0f64;
+        let mut total_bytes = 0u64;
+        for &s in specs {
+            if s.rows == 0 {
+                continue;
+            }
+            let c = self.charge(s);
+            max_time = max_time.max(c.time);
+            total_bytes += c.bytes;
+        }
+        Charge { time: max_time, bytes: total_bytes }
+    }
+
+    /// Deprecated shim over [`Self::charge`] (one-PR migration window).
+    #[deprecated(note = "build a ChargeSpec and call NetFabric::charge")]
+    pub fn charge_rpc(&self, src: WorkerId, dst: WorkerId, rows: u64, row_bytes: u64) -> Charge {
+        self.charge(ChargeSpec::rows(src, dst, rows, row_bytes))
+    }
+
+    /// Deprecated shim over [`Self::charge`] (one-PR migration window).
+    #[deprecated(note = "build a ChargeSpec with .at(epoch) and call NetFabric::charge")]
+    pub fn charge_rpc_at(
+        &self,
+        src: WorkerId,
+        dst: WorkerId,
+        rows: u64,
+        row_bytes: u64,
+        epoch: u32,
+    ) -> Charge {
+        self.charge(ChargeSpec::rows(src, dst, rows, row_bytes).at(epoch))
+    }
+
+    /// Deprecated shim over [`Self::charge`] (one-PR migration window).
+    #[deprecated(note = "build a ChargeSpec::payload and call NetFabric::charge")]
+    pub fn charge_rpc_payload_at(
+        &self,
+        src: WorkerId,
+        dst: WorkerId,
+        rows: u64,
+        payload_bytes: u64,
+        epoch: u32,
+    ) -> Charge {
+        self.charge(ChargeSpec::payload(src, dst, rows, payload_bytes).at(epoch))
+    }
+
+    /// Deprecated shim over [`Self::charge_many`] (one-PR migration window).
+    #[deprecated(note = "build ChargeSpecs and call NetFabric::charge_many")]
     pub fn charge_fanout(
         &self,
         src: WorkerId,
         per_dst_rows: &[(WorkerId, u64)],
         row_bytes: u64,
     ) -> Charge {
-        self.charge_fanout_at(src, per_dst_rows, row_bytes, 0)
+        let specs: Vec<ChargeSpec> = per_dst_rows
+            .iter()
+            .map(|&(dst, rows)| ChargeSpec::rows(src, dst, rows, row_bytes))
+            .collect();
+        self.charge_many(&specs)
     }
 
-    /// Epoch-aware [`Self::charge_fanout`] (see [`Self::charge_rpc_at`]).
+    /// Deprecated shim over [`Self::charge_many`] (one-PR migration window).
+    #[deprecated(note = "build ChargeSpecs with .at(epoch) and call NetFabric::charge_many")]
     pub fn charge_fanout_at(
         &self,
         src: WorkerId,
@@ -305,40 +337,26 @@ impl NetFabric {
         row_bytes: u64,
         epoch: u32,
     ) -> Charge {
-        let mut max_time = 0f64;
-        let mut total_bytes = 0u64;
-        for &(dst, rows) in per_dst_rows {
-            if rows == 0 {
-                continue;
-            }
-            let c = self.charge_rpc_at(src, dst, rows, row_bytes, epoch);
-            max_time = max_time.max(c.time);
-            total_bytes += c.bytes;
-        }
-        Charge { time: max_time, bytes: total_bytes }
+        let specs: Vec<ChargeSpec> = per_dst_rows
+            .iter()
+            .map(|&(dst, rows)| ChargeSpec::rows(src, dst, rows, row_bytes).at(epoch))
+            .collect();
+        self.charge_many(&specs)
     }
 
-    /// Payload-granular [`Self::charge_fanout_at`]: each destination carries
-    /// its own `(rows, payload_bytes)` pair (the codec path's per-shard
-    /// compressed sizes). Same critical-path semantics: max time over
-    /// destinations, bytes summed, zero-row destinations skipped.
+    /// Deprecated shim over [`Self::charge_many`] (one-PR migration window).
+    #[deprecated(note = "build ChargeSpec::payload specs and call NetFabric::charge_many")]
     pub fn charge_fanout_payload_at(
         &self,
         src: WorkerId,
         per_dst: &[(WorkerId, u64, u64)],
         epoch: u32,
     ) -> Charge {
-        let mut max_time = 0f64;
-        let mut total_bytes = 0u64;
-        for &(dst, rows, payload_bytes) in per_dst {
-            if rows == 0 {
-                continue;
-            }
-            let c = self.charge_rpc_payload_at(src, dst, rows, payload_bytes, epoch);
-            max_time = max_time.max(c.time);
-            total_bytes += c.bytes;
-        }
-        Charge { time: max_time, bytes: total_bytes }
+        let specs: Vec<ChargeSpec> = per_dst
+            .iter()
+            .map(|&(dst, rows, payload)| ChargeSpec::payload(src, dst, rows, payload).at(epoch))
+            .collect();
+        self.charge_many(&specs)
     }
 
     /// Drain the route claims recorded since the last call (empty unless
@@ -451,18 +469,18 @@ mod tests {
         let uninterrupted = NetFabric::new(cfg.clone());
         let mut full = Vec::new();
         for _ in 0..12 {
-            full.push(uninterrupted.charge_rpc(0, 1, 10, 400));
+            full.push(uninterrupted.charge(ChargeSpec::rows(0, 1, 10, 400)));
         }
         let first = NetFabric::new(cfg.clone());
         for i in 0..5 {
-            let c = first.charge_rpc(0, 1, 10, 400);
+            let c = first.charge(ChargeSpec::rows(0, 1, 10, 400));
             assert_eq!(c, full[i], "prefix rpc {i}");
         }
         let (rpc_counter, links) = first.export_counters();
         let resumed = NetFabric::new(cfg);
         resumed.import_counters(rpc_counter, &links);
         for (i, expect) in full.iter().enumerate().skip(5) {
-            let c = resumed.charge_rpc(0, 1, 10, 400);
+            let c = resumed.charge(ChargeSpec::rows(0, 1, 10, 400));
             assert_eq!(&c, expect, "resumed rpc {i}");
         }
         assert_eq!(resumed.total_retries(), uninterrupted.total_retries());
@@ -472,8 +490,8 @@ mod tests {
     #[test]
     fn charge_scales_with_rows() {
         let f = fabric();
-        let a = f.charge_rpc(0, 1, 100, 400);
-        let b = f.charge_rpc(0, 1, 1000, 400);
+        let a = f.charge(ChargeSpec::rows(0, 1, 100, 400));
+        let b = f.charge(ChargeSpec::rows(0, 1, 1000, 400));
         assert!(b.time > a.time);
         assert_eq!(b.bytes, 1000 * 400 + 64);
     }
@@ -481,16 +499,20 @@ mod tests {
     #[test]
     fn latency_floor_applies() {
         let f = fabric();
-        let c = f.charge_rpc(0, 1, 0, 400);
+        let c = f.charge(ChargeSpec::rows(0, 1, 0, 400));
         assert!(c.time >= f.config().rpc_latency_sec);
     }
 
     #[test]
     fn fanout_critical_path_is_max_not_sum() {
         let f = fabric();
-        let big = f.charge_rpc(0, 1, 10_000, 400).time;
+        let big = f.charge(ChargeSpec::rows(0, 1, 10_000, 400)).time;
         f.reset();
-        let c = f.charge_fanout(0, &[(1, 10_000), (2, 10_000), (3, 10_000)], 400);
+        let c = f.charge_many(&[
+            ChargeSpec::rows(0, 1, 10_000, 400),
+            ChargeSpec::rows(0, 2, 10_000, 400),
+            ChargeSpec::rows(0, 3, 10_000, 400),
+        ]);
         assert!((c.time - big).abs() < 1e-12, "parallel fanout = max single");
         assert_eq!(c.bytes, 3 * (10_000 * 400 + 64));
         // but all three links were accounted
@@ -500,7 +522,7 @@ mod tests {
     #[test]
     fn fanout_skips_empty_destinations() {
         let f = fabric();
-        let c = f.charge_fanout(0, &[(1, 0), (2, 5)], 400);
+        let c = f.charge_many(&[ChargeSpec::rows(0, 1, 0, 400), ChargeSpec::rows(0, 2, 5, 400)]);
         assert_eq!(f.link_stats().len(), 1);
         assert!(c.time > 0.0);
     }
@@ -508,9 +530,9 @@ mod tests {
     #[test]
     fn counters_accumulate_per_link() {
         let f = fabric();
-        f.charge_rpc(0, 1, 10, 4);
-        f.charge_rpc(0, 1, 10, 4);
-        f.charge_rpc(1, 0, 10, 4);
+        f.charge(ChargeSpec::rows(0, 1, 10, 4));
+        f.charge(ChargeSpec::rows(0, 1, 10, 4));
+        f.charge(ChargeSpec::rows(1, 0, 10, 4));
         let stats = f.link_stats();
         assert_eq!(stats.len(), 2);
         let l01 = stats.iter().find(|&&(k, _)| k == (0, 1)).unwrap().1;
@@ -521,8 +543,8 @@ mod tests {
     fn failure_injection_adds_latency() {
         let clean = fabric();
         let faulty = NetFabric::new(FabricConfig::default()).with_failures(1);
-        let a = clean.charge_rpc(0, 1, 10, 4);
-        let b = faulty.charge_rpc(0, 1, 10, 4);
+        let a = clean.charge(ChargeSpec::rows(0, 1, 10, 4));
+        let b = faulty.charge(ChargeSpec::rows(0, 1, 10, 4));
         assert!((b.time - a.time - FabricConfig::default().rpc_latency_sec).abs() < 1e-12);
     }
 
@@ -532,11 +554,11 @@ mod tests {
         // rpc/bytes counters are unaffected by the retries.
         let lat = FabricConfig::default().rpc_latency_sec;
         let clean = fabric();
-        let base = clean.charge_rpc(0, 1, 10, 4).time;
+        let base = clean.charge(ChargeSpec::rows(0, 1, 10, 4)).time;
         let faulty = NetFabric::new(FabricConfig::default()).with_failures(3);
         let mut total = 0.0;
         for _ in 0..9 {
-            total += faulty.charge_rpc(0, 1, 10, 4).time;
+            total += faulty.charge(ChargeSpec::rows(0, 1, 10, 4)).time;
         }
         assert!((total - (9.0 * base + 3.0 * lat)).abs() < 1e-12, "{total}");
         let stats = faulty.link_stats();
@@ -558,8 +580,8 @@ mod tests {
         cfg.loss_rate = 0.5;
         let f = NetFabric::new(cfg);
         for _ in 0..4 {
-            f.charge_rpc(0, 1, 10, 4);
-            f.charge_rpc(0, 2, 10, 4);
+            f.charge(ChargeSpec::rows(0, 1, 10, 4));
+            f.charge(ChargeSpec::rows(0, 2, 10, 4));
         }
         for (link, s) in f.link_stats() {
             assert_eq!(s.rpcs, 4, "{link:?}");
@@ -572,11 +594,11 @@ mod tests {
     fn loss_rate_charges_double_latency_on_retry_cadence() {
         let lat = FabricConfig::default().rpc_latency_sec;
         let clean = fabric();
-        let base = clean.charge_rpc(0, 1, 10, 4).time;
+        let base = clean.charge(ChargeSpec::rows(0, 1, 10, 4)).time;
         let mut cfg = FabricConfig::default();
         cfg.loss_rate = 0.25; // every 4th RPC on the link
         let f = NetFabric::new(cfg);
-        let times: Vec<f64> = (0..4).map(|_| f.charge_rpc(0, 1, 10, 4).time).collect();
+        let times: Vec<f64> = (0..4).map(|_| f.charge(ChargeSpec::rows(0, 1, 10, 4)).time).collect();
         for t in &times[..3] {
             assert!((t - base).abs() < 1e-12);
         }
@@ -588,8 +610,8 @@ mod tests {
         let mut cfg = FabricConfig::default();
         cfg.topology = Topology::TwoTier { racks: 2, oversubscription: 8.0 };
         let f = NetFabric::new(cfg).with_world_size(4);
-        let intra = f.charge_rpc(0, 2, 1000, 400); // same rack (0%2 == 2%2)
-        let inter = f.charge_rpc(0, 1, 1000, 400); // cross-rack
+        let intra = f.charge(ChargeSpec::rows(0, 2, 1000, 400)); // same rack (0%2 == 2%2)
+        let inter = f.charge(ChargeSpec::rows(0, 1, 1000, 400)); // cross-rack
         assert!(inter.time > intra.time);
         assert_eq!(inter.bytes, intra.bytes, "topology changes time, not bytes");
     }
@@ -601,10 +623,10 @@ mod tests {
         cfg.straggler_factor = 4.0;
         let f = NetFabric::new(cfg).with_world_size(4);
         let clean = fabric();
-        let base = clean.charge_rpc(0, 2, 1000, 400).time;
-        let untouched = f.charge_rpc(0, 2, 1000, 400).time;
-        let slow_dst = f.charge_rpc(0, 1, 1000, 400).time;
-        let slow_src = f.charge_rpc(1, 2, 1000, 400).time;
+        let base = clean.charge(ChargeSpec::rows(0, 2, 1000, 400)).time;
+        let untouched = f.charge(ChargeSpec::rows(0, 2, 1000, 400)).time;
+        let slow_dst = f.charge(ChargeSpec::rows(0, 1, 1000, 400)).time;
+        let slow_src = f.charge(ChargeSpec::rows(1, 2, 1000, 400)).time;
         assert!((untouched - base).abs() < 1e-12);
         assert!((slow_dst - 4.0 * base).abs() < 1e-12);
         assert!((slow_src - 4.0 * base).abs() < 1e-12);
@@ -617,11 +639,11 @@ mod tests {
         let mut cfg = FabricConfig::default();
         cfg.worker_speed = vec![1.0, 2.0, 4.0];
         let f = NetFabric::new(cfg).with_world_size(4);
-        let base = fabric().charge_rpc(0, 3, 1000, 400).time;
-        assert!((f.charge_rpc(0, 3, 1000, 400).time - base).abs() < 1e-12);
-        assert!((f.charge_rpc(0, 1, 1000, 400).time - 2.0 * base).abs() < 1e-12);
+        let base = fabric().charge(ChargeSpec::rows(0, 3, 1000, 400)).time;
+        assert!((f.charge(ChargeSpec::rows(0, 3, 1000, 400)).time - base).abs() < 1e-12);
+        assert!((f.charge(ChargeSpec::rows(0, 1, 1000, 400)).time - 2.0 * base).abs() < 1e-12);
         assert!(
-            (f.charge_rpc(1, 2, 1000, 400).time - 4.0 * base).abs() < 1e-12,
+            (f.charge(ChargeSpec::rows(1, 2, 1000, 400)).time - 4.0 * base).abs() < 1e-12,
             "max endpoint wins"
         );
     }
@@ -644,7 +666,7 @@ mod tests {
                     for i in 0..PER {
                         // spread over a few links, deterministically per thread
                         let dst = 1 + ((t + i) % 3) as u32;
-                        f.charge_rpc(0, dst, 10, 4);
+                        f.charge(ChargeSpec::rows(0, dst, 10, 4));
                     }
                 });
             }
@@ -681,8 +703,8 @@ mod tests {
         let a = NetFabric::new(cfg.clone()).with_world_size(4);
         let b = NetFabric::new(cfg).with_world_size(4);
         for i in 0..6u64 {
-            let ca = a.charge_rpc_at(0, 1, 10 + i, 400, 0);
-            let cb = b.charge_rpc_payload_at(0, 1, 10 + i, (10 + i) * 400, 0);
+            let ca = a.charge(ChargeSpec::rows(0, 1, 10 + i, 400).at(0));
+            let cb = b.charge(ChargeSpec::payload(0, 1, 10 + i, (10 + i) * 400).at(0));
             assert_eq!(ca, cb);
         }
         assert_eq!(a.link_stats(), b.link_stats());
@@ -692,8 +714,8 @@ mod tests {
     #[test]
     fn payload_charge_prices_compressed_bytes_but_full_rows() {
         let f = fabric();
-        let full = f.charge_rpc_payload_at(0, 1, 100, 100 * 400, 0);
-        let compressed = f.charge_rpc_payload_at(0, 1, 100, 100 * 108, 0);
+        let full = f.charge(ChargeSpec::payload(0, 1, 100, 100 * 400));
+        let compressed = f.charge(ChargeSpec::payload(0, 1, 100, 100 * 108));
         assert_eq!(full.bytes, 100 * 400 + 64);
         assert_eq!(compressed.bytes, 100 * 108 + 64);
         // Same rows → same latency + per-row overhead; only the wire term
@@ -706,17 +728,21 @@ mod tests {
     #[test]
     fn fanout_payload_matches_per_rpc_payload_charges() {
         let f = fabric();
-        let c = f.charge_fanout_payload_at(0, &[(1, 10, 1080), (2, 0, 999), (3, 7, 756)], 0);
+        let c = f.charge_many(&[
+            ChargeSpec::payload(0, 1, 10, 1080),
+            ChargeSpec::payload(0, 2, 0, 999),
+            ChargeSpec::payload(0, 3, 7, 756),
+        ]);
         assert_eq!(c.bytes, (1080 + 64) + (756 + 64), "zero-row dst skipped");
         assert_eq!(f.link_stats().len(), 2);
-        let single = fabric().charge_rpc_payload_at(0, 1, 10, 1080, 0);
+        let single = fabric().charge(ChargeSpec::payload(0, 1, 10, 1080));
         assert!((c.time - single.time).abs() < 1e-15, "max over dsts");
     }
 
     #[test]
     fn reset_clears() {
         let f = fabric();
-        f.charge_rpc(0, 1, 10, 4);
+        f.charge(ChargeSpec::rows(0, 1, 10, 4));
         assert!(f.total_bytes() > 0);
         f.reset();
         assert_eq!(f.total_bytes(), 0);
@@ -727,19 +753,23 @@ mod tests {
     #[test]
     fn route_claims_recorded_only_in_contention_mode() {
         let off = fabric();
-        off.charge_rpc(0, 1, 10, 4);
+        off.charge(ChargeSpec::rows(0, 1, 10, 4));
         assert!(off.take_route_claims().is_empty(), "linear mode records no claims");
 
         let mut cfg = FabricConfig::default();
         cfg.contention = true;
         let on = NetFabric::new(cfg.clone()).with_world_size(4);
-        let c = on.charge_rpc(0, 1, 100, 4);
-        on.charge_fanout(0, &[(1, 5), (2, 0), (3, 7)], 4);
+        let c = on.charge(ChargeSpec::rows(0, 1, 100, 4));
+        on.charge_many(&[
+            ChargeSpec::rows(0, 1, 5, 4),
+            ChargeSpec::rows(0, 2, 0, 4),
+            ChargeSpec::rows(0, 3, 7, 4),
+        ]);
         let claims = on.take_route_claims();
         assert_eq!(claims.len(), 3, "one claim per non-empty RPC");
         assert_eq!(claims[0].bytes, c.bytes);
         assert_eq!(claims[0].service_bytes, c.bytes as f64);
-        // flows are oriented in the data direction: the pull charge_rpc(0→1)
+        // flows are oriented in the data direction: the pull charge (0→1)
         // moves payload owner 1 → requester 0
         assert_eq!((claims[0].src, claims[0].dst), (1, 0));
         // uncongested flow duration equals the linear charge
@@ -758,7 +788,7 @@ mod tests {
         cfg.contention = true;
         cfg.worker_speed = vec![1.0, 3.0];
         let f = NetFabric::new(cfg).with_failures(1); // every RPC retried
-        let c = f.charge_rpc(0, 1, 100, 4);
+        let c = f.charge(ChargeSpec::rows(0, 1, 100, 4));
         let claim = f.take_route_claims().pop().unwrap();
         let lat = FabricConfig::default().rpc_latency_sec;
         let ovh = 100.0 * FabricConfig::default().per_node_overhead_sec;
@@ -777,10 +807,50 @@ mod tests {
             speeds: vec![1.0, 4.0],
         }];
         let f = NetFabric::new(cfg).with_world_size(4);
-        let base = fabric().charge_rpc(0, 1, 1000, 400).time;
-        assert!((f.charge_rpc_at(0, 1, 1000, 400, 0).time - base).abs() < 1e-15);
-        assert!((f.charge_rpc_at(0, 1, 1000, 400, 2).time - 4.0 * base).abs() < 1e-12);
-        assert!((f.charge_rpc_at(1, 2, 1000, 400, 3).time - 4.0 * base).abs() < 1e-12);
-        assert!((f.charge_rpc_at(2, 3, 1000, 400, 2).time - base).abs() < 1e-15);
+        let base = fabric().charge(ChargeSpec::rows(0, 1, 1000, 400)).time;
+        assert!((f.charge(ChargeSpec::rows(0, 1, 1000, 400).at(0)).time - base).abs() < 1e-15);
+        assert!((f.charge(ChargeSpec::rows(0, 1, 1000, 400).at(2)).time - 4.0 * base).abs() < 1e-12);
+        assert!((f.charge(ChargeSpec::rows(1, 2, 1000, 400).at(3)).time - 4.0 * base).abs() < 1e-12);
+        assert!((f.charge(ChargeSpec::rows(2, 3, 1000, 400).at(2)).time - base).abs() < 1e-15);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_charge_ladder_shims_delegate_to_charge_spec() {
+        // One-PR migration window: every retired ladder entry point must be
+        // a pure delegation — identical charge *and* identical counters, so
+        // un-migrated external callers see bit-stable behavior.
+        let mut cfg = FabricConfig::default();
+        cfg.loss_rate = 0.5; // exercise the per-link retry cadence through both paths
+        let old = NetFabric::new(cfg.clone()).with_world_size(4);
+        let new = NetFabric::new(cfg).with_world_size(4);
+        assert_eq!(old.charge_rpc(0, 1, 10, 400), new.charge(ChargeSpec::rows(0, 1, 10, 400)));
+        assert_eq!(
+            old.charge_rpc_at(0, 1, 10, 400, 3),
+            new.charge(ChargeSpec::rows(0, 1, 10, 400).at(3))
+        );
+        assert_eq!(
+            old.charge_rpc_payload_at(0, 1, 10, 1080, 3),
+            new.charge(ChargeSpec::payload(0, 1, 10, 1080).at(3))
+        );
+        assert_eq!(
+            old.charge_fanout(0, &[(1, 5), (2, 7)], 400),
+            new.charge_many(&[ChargeSpec::rows(0, 1, 5, 400), ChargeSpec::rows(0, 2, 7, 400)])
+        );
+        assert_eq!(
+            old.charge_fanout_at(0, &[(1, 5), (2, 7)], 400, 2),
+            new.charge_many(&[
+                ChargeSpec::rows(0, 1, 5, 400).at(2),
+                ChargeSpec::rows(0, 2, 7, 400).at(2),
+            ])
+        );
+        assert_eq!(
+            old.charge_fanout_payload_at(0, &[(1, 5, 540), (2, 7, 756)], 2),
+            new.charge_many(&[
+                ChargeSpec::payload(0, 1, 5, 540).at(2),
+                ChargeSpec::payload(0, 2, 7, 756).at(2),
+            ])
+        );
+        assert_eq!(old.export_counters(), new.export_counters());
     }
 }

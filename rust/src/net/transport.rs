@@ -1,0 +1,455 @@
+//! Pluggable transport backends behind one [`ChargeSpec`] charging surface.
+//!
+//! The fabric's historical `charge_rpc` / `charge_fanout` wrapper ladder
+//! collapsed into a single request type: every transfer the KV store (or any
+//! future subsystem) issues is a [`ChargeSpec`], consumed by one
+//! [`Transport::charge`] entry point. Two backends implement it:
+//!
+//! - [`Analytic`] — the default. A thin wrapper over [`NetFabric::charge`],
+//!   i.e. exactly the closed-form linear pricing every run has always used.
+//!   Byte-stable: the same float operations in the same order as the old
+//!   ladder, so golden traces do not move.
+//! - [`ShmRings`] — the first *real* backend. One server thread per worker
+//!   shard (spawned through [`crate::util::parallel::spawn_worker`], the
+//!   sanctioned doorway) serves serialized feature bytes over bounded
+//!   [`crate::util::mpmc`] rings; every charge actually moves
+//!   `payload_bytes` of shard data through the rings and measures the
+//!   transfer with [`crate::util::wallclock::Stopwatch`]. Pricing and all
+//!   deterministic counters still delegate to the *same* [`NetFabric`], so
+//!   remote-row/byte counters are conformant with the simulated trace by
+//!   construction; the wall-clock measurements are accumulated separately
+//!   and surface only in the run's `CalibrationReport`.
+//!
+//! Determinism contract: a real backend may *describe* a run (measured
+//! seconds, measured bytes) but must never *steer* one — nothing downstream
+//! of [`Transport::charge`] reads the measured values back into scheduling,
+//! pricing, or any serialized ordering decision.
+
+use crate::net::{Charge, NetFabric};
+use crate::util::mpmc;
+use crate::util::parallel::spawn_worker;
+use crate::util::wallclock::Stopwatch;
+use crate::WorkerId;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// One transfer request: everything a backend needs to price (and, for real
+/// backends, perform) a single RPC-shaped movement of feature rows.
+///
+/// Replaces the `charge_rpc{,_at,_payload_at}` argument ladder; the
+/// deprecated wrappers map onto it as:
+///
+/// | deprecated method                     | `ChargeSpec` equivalent            |
+/// |---------------------------------------|------------------------------------|
+/// | `charge_rpc(s,d,r,rb)`                | `ChargeSpec::rows(s,d,r,rb)`       |
+/// | `charge_rpc_at(s,d,r,rb,e)`           | `ChargeSpec::rows(s,d,r,rb).at(e)` |
+/// | `charge_rpc_payload_at(s,d,r,p,e)`    | `ChargeSpec::payload(s,d,r,p).at(e)` |
+/// | `charge_fanout*` families             | a `Vec<ChargeSpec>` + `charge_many` |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChargeSpec {
+    /// Requesting worker (the side whose critical path pays the time).
+    pub src: WorkerId,
+    /// Owner worker the payload comes from.
+    pub dst: WorkerId,
+    /// Feature rows carried (prices the per-row serialization overhead and
+    /// drives the row counters; codec-invariant).
+    pub rows: u64,
+    /// Wire payload in bytes, *excluding* the fixed 64-byte RPC envelope
+    /// (compressed rows + codec block headers on the codec path, plain
+    /// `rows × row_bytes` otherwise).
+    pub payload_bytes: u64,
+    /// Requester's training epoch — resolves transient speed phases.
+    pub epoch: u32,
+}
+
+impl ChargeSpec {
+    /// Uncompressed spec: `payload = rows × row_bytes`, epoch 0.
+    pub fn rows(src: WorkerId, dst: WorkerId, rows: u64, row_bytes: u64) -> ChargeSpec {
+        ChargeSpec { src, dst, rows, payload_bytes: rows * row_bytes, epoch: 0 }
+    }
+
+    /// Payload-granular spec (the codec path), epoch 0.
+    pub fn payload(src: WorkerId, dst: WorkerId, rows: u64, payload_bytes: u64) -> ChargeSpec {
+        ChargeSpec { src, dst, rows, payload_bytes, epoch: 0 }
+    }
+
+    /// Resolve transient speed phases against `epoch`.
+    pub fn at(mut self, epoch: u32) -> ChargeSpec {
+        self.epoch = epoch;
+        self
+    }
+}
+
+/// A transport backend: prices — and for real backends performs — transfers
+/// described by [`ChargeSpec`]s. Implementations must be shareable across
+/// worker threads (`Send + Sync`); the KV store holds one behind an `Arc`.
+pub trait Transport: Send + Sync {
+    /// Price (and, for real backends, perform) one transfer.
+    fn charge(&self, spec: ChargeSpec) -> Charge;
+
+    /// A fan-out issued in parallel: zero-row specs are skipped, the
+    /// critical-path time is the max over specs, bytes sum — the same
+    /// semantics as [`NetFabric::charge_many`].
+    fn charge_many(&self, specs: &[ChargeSpec]) -> Charge {
+        let mut max_time = 0f64;
+        let mut total_bytes = 0u64;
+        for &s in specs {
+            if s.rows == 0 {
+                continue;
+            }
+            let c = self.charge(s);
+            max_time = max_time.max(c.time);
+            total_bytes += c.bytes;
+        }
+        Charge { time: max_time, bytes: total_bytes }
+    }
+
+    /// Stable backend identifier (lands in the calibration report).
+    fn backend_id(&self) -> &'static str;
+}
+
+/// The default backend: closed-form analytic pricing, i.e. exactly
+/// [`NetFabric::charge`]. No bytes move; the virtual clock is the only
+/// clock. All pre-transport behavior lives here unchanged.
+#[derive(Clone)]
+pub struct Analytic {
+    fabric: NetFabric,
+}
+
+impl Analytic {
+    /// Wrap a fabric handle (shared state: charges land on the same
+    /// counters every other handle sees).
+    pub fn new(fabric: NetFabric) -> Analytic {
+        Analytic { fabric }
+    }
+
+    /// The underlying fabric handle.
+    pub fn fabric(&self) -> &NetFabric {
+        &self.fabric
+    }
+}
+
+impl Transport for Analytic {
+    fn charge(&self, spec: ChargeSpec) -> Charge {
+        self.fabric.charge(spec)
+    }
+
+    fn charge_many(&self, specs: &[ChargeSpec]) -> Charge {
+        self.fabric.charge_many(specs)
+    }
+
+    fn backend_id(&self) -> &'static str {
+        "analytic"
+    }
+}
+
+/// Measured wall-clock totals for one (src, dst) worker pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeasuredLink {
+    /// Payload bytes actually moved through the rings (envelopes are a
+    /// virtual-pricing construct and are not materialized).
+    pub payload_bytes: u64,
+    /// Wall-clock seconds spent in transfers, request send → last chunk.
+    pub wall_sec: f64,
+    /// Transfers performed.
+    pub rpcs: u64,
+}
+
+/// Measured wall-clock totals for one training epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeasuredEpoch {
+    /// Payload bytes actually moved during the epoch's charges.
+    pub payload_bytes: u64,
+    /// Wall-clock seconds spent in the epoch's transfers.
+    pub wall_sec: f64,
+    /// Transfers performed.
+    pub rpcs: u64,
+}
+
+#[derive(Default)]
+struct MeasuredState {
+    links: BTreeMap<(WorkerId, WorkerId), MeasuredLink>,
+    epochs: BTreeMap<u32, MeasuredEpoch>,
+}
+
+/// One pull-shaped request to a shard server: serve `payload_bytes` of the
+/// shard blob in chunks over `reply`, then hang up (drop the sender).
+struct ShmRequest {
+    payload_bytes: u64,
+    reply: mpmc::Sender<Vec<u8>>,
+}
+
+/// Chunk granularity on the reply rings.
+const CHUNK_BYTES: usize = 64 * 1024;
+/// Outstanding requests a shard server will queue.
+const REQUEST_DEPTH: usize = 64;
+/// In-flight chunks per transfer before the server blocks on the ring.
+const REPLY_DEPTH: usize = 8;
+
+/// The in-process shared-memory backend: per-worker server threads moving
+/// real feature bytes over bounded MPMC rings.
+///
+/// Pricing, retry cadence, and every deterministic counter delegate to the
+/// wrapped [`NetFabric`] — a `ShmRings` run's *modeled* quantities are
+/// bit-identical to an [`Analytic`] run of the same schedule. What it adds
+/// is measurement: each charge serializes through a ring transfer of
+/// exactly `payload_bytes` bytes of shard data, timed with [`Stopwatch`],
+/// accumulated per link and per epoch for the calibration report.
+pub struct ShmRings {
+    fabric: NetFabric,
+    /// Request ring senders, one per worker shard server.
+    reqs: Vec<mpmc::Sender<ShmRequest>>,
+    /// Server join handles, reaped on drop (after the senders close).
+    servers: Vec<JoinHandle<()>>,
+    measured: Mutex<MeasuredState>,
+    /// Started at construction; [`Self::run_wall_sec`] reads it.
+    started: Stopwatch,
+}
+
+impl ShmRings {
+    /// Spawn one server thread per shard blob. `shard_blobs[w]` is worker
+    /// `w`'s serialized feature bytes (the store's little-endian f32 rows);
+    /// an empty blob is served as zeros so metadata-only stores still move
+    /// real bytes.
+    pub fn new(fabric: NetFabric, shard_blobs: Vec<Vec<u8>>) -> ShmRings {
+        assert!(!shard_blobs.is_empty(), "ShmRings needs at least one shard server");
+        let mut reqs = Vec::with_capacity(shard_blobs.len());
+        let mut servers = Vec::with_capacity(shard_blobs.len());
+        for (w, blob) in shard_blobs.into_iter().enumerate() {
+            let (tx, rx) = mpmc::bounded::<ShmRequest>(REQUEST_DEPTH);
+            reqs.push(tx);
+            servers.push(spawn_worker(&format!("shm-server-{w}"), move || serve(blob, rx)));
+        }
+        ShmRings {
+            fabric,
+            reqs,
+            servers,
+            measured: Mutex::new(MeasuredState::default()),
+            started: Stopwatch::start(),
+        }
+    }
+
+    /// The fabric all pricing delegates to.
+    pub fn fabric(&self) -> &NetFabric {
+        &self.fabric
+    }
+
+    /// Wall-clock seconds since this backend was constructed.
+    pub fn run_wall_sec(&self) -> f64 {
+        self.started.elapsed_sec()
+    }
+
+    /// Measured per-link totals, sorted by (src, dst).
+    pub fn measured_links(&self) -> Vec<((WorkerId, WorkerId), MeasuredLink)> {
+        self.measured.lock().unwrap().links.iter().map(|(&k, &v)| (k, v)).collect()
+    }
+
+    /// Measured per-epoch totals, sorted by epoch.
+    pub fn measured_epochs(&self) -> Vec<(u32, MeasuredEpoch)> {
+        self.measured.lock().unwrap().epochs.iter().map(|(&k, &v)| (k, v)).collect()
+    }
+
+    /// Move `spec.payload_bytes` of the owner shard's bytes through the
+    /// rings; returns (bytes received, wall seconds).
+    fn transfer(&self, spec: ChargeSpec) -> (u64, f64) {
+        let sw = Stopwatch::start();
+        let owner = spec.dst as usize % self.reqs.len();
+        let (tx, rx) = mpmc::bounded::<Vec<u8>>(REPLY_DEPTH);
+        self.reqs[owner]
+            .send(ShmRequest { payload_bytes: spec.payload_bytes, reply: tx })
+            .expect("shm server hung up while the backend is alive");
+        let mut got = 0u64;
+        while let Ok(chunk) = rx.recv() {
+            got += chunk.len() as u64;
+        }
+        (got, sw.elapsed_sec())
+    }
+}
+
+impl Transport for ShmRings {
+    fn charge(&self, spec: ChargeSpec) -> Charge {
+        let (bytes, wall) = self.transfer(spec);
+        debug_assert_eq!(bytes, spec.payload_bytes, "server must serve the exact payload");
+        {
+            let mut m = self.measured.lock().unwrap();
+            let l = m.links.entry((spec.src, spec.dst)).or_default();
+            l.payload_bytes += bytes;
+            l.wall_sec += wall;
+            l.rpcs += 1;
+            let e = m.epochs.entry(spec.epoch).or_default();
+            e.payload_bytes += bytes;
+            e.wall_sec += wall;
+            e.rpcs += 1;
+        }
+        // The measurement above is observational only: the charge returned —
+        // and every counter mutated — comes from the same analytic fabric,
+        // so modeled quantities are conformant with the trace by
+        // construction.
+        self.fabric.charge(spec)
+    }
+
+    fn backend_id(&self) -> &'static str {
+        "shm-rings"
+    }
+}
+
+impl Drop for ShmRings {
+    fn drop(&mut self) {
+        // Close the request rings so every server's recv() disconnects,
+        // then reap the threads.
+        self.reqs.clear();
+        for h in self.servers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Shard server loop: serve each request's `payload_bytes` from the blob in
+/// [`CHUNK_BYTES`] chunks (wrapping cyclically — a pull may ask for more
+/// bytes than one shard holds when the fabric prices envelope-free payloads
+/// across epochs), then drop the reply sender to end the stream.
+fn serve(blob: Vec<u8>, rx: mpmc::Receiver<ShmRequest>) {
+    let blob = if blob.is_empty() { vec![0u8; 4096] } else { blob };
+    while let Ok(req) = rx.recv() {
+        let mut remaining = req.payload_bytes as usize;
+        let mut pos = 0usize;
+        while remaining > 0 {
+            let n = remaining.min(CHUNK_BYTES).min(blob.len() - pos);
+            let chunk = blob[pos..pos + n].to_vec();
+            if req.reply.send(chunk).is_err() {
+                break; // requester hung up; abandon the transfer
+            }
+            pos = (pos + n) % blob.len();
+            remaining -= n;
+        }
+        // req.reply drops here, disconnecting the requester's recv loop.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricConfig;
+
+    fn fabric() -> NetFabric {
+        NetFabric::new(FabricConfig::default()).with_world_size(4)
+    }
+
+    fn blobs(n: usize, bytes: usize) -> Vec<Vec<u8>> {
+        (0..n).map(|w| vec![w as u8; bytes]).collect()
+    }
+
+    #[test]
+    fn analytic_charge_matches_fabric_directly() {
+        let f = fabric();
+        let t = Analytic::new(f.clone());
+        let spec = ChargeSpec::rows(0, 1, 100, 400).at(0);
+        let via_transport = t.charge(spec);
+        let direct = fabric().charge(spec);
+        assert_eq!(via_transport, direct);
+        assert_eq!(t.backend_id(), "analytic");
+        // and the charge landed on the shared fabric's counters
+        assert_eq!(f.total_rpcs(), 1);
+    }
+
+    #[test]
+    fn charge_many_skips_zero_row_specs() {
+        let t = Analytic::new(fabric());
+        let specs = [
+            ChargeSpec::rows(0, 1, 10, 400),
+            ChargeSpec::rows(0, 2, 0, 400),
+            ChargeSpec::rows(0, 3, 7, 400),
+        ];
+        let c = t.charge_many(&specs);
+        assert_eq!(c.bytes, (10 * 400 + 64) + (7 * 400 + 64));
+        assert_eq!(t.fabric().total_rpcs(), 2, "zero-row spec never reaches the fabric");
+    }
+
+    #[test]
+    fn shm_moves_exactly_the_payload_bytes() {
+        let shm = ShmRings::new(fabric(), blobs(2, 1000));
+        let c = shm.charge(ChargeSpec::payload(0, 1, 25, 100_000).at(3));
+        assert_eq!(c.bytes, 100_000 + 64, "pricing still includes the envelope");
+        let links = shm.measured_links();
+        assert_eq!(links.len(), 1);
+        let ((s, d), l) = links[0];
+        assert_eq!((s, d), (0, 1));
+        assert_eq!(l.payload_bytes, 100_000, "payload (not envelope) actually moved");
+        assert_eq!(l.rpcs, 1);
+        assert!(l.wall_sec >= 0.0);
+        let epochs = shm.measured_epochs();
+        assert_eq!(epochs.len(), 1);
+        assert_eq!(epochs[0].0, 3);
+        assert_eq!(epochs[0].1.payload_bytes, 100_000);
+        assert!(shm.run_wall_sec() >= 0.0);
+    }
+
+    #[test]
+    fn shm_pricing_is_bit_identical_to_analytic() {
+        // Same fabric config, same spec sequence: the real backend's charges
+        // and counters must equal the analytic backend's exactly (the
+        // conformance contract, at the unit level).
+        let mut cfg = FabricConfig::default();
+        cfg.loss_rate = 0.25;
+        let fa = NetFabric::new(cfg.clone()).with_world_size(4);
+        let fs = NetFabric::new(cfg).with_world_size(4);
+        let analytic = Analytic::new(fa.clone());
+        let shm = ShmRings::new(fs.clone(), blobs(4, 512));
+        let specs: Vec<ChargeSpec> = (0..10u64)
+            .map(|i| ChargeSpec::rows(0, 1 + (i % 3) as u32, 5 + i, 400).at((i % 2) as u32))
+            .collect();
+        for &s in &specs {
+            assert_eq!(analytic.charge(s), shm.charge(s));
+        }
+        let many: Vec<ChargeSpec> =
+            vec![ChargeSpec::rows(1, 2, 9, 400), ChargeSpec::rows(1, 3, 0, 400)];
+        assert_eq!(analytic.charge_many(&many), shm.charge_many(&many));
+        assert_eq!(fa.link_stats(), fs.link_stats());
+        assert_eq!(fa.export_counters(), fs.export_counters());
+    }
+
+    #[test]
+    fn shm_serves_empty_blobs_as_zeros() {
+        let shm = ShmRings::new(fabric(), vec![Vec::new(), Vec::new()]);
+        shm.charge(ChargeSpec::payload(0, 1, 3, 9000));
+        assert_eq!(shm.measured_links()[0].1.payload_bytes, 9000);
+    }
+
+    #[test]
+    fn shm_concurrent_charges_account_exactly() {
+        // Worker threads hammer the backend concurrently (the wallclock
+        // execution mode's shape); measured totals must come out exact.
+        const THREADS: u64 = 4;
+        const PER: u64 = 25;
+        const PAYLOAD: u64 = 10_000;
+        let shm = ShmRings::new(fabric(), blobs(4, 2048));
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let shm = &shm;
+                s.spawn(move || {
+                    for i in 0..PER {
+                        let dst = 1 + ((t + i) % 3) as u32;
+                        shm.charge(ChargeSpec::payload(t as u32, dst, 4, PAYLOAD).at(0));
+                    }
+                });
+            }
+        });
+        let moved: u64 = shm.measured_links().iter().map(|(_, l)| l.payload_bytes).sum();
+        let rpcs: u64 = shm.measured_links().iter().map(|(_, l)| l.rpcs).sum();
+        assert_eq!(moved, THREADS * PER * PAYLOAD);
+        assert_eq!(rpcs, THREADS * PER);
+        assert_eq!(shm.fabric().total_rpcs(), THREADS * PER);
+        let per_epoch: u64 = shm.measured_epochs().iter().map(|(_, e)| e.payload_bytes).sum();
+        assert_eq!(per_epoch, moved, "epoch tallies cover every transfer");
+    }
+
+    #[test]
+    fn shm_drop_reaps_servers() {
+        // Dropping the backend must close the rings and join every server
+        // (a hang here would wedge the whole test binary).
+        let shm = ShmRings::new(fabric(), blobs(3, 64));
+        shm.charge(ChargeSpec::payload(0, 1, 1, 128));
+        drop(shm);
+    }
+}

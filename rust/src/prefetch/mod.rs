@@ -13,7 +13,7 @@
 //! bit-identical results — a property the integration tests pin down.
 
 use crate::cache::DoubleBufferCache;
-use crate::kvstore::KvStore;
+use crate::kvstore::{KvStore, PullRequest};
 use crate::metrics::CommStats;
 use crate::sampler::BatchMeta;
 use crate::{NodeId, WorkerId};
@@ -85,16 +85,14 @@ pub fn stage_batch_at(
         c.split_hits(&remote, &mut hits, &mut misses);
     }
     let mut pulled: Vec<f32> = Vec::new();
-    let pull = kv.sync_pull_at(
-        worker,
-        &misses,
+    let pull = kv.pull(
+        PullRequest::sync(worker, &misses).at(epoch),
         if materialize && kv.has_values() {
             Some(&mut pulled)
         } else {
             None
         },
         stats,
-        epoch,
     );
     let stage_time = pull.time + meta.input_nodes.len() as f64 * LOOKUP_COST_SEC;
 
@@ -234,9 +232,8 @@ mod tests {
         let hot = top_hot(&sched.batches, 200);
         let mut stats = CommStats::default();
         let mut rows = Vec::new();
-        kv.vector_pull(
-            0,
-            &hot,
+        kv.pull(
+            PullRequest::vector(0, &hot),
             if materialized { Some(&mut rows) } else { None },
             &mut stats,
         );

@@ -410,6 +410,84 @@ mod tests {
     }
 
     #[test]
+    fn transport_shaped_payload_stress() {
+        // The `net::transport::ShmRings` wire shape: producers are pullers
+        // shipping feature-row payloads (`Vec<u8>`, 400 B = 100 × f32 rows),
+        // consumers are shard servers draining a small bounded ring. The
+        // payload bytes encode (producer, seq) so corruption, loss,
+        // duplication, and per-producer reordering are all distinguishable.
+        // Runs under the tsan job alongside the transport suite.
+        for seed in [5u64, 0xBEEF] {
+            const PRODUCERS: u64 = 4;
+            const CONSUMERS: usize = 2;
+            const PER: u64 = 200;
+            const ROW_BYTES: usize = 400;
+            let (tx, rx) = bounded::<Vec<u8>>(4);
+            let mut producers = Vec::new();
+            for p in 0..PRODUCERS {
+                let tx = tx.clone();
+                producers.push(thread::spawn(move || {
+                    let mut rng = XorShift::new(seed ^ (p << 40));
+                    for i in 0..PER {
+                        rng.jitter();
+                        let mut payload = vec![0u8; ROW_BYTES];
+                        payload[..8].copy_from_slice(&p.to_le_bytes());
+                        payload[8..16].copy_from_slice(&i.to_le_bytes());
+                        // Fill the body with a (p, i)-derived pattern so a
+                        // torn or recycled buffer cannot masquerade as intact.
+                        for (k, b) in payload[16..].iter_mut().enumerate() {
+                            *b = (p as u8) ^ (i as u8) ^ (k as u8);
+                        }
+                        tx.send(payload).unwrap();
+                    }
+                }));
+            }
+            drop(tx);
+            let mut consumers = Vec::new();
+            for c in 0..CONSUMERS {
+                let rx = rx.clone();
+                consumers.push(thread::spawn(move || {
+                    let mut rng = XorShift::new(seed ^ ((c as u64) << 24));
+                    let mut got: Vec<(u64, u64)> = Vec::new();
+                    while let Ok(payload) = rx.recv() {
+                        rng.jitter();
+                        assert_eq!(payload.len(), ROW_BYTES);
+                        let p = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                        let i = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+                        for (k, &b) in payload[16..].iter().enumerate() {
+                            assert_eq!(b, (p as u8) ^ (i as u8) ^ (k as u8), "torn payload");
+                        }
+                        got.push((p, i));
+                    }
+                    got
+                }));
+            }
+            drop(rx);
+            for h in producers {
+                h.join().unwrap();
+            }
+            let streams: Vec<Vec<(u64, u64)>> =
+                consumers.into_iter().map(|h| h.join().unwrap()).collect();
+            let mut all: Vec<(u64, u64)> = Vec::new();
+            for stream in &streams {
+                for p in 0..PRODUCERS {
+                    let seqs: Vec<u64> =
+                        stream.iter().filter(|&&(sp, _)| sp == p).map(|&(_, i)| i).collect();
+                    assert!(
+                        seqs.windows(2).all(|w| w[0] < w[1]),
+                        "seed {seed}: producer {p} reordered: {seqs:?}"
+                    );
+                }
+                all.extend_from_slice(stream);
+            }
+            all.sort_unstable();
+            let expect: Vec<(u64, u64)> =
+                (0..PRODUCERS).flat_map(|p| (0..PER).map(move |i| (p, i))).collect();
+            assert_eq!(all, expect, "seed {seed}: rows lost or duplicated");
+        }
+    }
+
+    #[test]
     fn no_lost_wakeups_on_tiny_ring() {
         // The classic lost-wakeup shape: capacity 1 with 4 blocked producers
         // and 4 blocked consumers on each side of the boundary. If a wakeup

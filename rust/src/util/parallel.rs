@@ -77,6 +77,24 @@ where
     par_map_threads(available_threads(), n, f)
 }
 
+/// Spawn a named long-lived worker thread — the sanctioned doorway for the
+/// few subsystems that need a resident thread rather than scoped fork/join
+/// (today: the `net::transport::ShmRings` shard servers). Callers own the
+/// returned handle and must join it; a worker that can outlive its owner
+/// has no deterministic join order and belongs behind a `util::mpmc`
+/// shutdown protocol instead.
+pub fn spawn_worker<T, F>(name: &str, f: F) -> std::thread::JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    #[allow(clippy::disallowed_methods)] // the one sanctioned Builder::spawn: named, handle-owned
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("spawn_worker({name}): {e}"))
+}
+
 /// Worker thread count (cores, capped at 16 — the workloads here are
 /// memory-bound well before that). Overridable with `RAPIDGNN_THREADS`
 /// (clamped to `1..=64`) for experiments and CI determinism sweeps.
@@ -158,6 +176,15 @@ mod tests {
             chunk[0] = 9;
         });
         assert_eq!(data[0], 9);
+    }
+
+    #[test]
+    fn spawn_worker_names_thread_and_returns_value() {
+        let h = spawn_worker("test-worker", || {
+            assert_eq!(std::thread::current().name(), Some("test-worker"));
+            42u32
+        });
+        assert_eq!(h.join().unwrap(), 42);
     }
 
     #[test]

@@ -1,0 +1,9 @@
+//! Fixture: seeded `charge-ladder` violations — the deprecated pre-`ChargeSpec`
+//! wrappers (charge_rpc_payload_at and friends) are only legal inside their
+//! shim homes. (Not compiled; scanned by tests/lint.rs.)
+
+pub fn fetch(fabric: &Fabric, kv: &KvStore) {
+    // The doc-comment spelling above must NOT fire; these two calls must:
+    fabric.charge_rpc_payload_at(0, 1, 100, 40_000, 3);
+    kv.sync_pull_at(0, &[1, 2, 3], 3, None, &mut Default::default());
+}

@@ -39,6 +39,7 @@ fn every_rule_class_fires_on_its_seeded_fixture() {
         "unordered-float-reduce",
         "module-docs",
         "trace-sink",
+        "charge-ladder",
     ] {
         assert!(out.contains(&format!("[{rule}]")), "rule {rule} did not fire:\n{out}");
     }
@@ -47,6 +48,10 @@ fn every_rule_class_fires_on_its_seeded_fixture() {
     let recovery_hits =
         out.lines().filter(|l| l.contains("[priced-recovery]")).count();
     assert_eq!(recovery_hits, 2, "comment text must not trip priced-recovery:\n{out}");
+    // charge-ladder: two calls in puller.rs plus the recovery fixture's two
+    // charge_* calls (which legitimately trip both rules); doc comments never.
+    let ladder_hits = out.lines().filter(|l| l.contains("[charge-ladder]")).count();
+    assert_eq!(ladder_hits, 4, "comment text must not trip charge-ladder:\n{out}");
 }
 
 #[test]

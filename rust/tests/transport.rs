@@ -1,0 +1,150 @@
+//! Transport-backend conformance suite: the `--exec wallclock` contract.
+//!
+//! Wallclock mode runs trace scheduling on the real shared-memory transport
+//! (`net::transport::ShmRings`): worker threads actually move serialized
+//! feature bytes for every KvStore pull. The contract is that the *modeled*
+//! report is untouched by the backend swap — `remote_rows`,
+//! `sync_remote_rows`, bytes, and simulated times must equal the simulated
+//! trace **exactly**, for every registered engine, at any worker-thread
+//! count. The only addition is the `calibration` section (measured
+//! wall-clock vs modeled virtual time), which never steers a run.
+
+use rapidgnn::config::{DatasetConfig, DatasetPreset, Engine, ExecMode, RunConfig};
+use rapidgnn::coordinator;
+use rapidgnn::metrics::RunReport;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Every registered engine: conformance is per-engine, not per-family.
+const ENGINES: [Engine; 9] = [
+    Engine::Rapid,
+    Engine::DglMetis,
+    Engine::DglRandom,
+    Engine::DistGcn,
+    Engine::FastSample,
+    Engine::GreenWindow,
+    Engine::AdaptiveCache,
+    Engine::QuantPull,
+    Engine::GradTopk,
+];
+
+/// One test mutates the process-global `RAPIDGNN_THREADS`; serialize all
+/// report-rendering tests against it (same pattern as `golden_trace.rs`).
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn cfg(engine: Engine, exec: ExecMode) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.dataset = DatasetConfig::preset(DatasetPreset::Tiny, 1.0);
+    c.engine = engine;
+    c.epochs = 2;
+    c.n_hot = 300;
+    c.exec_mode = exec;
+    c
+}
+
+/// Assert the wallclock run's modeled quantities equal the trace run's,
+/// epoch by epoch, counter by counter.
+fn assert_conformant(engine: Engine, trace: &RunReport, wall: &RunReport) {
+    let id = engine.id();
+    assert_eq!(
+        trace.epochs.len(),
+        wall.epochs.len(),
+        "{id}: epoch report cardinality"
+    );
+    for (t, w) in trace.epochs.iter().zip(&wall.epochs) {
+        assert_eq!(t.comm, w.comm, "{id} epoch {} worker {}: comm counters", t.epoch, t.worker);
+    }
+    assert_eq!(trace.total_remote_rows(), wall.total_remote_rows(), "{id}: remote_rows");
+    assert_eq!(trace.sync_remote_rows(), wall.sync_remote_rows(), "{id}: sync_remote_rows");
+}
+
+#[test]
+fn wallclock_matches_trace_for_every_engine() {
+    let _guard = env_lock();
+    for engine in ENGINES {
+        let trace = coordinator::run(&cfg(engine, ExecMode::Trace)).unwrap();
+        let wall = coordinator::run(&cfg(engine, ExecMode::Wallclock)).unwrap();
+        assert_conformant(engine, &trace, &wall);
+        assert!(trace.calibration.is_none(), "{}: trace must not calibrate", engine.id());
+        assert!(wall.calibration.is_some(), "{}: wallclock must calibrate", engine.id());
+    }
+}
+
+#[test]
+fn conformance_holds_across_thread_counts() {
+    // The shard servers and the worker fan-out both scale with
+    // `RAPIDGNN_THREADS`; no thread count may leak into a modeled quantity.
+    let _guard = env_lock();
+    let prev = std::env::var("RAPIDGNN_THREADS").ok();
+    for engine in ENGINES {
+        std::env::set_var("RAPIDGNN_THREADS", "1");
+        let trace = coordinator::run(&cfg(engine, ExecMode::Trace)).unwrap();
+        for threads in ["1", "2", "8"] {
+            std::env::set_var("RAPIDGNN_THREADS", threads);
+            let wall = coordinator::run(&cfg(engine, ExecMode::Wallclock)).unwrap();
+            assert_conformant(engine, &trace, &wall);
+        }
+    }
+    match prev {
+        Some(v) => std::env::set_var("RAPIDGNN_THREADS", v),
+        None => std::env::remove_var("RAPIDGNN_THREADS"),
+    }
+}
+
+#[test]
+fn wallclock_report_minus_calibration_is_byte_identical_to_trace() {
+    // The strongest form of the conformance gate: `RunReport::to_json`
+    // serializes every modeled field, so after stripping the calibration
+    // section the two documents must not differ in a single byte.
+    let _guard = env_lock();
+    let trace = coordinator::run(&cfg(Engine::Rapid, ExecMode::Trace)).unwrap();
+    let mut wall = coordinator::run(&cfg(Engine::Rapid, ExecMode::Wallclock)).unwrap();
+    assert!(wall.to_json().contains("\"calibration\""));
+    wall.calibration = None;
+    assert_eq!(trace.to_json(), wall.to_json(), "backend swap changed a modeled byte");
+}
+
+#[test]
+fn calibration_report_is_well_formed() {
+    let _guard = env_lock();
+    let report = coordinator::run(&cfg(Engine::Rapid, ExecMode::Wallclock)).unwrap();
+    let cal = report.calibration.as_ref().expect("wallclock attaches calibration");
+    assert_eq!(cal.backend, "shm-rings");
+    assert!(cal.run_wall_sec > 0.0, "the stopwatch must have advanced");
+    assert!(!cal.epochs.is_empty() && !cal.links.is_empty());
+
+    // Every byte the model charges to a link corresponds to payload the
+    // shard servers actually shipped: modeled bytes are payload plus the
+    // 64-byte per-RPC envelope, measured bytes are payload alone, and the
+    // default fabric has no loss, so the identity is exact per link.
+    for l in &cal.links {
+        assert_eq!(
+            l.modeled_bytes,
+            l.measured_bytes + 64 * l.rpcs,
+            "link {}: modeled = measured payload + envelopes",
+            l.link
+        );
+        assert!(l.measured_wall_sec >= 0.0);
+    }
+    let epoch_bytes: u64 = cal.epochs.iter().map(|e| e.measured_bytes).sum();
+    let link_bytes: u64 = cal.links.iter().map(|l| l.measured_bytes).sum();
+    assert_eq!(epoch_bytes, link_bytes, "per-epoch and per-link tallies must agree");
+    assert!(epoch_bytes > 0, "a Tiny run moves real feature bytes");
+
+    // Calibration is additive: the modeled virtual times it reports are the
+    // same net_time sums the epoch reports carry.
+    let modeled: f64 = cal.epochs.iter().map(|e| e.modeled_net_sec).sum();
+    let from_epochs: f64 = report.epochs.iter().map(|e| e.comm.net_time).sum();
+    assert!((modeled - from_epochs).abs() < 1e-12);
+}
+
+#[test]
+fn wallclock_parses_and_round_trips_through_cli_id() {
+    let _guard = env_lock();
+    assert_eq!("wallclock".parse::<ExecMode>().unwrap(), ExecMode::Wallclock);
+    assert_eq!(ExecMode::Wallclock.id(), "wallclock");
+}
